@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU) vs jnp oracle.
+
+On CPU the interpret-mode kernel is NOT a performance claim — the numbers
+recorded here are correctness-path costs; TPU performance is assessed
+structurally in the §Roofline dry-run. The oracle timing column is the
+meaningful CPU datapoint (it is the jnp path the engine actually uses on
+CPU)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.graph import partition_graph, rmat_graph
+from repro.graph.kblocks import build_kernel_layout, layout_stats
+from repro.kernels import ops
+from repro.kernels.ref import edge_combine_ref
+
+
+def main():
+    g = rmat_graph(scale=13, edge_factor=32, seed=5)
+    pg, _ = partition_graph(g, n_shards=2, edge_block=512, vertex_pad=256)
+    kl = build_kernel_layout(pg, BLK=256, SRC_WIN=256, DST_WIN=256)
+    st = layout_stats(kl)
+    emit("kernels/layout_fill", 0.0,
+         f"fill={st['fill']:.3f};blocks={st['blocks']}")
+
+    rng = np.random.default_rng(0)
+    P = pg.P
+    state3 = jnp.stack([
+        jnp.asarray(rng.random(P, dtype=np.float32)),
+        jnp.asarray(np.asarray(pg.degree)[0].astype(np.float32)),
+        jnp.asarray((rng.random(P) < 0.5).astype(np.float32)),
+    ])
+    i, k = 0, 1
+    ids = jnp.arange(kl.NB, dtype=jnp.int32)
+    nk = jnp.int32(kl.NB)
+    args = (state3, kl.sp[i, k], kl.dp[i, k], kl.w[i, k], ids, nk,
+            kl.blk_swin[i, k], kl.blk_dwin[i, k])
+    kw = dict(SRC_WIN=256, DST_WIN=256, msg_kind="div_deg", combiner="sum")
+
+    us_k = time_fn(lambda *a: ops.edge_combine(*a, **kw), *args, iters=3)
+    us_r = time_fn(lambda *a: edge_combine_ref(*a, **kw), *args, iters=3)
+    edges = int((np.asarray(kl.sp[i, k]) >= 0).sum())
+    emit("kernels/edge_combine_interpret", us_k, f"edges={edges}")
+    emit("kernels/edge_combine_oracle", us_r,
+         f"Medges_per_s={edges / us_r:.2f}")
+
+    ar = jnp.asarray(rng.random(P, dtype=np.float32))
+    cnt = jnp.zeros(P, jnp.int32)
+    us_d = time_fn(
+        lambda: ops.digest(ar, cnt, ar, cnt, combiner="sum", WIN=256),
+        iters=3,
+    )
+    emit("kernels/digest_interpret", us_d, f"P={P}")
+
+
+if __name__ == "__main__":
+    main()

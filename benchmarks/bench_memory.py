@@ -1,0 +1,38 @@
+"""Lemma 1 / §3.3.3 — the O(|V|/n) memory bound.
+
+Measures: (a) hash-partition balance (max shard < 2|V|/n, Lemma 1),
+(b) resident vs streamed bytes per shard (the DSS split: state array A in
+"RAM" vs edge stream in the big tier), (c) the constant-size exchange
+buffers. Derived columns carry the bound check."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import GraphDEngine, PageRank
+from repro.graph import partition_graph, recode_ids, rmat_graph
+
+
+def main():
+    g = rmat_graph(scale=14, edge_factor=8, seed=3, sparse_ids=True)
+    V = g.n_vertices
+    for n in [4, 16, 64]:
+        rmap = recode_ids(g.vertex_ids, n)
+        bound = 2 * V / n
+        emit(f"memory/lemma1_n{n}", 0.0,
+             f"max_shard={rmap.max_positions};bound={bound:.0f};"
+             f"ok={rmap.max_positions < bound}")
+
+    pg, _ = partition_graph(g, n_shards=8, edge_block=512)
+    eng = GraphDEngine(pg, PageRank(supersteps=3))
+    m = eng.memory_model()
+    emit("memory/resident_per_shard", 0.0, f"bytes={m['resident']}")
+    emit("memory/buffers_per_shard", 0.0, f"bytes={m['buffers']}")
+    emit("memory/streamed_per_shard", 0.0, f"bytes={m['streamed']}")
+    emit("memory/resident_fraction", 0.0,
+         f"{m['resident'] / (m['resident'] + m['streamed']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Table 7/8 — SSSP/BFS: the sparse-frontier stress test.
+
+BFS does O(|E|) total work across ALL supersteps — one PageRank superstep's
+worth — so systems that rescan the full graph each superstep (X-Stream,
+HaLoop) collapse here. We measure: (a) total time dense-forced vs
+skip()-adaptive, (b) per-superstep bytes touched (the skip() saving), on the
+pathological chain graph and a power-law RMAT."""
+
+from __future__ import annotations
+
+import collections
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import SSSP, GraphDEngine
+from repro.graph import chain_graph, partition_graph, rmat_graph
+
+
+def _run(pg, src_new, adapt, cap, max_steps=4000):
+    eng = GraphDEngine(pg, SSSP(src_new), adapt_threshold=adapt,
+                       sparse_cap_frac=cap)
+    eng.run(max_supersteps=max_steps)  # warmup: compile all variants
+    t0 = time.perf_counter()
+    (_, _), hist = eng.run(max_supersteps=max_steps)
+    return time.perf_counter() - t0, hist
+
+
+def main():
+    # RMAT: shallow BFS, frontier dense in the middle supersteps
+    g = rmat_graph(scale=15, edge_factor=16, seed=7)
+    pg, rmap = partition_graph(g, n_shards=8, edge_block=256)
+    src = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
+    dt_dense, hist_d = _run(pg, src, adapt=-1, cap=0.5)
+    dt_adapt, hist_s = _run(pg, src, adapt=0.3, cap=0.6)
+    modes = collections.Counter(h.mode for h in hist_s)
+    emit("sssp/rmat_dense_forced", dt_dense * 1e6,
+         f"supersteps={len(hist_d)}")
+    emit("sssp/rmat_adaptive", dt_adapt * 1e6,
+         f"sparse={modes.get('sparse', 0)};speedup={dt_dense/dt_adapt:.2f}x")
+
+    # chain: 1-vertex frontier for hundreds of supersteps (X-Stream's
+    # admitted worst case, paper §6)
+    gc = chain_graph(8192)
+    pgc, rmapc = partition_graph(gc, n_shards=8, edge_block=64)
+    srcc = int(rmapc.to_new(np.array([0]))[0])
+    dt_dense, _ = _run(pgc, srcc, adapt=-1, cap=0.5)
+    dt_adapt, hist = _run(pgc, srcc, adapt=0.9, cap=0.9)
+    modes = collections.Counter(h.mode for h in hist)
+    emit("sssp/chain_dense_forced", dt_dense * 1e6, "supersteps=8192")
+    emit("sssp/chain_adaptive", dt_adapt * 1e6,
+         f"sparse={modes.get('sparse', 0)};speedup={dt_dense/dt_adapt:.2f}x")
+
+    # bytes saved by skip(): edge slots touched per sparse superstep
+    total_blocks = pgc.n_shards * pgc.n_shards * pgc.n_blocks
+    active_blocks = np.mean([h.density for h in hist]) * total_blocks
+    emit("sssp/skip_block_fraction", 0.0,
+         f"avg_active={active_blocks:.1f}/{total_blocks}")
+
+
+if __name__ == "__main__":
+    main()

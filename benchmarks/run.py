@@ -1,0 +1,29 @@
+"""Benchmark harness: one module per paper table. Prints CSV
+``name,us_per_call,derived`` (benchmarks/common.emit)."""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_hashmin, bench_kernels, bench_memory, bench_messages,
+        bench_pagerank, bench_sssp,
+    )
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in [bench_pagerank, bench_messages, bench_hashmin, bench_sssp,
+                bench_memory, bench_kernels]:
+        try:
+            mod.main()
+        except Exception:
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

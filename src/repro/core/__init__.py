@@ -1,0 +1,17 @@
+"""GraphD core: the paper's contribution as a composable JAX module."""
+
+from repro.core.api import (
+    SUM, MIN, MAX, IMIN, IMAX, OR, Combiner, ShardContext, VertexProgram,
+)
+from repro.core.engine import GraphDEngine, StepStats, SuperstepRecord, superstep_spmd
+from repro.core.algorithms import (
+    BFS, SSSP, DegreeSum, DistinctInLabels, HashMin, LabelSpread, PageRank,
+)
+
+__all__ = [
+    "SUM", "MIN", "MAX", "IMIN", "IMAX", "OR",
+    "Combiner", "ShardContext", "VertexProgram",
+    "GraphDEngine", "StepStats", "SuperstepRecord", "superstep_spmd",
+    "PageRank", "HashMin", "SSSP", "BFS", "DegreeSum", "LabelSpread",
+    "DistinctInLabels",
+]

@@ -1,0 +1,188 @@
+"""The paper's evaluated Pregel algorithms (§6) plus extras, as VertexPrograms.
+
+* PageRank   — Tables 2–4 (dense workload, SUM combiner, fixed supersteps)
+* Hash-Min   — Tables 5–6 (connected components, shrinking workload, MIN)
+* SSSP / BFS — Tables 7–8 (sparse frontier, the skip() stress case, MIN)
+* DegreeSum / LabelSpread — extra coverage for MAX/SUM semantics
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import IMIN, MIN, SUM, ShardContext, VertexProgram, keep_halted
+
+
+class PageRank(VertexProgram):
+    """a(v) = 0.15/|V| + 0.85 * sum(messages); msg = a(v)/d(v) (paper §2.1).
+
+    Runs a fixed number of supersteps like the paper's experiments
+    (10 on WebUK/Twitter, 5 on ClueWeb)."""
+
+    combiner = SUM
+    value_dtype = jnp.float32
+    msg_dtype = jnp.float32
+    msg_kind = "div_deg"
+
+    def __init__(self, supersteps: int = 10, damping: float = 0.85):
+        self.num_supersteps = supersteps
+        self.damping = damping
+
+    def init(self, ctx: ShardContext):
+        v = jnp.full((ctx.P,), 1.0 / ctx.n_vertices, jnp.float32)
+        return v, jnp.ones((ctx.P,), bool)
+
+    def message(self, value, degree, weight, step):
+        return value / jnp.maximum(degree, 1).astype(jnp.float32)
+
+    def apply(self, value, degree, msg, has_msg, active, step, ctx):
+        n = ctx.n_vertices
+        new = 0.15 / n + self.damping * msg
+        # every vertex recomputes each superstep (dense workload)
+        new_active = jnp.full_like(active, step + 1 < self.num_supersteps)
+        return new, new_active
+
+    def aggregate(self, value, new_value, has_msg):
+        return jnp.abs(new_value - value)  # L1 delta (convergence monitor)
+
+
+class HashMin(VertexProgram):
+    """Connected components by min-label flooding (Yan et al. [23]).
+
+    Label = recoded vertex id; every vertex starts active broadcasting its
+    label; a vertex re-broadcasts only when its label shrinks."""
+
+    combiner = IMIN
+    value_dtype = jnp.int32
+    msg_dtype = jnp.int32
+    msg_kind = "copy"
+    num_supersteps = None
+
+    def init(self, ctx: ShardContext):
+        return ctx.new_ids.astype(jnp.int32), jnp.ones((ctx.P,), bool)
+
+    def message(self, value, degree, weight, step):
+        return value
+
+    def apply(self, value, degree, msg, has_msg, active, step, ctx):
+        compute = active | has_msg
+        cand = jnp.where(has_msg, jnp.minimum(value, msg), value)
+        new = keep_halted(cand, value, compute)
+        return new, new < value  # re-broadcast iff label shrank
+
+
+class SSSP(VertexProgram):
+    """Single-source shortest paths; BFS when all weights are 1 (paper §6).
+
+    The most challenging workload for out-of-core systems: the frontier is a
+    thin slice of V each superstep, which is what skip() (§3.2) exists for."""
+
+    combiner = MIN
+    value_dtype = jnp.float32
+    msg_dtype = jnp.float32
+    msg_kind = "add_w"
+    num_supersteps = None
+
+    def __init__(self, source_new_id: int):
+        # source is identified by its *recoded* id (n*pos + shard)
+        self.source = source_new_id
+
+    def init(self, ctx: ShardContext):
+        dist = jnp.where(
+            ctx.new_ids == self.source, 0.0, jnp.inf
+        ).astype(jnp.float32)
+        return dist, ctx.new_ids == self.source
+
+    def message(self, value, degree, weight, step):
+        return value + weight
+
+    def apply(self, value, degree, msg, has_msg, active, step, ctx):
+        cand = jnp.where(has_msg, jnp.minimum(value, msg), value)
+        return cand, cand < value  # moved vertices enter the frontier
+
+
+class BFS(SSSP):
+    """BFS levels = SSSP over unit weights (paper runs SSSP with weight 1)."""
+
+    msg_kind = "add_1"
+
+    def message(self, value, degree, weight, step):
+        return value + 1.0
+
+
+class DegreeSum(VertexProgram):
+    """Each vertex computes the sum of its in-neighbours' out-degrees.
+    One-superstep sanity algorithm exercising SUM over int-ish floats."""
+
+    combiner = SUM
+    value_dtype = jnp.float32
+    msg_dtype = jnp.float32
+    msg_kind = "deg"
+    num_supersteps = 1
+
+    def init(self, ctx: ShardContext):
+        return jnp.zeros((ctx.P,), jnp.float32), jnp.ones((ctx.P,), bool)
+
+    def message(self, value, degree, weight, step):
+        return degree.astype(jnp.float32)
+
+    def apply(self, value, degree, msg, has_msg, active, step, ctx):
+        return jnp.where(has_msg, msg, 0.0), jnp.zeros_like(active)
+
+
+class DistinctInLabels(VertexProgram):
+    """Count DISTINCT labels among in-neighbours — the canonical reduction
+    a message combiner cannot express (paper §3.3: algorithms without
+    combiners run on the sorted IMS / message-list path).
+
+    Superstep 0: every vertex broadcasts its community label (here: its
+    recoded id modulo `n_groups`). Superstep 1: each vertex counts distinct
+    incoming labels via the destination-sorted message runs."""
+
+    combiner = None  # forces mode="basic" + apply_list
+    value_dtype = jnp.int32
+    msg_dtype = jnp.int32
+    num_supersteps = 1
+
+    def __init__(self, n_groups: int = 16):
+        self.n_groups = n_groups
+
+    def init(self, ctx: ShardContext):
+        labels = (ctx.new_ids % self.n_groups).astype(jnp.int32)
+        return labels, jnp.ones((ctx.P,), bool)
+
+    def message(self, value, degree, weight, step):
+        return value
+
+    def apply_list(self, value, degree, sorted_dst, sorted_msg, has_msg,
+                   active, step, ctx):
+        from repro.core.api import segment_count_distinct
+
+        distinct = segment_count_distinct(sorted_dst, sorted_msg, ctx.P)
+        return distinct, jnp.zeros_like(active)
+
+
+class LabelSpread(VertexProgram):
+    """Max-label flooding (HashMin dual) — exercises the MAX semiring."""
+
+    from repro.core.api import IMAX as _imax
+
+    combiner = _imax
+    value_dtype = jnp.int32
+    msg_dtype = jnp.int32
+    num_supersteps = None
+
+    def init(self, ctx: ShardContext):
+        return ctx.new_ids.astype(jnp.int32), jnp.ones((ctx.P,), bool)
+
+    def message(self, value, degree, weight, step):
+        return value
+
+    def apply(self, value, degree, msg, has_msg, active, step, ctx):
+        compute = active | has_msg
+        cand = jnp.where(has_msg, jnp.maximum(value, msg), value)
+        new = keep_halted(cand, value, compute)
+        return new, new > value

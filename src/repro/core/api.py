@@ -1,0 +1,204 @@
+"""Vertex-centric programming API (the Pregel surface of the paper, §2.1).
+
+A ``VertexProgram`` specifies, vectorized over the per-shard state array ``A``:
+
+* ``init``     — superstep-0 values and active flags,
+* ``message``  — the value a source vertex sends along an out-edge
+                 (what ``compute(.)`` emits in the paper),
+* ``apply``    — how a vertex digests its (combined) incoming messages and
+                 votes to halt (the body of ``compute(.)``),
+* ``combiner`` — the message combiner (paper §2.1); the recoded fast path
+                 (paper §5) requires one, with identity element ``e0``.
+
+Programs whose semantics need *message lists* (no combiner) run in ``basic``
+mode, where ``apply_list`` receives destination-sorted message runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Combiner:
+    """A commutative, associative combine with identity ``e0`` (paper §5
+    requires the identity so A_r / A_s slots can be pre-filled)."""
+
+    name: str
+    e0: Any  # scalar identity, cast to the message dtype
+    combine: Callable[[jax.Array, jax.Array], jax.Array]
+
+    def identity(self, shape, dtype) -> jax.Array:
+        return jnp.full(shape, self.e0, dtype=dtype)
+
+    def scatter(self, target: jax.Array, idx: jax.Array, msgs: jax.Array) -> jax.Array:
+        """Scatter-combine msgs into target at idx (the in-memory A_s/A_r path)."""
+        if self.name == "sum":
+            return target.at[idx].add(msgs)
+        if self.name == "min":
+            return target.at[idx].min(msgs)
+        if self.name == "max":
+            return target.at[idx].max(msgs)
+        if self.name == "or":
+            return target.at[idx].max(msgs)  # bool-as-int max == or
+        raise ValueError(self.name)
+
+    def reduce(self, x: jax.Array, axis: int = 0) -> jax.Array:
+        """Reduce an array of stacked message buffers along ``axis``."""
+        if self.name == "sum":
+            return jnp.sum(x, axis)
+        if self.name == "min":
+            return jnp.min(x, axis)
+        if self.name in ("max", "or"):
+            return jnp.max(x, axis)
+        raise ValueError(self.name)
+
+
+SUM = Combiner("sum", 0, lambda a, b: a + b)
+MIN = Combiner("min", jnp.inf, jnp.minimum)
+MAX = Combiner("max", -jnp.inf, jnp.maximum)
+IMIN = Combiner("min", 2**31 - 1, jnp.minimum)  # int messages
+IMAX = Combiner("max", -(2**31), jnp.maximum)
+OR = Combiner("or", 0, jnp.logical_or)
+
+
+class VertexProgram:
+    """Base class. Subclasses define the per-vertex behaviour, vectorized."""
+
+    #: message combiner; required for mode="recoded"/"basic_sc".
+    combiner: Combiner | None = None
+    value_dtype: Any = jnp.float32
+    msg_dtype: Any = jnp.float32
+    #: kernels/edge_combine message kind for the Pallas backend
+    #: ("div_deg" | "add_w" | "add_1" | "copy" | "deg" | None = jnp only)
+    msg_kind: str | None = None
+
+    # ---- superstep 0 -------------------------------------------------------
+    def init(self, shard_ctx: "ShardContext") -> tuple[jax.Array, jax.Array]:
+        """Return (values (P,), active (P,)) for this shard."""
+        raise NotImplementedError
+
+    # ---- scatter phase -----------------------------------------------------
+    def message(
+        self, value: jax.Array, degree: jax.Array, weight: jax.Array,
+        step: jax.Array,
+    ) -> jax.Array:
+        """Message an active source vertex sends along one out-edge."""
+        raise NotImplementedError
+
+    # ---- gather/apply phase ------------------------------------------------
+    def apply(
+        self,
+        value: jax.Array,
+        degree: jax.Array,
+        msg: jax.Array,
+        has_msg: jax.Array,
+        active: jax.Array,
+        step: jax.Array,
+        ctx: "ShardContext",
+    ) -> tuple[jax.Array, jax.Array]:
+        """Digest combined messages; return (new_value, new_active).
+
+        ``new_active`` marks vertices that send messages next superstep.
+        Vertices outside ``active | has_msg`` must keep their value (Pregel
+        halted semantics); helpers below make that easy.
+        """
+        raise NotImplementedError
+
+    # ---- message-list apply (non-combiner programs, paper §3.3.2) ----------
+    def apply_list(
+        self,
+        value: jax.Array,
+        degree: jax.Array,
+        sorted_dst: jax.Array,  # (M,) destination positions, ascending;
+        #                          P = "no message" sentinel (padding)
+        sorted_msg: jax.Array,  # (M,) payloads, grouped by destination —
+        #                          exactly the merge-sorted IMS of §3.3.2
+        has_msg: jax.Array,
+        active: jax.Array,
+        step: jax.Array,
+        ctx: "ShardContext",
+    ) -> tuple[jax.Array, jax.Array]:
+        """Digest *message lists* (algorithms with no combiner). The engine
+        hands the destination-sorted message runs; segment helpers below
+        turn them into per-vertex reductions that combiners can't express
+        (e.g. counting distinct payloads)."""
+        raise NotImplementedError
+
+    # ---- optional aggregator (paper §2.1) ----------------------------------
+    def aggregate(
+        self, value: jax.Array, new_value: jax.Array, has_msg: jax.Array
+    ) -> jax.Array | None:
+        return None
+
+    # fixed superstep budget (e.g. PageRank); None = run to quiescence
+    num_supersteps: int | None = None
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ShardContext:
+    """Per-shard slice of the state array A handed to programs."""
+
+    shard: jax.Array  # scalar int32: this shard's index i
+    n_shards: int = dataclasses.field(metadata=dict(static=True))
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    P: int = dataclasses.field(metadata=dict(static=True))
+    degree: jax.Array = None  # (P,) int32
+    vmask: jax.Array = None  # (P,) bool
+    old_ids: jax.Array = None  # (P,) int64
+    gids: jax.Array = None  # (P,) int64 recoded global id (-1 for holes)
+
+    @property
+    def new_ids(self) -> jax.Array:
+        """Dense recoded global id of every position (n*pos + i at build time;
+        stable across elastic repartitioning). Holes carry a large sentinel so
+        min-label algorithms never pick them."""
+        hole = jnp.asarray(2**31 - 1, self.gids.dtype)
+        return jnp.where(self.gids >= 0, self.gids, hole)
+
+
+def keep_halted(new_value, value, compute_mask):
+    """Pregel halted semantics: untouched vertices keep their value."""
+    return jnp.where(compute_mask, new_value, value)
+
+
+# ---------------------------------------------------------------------------
+# segment helpers over destination-sorted message runs (for apply_list)
+# ---------------------------------------------------------------------------
+
+def segment_count_distinct(sorted_dst, sorted_msg, P: int):
+    """Per-destination count of DISTINCT payloads — the canonical
+    not-expressible-with-a-combiner reduction. Inputs are the sorted IMS
+    (runs grouped by dst; dst == P means padding). O(M) vector ops."""
+    # secondary sort by payload within runs so duplicates are adjacent
+    import jax.numpy as jnp
+    from jax import lax
+
+    d2, m2 = lax.sort((sorted_dst, sorted_msg), num_keys=2)
+    valid = d2 < P
+    first = jnp.concatenate([
+        valid[:1],
+        valid[1:] & ((d2[1:] != d2[:-1]) | (m2[1:] != m2[:-1])),
+    ])
+    return (
+        jnp.zeros((P,), jnp.int32)
+        .at[jnp.where(valid, d2, P)]
+        .add(first.astype(jnp.int32), mode="drop")
+    )
+
+
+def segment_sum(sorted_dst, sorted_msg, P: int):
+    import jax.numpy as jnp
+
+    valid = sorted_dst < P
+    return (
+        jnp.zeros((P,), sorted_msg.dtype)
+        .at[jnp.where(valid, sorted_dst, P)]
+        .add(jnp.where(valid, sorted_msg, 0), mode="drop")
+    )

@@ -1,0 +1,699 @@
+"""The DSS superstep engine (paper §3–§5), one SPMD body, two drivers.
+
+Execution modes (benchmarked against each other, mirroring Tables 2–8):
+
+* ``recoded``  — paper §5 (IO-Recoded): sender-side in-memory scatter-combine
+  into ``A_s`` (one destination at a time), ring exchange, receiver-side
+  in-memory digest into ``A_r``. No sorting anywhere. The ring is a classic
+  reduce-scatter with a static shift-by-one ``ppermute``: at round r shard i
+  contributes its messages for destination ``(i + n-1-r) mod n`` into the
+  travelling accumulator — compute for round r+1 overlaps the collective
+  permute of round r, which is exactly the paper's U_c ∥ U_s overlap (C3).
+
+* ``basic``    — paper §3.3 (IO-Basic): raw ``(dst, payload)`` messages are
+  exchanged uncombined (``all_to_all``), the receiver sorts by destination and
+  segment-combines — the IMS merge-sort. Network bytes ∝ |E| (vs ∝ |V| for
+  recoded), the measured gap reproduces the IO-Basic vs IO-Recoded rows.
+
+* ``basic_sc`` — IO-Basic *with* combiner: the sender sort-combines each
+  OMS (the external merge-sort of §3.3.1) before the ring exchange; transfer
+  volume matches ``recoded`` but pays the sort.
+
+Sparse adaptation (C2, ``skip()``): per destination group the engine skips
+edge blocks whose source range contains no active vertex, using the
+``blk_lo/blk_hi`` metadata and a prefix sum over the active bitmap. The
+sparse variant gathers only ``sparse_cap`` blocks (a compiled-in bound); the
+host driver auto-dispatches dense vs sparse from the measured frontier
+density, and the worst case equals one full dense scan — guarantee (3) of
+§3.2.
+
+The SPMD body runs identically under ``jax.vmap(axis_name=...)`` (n shards
+emulated on one device — used by tests/benchmarks) and ``shard_map`` over a
+device mesh (the production path; the dry-run lowers it on 256/512 chips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.api import Combiner, ShardContext, VertexProgram
+from repro.graph.partition import PartitionedGraph
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _shard_ctx(pg: PartitionedGraph, axis: str) -> ShardContext:
+    return ShardContext(
+        shard=lax.axis_index(axis),
+        n_shards=pg.n_shards,
+        n_vertices=pg.n_vertices,
+        P=pg.P,
+        degree=pg.degree,
+        vmask=pg.vmask,
+        old_ids=pg.old_ids,
+        gids=pg.gids,
+    )
+
+
+def _active_prefix(active: jax.Array) -> jax.Array:
+    """(P+1,) inclusive-prefix of the active bitmap; block [lo,hi] has an
+    active source iff prefix[hi+1] - prefix[lo] > 0 (skip() test, §3.2)."""
+    return jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(active.astype(jnp.int32))]
+    )
+
+
+def _block_active(pg: PartitionedGraph, prefix: jax.Array, lo, hi) -> jax.Array:
+    nonempty = hi >= 0
+    cnt = prefix[jnp.clip(hi + 1, 0, pg.P)] - prefix[jnp.clip(lo, 0, pg.P)]
+    return nonempty & (cnt > 0)
+
+
+# --------------------------------------------------------------------------
+# local combine (the U_c hot loop): gen messages for one destination group and
+# combine them into A_s. Dense, sparse (skip) and sort (merge-sort) variants.
+# --------------------------------------------------------------------------
+
+def _gen_messages(program, values, degree, sp, dp, w, active, step):
+    """Gather source state, evaluate program.message, mask invalid/inactive."""
+    spc = jnp.clip(sp, 0)
+    aval = values[spc]
+    adeg = degree[spc]
+    aact = (sp >= 0) & active[spc]
+    msg = program.message(aval, adeg, w, step).astype(program.msg_dtype)
+    e0 = jnp.asarray(
+        program.combiner.e0 if program.combiner is not None else 0,
+        dtype=program.msg_dtype,
+    )
+    return jnp.where(aact, msg, e0), dp, aact
+
+
+def _combine_scatter(program, P_dest, msg, dp, aact):
+    """IO-Recoded: direct in-memory scatter-combine (A_s, paper §5)."""
+    comb = program.combiner
+    A_s = comb.identity((P_dest,), program.msg_dtype)
+    A_s = comb.scatter(A_s, dp, msg)
+    cnt = jnp.zeros((P_dest,), jnp.int32).at[dp].add(aact.astype(jnp.int32))
+    return A_s, cnt
+
+
+def _combine_sort(program, P_dest, msg, dp, aact):
+    """IO-Basic w/ combiner: sort by destination then combine (merge-sort)."""
+    comb = program.combiner
+    key = jnp.where(aact, dp, P_dest)  # invalid entries sort to the tail
+    skey, smsg, sact = lax.sort((key, msg, aact.astype(jnp.int32)), num_keys=1)
+    A_s = comb.identity((P_dest,), program.msg_dtype)
+    A_s = comb.scatter(A_s, jnp.where(skey < P_dest, skey, 0),
+                       jnp.where(skey < P_dest, smsg,
+                                 jnp.asarray(comb.e0, program.msg_dtype)))
+    cnt = jnp.zeros((P_dest,), jnp.int32).at[skey].add(sact, mode="drop")
+    return A_s, cnt
+
+
+def _contrib_dense(program, pg, values, active, step, dest, combine):
+    sp = lax.dynamic_index_in_dim(pg.src_pos, dest, 0, keepdims=False)
+    dp = lax.dynamic_index_in_dim(pg.dst_pos, dest, 0, keepdims=False)
+    w = lax.dynamic_index_in_dim(pg.eweight, dest, 0, keepdims=False)
+    msg, dp, aact = _gen_messages(program, values, pg.degree, sp, dp, w, active, step)
+    return combine(program, pg.P, msg, dp, aact)
+
+
+def _contrib_pallas(program, pg, kl, values, active, prefix, step, dest):
+    """Kernel-backed contribution: the fused Pallas edge_combine with the
+    always-on skip-compacted block list (degenerates to the dense scan when
+    the frontier is dense — the paper's adaptivity with zero dispatch)."""
+    from repro.kernels import ops as kops
+
+    pick = lambda a: lax.dynamic_index_in_dim(a, dest, 0, keepdims=False)
+    sp, dp, w = pick(kl.sp), pick(kl.dp), pick(kl.w)
+    swin, dwin = pick(kl.blk_swin), pick(kl.blk_dwin)
+    lo, hi = pick(kl.blk_lo), pick(kl.blk_hi)
+    keep = kops.skip_keep_mask(lo, hi, dwin, prefix)
+    ids, nk = kops.compact_blocks(keep)
+    # Sanitize ±inf (e.g. unreached SSSP distances) before the one-hot MXU
+    # gather: 0 * inf = NaN would poison whole window rows. Active vertices
+    # are always finite and inactive gathers are masked to e0 afterwards, so
+    # a large-finite sentinel is exact.
+    vals_f = jnp.nan_to_num(
+        values.astype(jnp.float32), nan=0.0, posinf=1e30, neginf=-1e30
+    )
+    state3 = jnp.stack(
+        [
+            vals_f,
+            pg.degree.astype(jnp.float32),
+            active.astype(jnp.float32),
+        ],
+        axis=0,
+    )
+    A_s, cnt = kops.edge_combine(
+        state3, sp, dp, w, ids, nk, swin, dwin,
+        SRC_WIN=kl.SRC_WIN, DST_WIN=kl.DST_WIN,
+        msg_kind=program.msg_kind, combiner=program.combiner.name,
+    )
+    return A_s, cnt.astype(jnp.int32)
+
+
+def _contrib_sparse(program, pg, values, active, prefix, step, dest, cap, combine):
+    """skip(): gather only active edge blocks (≤ cap of them) for this group."""
+    B, nb = pg.edge_block, pg.n_blocks
+    lo = lax.dynamic_index_in_dim(pg.blk_lo, dest, 0, keepdims=False)
+    hi = lax.dynamic_index_in_dim(pg.blk_hi, dest, 0, keepdims=False)
+    act_blk = _block_active(pg, prefix, lo, hi)
+    (idx,) = jnp.nonzero(act_blk, size=cap, fill_value=nb)
+    take = lambda a, fill: jnp.take(
+        lax.dynamic_index_in_dim(a, dest, 0, keepdims=False).reshape(nb, B),
+        idx, axis=0, mode="fill", fill_value=fill,
+    ).reshape(cap * B)
+    sp = take(pg.src_pos, -1)
+    dp = take(pg.dst_pos, 0)
+    w = take(pg.eweight, 0.0)
+    msg, dp, aact = _gen_messages(program, values, pg.degree, sp, dp, w, active, step)
+    return combine(program, pg.P, msg, dp, aact)
+
+
+# --------------------------------------------------------------------------
+# exchanges
+# --------------------------------------------------------------------------
+
+def _ring_exchange(program, pg, values, active, step, axis, contrib,
+                   digest=None):
+    """Ring reduce-scatter of per-destination combined buffers (§4.2/§5).
+
+    Static shift-by-one permutation; n rounds; the accumulator arriving at
+    shard i in round r is destined for ``(i + n-1-r) mod n``, so shard i folds
+    in its own A_s for that destination and forwards. Round r+1's local
+    combine is independent of round r's permute -> XLA overlaps them (C3).
+
+    ``digest(acc_A, acc_cnt, A_s, cnt)`` merges a contribution into the
+    travelling accumulator (default: jnp combine; the Pallas backend fuses it
+    in kernels/digest.py).
+    """
+    n = pg.n_shards
+    i = lax.axis_index(axis)
+    comb: Combiner = program.combiner
+    if digest is None:
+        digest = lambda A, c, A2, c2: (comb.combine(A, A2), c + c2)
+    perm = [(j, (j + 1) % n) for j in range(n)]
+
+    acc = contrib((i + n - 1) % n)
+    if n == 1:
+        return acc
+
+    def _round(r, acc):
+        acc = jax.tree.map(lambda x: lax.ppermute(x, axis, perm), acc)
+        dest = (i + (n - 1 - r)) % n
+        A_s, cnt = contrib(dest)
+        return digest(acc[0], acc[1], A_s, cnt)
+
+    return lax.fori_loop(1, n, _round, acc)
+
+
+def _basic_exchange(program, pg, values, active, step, axis):
+    """IO-Basic: raw (dst, payload) pairs all-to-all, receiver-side merge-sort
+    into the IMS, then one combining pass (§3.3.2)."""
+    comb: Combiner = program.combiner
+    Pn = pg.P
+    msg, dp, aact = _gen_messages(
+        program, values, pg.degree, pg.src_pos, pg.dst_pos, pg.eweight, active, step
+    )  # (n, E_cap) each
+    dp_send = jnp.where(aact, dp, Pn).astype(jnp.int32)
+    recv_dp = lax.all_to_all(dp_send, axis, split_axis=0, concat_axis=0)
+    recv_msg = lax.all_to_all(msg, axis, split_axis=0, concat_axis=0)
+    flat_dp = recv_dp.reshape(-1)
+    flat_msg = recv_msg.reshape(-1)
+    # IMS construction: sort received messages by destination id
+    sdp, smsg = lax.sort((flat_dp, flat_msg), num_keys=1)
+    valid = sdp < Pn
+    cnt = jnp.zeros((Pn,), jnp.int32).at[sdp].add(valid.astype(jnp.int32), mode="drop")
+    if comb is None:  # non-combiner program: apply_list consumes the runs
+        return None, cnt, sdp, smsg
+    A_r = comb.identity((Pn,), program.msg_dtype)
+    A_r = comb.scatter(A_r, jnp.where(valid, sdp, 0),
+                       jnp.where(valid, smsg, jnp.asarray(comb.e0, program.msg_dtype)))
+    return A_r, cnt, sdp, smsg
+
+
+# --------------------------------------------------------------------------
+# the SPMD superstep
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class StepStats:
+    n_active: jax.Array  # global active vertices after apply
+    n_msgs: jax.Array  # global messages digested this superstep
+    agg: jax.Array  # program aggregator (psum)
+    density: jax.Array  # fraction of edge blocks active for NEXT superstep
+    max_group_blocks: jax.Array  # max active blocks in any (shard,dest) group
+    # (hard bound for the sparse path: sparse is safe iff this ≤ sparse_cap)
+
+
+def _compact_exchange(program, pg, values, active, step, axis):
+    """§Perf (beyond paper): one-hop all_to_all of *compact* combined buffers
+    — bf16 message values + 1-byte has-msg flags (vs f32+int32 on the ring:
+    8 B -> 3 B per slot, one rounding per message instead of per hop).
+    Receiver digests in f32."""
+    comb = program.combiner
+    dests = jnp.arange(pg.n_shards, dtype=jnp.int32)
+    A_s_all, cnt_all = jax.vmap(
+        lambda d: _contrib_dense(program, pg, values, active, step, d,
+                                 _combine_scatter)
+    )(dests)
+    wire_A = A_s_all.astype(jnp.bfloat16)
+    wire_h = (cnt_all > 0).astype(jnp.int8)
+    recv_A = lax.all_to_all(wire_A, axis, split_axis=0, concat_axis=0)
+    recv_h = lax.all_to_all(wire_h, axis, split_axis=0, concat_axis=0)
+    A_r = comb.reduce(recv_A.astype(program.msg_dtype), 0)
+    cnt = jnp.sum(recv_h.astype(jnp.int32), 0)
+    return A_r, cnt
+
+
+def superstep_spmd(
+    program: VertexProgram,
+    pg: PartitionedGraph,
+    values: jax.Array,
+    active: jax.Array,
+    step: jax.Array,
+    *,
+    axis: str,
+    mode: str = "recoded",
+    sparse_cap: int | None = None,
+    kl=None,  # graph.kblocks.KernelLayout per-shard view => Pallas backend
+):
+    """One full superstep: scatter -> exchange -> digest -> apply -> vote."""
+    ctx = _shard_ctx(pg, axis)
+
+    if mode == "recoded_compact":
+        A_r, cnt = _compact_exchange(program, pg, values, active, step, axis)
+    elif mode == "basic" and program.combiner is None:
+        # general Pregel path: destination-sorted message LISTS (§3.3.2)
+        _, cnt, sdp, smsg = _basic_exchange(
+            program, pg, values, active, step, axis
+        )
+        has_msg = (cnt > 0) & pg.vmask
+        new_values, new_active = program.apply_list(
+            values, pg.degree, sdp, smsg, has_msg, active, step, ctx
+        )
+        return _finish_superstep(
+            program, pg, values, new_values, new_active, cnt, has_msg, axis
+        )
+    elif mode == "basic":
+        A_r, cnt, _, _ = _basic_exchange(program, pg, values, active, step, axis)
+    elif kl is not None:
+        from repro.kernels import ops as kops
+
+        prefix = _active_prefix(active)
+        contrib = lambda dest: _contrib_pallas(
+            program, pg, kl, values, active, prefix, step, dest
+        )
+        digest = lambda A, c, A2, c2: kops.digest(
+            A, c, A2, c2, combiner=program.combiner.name,
+            WIN=kl.DST_WIN,
+        )
+        A_r, cnt = _ring_exchange(
+            program, pg, values, active, step, axis, contrib, digest=digest
+        )
+        A_r = A_r.astype(program.msg_dtype)
+    else:
+        combine = _combine_sort if mode == "basic_sc" else _combine_scatter
+        if sparse_cap is not None:
+            prefix = _active_prefix(active)
+            contrib = lambda dest: _contrib_sparse(
+                program, pg, values, active, prefix, step, dest, sparse_cap, combine
+            )
+        else:
+            contrib = lambda dest: _contrib_dense(
+                program, pg, values, active, step, dest, combine
+            )
+        A_r, cnt = _ring_exchange(program, pg, values, active, step, axis, contrib)
+
+    has_msg = (cnt > 0) & pg.vmask
+    new_values, new_active = program.apply(
+        values, pg.degree, A_r, has_msg, active, step, ctx
+    )
+    return _finish_superstep(
+        program, pg, values, new_values, new_active, cnt, has_msg, axis
+    )
+
+
+def _finish_superstep(program, pg, values, new_values, new_active, cnt,
+                      has_msg, axis):
+    """Shared superstep tail: halt voting, aggregator, frontier stats."""
+    new_active = new_active & pg.vmask
+    n_active = lax.psum(jnp.sum(new_active.astype(jnp.int32)), axis)
+    n_msgs = lax.psum(jnp.sum(cnt), axis)
+    agg = program.aggregate(values, new_values, has_msg)
+    agg = (
+        lax.psum(jnp.sum(agg.astype(jnp.float32)), axis)
+        if agg is not None
+        else jnp.float32(0)
+    )
+    # frontier density for the next superstep (drives dense/sparse dispatch)
+    prefix2 = _active_prefix(new_active)
+    act_blk = _block_active(pg, prefix2, pg.blk_lo, pg.blk_hi)  # (n, n_blocks)
+    nonempty = pg.blk_hi >= 0
+    num = lax.psum(jnp.sum(act_blk.astype(jnp.int32)), axis)
+    den = lax.psum(jnp.sum(nonempty.astype(jnp.int32)), axis)
+    density = num.astype(jnp.float32) / jnp.maximum(den, 1).astype(jnp.float32)
+    max_grp = lax.pmax(jnp.max(jnp.sum(act_blk.astype(jnp.int32), axis=-1)), axis)
+
+    return new_values, new_active, StepStats(n_active, n_msgs, agg, density, max_grp)
+
+
+def superstep_logged_spmd(
+    program: VertexProgram,
+    pg: PartitionedGraph,
+    values: jax.Array,
+    active: jax.Array,
+    step: jax.Array,
+    *,
+    axis: str,
+):
+    """Recoded superstep that also *materializes* every per-destination
+    outgoing buffer A_s (so the driver can persist them — "keep all OMSs on
+    local disk until a new checkpoint is written", §3.4). Exchange is an
+    all_to_all of the combined buffers instead of the ring."""
+    ctx = _shard_ctx(pg, axis)
+    comb = program.combiner
+    dests = jnp.arange(pg.n_shards, dtype=jnp.int32)
+    A_s_all, cnt_all = jax.vmap(
+        lambda d: _contrib_dense(program, pg, values, active, step, d,
+                                 _combine_scatter)
+    )(dests)  # (n_dest, P) each
+    recv_A = lax.all_to_all(A_s_all, axis, split_axis=0, concat_axis=0)
+    recv_c = lax.all_to_all(cnt_all, axis, split_axis=0, concat_axis=0)
+    A_r = comb.reduce(recv_A, 0)
+    cnt = jnp.sum(recv_c, 0)
+
+    has_msg = (cnt > 0) & pg.vmask
+    new_values, new_active = program.apply(
+        values, pg.degree, A_r, has_msg, active, step, ctx
+    )
+    new_active = new_active & pg.vmask
+    n_active = lax.psum(jnp.sum(new_active.astype(jnp.int32)), axis)
+    n_msgs = lax.psum(jnp.sum(cnt), axis)
+    agg = program.aggregate(values, new_values, has_msg)
+    agg = (
+        lax.psum(jnp.sum(agg.astype(jnp.float32)), axis)
+        if agg is not None
+        else jnp.float32(0)
+    )
+    prefix2 = _active_prefix(new_active)
+    act_blk = _block_active(pg, prefix2, pg.blk_lo, pg.blk_hi)
+    nonempty = pg.blk_hi >= 0
+    num = lax.psum(jnp.sum(act_blk.astype(jnp.int32)), axis)
+    den = lax.psum(jnp.sum(nonempty.astype(jnp.int32)), axis)
+    density = num.astype(jnp.float32) / jnp.maximum(den, 1).astype(jnp.float32)
+    max_grp = lax.pmax(jnp.max(jnp.sum(act_blk.astype(jnp.int32), axis=-1)), axis)
+    stats = StepStats(n_active, n_msgs, agg, density, max_grp)
+    return new_values, new_active, stats, A_s_all, cnt_all
+
+
+def init_spmd(program: VertexProgram, pg: PartitionedGraph, *, axis: str):
+    ctx = _shard_ctx(pg, axis)
+    values, active = program.init(ctx)
+    return values.astype(program.value_dtype), active & pg.vmask
+
+
+# --------------------------------------------------------------------------
+# drivers
+# --------------------------------------------------------------------------
+
+@dataclass
+class SuperstepRecord:
+    step: int
+    n_active: int
+    n_msgs: int
+    agg: float
+    density: float
+    mode: str
+    seconds: float
+
+
+class GraphDEngine:
+    """Host driver: jits the SPMD body under vmap (emulation) or shard_map
+    (device mesh), adapts dense/sparse per superstep, runs the job loop."""
+
+    AXIS = "machines"
+
+    def __init__(
+        self,
+        pg: PartitionedGraph,
+        program: VertexProgram,
+        mode: str = "recoded",
+        mesh: Mesh | None = None,
+        sparse_cap_frac: float = 0.25,
+        adapt_threshold: float = 0.125,
+        message_log=None,  # core.checkpoint.MessageLog for fast recovery
+        backend: str = "jnp",  # "jnp" | "pallas" (kernels/, §5 fast path)
+        kernel_windows: int = 512,
+    ):
+        if mode in ("recoded", "recoded_compact", "basic_sc") and (
+            program.combiner is None
+        ):
+            raise ValueError(f"mode={mode} requires a message combiner (paper §5)")
+        if mode == "recoded_compact" and program.msg_dtype not in (
+            jnp.float32, jnp.bfloat16
+        ):
+            # bf16 wire rounds integers > 256 — min-label algorithms would
+            # silently merge distinct labels. Float-message programs only.
+            raise ValueError("recoded_compact needs float messages")
+        if backend == "pallas" and (
+            mode != "recoded" or getattr(program, "msg_kind", None) is None
+        ):
+            raise ValueError(
+                "backend='pallas' needs mode='recoded' and a program.msg_kind"
+            )
+        self.pg = pg
+        self.program = program
+        self.mode = mode
+        self.mesh = mesh
+        self.backend = backend
+        self.adapt_threshold = adapt_threshold
+        self.sparse_cap = max(1, int(pg.n_blocks * sparse_cap_frac))
+        self.message_log = message_log
+        axis = self.AXIS
+
+        self.kl = None
+        if backend == "pallas":
+            from repro.graph.kblocks import build_kernel_layout
+
+            win = kernel_windows
+            while pg.P % win:
+                win //= 2  # largest power-of-2 window dividing P
+            self.kl = build_kernel_layout(
+                pg, BLK=min(512, max(win, 8)), SRC_WIN=win, DST_WIN=win
+            )
+
+        def _dense(pg_, v, a, s):
+            return superstep_spmd(program, pg_, v, a, s, axis=axis, mode=mode)
+
+        def _sparse(pg_, v, a, s):
+            return superstep_spmd(
+                program, pg_, v, a, s, axis=axis, mode=mode,
+                sparse_cap=self.sparse_cap,
+            )
+
+        def _pallas(pg_, kl_, v, a, s):
+            return superstep_spmd(program, pg_, v, a, s, axis=axis,
+                                  mode=mode, kl=kl_)
+
+        def _logged(pg_, v, a, s):
+            return superstep_logged_spmd(program, pg_, v, a, s, axis=axis)
+
+        def _init(pg_):
+            return init_spmd(program, pg_, axis=axis)
+
+        if backend == "pallas":
+            step_fn = jax.jit(self._wrap_kl(_pallas))
+            self._step_dense = lambda pg_, v, a, s: step_fn(pg_, self.kl, v, a, s)
+            self._step_sparse = self._step_dense  # skip is always-on in-kernel
+        else:
+            self._step_dense = jax.jit(self._wrap(_dense, n_in=4, n_stats=1))
+            self._step_sparse = (
+                jax.jit(self._wrap(_sparse, n_in=4, n_stats=1))
+                if mode in ("recoded", "basic_sc")
+                else self._step_dense
+            )
+        self._step_logged = (
+            jax.jit(self._wrap_logged(_logged)) if message_log is not None else None
+        )
+        self._init = jax.jit(self._wrap(_init, n_in=1, n_stats=0))
+
+    # -- vmap / shard_map wrapping ------------------------------------------
+    def _wrap(self, fn, n_in: int, n_stats: int):
+        """Run the SPMD body over the machines axis: vmap (emulated shards on
+        one device) or shard_map (one shard per device on a mesh)."""
+        axis = self.AXIS
+        is_step = n_in == 4  # (pg, values, active, step) -> (v, a, stats)
+        if self.mesh is None:
+            if is_step:
+                def wrapped(pg_, v, a, s):
+                    nv, na, st = jax.vmap(
+                        fn, axis_name=axis, in_axes=(0, 0, 0, None)
+                    )(pg_, v, a, s)
+                    # psum'd stats are identical across shards; take shard 0
+                    return nv, na, jax.tree.map(lambda x: x[0], st)
+                return wrapped
+            return lambda pg_: jax.vmap(fn, axis_name=axis)(pg_)
+        # shard_map keeps a size-1 local leading axis; squeeze it around fn so
+        # the SPMD body sees the same per-shard shapes as under vmap.
+        sq = lambda t: jax.tree.map(lambda x: x[0], t)
+        spec = P(axis)
+        if is_step:
+            def body(pg_, v, a, s):
+                nv, na, st = fn(sq(pg_), sq(v), sq(a), s)
+                return nv[None], na[None], st
+            return jax.shard_map(
+                body, mesh=self.mesh,
+                in_specs=(spec, spec, spec, P()), out_specs=(spec, spec, P()),
+            )
+
+        def body(pg_):
+            v, a = fn(sq(pg_))
+            return v[None], a[None]
+        return jax.shard_map(body, mesh=self.mesh, in_specs=(spec,),
+                             out_specs=(spec, spec))
+
+    def _wrap_kl(self, fn):
+        """Like _wrap(is_step) but with the kernel layout as a second arg."""
+        axis = self.AXIS
+        if self.mesh is None:
+            def wrapped(pg_, kl_, v, a, s):
+                nv, na, st = jax.vmap(
+                    fn, axis_name=axis, in_axes=(0, 0, 0, 0, None)
+                )(pg_, kl_, v, a, s)
+                return nv, na, jax.tree.map(lambda x: x[0], st)
+            return wrapped
+        sq = lambda t: jax.tree.map(lambda x: x[0], t)
+        spec = P(axis)
+
+        def body(pg_, kl_, v, a, s):
+            nv, na, st = fn(sq(pg_), sq(kl_), sq(v), sq(a), s)
+            return nv[None], na[None], st
+
+        # check_vma=False: pallas_call outputs carry no varying-mesh-axes
+        # metadata, which the vma checker would otherwise reject.
+        return jax.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec, spec, spec, spec, P()),
+            out_specs=(spec, spec, P()),
+            check_vma=False,
+        )
+
+    def _wrap_logged(self, fn):
+        axis = self.AXIS
+        if self.mesh is None:
+            def wrapped(pg_, v, a, s):
+                nv, na, st, As, cn = jax.vmap(
+                    fn, axis_name=axis, in_axes=(0, 0, 0, None)
+                )(pg_, v, a, s)
+                return nv, na, jax.tree.map(lambda x: x[0], st), As, cn
+            return wrapped
+        sq = lambda t: jax.tree.map(lambda x: x[0], t)
+        spec = P(axis)
+
+        def body(pg_, v, a, s):
+            nv, na, st, As, cn = fn(sq(pg_), sq(v), sq(a), s)
+            return nv[None], na[None], st, As[None], cn[None]
+
+        return jax.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec, spec, spec, P()),
+            out_specs=(spec, spec, P(), spec, spec),
+        )
+
+    # -- job API --------------------------------------------------------------
+    def init(self):
+        return self._init(self.pg)
+
+    def run(
+        self,
+        max_supersteps: int = 10_000,
+        state=None,
+        start_step: int = 0,
+        verbose: bool = False,
+        checkpointer=None,
+        on_step=None,
+    ):
+        """Host superstep loop with dense/sparse auto-dispatch (§3.2)."""
+        values, active = state if state is not None else self.init()
+        history: list[SuperstepRecord] = []
+        target = min(
+            self.program.num_supersteps
+            if self.program.num_supersteps is not None
+            else max_supersteps,
+            max_supersteps,
+        )
+        density = 1.0  # step 0: unknown, assume dense
+        max_grp = self.pg.n_blocks  # hard per-group bound; start pessimistic
+        if checkpointer is not None and checkpointer.latest() is not None:
+            values, active, start_step = checkpointer.restore()
+        for s in range(start_step, target):
+            use_sparse = (
+                self.mode in ("recoded", "basic_sc")
+                and max_grp <= self.sparse_cap  # no group overflows (correctness)
+                and density < self.adapt_threshold  # sparse is worth it (perf)
+            )
+            t0 = time.perf_counter()
+            if self.message_log is not None:
+                values, active, stats, A_s_all, cnt_all = self._step_logged(
+                    self.pg, values, active, jnp.int32(s)
+                )
+                self.message_log.save(s, A_s_all, cnt_all)
+            else:
+                fn = self._step_sparse if use_sparse else self._step_dense
+                values, active, stats = fn(self.pg, values, active, jnp.int32(s))
+            n_active = int(stats.n_active)
+            density = float(stats.density)
+            max_grp = int(stats.max_group_blocks)
+            dt = time.perf_counter() - t0
+            rec = SuperstepRecord(
+                step=s, n_active=n_active, n_msgs=int(stats.n_msgs),
+                agg=float(stats.agg), density=density,
+                mode="sparse" if use_sparse else "dense", seconds=dt,
+            )
+            history.append(rec)
+            if verbose:
+                print(
+                    f"  superstep {s:4d}: active={rec.n_active:>9d} "
+                    f"msgs={rec.n_msgs:>10d} agg={rec.agg:.6g} "
+                    f"density={rec.density:.4f} [{rec.mode}] {dt*1e3:.1f} ms"
+                )
+            if on_step is not None:
+                on_step(rec, (values, active))
+            if checkpointer is not None:
+                checkpointer.maybe_save(s + 1, values, active)
+            if self.program.num_supersteps is None and n_active == 0:
+                break
+        return (values, active), history
+
+    # -- result extraction ----------------------------------------------------
+    def gather_values(self, values) -> dict[int, Any]:
+        """{old_id: value} for all real vertices (the paper's HDFS dump)."""
+        vals = np.asarray(values)
+        old = np.asarray(self.pg.old_ids)
+        mask = np.asarray(self.pg.vmask)
+        return dict(zip(old[mask].tolist(), vals[mask].tolist()))
+
+    def memory_model(self) -> dict[str, int]:
+        """Bytes per shard held resident vs streamed (Lemma 1 accounting)."""
+        pg = self.pg
+        vdt = np.dtype(self.program.value_dtype).itemsize
+        mdt = np.dtype(self.program.msg_dtype).itemsize
+        resident = pg.P * (vdt + 1 + 4 + 1 + 8)  # values, active, degree, vmask, old
+        buffers = pg.P * (mdt + 4) * 2  # A_s + A_r (+ counts), two in flight (§5)
+        streamed = pg.n_shards * pg.E_cap * (4 + 4 + 4)  # edge groups in HBM
+        return dict(resident=resident, buffers=buffers, streamed=streamed)

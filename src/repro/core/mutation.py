@@ -1,0 +1,89 @@
+"""Topology mutation (paper §3.4).
+
+Edge mutations rewrite the edge stream for the next superstep; vertex
+additions append to the state array A with freshly recoded ids — existing
+vertices never change their (shard, position), the invariant the paper's
+intra-superstep recoding maintains. With dense JAX arrays, mutations are
+applied *between* jitted superstep runs (a batched analogue of the paper's
+"new edge stream for Step i+1"): extract-globals -> edit -> reassemble with
+the same assembler as load time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elastic import extract_global
+from repro.graph.partition import PartitionedGraph, build_partition
+
+
+def mutate(
+    pg: PartitionedGraph,
+    values,
+    active,
+    *,
+    add_edges=None,  # (src_gid, dst_gid[, weight]) rows over recoded ids
+    remove_edges=None,  # (src_gid, dst_gid) rows
+    add_vertices: int = 0,  # count of new vertices (appended, fresh gids)
+    new_vertex_value=0,
+):
+    """Returns (pg', values', active', new_gids). Positions of existing
+    vertices are preserved (same gids => same shard/pos for the same n)."""
+    n = pg.n_shards
+    g_real, old_real, val_real, act_real, src_g, dst_g, w_g = extract_global(
+        pg, values, active
+    )
+
+    if remove_edges is not None and len(remove_edges):
+        rem = {(int(a), int(b)) for a, b in np.asarray(remove_edges)}
+        keep = np.array(
+            [(int(a), int(b)) not in rem for a, b in zip(src_g, dst_g)]
+        )
+        src_g, dst_g, w_g = src_g[keep], dst_g[keep], w_g[keep]
+
+    new_gids = np.zeros(0, dtype=np.int64)
+    if add_vertices:
+        # fresh ids continue each shard's position sequence (paper: new
+        # vertices are appended to A; id = n*pos + i keeps holding)
+        per_shard_next = np.zeros(n, dtype=np.int64)
+        shards = g_real % n
+        for i in range(n):
+            mine = g_real[shards == i]
+            per_shard_next[i] = (mine.max() // n + 1) if mine.size else 0
+        outs = []
+        for j in range(add_vertices):
+            i = j % n  # round-robin like hash assignment
+            outs.append(n * per_shard_next[i] + i)
+            per_shard_next[i] += 1
+        new_gids = np.asarray(outs, dtype=np.int64)
+        g_real = np.concatenate([g_real, new_gids])
+        old_real = np.concatenate(
+            [old_real, -2 - np.arange(add_vertices, dtype=np.int64)]
+        )  # synthetic old ids for dumped output
+        val_real = np.concatenate(
+            [val_real,
+             np.full(add_vertices, new_vertex_value, val_real.dtype)]
+        )
+        act_real = np.concatenate(
+            [act_real, np.ones(add_vertices, dtype=bool)]
+        )
+
+    if add_edges is not None and len(add_edges):
+        ae = np.asarray(add_edges)
+        src_g = np.concatenate([src_g, ae[:, 0].astype(np.int64)])
+        dst_g = np.concatenate([dst_g, ae[:, 1].astype(np.int64)])
+        w_new = (ae[:, 2].astype(np.float32) if ae.shape[1] > 2
+                 else np.ones(len(ae), np.float32))
+        w_g = np.concatenate([w_g, w_new])
+
+    order = np.argsort(g_real)
+    pg2 = build_partition(
+        n, src_g, dst_g, w_g, g_real[order], old_real[order],
+        edge_block=pg.edge_block,
+    )
+    vals2 = np.zeros((n, pg2.P), dtype=val_real.dtype)
+    act2 = np.zeros((n, pg2.P), dtype=bool)
+    vals2[g_real % n, g_real // n] = val_real
+    act2[g_real % n, g_real // n] = act_real
+    return pg2, jnp.asarray(vals2), jnp.asarray(act2), new_gids

@@ -1,0 +1,19 @@
+"""Graph substrate: generation, CSR, ID recoding, partitioning, edge blocks."""
+
+from repro.graph.generate import rmat_graph, erdos_renyi_graph, chain_graph, star_graph
+from repro.graph.csr import Graph, build_csr
+from repro.graph.recode import recode_ids, RecodeMap
+from repro.graph.partition import PartitionedGraph, partition_graph
+
+__all__ = [
+    "rmat_graph",
+    "erdos_renyi_graph",
+    "chain_graph",
+    "star_graph",
+    "Graph",
+    "build_csr",
+    "recode_ids",
+    "RecodeMap",
+    "PartitionedGraph",
+    "partition_graph",
+]

@@ -1,0 +1,98 @@
+"""Deterministic graph generators (scaled-down stand-ins for Table 1 datasets).
+
+The paper evaluates on web graphs (WebUK, ClueWeb), social networks (Twitter,
+Friendster) and an RDF graph (BTC). We generate structurally similar graphs:
+RMAT (power-law, web/social-like), Erdős–Rényi (uniform), chains/stars
+(worst-case diameter / hub skew). All generators are seeded and pure numpy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import Graph
+
+
+def rmat_graph(
+    scale: int,
+    edge_factor: int = 16,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+    directed: bool = True,
+    weights: str = "unit",
+    sparse_ids: bool = False,
+) -> Graph:
+    """RMAT power-law graph with 2**scale vertices and edge_factor * n edges.
+
+    ``sparse_ids=True`` remaps vertices to sparse 64-bit ids (to exercise the
+    ID-recoding preprocessing, mirroring the paper's non-dense inputs).
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for level in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities a, b, c, d
+        go_right = (r >= a) & (r < a + b) | (r >= a + b + c)
+        go_down = r >= a + b
+        src |= go_down.astype(np.int64) << level
+        dst |= go_right.astype(np.int64) << level
+    # drop self loops, dedupe
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    if weights == "unit":
+        w = np.ones(src.shape[0], dtype=np.float32)
+    else:
+        w = rng.uniform(0.5, 2.0, size=src.shape[0]).astype(np.float32)
+    ids = np.arange(n, dtype=np.int64)
+    if sparse_ids:
+        # strictly increasing sparse relabel keeps determinism
+        gaps = rng.integers(1, 1000, size=n, dtype=np.int64)
+        relabel = np.cumsum(gaps)
+        src, dst, ids = relabel[src], relabel[dst], relabel
+    return Graph(src=src, dst=dst, weight=w, directed=directed, vertex_ids=ids)
+
+
+def erdos_renyi_graph(
+    n: int, avg_degree: float = 8.0, seed: int = 0, directed: bool = True
+) -> Graph:
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_degree)
+    src = rng.integers(0, n, size=m, dtype=np.int64)
+    dst = rng.integers(0, n, size=m, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    w = np.ones(src.shape[0], dtype=np.float32)
+    return Graph(
+        src=src, dst=dst, weight=w, directed=directed,
+        vertex_ids=np.arange(n, dtype=np.int64),
+    )
+
+
+def chain_graph(n: int, directed: bool = True) -> Graph:
+    """Path graph 0→1→…→n-1: maximal diameter, the sparse-frontier worst case
+    that motivates skip() (one active vertex per superstep in BFS)."""
+    src = np.arange(n - 1, dtype=np.int64)
+    dst = src + 1
+    w = np.ones(n - 1, dtype=np.float32)
+    return Graph(src=src, dst=dst, weight=w, directed=directed,
+                 vertex_ids=np.arange(n, dtype=np.int64))
+
+
+def star_graph(n: int, directed: bool = True) -> Graph:
+    """Hub 0 → spokes 1..n-1: maximal degree skew (BTC/Twitter hub regime)."""
+    src = np.zeros(n - 1, dtype=np.int64)
+    dst = np.arange(1, n, dtype=np.int64)
+    w = np.ones(n - 1, dtype=np.float32)
+    return Graph(src=src, dst=dst, weight=w, directed=directed,
+                 vertex_ids=np.arange(n, dtype=np.int64))

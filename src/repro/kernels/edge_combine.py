@@ -1,0 +1,219 @@
+"""Fused edge-stream combine kernel (the paper's U_c hot loop, §3.2 + §5).
+
+One grid step processes one edge block of a (shard, dest) group laid out by
+``graph.kblocks``:
+
+  HBM -> VMEM   sp/dp/w edge block           (the streaming buffer B, §3.2;
+                                              double-buffered by the Pallas
+                                              pipeline = overlap C3)
+  HBM -> VMEM   values/degree/active window  (the in-memory state array A —
+                                              only an aligned SRC_WIN slice,
+                                              selected by scalar-prefetched
+                                              block metadata)
+  MXU           one-hot gather of source state      (Mosaic has no vector
+  MXU/VPU       one-hot combine into the A_s window  gather/scatter; one-hot
+                                                      matmul is the TPU idiom)
+  VMEM          window accumulator persists across the window's block run
+                (output revisiting); first block of a window initializes it.
+
+skip() (§3.2): the grid walks a scalar-prefetched *compacted* block list
+(active blocks + each window's initializer block). Tail grid steps repeat the
+last kept block with contributions masked to the combiner identity — they cost
+no extra HBM traffic because Pallas skips the copy when the block index does
+not change. Worst case = the dense scan, the paper's guarantee (3).
+
+Supported message kinds (trace-time specialization of compute(.)'s send):
+  div_deg: value / max(degree, 1)      (PageRank)
+  add_w:   value + weight              (SSSP)
+  add_1:   value + 1                   (BFS)
+  copy:    value                       (Hash-Min / label propagation)
+  deg:     degree                      (neighbourhood degree sums)
+Combiners: sum (MXU matmul), min / max (VPU masked reduce).
+
+Layout notes (TPU tiling): the state table is (3, P) so the P axis rides the
+lanes; outputs are (n_dst_windows, DST_WIN) with (1, DST_WIN) blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MSG_KINDS = ("div_deg", "add_w", "add_1", "copy", "deg")
+COMBINERS = ("sum", "min", "max")
+
+_E0 = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+def _msg(kind: str, vals, degs, w):
+    if kind == "div_deg":
+        return vals / jnp.maximum(degs, 1.0)
+    if kind == "add_w":
+        return vals + w
+    if kind == "add_1":
+        return vals + 1.0
+    if kind == "copy":
+        return vals
+    if kind == "deg":
+        return degs
+    raise ValueError(kind)
+
+
+def _combine2(comb: str, a, b):
+    if comb == "sum":
+        return a + b
+    if comb == "min":
+        return jnp.minimum(a, b)
+    return jnp.maximum(a, b)
+
+
+def _kernel(
+    # scalar prefetch (SMEM)
+    ids_ref,    # (NB,) i32 compacted block ids (ascending; tail repeats last)
+    nkeep_ref,  # (1,) i32 number of kept blocks
+    swin_ref,   # (NB,) i32 source-window index per block
+    dwin_ref,   # (NB,) i32 dest-window index per block
+    # blocked inputs (VMEM)
+    state_ref,  # (3, SRC_WIN) f32 [values ; degree ; active] window
+    sp_ref,     # (1, BLK) i32
+    dp_ref,     # (1, BLK) i32
+    w_ref,      # (1, BLK) f32
+    # outputs (VMEM)
+    out_ref,    # (1, DST_WIN) f32 A_s window accumulator
+    cnt_ref,    # (1, DST_WIN) f32 message counts
+    *,
+    BLK: int,
+    SRC_WIN: int,
+    DST_WIN: int,
+    msg_kind: str,
+    combiner: str,
+):
+    j = pl.program_id(0)
+    blk = ids_ref[j]
+    prev = ids_ref[jnp.maximum(j - 1, 0)]
+    is_first = (j == 0) | (dwin_ref[blk] != dwin_ref[prev])
+    live = j < nkeep_ref[0]
+
+    sp = sp_ref[0, :]
+    dp = dp_ref[0, :]
+    w = w_ref[0, :]
+    src_base = swin_ref[blk] * SRC_WIN
+    dst_base = dwin_ref[blk] * DST_WIN
+
+    # --- one-hot gather of source state (MXU; Mosaic has no vector gather) ---
+    sl = jnp.clip(sp - src_base, 0, SRC_WIN - 1)
+    valid = (sp >= 0) & live
+    oh_s = jnp.where(
+        valid[:, None],
+        sl[:, None] == lax.broadcasted_iota(jnp.int32, (BLK, SRC_WIN), 1),
+        False,
+    )
+    # (BLK, SRC_WIN) x (3, SRC_WIN) -> (BLK, 3), contracting the window axis
+    g = lax.dot_general(
+        oh_s.astype(jnp.float32), state_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    vals, degs, acts = g[:, 0], g[:, 1], g[:, 2]
+    aact = valid & (acts > 0.0)
+
+    # --- compute(.)'s send, masked to the combiner identity ------------------
+    e0 = jnp.float32(_E0[combiner])
+    msg = jnp.where(aact, _msg(msg_kind, vals, degs, w), e0)
+
+    # --- one-hot combine into the A_s window (§5 in-memory combining) --------
+    dl = jnp.clip(dp - dst_base, 0, DST_WIN - 1)
+    oh_d = jnp.where(
+        aact[:, None],
+        dl[:, None] == lax.broadcasted_iota(jnp.int32, (BLK, DST_WIN), 1),
+        False,
+    )
+    if combiner == "sum":
+        part = jnp.dot(msg, oh_d.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    elif combiner == "min":
+        part = jnp.min(jnp.where(oh_d, msg[:, None], e0), axis=0)
+    else:
+        part = jnp.max(jnp.where(oh_d, msg[:, None], e0), axis=0)
+    cpart = jnp.dot(aact.astype(jnp.float32), oh_d.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+
+    # --- window-run accumulation (first block initializes) -------------------
+    @pl.when(is_first)
+    def _init():
+        out_ref[0, :] = part
+        cnt_ref[0, :] = cpart
+
+    @pl.when(jnp.logical_not(is_first))
+    def _acc():
+        out_ref[0, :] = _combine2(combiner, out_ref[0, :], part)
+        cnt_ref[0, :] = cnt_ref[0, :] + cpart
+
+
+def edge_combine_group(
+    state3: jax.Array,  # (3, P) f32 [values ; degree ; active]
+    sp: jax.Array,  # (NB, BLK) i32
+    dp: jax.Array,  # (NB, BLK) i32
+    w: jax.Array,  # (NB, BLK) f32
+    blk_ids: jax.Array,  # (NB,) i32 compacted (dense: iota)
+    n_keep: jax.Array,  # () or (1,) i32
+    blk_swin: jax.Array,  # (NB,) i32
+    blk_dwin: jax.Array,  # (NB,) i32
+    *,
+    SRC_WIN: int,
+    DST_WIN: int,
+    msg_kind: str,
+    combiner: str,
+    interpret: bool = False,
+):
+    """A_s, cnt for one (shard, dest) group. Returns ((P,) f32, (P,) f32)."""
+    P = state3.shape[1]
+    NB, BLK = sp.shape
+    assert msg_kind in MSG_KINDS and combiner in COMBINERS
+    n_dwin = P // DST_WIN
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(NB,),
+        in_specs=[
+            pl.BlockSpec(
+                (3, SRC_WIN), lambda j, ids, nk, sw, dw: (0, sw[ids[j]])
+            ),
+            pl.BlockSpec((1, BLK), lambda j, ids, nk, sw, dw: (ids[j], 0)),
+            pl.BlockSpec((1, BLK), lambda j, ids, nk, sw, dw: (ids[j], 0)),
+            pl.BlockSpec((1, BLK), lambda j, ids, nk, sw, dw: (ids[j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, DST_WIN), lambda j, ids, nk, sw, dw: (dw[ids[j]], 0)),
+            pl.BlockSpec((1, DST_WIN), lambda j, ids, nk, sw, dw: (dw[ids[j]], 0)),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, BLK=BLK, SRC_WIN=SRC_WIN, DST_WIN=DST_WIN,
+        msg_kind=msg_kind, combiner=combiner,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((n_dwin, DST_WIN), jnp.float32),
+        jax.ShapeDtypeStruct((n_dwin, DST_WIN), jnp.float32),
+    ]
+    A_s, cnt = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        blk_ids.astype(jnp.int32),
+        jnp.atleast_1d(n_keep).astype(jnp.int32),
+        blk_swin.astype(jnp.int32),
+        blk_dwin.astype(jnp.int32),
+        state3,
+        sp,
+        dp,
+        w,
+    )
+    return A_s.reshape(P), cnt.reshape(P)

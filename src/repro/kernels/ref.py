@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_combine import _E0, _msg
+
+
+def edge_combine_ref(
+    state3: jax.Array,  # (3, P)
+    sp: jax.Array,  # (NB, BLK)
+    dp: jax.Array,
+    w: jax.Array,
+    blk_ids: jax.Array,  # (NB,)
+    n_keep: jax.Array,
+    blk_swin,  # unused (absolute positions suffice in jnp)
+    blk_dwin,  # unused
+    *,
+    SRC_WIN: int,
+    DST_WIN: int,
+    msg_kind: str,
+    combiner: str,
+):
+    """Oracle for kernels.edge_combine.edge_combine_group.
+
+    Processes exactly the blocks listed in blk_ids[:n_keep] (set difference
+    is what skip() saves), using plain gathers and scatter-combines.
+    """
+    P = state3.shape[1]
+    NB, BLK = sp.shape
+    values, degree, active = state3[0], state3[1], state3[2]
+
+    keep = jnp.arange(NB) < jnp.atleast_1d(n_keep)[0]
+    spk = jnp.where(keep[:, None], jnp.take(sp, jnp.clip(blk_ids, 0), axis=0), -1)
+    dpk = jnp.where(keep[:, None], jnp.take(dp, jnp.clip(blk_ids, 0), axis=0), 0)
+    wk = jnp.where(keep[:, None], jnp.take(w, jnp.clip(blk_ids, 0), axis=0), 0.0)
+
+    spf, dpf, wf = spk.reshape(-1), dpk.reshape(-1), wk.reshape(-1)
+    spc = jnp.clip(spf, 0)
+    vals = values[spc]
+    degs = degree[spc]
+    aact = (spf >= 0) & (active[spc] > 0)
+    e0 = jnp.float32(_E0[combiner])
+    msg = jnp.where(aact, _msg(msg_kind, vals, degs, wf), e0)
+
+    A = jnp.full((P,), e0, jnp.float32)
+    if combiner == "sum":
+        A = A.at[dpf].add(msg)
+    elif combiner == "min":
+        A = A.at[dpf].min(msg)
+    else:
+        A = A.at[dpf].max(msg)
+    cnt = jnp.zeros((P,), jnp.float32).at[dpf].add(aact.astype(jnp.float32))
+    return A, cnt
+
+
+def digest_ref(A_r, cnt, recv, rcnt, *, combiner: str):
+    """Oracle for kernels.digest: A_r' = combine(A_r, recv); cnt' = cnt+rcnt."""
+    if combiner == "sum":
+        A = A_r + recv
+    elif combiner == "min":
+        A = jnp.minimum(A_r, recv)
+    else:
+        A = jnp.maximum(A_r, recv)
+    return A, cnt + rcnt
+
+
+def moe_combine_ref(expert_out, topk_idx, topk_w):
+    """Oracle for kernels.moe_dispatch combine: y[t] = sum_k w[t,k]*out[t,k]."""
+    return jnp.einsum("tkd,tk->td", expert_out, topk_w)

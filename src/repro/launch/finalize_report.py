@@ -1,0 +1,60 @@
+"""Insert generated dry-run/roofline tables into EXPERIMENTS.md markers.
+
+    PYTHONPATH=src python -m repro.launch.finalize_report
+"""
+
+import io
+import json
+import sys
+from contextlib import redirect_stdout
+
+from repro.launch.report import dryrun_table, roofline_table
+
+
+def main():
+    with open("dryrun_results.json") as f:
+        results = json.load(f)
+    try:
+        with open("graphd_dryrun.json") as f:
+            gd = json.load(f)
+    except FileNotFoundError:
+        gd = []
+    results.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    single = [r for r in results if r["mesh"] == "singlepod"]
+    multi = [r for r in results if r["mesh"] == "multipod"]
+
+    dr = (
+        "### Dry-run (single pod, 16×16 = 256 chips)\n\n"
+        + dryrun_table(single)
+        + "\n\n### Dry-run (multi-pod, 2×16×16 = 512 chips)\n\n"
+        + dryrun_table(multi)
+        + "\n\n### Dry-run — GraphD (the paper's system, flat machine ring)\n\n"
+        + dryrun_table(gd)
+        + "\n\nAll compiles succeeded (`ok`) or are declared skips "
+        "(long_500k × pure-full-attention, per the assignment). Peak "
+        "per-chip resident bytes = argument bytes (exact, sharded "
+        "params+optimizer+caches) — see `peak_bytes_model` in the JSON for "
+        "the modeled activation add-on; every cell fits 16 GB/chip HBM.\n"
+    )
+    rf = (
+        "### Roofline (single pod; per-chip per-step seconds)\n\n"
+        + roofline_table(single)
+        + "\n\n### Roofline (multi-pod)\n\n"
+        + roofline_table(multi)
+        + "\n\nGraphD cell: see §Perf cell C for the analytic derivation "
+        "(the ring loop's HLO costs are counted once per round by XLA).\n"
+    )
+
+    with open("EXPERIMENTS.md") as f:
+        txt = f.read()
+    txt = txt.replace("<!-- DRYRUN_TABLES -->", dr)
+    txt = txt.replace("<!-- ROOFLINE_TABLES -->", rf)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(txt)
+    print("EXPERIMENTS.md updated:",
+          len(single), "single-pod +", len(multi), "multi-pod cells +",
+          len(gd), "graphd")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Production mesh + sharding rules (FSDP × TP × EP × SP).
+
+Mesh: single pod (data=16, model=16) = 256 chips; multi-pod adds a leading
+pod axis (pod=2, data=16, model=16) = 512 chips.
+
+Parallelism map (DESIGN.md §5):
+* batch        -> ('pod', 'data')  pure DP across pods (cheapest inter-pod
+                  traffic: one gradient reduction per step)
+* params       -> FSDP-shard the d_model-ish axis over 'data', TP-shard the
+                  heads/ff/vocab/expert axis over 'model'
+* MoE experts  -> EP over 'model'
+* KV caches    -> sequence axis over 'model' (decode attention becomes
+                  sequence-parallel; XLA turns the softmax reductions into
+                  small all-reduces)
+
+Importing this module never touches jax device state — everything is a
+function (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devices, axes)
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel (batch) axes of this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+def _base_spec(name: str, ndim: int) -> tuple:
+    """Spec for the UNSTACKED leaf (no leading layer-group axis)."""
+    if name in ("embed", "unembed"):
+        return ("model", "data")  # vocab TP, d FSDP
+    if name in ("wq", "wk", "wv", "w_ukv", "in_proj"):
+        return ("data", "model")
+    if name in ("wo", "out_proj"):
+        return ("model", "data")
+    if name in ("w_dkv", "w_krope"):
+        return ("data", None)
+    if name == "router":
+        return ("data", None)
+    if name in ("w_gate", "w_up"):
+        if ndim == 3:  # MoE expert bank (E, d, f): EP + FSDP
+            return ("model", "data", None)
+        return ("data", "model")
+    if name == "w_down":
+        if ndim == 3:  # (E, f, d)
+            return ("model", None, "data")
+        return ("model", "data")
+    if name in ("ws_gate", "ws_up"):
+        return ("data", "model")
+    if name == "ws_down":
+        return ("model", "data")
+    if name == "conv_w":
+        return (None, "model")
+    if name in ("conv_b",):
+        return ("model",)
+    if name in ("A_log", "dt_bias", "D"):
+        return ("model",)
+    # norms, gates, scalars: replicated
+    return (None,) * ndim
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    """groups/encoder params carry a leading layer-group axis."""
+    for entry in path:
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if key in ("groups", "encoder"):
+            return True
+    return False
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def _clean(spec, shape, mesh: Mesh):
+    """Drop spec axes that do not divide the dimension (or are absent)."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        if isinstance(ax, tuple):
+            ax2 = tuple(a for a in ax if a in mesh.axis_names)
+            ax = ax2 if ax2 else None
+        elif ax not in mesh.axis_names:
+            ax = None
+        size = _axis_size(mesh, ax)
+        out.append(ax if ax is not None and dim % size == 0 else None)
+    return P(*out)
+
+
+def _base_spec_serve(name: str, ndim: int) -> tuple:
+    """Weight-stationary serving specs: NO FSDP axis on dense weights (no
+    per-token all-gather — decode is latency-bound, params stay resident,
+    TP over 'model' only). MoE expert banks additionally shard their ff
+    axis over 'data' so 235B-class experts fit per chip."""
+    if name in ("embed", "unembed"):
+        return ("model", None)
+    if name in ("wq", "wk", "wv", "w_ukv", "in_proj"):
+        return (None, "model")
+    if name in ("wo", "out_proj"):
+        return ("model", None)
+    if name in ("w_dkv", "w_krope", "router"):
+        return (None, None)
+    if name in ("w_gate", "w_up"):
+        if ndim == 3:  # (E, d, f): EP + ff-TP over 'data'
+            return ("model", None, "data")
+        return (None, "model")
+    if name == "w_down":
+        if ndim == 3:  # (E, f, d)
+            return ("model", "data", None)
+        return ("model", None)
+    if name in ("ws_gate", "ws_up"):
+        return (None, "model")
+    if name == "ws_down":
+        return ("model", None)
+    if name == "conv_w":
+        return (None, "model")
+    if name in ("conv_b", "A_log", "dt_bias", "D"):
+        return ("model",)
+    return (None,) * ndim
+
+
+def param_specs(params_tree, mesh: Mesh, mode: str = "train") -> object:
+    """PartitionSpec pytree for a params (or optimizer-state) tree.
+
+    mode="train": FSDP('data') x TP('model')  (ZeRO-sharded states)
+    mode="serve": weight-stationary TP (hillclimbed decode path, §Perf)
+    """
+    base_fn = _base_spec if mode == "train" else _base_spec_serve
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        if name in ("step",):
+            return P()
+        stacked = _is_stacked(path)
+        base_ndim = leaf.ndim - (1 if stacked else 0)
+        base = base_fn(name, base_ndim)
+        base = tuple(base[:base_ndim]) + (None,) * (base_ndim - len(base))
+        spec = ((None,) + base) if stacked else base
+        assert len(spec) == leaf.ndim, (name, spec, leaf.shape)
+        return _clean(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def batch_specs_tree(batch_tree, mesh: Mesh) -> object:
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        return _clean((dp,) + (None,) * (leaf.ndim - 1), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def cache_specs_tree(cache_tree, mesh: Mesh) -> object:
+    """KV caches: batch over DP axes, sequence/latent over 'model' (SP)."""
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        stacked = _is_stacked(path)
+        if name == "pos":  # (Lc,) int32 position table
+            base = (None,)
+        elif name in ("k", "v"):  # (B, Lc|T, Hkv, hd)
+            base = (dp, "model", None, None)
+        elif name in ("c_kv", "k_rope"):  # (B, Lc, r)
+            base = (dp, "model", None)
+        elif name == "state":  # (B, H, hd, N)
+            base = (dp, "model", None, None)
+        elif name == "conv":  # (B, K-1, C)
+            base = (dp, None, "model")
+        else:
+            base = (dp,) + (None,) * (leaf.ndim - 1)
+        spec = ((None,) + tuple(base)) if stacked else tuple(base)
+        spec = spec[: leaf.ndim]
+        return _clean(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

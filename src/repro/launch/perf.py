@@ -1,0 +1,105 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimbing driver.
+
+Runs the named optimization variants of the three chosen cells
+(worst-roofline, most-collective-bound, most paper-representative), records
+each to perf_results.json, and prints before/after against the baseline in
+dryrun_results.json. Each variant is one hypothesis->change->measure cycle;
+the narrative napkin math lives in EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell A1 [A2 B1 B2 C1 C2 ...]
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell, run_graphd_cell
+from repro.models.attention import set_flat_heads
+
+
+def variant_A(tag: str):
+    """command-r-plus-104b x train_4k (most collective-bound)."""
+    cfg = get_config("command-r-plus-104b")
+    if tag == "A1":  # flat-head attention: shard the O(S^2) probs 16-way
+        set_flat_heads(True)
+    elif tag == "A2":  # A1 + no sequence sharding of the residual stream
+        set_flat_heads(True)
+        cfg = dataclasses.replace(cfg, seq_shard=False)
+    elif tag == "A3":  # A1 + int8 error-feedback gradient compression
+        set_flat_heads(True)
+        cfg = dataclasses.replace(cfg, grad_compress=True)
+    elif tag == "A4":  # A1 + no remat (flops down, activation memory up)
+        set_flat_heads(True)
+        cfg = dataclasses.replace(cfg, remat=False)
+    try:
+        return run_cell("command-r-plus-104b", "train_4k", multi_pod=False,
+                        cfg=cfg, variant=tag)
+    finally:
+        set_flat_heads(False)
+
+
+def variant_B(tag: str):
+    """qwen3-moe-235b-a22b x decode_32k (worst roofline fraction)."""
+    cfg = get_config("qwen3-moe-235b-a22b")
+    pm = "train"
+    if tag == "B1":  # weight-stationary TP: kill per-token FSDP all-gathers
+        pm = "serve"
+    elif tag == "B2":  # B1 + flat-head attention over the 32k cache
+        pm = "serve"
+        set_flat_heads(True)
+    elif tag == "B3":  # B1 + tighter expert capacity (decode batch routing)
+        pm = "serve"
+        cfg = dataclasses.replace(cfg, capacity_factor=1.0)
+    try:
+        return run_cell("qwen3-moe-235b-a22b", "decode_32k", multi_pod=False,
+                        cfg=cfg, param_mode=pm, variant=tag)
+    finally:
+        set_flat_heads(False)
+
+
+def variant_C(tag: str):
+    """graphd-pagerank superstep (the paper's own technique)."""
+    if tag == "C1":  # compact wire: bf16 msgs + bool flags, one-hop a2a
+        return run_graphd_cell(False, mode="recoded_compact", variant=tag)
+    if tag == "C2":  # 4x larger edge blocks (streaming granularity B, §3.2)
+        return run_graphd_cell(False, edge_block=16384, variant=tag)
+    if tag == "C3":  # compact wire + big blocks
+        return run_graphd_cell(False, mode="recoded_compact",
+                               edge_block=16384, variant=tag)
+    raise KeyError(tag)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cells", nargs="+")
+    ap.add_argument("--out", default="perf_results.json")
+    args = ap.parse_args()
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for tag in args.cells:
+        print(f"[perf] running variant {tag} ...", flush=True)
+        fn = {"A": variant_A, "B": variant_B, "C": variant_C}[tag[0]]
+        rec = fn(tag)
+        results = [r for r in results if r.get("variant") != tag]
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(json.dumps(
+            {k: rec[k] for k in (
+                "variant", "flops_per_chip", "bytes_per_chip",
+                "collective_bytes_per_chip", "t_compute_s", "t_memory_s",
+                "t_collective_s", "dominant", "roofline_fraction",
+            ) if k in rec},
+            indent=1,
+        ), flush=True)
+
+
+if __name__ == "__main__":
+    main()

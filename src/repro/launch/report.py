@@ -1,0 +1,94 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b >= 2**30:
+        return f"{b/2**30:.2f} GiB"
+    if b >= 2**20:
+        return f"{b/2**20:.1f} MiB"
+    return f"{b/2**10:.0f} KiB"
+
+
+def fmt_t(s):
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s*1e6:.0f} µs"
+    if s < 1:
+        return f"{s*1e3:.1f} ms"
+    return f"{s:.2f} s"
+
+
+def dryrun_table(results):
+    lines = [
+        "| arch | shape | mesh | compile | per-chip args | HLO FLOPs/chip | "
+        "HLO bytes/chip | collective B/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"SKIP ({r['reason'].split(' — ')[0]}) | – | – | – | – |"
+            )
+            continue
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"**FAIL** | – | – | – | – |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']}s | {fmt_bytes(r['argument_bytes'])} | "
+            f"{r['flops_per_chip']:.3g} | {r['bytes_per_chip']:.3g} | "
+            f"{r['collective_bytes_per_chip']:.3g} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(results):
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "useful/HLO FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if not r.get("ok"):
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(r['t_compute_s'])} | "
+            f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    results.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    single = [r for r in results if r["mesh"] == "singlepod"]
+    multi = [r for r in results if r["mesh"] == "multipod"]
+    print("### Dry-run (single pod, 16x16)\n")
+    print(dryrun_table(single))
+    if multi:
+        print("\n### Dry-run (multi-pod, 2x16x16)\n")
+        print(dryrun_table(multi))
+    print("\n### Roofline (single pod)\n")
+    print(roofline_table(single))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch × shape × mesh), all per chip, from the compiled
+dry-run artifact:
+
+  compute    = HLO_FLOPs / peak_FLOP/s            (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw                 (819 GB/s)
+  collective = collective_bytes / link_bw         (~50 GB/s/link ICI)
+
+cost_analysis() reports the per-device partitioned program, so FLOPs/bytes
+need no further division. Collective bytes are parsed from the post-SPMD
+HLO: result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (all-reduce counted twice — RS+AG
+decomposition; ring factors (n-1)/n ≈ 1 are ignored).
+
+MODEL_FLOPS = 6·N·D for training (2·N·D for inference steps), N = active
+params; the ratio MODEL_FLOPS/HLO_FLOPs surfaces remat/redundant compute.
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_text(hlo: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO."""
+    by_op = {op: 0 for op in _COLL_OPS}
+    count = {op: 0 for op in _COLL_OPS}
+    for line in hlo.splitlines():
+        stripped = line.lstrip()
+        # result op lines look like:  %x = bf16[8,128]{1,0} all-reduce(...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for op in _COLL_OPS:
+            token = f" {op}("
+            start_token = f" {op}-start("
+            if token in f" {rhs}" or start_token in f" {rhs}":
+                head = rhs.split(op, 1)[0]
+                nbytes = sum(
+                    _shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(head)
+                )
+                mult = 2 if op == "all-reduce" else 1  # AR = RS + AG
+                by_op[op] += nbytes * mult
+                count[op] += 1
+                break
+    total = sum(by_op.values())
+    return dict(total=total, by_op={k: v for k, v in by_op.items() if v},
+                counts={k: v for k, v in count.items() if v})
+
+
+def roofline_terms(cfg, shape_info, *, flops, bytes_accessed,
+                   collective_bytes, n_chips, graphd=None) -> dict:
+    """The three terms (seconds/step/chip), dominant term, model-FLOPs ratio."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = collective_bytes / ICI_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_collective)
+    dominant = max(terms, key=terms.get)
+
+    model_flops_per_chip = 0.0
+    if graphd is not None:
+        # useful work of a PageRank superstep: ~10 flops/edge + 2/vertex
+        model_flops_per_chip = (10 * graphd["E"] + 2 * graphd["V"]) / graphd["n"]
+    elif cfg is not None:
+        N = cfg.n_active_params()
+        kind = shape_info["kind"]
+        S, B = shape_info["seq_len"], shape_info["global_batch"]
+        if kind == "train":
+            tokens = S * B
+            model_flops = 6 * N * tokens
+        elif kind == "prefill":
+            tokens = S * B
+            model_flops = 2 * N * tokens
+        else:  # decode: one token per sequence
+            model_flops = 2 * N * B
+        model_flops_per_chip = model_flops / n_chips
+
+    ratio = model_flops_per_chip / flops if flops else 0.0
+    bound = (
+        t_compute / max(t_compute, t_memory, t_collective)
+        if max(terms.values()) > 0
+        else 0.0
+    )
+    return dict(
+        t_compute_s=t_compute,
+        t_memory_s=t_memory,
+        t_collective_s=t_collective,
+        dominant=dominant,
+        model_flops_per_chip=model_flops_per_chip,
+        useful_flops_ratio=ratio,
+        roofline_fraction=round(
+            model_flops_per_chip / PEAK_FLOPS
+            / max(max(terms.values()), 1e-30), 4
+        ),
+    )

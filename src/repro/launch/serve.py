@@ -1,0 +1,49 @@
+"""Serving launcher: batched prefill + greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch minitron-4b \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.tokens import synthetic_batch
+from repro.models.transformer import init_params
+from repro.serving.cache import cache_bytes, make_caches
+from repro.serving.engine import greedy_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.key(0))
+    max_len = args.prompt_len + args.gen
+    caches = make_caches(cfg, args.batch, max_len=max_len)
+    print(f"[serve] {cfg.name}: cache {cache_bytes(caches)/2**20:.1f} MiB "
+          f"for B={args.batch} L={max_len}")
+    batch = synthetic_batch(cfg, 0, args.prompt_len, args.batch)
+    t0 = time.perf_counter()
+    out = greedy_generate(cfg, params, batch["tokens"], caches, args.gen,
+                          media=batch.get("media"))
+    dt = time.perf_counter() - t0
+    print(f"[serve] generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("[serve] sample tokens:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

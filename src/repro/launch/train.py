@@ -1,0 +1,114 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-4b \
+        --steps 200 --batch 8 --seq 128 --reduced [--devices N]
+
+On this CPU container use --reduced (same-family tiny config). On a real
+pod, drop --reduced and pass the production mesh via --mesh-data/--mesh-model.
+Checkpoints + restart come from training state dumps every --ckpt-every.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import synthetic_batch
+from repro.models.transformer import init_params
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import init_train_state, make_train_step
+
+
+def save_train_ckpt(path, step, params, opt):
+    os.makedirs(path, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path((params, opt))
+    # npz cannot round-trip bfloat16: widen to f32 (exact); restore narrows
+    # back using the in-memory template dtypes.
+    arrs = {}
+    for k, v in flat:
+        a = np.asarray(v)
+        arrs[jax.tree_util.keystr(k)] = (
+            a.astype(np.float32) if a.dtype.name == "bfloat16" else a
+        )
+    np.savez(os.path.join(path, f"state-{step:06d}.npz"), **arrs)
+    with open(os.path.join(path, "latest.json"), "w") as f:
+        json.dump(dict(step=step), f)
+
+
+def restore_train_ckpt(path, params, opt):
+    with open(os.path.join(path, "latest.json")) as f:
+        step = json.load(f)["step"]
+    z = np.load(os.path.join(path, f"state-{step:06d}.npz"))
+    flat, tdef = jax.tree_util.tree_flatten_with_path((params, opt))
+    leaves = [
+        jnp.asarray(z[jax.tree_util.keystr(k)]).astype(tmpl.dtype)
+        for k, tmpl in flat
+    ]
+    params, opt = jax.tree_util.tree_unflatten(tdef, leaves)
+    return step, params, opt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="ckpt_train")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                          total_steps=args.steps)
+    print(f"[train] {cfg.name}: {cfg.n_params()/1e6:.1f}M params "
+          f"({cfg.n_active_params()/1e6:.1f}M active), "
+          f"batch={args.batch}x{args.seq}")
+
+    params = init_params(cfg, jax.random.key(args.seed))
+    opt = init_train_state(cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      microbatches=args.microbatches))
+    start = 0
+    if args.resume and os.path.exists(
+        os.path.join(args.ckpt_dir, "latest.json")
+    ):
+        start, params, opt = restore_train_ckpt(args.ckpt_dir, params, opt)
+        print(f"[train] resumed at step {start}")
+
+    tokens_per_step = args.batch * args.seq
+    t_start = time.perf_counter()
+    for s in range(start, args.steps):
+        batch = synthetic_batch(cfg, s, args.seq, args.batch)
+        t0 = time.perf_counter()
+        params, opt, m = step_fn(params, opt, batch)
+        loss = float(m["loss"])
+        dt = time.perf_counter() - t0
+        if s % max(args.steps // 20, 1) == 0 or s == args.steps - 1:
+            print(f"  step {s:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}  "
+                  f"lr {float(m['lr']):.2e}  "
+                  f"{tokens_per_step / dt:.0f} tok/s")
+        if args.ckpt_every and (s + 1) % args.ckpt_every == 0:
+            save_train_ckpt(args.ckpt_dir, s + 1, params, opt)
+    total = time.perf_counter() - t_start
+    print(f"[train] done: {args.steps - start} steps in {total:.1f}s, "
+          f"final loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Attention variants: GQA, sliding-window local, cross-attention, and MLA
+(DeepSeek multi-head latent attention with the compressed KV cache).
+
+All functions take/return (B, S, d) activations. Caches are explicit dicts:
+
+  GQA:  {k: (B, Lc, Hkv, hd), v: ..., pos: (Lc,) int32 absolute, -1 empty}
+  MLA:  {c_kv: (B, Lc, r), k_rope: (B, Lc, rd), pos: (Lc,)}
+
+``Lc = window`` for sliding-window layers (ring buffer — this is what makes
+gemma3/hymba ``long_500k`` decode cheap) and ``Lc = max_len`` for global
+layers. Three static modes per call:
+
+  cache=None              train forward (causal or bidirectional)
+  cache given, S > 1      prefill: attend causally AND fill the cache
+  cache given, S == 1     decode: ring-write one entry, attend over cache
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+from repro.models.sharding import act_bshd, act_btd
+
+
+_FLAT_HEADS = False  # §Perf: repeat KV to flat heads so TP shards H cleanly
+
+
+def set_flat_heads(on: bool):
+    """Hillclimb knob (§Perf iteration 1): grouped-KV attention keeps the
+    tiny Hkv axis, which the 16-way 'model' axis cannot shard — XLA then
+    replicates the O(S^2) logits/probs. Flat mode repeats K/V to H heads
+    (bytes negligible next to the S^2 tensors) so logits shard 16-ways."""
+    global _FLAT_HEADS
+    _FLAT_HEADS = on
+
+
+def _attend(q, k, v, mask):
+    """q: (B,S,H,hd), k/v: (B,T,Hkv,hd) with GQA head grouping."""
+    from repro.models.sharding import constrain
+
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    if _FLAT_HEADS:
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)  # (B,T,H,hd)
+            v = jnp.repeat(v, rep, axis=2)
+            Hkv, rep = H, 1
+        logits = jnp.einsum(
+            "bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)
+        ) / jnp.sqrt(jnp.float32(hd))
+        logits = constrain(logits, "batch", "model", None, None)
+        logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+        p = constrain(jax.nn.softmax(logits, axis=-1).astype(v.dtype),
+                      "batch", "model", None, None)
+        return jnp.einsum("bhst,bthd->bshd", p, v)
+    qg = q.reshape(B, S, Hkv, rep, hd)
+    logits = jnp.einsum(
+        "bsgrd,btgd->bgrst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def _train_mask(positions, window, causal):
+    q_pos = positions
+    k_pos = positions
+    if not causal:
+        B, S = positions.shape
+        return jnp.ones((B, S, S), bool)
+    m = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    return m
+
+
+def _fill_cache(cache, entries, positions):
+    """Prefill: write the last Lc entries (ring order is trivially aligned
+    because prefill starts at position 0)."""
+    Lc = cache["pos"].shape[0]
+    S = positions.shape[1]
+    new = dict()
+    take = min(S, Lc)
+    for name, e in entries.items():
+        new[name] = jax.lax.dynamic_update_slice_in_dim(
+            cache[name], e[:, S - take:], 0, 1
+        )
+    pos_tail = positions[0, S - take:]
+    new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos_tail.astype(jnp.int32), 0, 0
+    )
+    return new
+
+
+def _ring_write(cache, entries, positions):
+    """Decode: write one entry at slot pos % Lc."""
+    Lc = cache["pos"].shape[0]
+    p = positions[0, 0]
+    slot = jnp.mod(p, Lc)
+    new = dict()
+    for name, e in entries.items():
+        new[name] = jax.lax.dynamic_update_slice_in_dim(cache[name], e, slot, 1)
+    new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], p[None].astype(jnp.int32), slot, 0
+    )
+    return new
+
+
+def _cache_mask(positions, cache_pos, window):
+    """(B, S, Lc) mask from absolute cached positions (-1 = empty)."""
+    k_pos = cache_pos[None, None, :]
+    q_pos = positions[:, :, None]
+    m = (k_pos >= 0) & (k_pos <= q_pos)
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def gqa_attention(
+    p: dict,
+    x,
+    positions,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int | None = None,
+    causal: bool = True,
+    cache: dict | None = None,
+    cross_kv=None,  # (k, v) precomputed for cross-attention
+):
+    """Returns (out (B,S,d), new_cache_or_None)."""
+    B, S, d = x.shape
+    q = act_bshd(jnp.einsum("bsd,dhk->bshk", x,
+                            p["wq"].reshape(d, n_heads, head_dim)))
+    q = apply_rope(q, positions, rope_theta)
+
+    if cross_kv is not None:
+        k, v = cross_kv  # (B, T, Hkv, hd) media/encoder keys, full attention
+        mask = jnp.ones((B, S, k.shape[1]), bool)
+        out = _attend(q, k, v, mask)
+        new_cache = None
+    else:
+        k = act_bshd(jnp.einsum("bsd,dhk->bshk", x,
+                                p["wk"].reshape(d, n_kv_heads, head_dim)))
+        v = act_bshd(jnp.einsum("bsd,dhk->bshk", x,
+                                p["wv"].reshape(d, n_kv_heads, head_dim)))
+        k = apply_rope(k, positions, rope_theta)
+        if cache is None:
+            out = _attend(q, k, v, _train_mask(positions, window, causal))
+            new_cache = None
+        elif S > 1:  # prefill
+            out = _attend(q, k, v, _train_mask(positions, window, causal))
+            new_cache = _fill_cache(cache, dict(k=k, v=v), positions)
+        else:  # decode
+            new_cache = _ring_write(cache, dict(k=k, v=v), positions)
+            mask = _cache_mask(positions, new_cache["pos"], window)
+            out = _attend(q, new_cache["k"], new_cache["v"], mask)
+    y = act_btd(jnp.einsum("bshk,hkd->bsd", out,
+                           p["wo"].reshape(n_heads, head_dim, d)))
+    return y.astype(x.dtype), new_cache
+
+
+def cross_kv_project(p: dict, media, *, n_kv_heads: int, head_dim: int,
+                     keys=("wk", "wv")):
+    """Project media/encoder embeddings to cross K/V once (cacheable)."""
+    B, T, d = media.shape
+    k = jnp.einsum("btd,dhk->bthk", media,
+                   p[keys[0]].reshape(d, n_kv_heads, head_dim))
+    v = jnp.einsum("btd,dhk->bthk", media,
+                   p[keys[1]].reshape(d, n_kv_heads, head_dim))
+    return k, v
+
+
+def make_gqa_cache(B, Lc, n_kv_heads, head_dim, dtype):
+    return dict(
+        k=jnp.zeros((B, Lc, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((B, Lc, n_kv_heads, head_dim), dtype),
+        pos=jnp.full((Lc,), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2). The KV cache stores only
+# the rank-`kv_lora` latent c_kv plus the shared rope key: the serving-memory
+# win that shows up in the decode roofline.
+# ---------------------------------------------------------------------------
+
+def _mla_attend(q_nope, q_rope, c_kv, k_rope, mask, p, H, hd, kv_lora, dtype):
+    kv = jnp.einsum("btr,rhk->bthk", c_kv,
+                    p["w_ukv"].reshape(kv_lora, H, 2 * hd))
+    k_nope, v = kv[..., :hd], kv[..., hd:]
+    l_nope = jnp.einsum("bshk,bthk->bhst", q_nope.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+    l_rope = jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    rd = q_rope.shape[-1]
+    logits = (l_nope + l_rope) / jnp.sqrt(jnp.float32(hd + rd))
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bthk->bshk", pattn.astype(dtype), v)
+
+
+def mla_attention(
+    p: dict,
+    x,
+    positions,
+    *,
+    n_heads: int,
+    head_dim: int,
+    kv_lora: int,
+    rope_dim: int,
+    rope_theta: float,
+    cache: dict | None = None,
+):
+    B, S, d = x.shape
+    H, hd, rd = n_heads, head_dim, rope_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(d, H, hd + rd))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # (B,S,r) latent
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+
+    if cache is None:
+        mask = _train_mask(positions, None, True)
+        out = _mla_attend(q_nope, q_rope, c_kv, k_rope, mask, p, H, hd,
+                          kv_lora, x.dtype)
+        new_cache = None
+    elif S > 1:  # prefill
+        mask = _train_mask(positions, None, True)
+        out = _mla_attend(q_nope, q_rope, c_kv, k_rope, mask, p, H, hd,
+                          kv_lora, x.dtype)
+        new_cache = _fill_cache(cache, dict(c_kv=c_kv, k_rope=k_rope),
+                                positions)
+    else:  # decode against the latent cache
+        new_cache = _ring_write(cache, dict(c_kv=c_kv, k_rope=k_rope),
+                                positions)
+        mask = _cache_mask(positions, new_cache["pos"], None)
+        out = _mla_attend(q_nope, q_rope, new_cache["c_kv"],
+                          new_cache["k_rope"], mask, p, H, hd, kv_lora,
+                          x.dtype)
+    y = act_btd(jnp.einsum("bshk,hkd->bsd", out, p["wo"].reshape(H, hd, d)))
+    return y.astype(x.dtype), new_cache
+
+
+def make_mla_cache(B, Lc, kv_lora, rope_dim, dtype):
+    return dict(
+        c_kv=jnp.zeros((B, Lc, kv_lora), dtype),
+        k_rope=jnp.zeros((B, Lc, rope_dim), dtype),
+        pos=jnp.full((Lc,), -1, jnp.int32),
+    )

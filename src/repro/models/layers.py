@@ -1,0 +1,85 @@
+"""Shared neural layers: norms, RoPE, embeddings, initializers.
+
+Pure-JAX (no flax): params are nested dicts of jnp arrays; every ``init_*``
+has an abstract twin usable under ``jax.eval_shape`` so the dry-run allocates
+nothing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, std, dtype=jnp.bfloat16):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    """RMSNorm computed in f32 (bf16 params/activations elsewhere)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms(d, dtype=jnp.bfloat16):
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table):
+    """Logits in f32 (loss stability)."""
+    from repro.models.sharding import act_logits
+
+    return act_logits(jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                                 table.astype(jnp.float32)))
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_ffn(x, wg, wu, wd, act=silu):
+    from repro.models.sharding import act_bsf, act_btd
+
+    h = act(jnp.einsum("...d,df->...f", x, wg)) * jnp.einsum(
+        "...d,df->...f", x, wu
+    )
+    if h.ndim == 3:
+        h = act_bsf(h)
+    out = jnp.einsum("...f,fd->...d", h, wd)
+    return act_btd(out) if out.ndim == 3 else out

@@ -1,0 +1,82 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+The dispatch/combine is the GraphD message pattern applied to tokens
+(DESIGN.md §Arch-applicability): tokens are messages, experts are vertices,
+top-k routing is message sending, and the return path is a weighted-SUM
+combine. Like the paper's OMSs, tokens are grouped *by destination expert*
+into capacity-bounded buffers (the OMS capacity ℬ analogue); overflow is
+dropped-and-counted exactly like a bounded splittable stream would surface
+back-pressure, and the aux loss keeps the router balanced (Lemma-1 style
+balance, but learned instead of hashed).
+
+Sharding: the expert axis of all expert weights carries the 'model' mesh
+axis (EP). The scatter into the (E, C, d) buffer and the gather back are
+resharding points where XLA inserts the token all-to-all — visible in the
+dry-run collective bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import silu
+from repro.models.sharding import act_ecd
+
+
+def moe_ffn(p: dict, x, *, n_experts: int, topk: int,
+            capacity_factor: float = 1.25, n_shared: int = 0):
+    """x: (B, S, d) -> (y, aux) where aux = (load-balance loss, drop frac)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, topk)  # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # --- dispatch: group token copies by destination expert (OMS layout) ----
+    C = int(capacity_factor * topk * T / n_experts) + 1
+    flat_e = eidx.reshape(-1)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), topk)
+    flat_g = gate.reshape(-1)
+    # position of each copy within its expert's buffer (rank among same-e)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot  # 1-based rank
+    pos = jnp.sum(pos_in_e, axis=-1) - 1  # (T*k,)
+    keep = pos < C
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    slot = jnp.where(keep, flat_e * C + pos, n_experts * C)  # OOB -> dropped
+
+    buf = jnp.zeros((n_experts * C + 1, d), xt.dtype).at[slot].set(
+        xt[flat_t], mode="drop"
+    )
+    xe = act_ecd(buf[: n_experts * C].reshape(n_experts, C, d))
+
+    # --- expert FFN (E sharded over 'model': this einsum IS the EP math) ----
+    h = silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    ye = act_ecd(jnp.einsum("ecf,efd->ecd", h, p["w_down"]))  # (E, C, d)
+
+    # --- combine: weighted-sum scatter back to tokens (the SUM combiner) ----
+    yflat = ye.reshape(n_experts * C, d)
+    contrib = jnp.where(
+        keep[:, None], yflat[jnp.clip(slot, 0, n_experts * C - 1)], 0.0
+    ) * flat_g[:, None].astype(yflat.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[flat_t].add(contrib)
+
+    if n_shared:
+        hs = silu(jnp.einsum("td,df->tf", xt, p["ws_gate"])) * jnp.einsum(
+            "td,df->tf", xt, p["ws_up"]
+        )
+        y = y + jnp.einsum("tf,fd->td", hs, p["ws_down"])
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(jax.nn.one_hot(eidx, n_experts, dtype=jnp.float32),
+                  axis=(0, 1))
+    pe = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(me * pe)
+    return y.reshape(B, S, d), (aux, dropped)

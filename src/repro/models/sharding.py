@@ -1,0 +1,91 @@
+"""Activation sharding constraints (logical-axis rules).
+
+XLA SPMD propagation from argument shardings alone can pick pathological
+layouts deep in the graph (observed: it replicated the global batch inside
+attention, inflating collective bytes ~60x). Frameworks pin activations at
+block boundaries; we do the same via a small context the launcher sets:
+
+    set_rules(batch=('pod','data'), model='model', seq=None)
+
+``constrain(x, kind)`` is a no-op when no rules are active (unit tests,
+single-device runs) and skips any axis that does not divide the dimension.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+_RULES: dict | None = None
+
+
+def set_rules(batch, model, seq=None, mesh=None):
+    global _RULES
+    _RULES = dict(batch=batch, model=model, seq=seq, mesh=mesh)
+
+
+def clear_rules():
+    global _RULES
+    _RULES = None
+
+
+@contextmanager
+def rules(batch, model, seq=None, mesh=None):
+    global _RULES
+    old = _RULES
+    set_rules(batch, model, seq, mesh)
+    try:
+        yield
+    finally:
+        _RULES = old
+
+
+def _axis_size(ax) -> int:
+    mesh = _RULES.get("mesh")
+    if mesh is None or ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def _fit(spec, shape):
+    out = []
+    for dim, ax in zip(shape, spec):
+        size = _axis_size(ax)
+        out.append(ax if ax is not None and size > 1 and dim % size == 0
+                   else None)
+    return P(*out)
+
+
+def constrain(x, *axes):
+    """axes: logical names per dim from {'batch','model','seq',None}."""
+    if _RULES is None:
+        return x
+    spec = tuple(_RULES.get(a) if a else None for a in axes)
+    return jax.lax.with_sharding_constraint(x, _fit(spec, x.shape))
+
+
+def act_btd(x):  # (B, S, d) residual-stream activations
+    return constrain(x, "batch", "seq", None)
+
+
+def act_bshd(x):  # (B, S, H, hd) per-head activations
+    return constrain(x, "batch", None, "model", None)
+
+
+def act_bsf(x):  # (B, S, ff) FFN hidden
+    return constrain(x, "batch", None, "model")
+
+
+def act_logits(x):  # (B, S, V) or (B, V)
+    if x.ndim == 3:
+        return constrain(x, "batch", None, "model")
+    return constrain(x, "batch", "model")
+
+
+def act_ecd(x):  # (E, C, d) MoE expert buffers
+    return constrain(x, "model", None, None)

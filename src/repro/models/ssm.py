@@ -1,0 +1,160 @@
+"""Mamba2 — state-space duality (SSD) chunked scan (arXiv:2405.21060).
+
+The SSD computation is itself a streaming recurrence with the paper's DSS
+shape (DESIGN.md §Arch-applicability): the sequence is cut into chunks
+(streamed blocks), intra-chunk work is dense (quadratic within the chunk,
+MXU-friendly), and a tiny carried state (the in-memory ``A`` analogue) is
+passed between chunks by an associative scan. Decode keeps O(1) state per
+token — this is why mamba2/hymba run the ``long_500k`` cell.
+
+Shapes: x (B, S, d_inner) split into H heads of hd; B/C (B, S, G=1, N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import silu
+
+
+def _segsum(log_a):
+    """segsum(x)[..., i, j] = sum_{j<k<=i} x[..., k] (lower-triangular)."""
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def pick_chunk(S: int, chunk: int) -> int:
+    """Largest divisor of S that is <= chunk (trace-time static)."""
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int):
+    """SSD forward.
+
+    x:  (B, S, H, hd)   values
+    dt: (B, S, H)       softplus'd step sizes
+    A:  (H,)            negative decay rates
+    Bm: (B, S, N)       input gates  (single group)
+    Cm: (B, S, N)       output gates
+    Returns y (B, S, H, hd), final_state (B, H, hd, N).
+    """
+    Bsz, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    r = lambda t: t.reshape(Bsz, nc, chunk, *t.shape[2:])
+    xc, dtc, Bc, Cc = r(x), r(dt), r(Bm), r(Cm)
+
+    dA = dtc * A[None, None, None, :]  # (B, nc, L, H) log-decay per step
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (dense, MXU): Y_diag = (C B^T ∘ L) (dt x) --------------
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B, nc, H, L, L)
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (B, nc, L, L)
+    M = CB[:, :, None] * L  # (B, nc, H, L, L)
+    xdt = xc * dtc[..., None]  # (B, nc, L, H, hd)
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", M, xdt)
+
+    # --- chunk states: decay-to-end weighted outer products ------------------
+    decay_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B, nc, L, H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, dtc * decay_end, xc)
+
+    # --- inter-chunk recurrence (the streamed carried state) ----------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (B, nc, H)
+
+    def step(carry, inp):
+        s_prev = carry  # (B, H, hd, N)
+        s_c, dec = inp  # (B, H, hd, N), (B, H)
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    init = jnp.zeros((Bsz, H, hd, N), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, hd, N)
+
+    # --- inter-chunk output: y_off = C · decayed prev state ------------------
+    decay_in = jnp.exp(dA_cs)  # (B, nc, L, H)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bclh->bclhp", Cc, prev_states, decay_in
+    )
+    y = (y_diag + y_off).reshape(Bsz, S, H, hd)
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One-token SSD update: state' = e^{dt A} state + dt B x^T; y = C state'.
+
+    state: (B, H, hd, N); x: (B, 1, H, hd); dt: (B, 1, H); Bm/Cm: (B, 1, N).
+    """
+    dec = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])
+    upd = jnp.einsum(
+        "bn,bh,bhp->bhpn", Bm[:, 0], dt[:, 0], x[:, 0]
+    )
+    new_state = state * dec + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], new_state)
+    return y[:, None], new_state  # (B, 1, H, hd)
+
+
+def mamba_block(p: dict, x, *, cfg, cache=None, positions=None):
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated out_proj.
+
+    cache (decode): dict(state=(B,H,hd,N), conv=(B, K-1, conv_dim)).
+    """
+    Bsz, S, d = x.shape
+    di, N, H = cfg.d_ssm_inner, cfg.ssm_state, cfg.n_ssm_heads
+    hd, K = cfg.ssm_head_dim, cfg.ssm_conv
+
+    # projection layout: z (di) | xBC (di + 2N) | dt (H)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+
+    # depthwise causal conv over xBC (explicit window sum; K small)
+    conv_w = p["conv_w"]  # (K, di + 2N)
+    decoding = cache is not None and S == 1
+    if decoding:
+        pads = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K-1+1, ·)
+    else:
+        pads = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    new_conv = pads[:, pads.shape[1] - (K - 1):, :]
+    conv = sum(
+        pads[:, i : i + S, :] * conv_w[i][None, None, :] for i in range(K)
+    )
+    conv = silu(conv + p["conv_b"][None, None, :])
+
+    xs = conv[..., :di].reshape(Bsz, S, H, hd)
+    Bm = conv[..., di : di + N]
+    Cm = conv[..., di + N :]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    if decoding:
+        y, new_state = ssd_decode_step(
+            cache["state"], xs.astype(jnp.float32), dt, A,
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        )
+        new_cache = dict(state=new_state, conv=new_conv)
+    else:
+        y, final = ssd_scan(
+            xs.astype(jnp.float32), dt, A,
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            chunk=pick_chunk(S, cfg.ssm_chunk),
+        )
+        # prefill: carry the final state + conv tail into the decode cache
+        new_cache = dict(state=final, conv=new_conv) if cache is not None else None
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype) * silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, new_cache

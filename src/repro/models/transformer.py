@@ -1,0 +1,405 @@
+"""Model assembly: pattern-grouped scan transformer for all 10 families.
+
+Params are nested dicts; repeated layers are stacked along a leading group
+axis and executed with ``lax.scan`` (HLO size O(pattern), compile-time safe
+for 95-layer configs × 40 dry-run cells). ``jax.checkpoint`` (remat) wraps
+the scan body when cfg.remat.
+
+Layer kinds: attn (GQA, optional sliding window), mla, ssm (Mamba2 SSD),
+hybrid (parallel attn+SSM heads, Hymba-style), cross (VLM cross-attention).
+Enc-dec (Whisper): a bidirectional encoder stack + a decoder whose every
+layer self-attends causally then cross-attends to encoder states.
+
+Caches: dict trees mirroring the layer structure; sliding-window layers use
+ring-buffer caches of length `window` (this is what makes gemma3/hymba
+long_500k decode feasible), SSM layers carry O(1) state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.attention import (
+    cross_kv_project, gqa_attention, mla_attention,
+)
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (
+    embed, gelu, init_rms, rms_norm, silu, swiglu_ffn, truncated_normal,
+    unembed,
+)
+from repro.models.moe import moe_ffn
+from repro.models.sharding import act_btd
+from repro.models.ssm import mamba_block
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, cross=False):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    return dict(
+        wq=truncated_normal(ks[0], (d, H * hd), s, cfg.dtype),
+        wk=truncated_normal(ks[1], (d, Hkv * hd), s, cfg.dtype),
+        wv=truncated_normal(ks[2], (d, Hkv * hd), s, cfg.dtype),
+        wo=truncated_normal(ks[3], (H * hd, d), s / (2 * cfg.n_layers) ** 0.5,
+                            cfg.dtype),
+    )
+
+
+def _init_mla(key, cfg: ModelConfig):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    r, rd = cfg.mla_kv_lora, cfg.mla_rope_dim
+    ks = jax.random.split(key, 5)
+    s = 0.02
+    return dict(
+        wq=truncated_normal(ks[0], (d, H * (hd + rd)), s, cfg.dtype),
+        w_dkv=truncated_normal(ks[1], (d, r), s, cfg.dtype),
+        w_krope=truncated_normal(ks[2], (d, rd), s, cfg.dtype),
+        w_ukv=truncated_normal(ks[3], (r, H * 2 * hd), s, cfg.dtype),
+        wo=truncated_normal(ks[4], (H * hd, d), s / (2 * cfg.n_layers) ** 0.5,
+                            cfg.dtype),
+    )
+
+
+def _init_ssm(key, cfg: ModelConfig):
+    d, di, N = cfg.d_model, cfg.d_ssm_inner, cfg.ssm_state
+    H, K = cfg.n_ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    return dict(
+        in_proj=truncated_normal(ks[0], (d, 2 * di + 2 * N + H), s, cfg.dtype),
+        conv_w=truncated_normal(ks[1], (K, di + 2 * N), s, cfg.dtype),
+        conv_b=jnp.zeros((di + 2 * N,), cfg.dtype),
+        A_log=jnp.zeros((H,), jnp.float32),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        D=jnp.ones((H,), jnp.float32),
+        out_proj=truncated_normal(ks[2], (di, d),
+                                  s / (2 * cfg.n_layers) ** 0.5, cfg.dtype),
+    )
+
+
+def _init_ffn(key, cfg: ModelConfig, spec: LayerSpec):
+    d = cfg.d_model
+    s = 0.02
+    if spec.ffn == "none":
+        return {}
+    if spec.ffn == "moe":
+        E, f = cfg.n_experts, cfg.moe_dff
+        ks = jax.random.split(key, 7)
+        p = dict(
+            router=truncated_normal(ks[0], (d, E), s, jnp.float32),
+            w_gate=truncated_normal(ks[1], (E, d, f), s, cfg.dtype),
+            w_up=truncated_normal(ks[2], (E, d, f), s, cfg.dtype),
+            w_down=truncated_normal(ks[3], (E, f, d),
+                                    s / (2 * cfg.n_layers) ** 0.5, cfg.dtype),
+        )
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            p.update(
+                ws_gate=truncated_normal(ks[4], (d, fs), s, cfg.dtype),
+                ws_up=truncated_normal(ks[5], (d, fs), s, cfg.dtype),
+                ws_down=truncated_normal(ks[6], (fs, d),
+                                         s / (2 * cfg.n_layers) ** 0.5,
+                                         cfg.dtype),
+            )
+        return p
+    f = cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return dict(
+        w_gate=truncated_normal(ks[0], (d, f), s, cfg.dtype),
+        w_up=truncated_normal(ks[1], (d, f), s, cfg.dtype),
+        w_down=truncated_normal(ks[2], (f, d),
+                                s / (2 * cfg.n_layers) ** 0.5, cfg.dtype),
+    )
+
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, decoder_cross=False):
+    ks = jax.random.split(key, 5)
+    p: dict[str, Any] = dict(ln1=init_rms(cfg.d_model, cfg.dtype),
+                             ln2=init_rms(cfg.d_model, cfg.dtype))
+    if spec.kind in ("attn", "cross"):
+        p["attn"] = _init_attn(ks[0], cfg)
+    elif spec.kind == "mla":
+        p["attn"] = _init_mla(ks[0], cfg)
+    elif spec.kind == "ssm":
+        p["ssm"] = _init_ssm(ks[1], cfg)
+    elif spec.kind == "hybrid":
+        p["attn"] = _init_attn(ks[0], cfg)
+        p["ssm"] = _init_ssm(ks[1], cfg)
+        p["mix_a"] = jnp.full((cfg.d_model,), 0.5, cfg.dtype)
+        p["mix_s"] = jnp.full((cfg.d_model,), 0.5, cfg.dtype)
+    if decoder_cross:  # whisper decoder: extra cross-attn sublayer
+        p["xattn"] = _init_attn(ks[2], cfg)
+        p["ln_x"] = init_rms(cfg.d_model, cfg.dtype)
+    p["ffn"] = _init_ffn(ks[3], cfg, spec)
+    return p
+
+
+def _stack(layers: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = dict(
+        embed=truncated_normal(ks[0], (cfg.vocab, cfg.d_model), 0.02,
+                               cfg.dtype),
+        final_norm=init_rms(cfg.d_model, cfg.dtype),
+    )
+    if not cfg.tie_embeddings:
+        params["unembed"] = truncated_normal(
+            ks[1], (cfg.vocab, cfg.d_model), 0.02, cfg.dtype
+        )
+    dec_cross = cfg.n_enc_layers > 0
+    params["prologue"] = [
+        _init_layer(k, cfg, s, dec_cross)
+        for k, s in zip(jax.random.split(ks[2], max(len(cfg.prologue), 1)),
+                        cfg.prologue)
+    ]
+    G = cfg.n_pattern_groups
+    gkeys = jax.random.split(ks[3], G)
+    params["groups"] = [
+        _stack([
+            _init_layer(jax.random.fold_in(gk, pi), cfg, spec, dec_cross)
+            for gk in gkeys
+        ])
+        for pi, spec in enumerate(cfg.pattern)
+    ]
+    if cfg.n_enc_layers:
+        ekeys = jax.random.split(ks[4], cfg.n_enc_layers)
+        espec = LayerSpec(kind="attn", window=None, ffn="dense")
+        params["encoder"] = _stack(
+            [_init_layer(k, cfg, espec) for k in ekeys]
+        )
+        params["enc_final_norm"] = init_rms(cfg.d_model, cfg.dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct params via eval_shape — zero allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.key(0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p, x, positions, *,
+                 media_states=None, enc_states=None, cache=None):
+    """One layer. Returns (x', new_cache_dict, aux_scalar)."""
+    act = silu if cfg.act == "silu" else gelu
+    new_cache = {}
+    aux = jnp.float32(0)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    kw = dict(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+    )
+    get = lambda k: None if cache is None else cache.get(k)
+
+    if spec.kind == "attn":
+        a, kc = gqa_attention(p["attn"], h, positions, window=spec.window,
+                              cache=get("kv"), **kw)
+        if kc is not None:
+            new_cache["kv"] = kc
+        x = x + a
+    elif spec.kind == "cross":
+        # VLM cross layer: K/V from image patch embeddings (cached at prefill)
+        if get("xkv") is not None:
+            mkv = (cache["xkv"]["k"], cache["xkv"]["v"])
+        else:
+            mkv = cross_kv_project(p["attn"], media_states,
+                                   n_kv_heads=cfg.n_kv_heads,
+                                   head_dim=cfg.head_dim)
+        if cache is not None:
+            new_cache["xkv"] = dict(k=mkv[0], v=mkv[1])
+        a, _ = gqa_attention(p["attn"], h, positions, cross_kv=mkv, **kw)
+        x = x + a
+    elif spec.kind == "mla":
+        a, kc = mla_attention(
+            p["attn"], h, positions, n_heads=cfg.n_heads,
+            head_dim=cfg.head_dim, kv_lora=cfg.mla_kv_lora,
+            rope_dim=cfg.mla_rope_dim, rope_theta=cfg.rope_theta,
+            cache=get("kv"),
+        )
+        if kc is not None:
+            new_cache["kv"] = kc
+        x = x + a
+    elif spec.kind == "ssm":
+        a, sc = mamba_block(p["ssm"], h, cfg=cfg, cache=get("ssm"))
+        if sc is not None:
+            new_cache["ssm"] = sc
+        x = x + a
+    elif spec.kind == "hybrid":
+        a, kc = gqa_attention(p["attn"], h, positions, window=spec.window,
+                              cache=get("kv"), **kw)
+        m, sc = mamba_block(p["ssm"], h, cfg=cfg, cache=get("ssm"))
+        if kc is not None:
+            new_cache["kv"] = kc
+        if sc is not None:
+            new_cache["ssm"] = sc
+        x = x + a * p["mix_a"] + m * p["mix_s"]
+
+    if "xattn" in p:  # whisper decoder: cross-attend to encoder states
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if get("ekv") is not None:
+            ekv = (cache["ekv"]["k"], cache["ekv"]["v"])
+        else:
+            ekv = cross_kv_project(p["xattn"], enc_states,
+                                   n_kv_heads=cfg.n_kv_heads,
+                                   head_dim=cfg.head_dim)
+        if cache is not None:
+            new_cache["ekv"] = dict(k=ekv[0], v=ekv[1])
+        a, _ = gqa_attention(p["xattn"], hx, positions, cross_kv=ekv, **kw)
+        x = x + a
+
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            f, (aux_lb, _drop) = moe_ffn(
+                p["ffn"], h2, n_experts=cfg.n_experts, topk=cfg.topk,
+                capacity_factor=cfg.capacity_factor,
+                n_shared=cfg.n_shared_experts,
+            )
+            aux = aux + aux_lb
+        else:
+            f = swiglu_ffn(h2, p["ffn"]["w_gate"], p["ffn"]["w_up"],
+                           p["ffn"]["w_down"], act)
+        x = x + f
+    return x, new_cache, aux
+
+
+def encoder_forward(cfg: ModelConfig, params, media):
+    """Bidirectional encoder over precomputed frame embeddings (whisper).
+    The conv frontend is a stub: `media` IS the post-conv embedding."""
+    x = media.astype(cfg.dtype)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), x.shape[:2])
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = gqa_attention(
+            lp["attn"], h, positions, causal=False,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        )
+        x = x + a
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu_ffn(h2, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                           lp["ffn"]["w_down"], gelu)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, params["encoder"])
+    else:
+        for li in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda p: p[li],
+                                        params["encoder"]))
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def apply_stack(cfg: ModelConfig, params, x, positions, *,
+                media_states=None, enc_states=None, caches=None):
+    """Run prologue + scanned pattern groups. Returns (x, new_caches, aux).
+
+    caches: dict(prologue=[...], groups=[stacked per pattern elem]) or None.
+    """
+    aux = jnp.float32(0)
+    new_pro = []
+    for li, (spec, lp) in enumerate(zip(cfg.prologue, params["prologue"])):
+        c = None if caches is None else caches["prologue"][li]
+        x, nc, a = _apply_layer(cfg, spec, lp, x, positions,
+                                media_states=media_states,
+                                enc_states=enc_states, cache=c)
+        x = act_btd(x)
+        new_pro.append(nc)
+        aux = aux + a
+
+    if caches is None:
+        def body(carry, stacked_p):
+            x, aux = carry
+            for pi, spec in enumerate(cfg.pattern):
+                x, _, a = _apply_layer(cfg, spec, stacked_p[pi], x, positions,
+                                       media_states=media_states,
+                                       enc_states=enc_states)
+                x = act_btd(x)
+                aux = aux + a
+            return (x, aux), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            (x, aux), _ = lax.scan(body, (x, aux), tuple(params["groups"]))
+        else:
+            # unrolled (exact cost_analysis: XLA counts while bodies ONCE,
+            # so the dry-run compiles small unrolled variants to extrapolate)
+            G = cfg.n_pattern_groups
+            for g in range(G):
+                sl = jax.tree.map(lambda p: p[g], tuple(params["groups"]))
+                (x, aux), _ = body((x, aux), sl)
+        return x, None, aux
+
+    def body_c(carry, xs):
+        x, aux = carry
+        stacked_p, stacked_c = xs
+        new_cs = []
+        for pi, spec in enumerate(cfg.pattern):
+            x, nc, a = _apply_layer(cfg, spec, stacked_p[pi], x, positions,
+                                    media_states=media_states,
+                                    enc_states=enc_states,
+                                    cache=stacked_c[pi])
+            x = act_btd(x)
+            new_cs.append(nc)
+            aux = aux + a
+        return (x, aux), tuple(new_cs)
+
+    if cfg.scan_layers:
+        (x, aux), new_groups = lax.scan(
+            body_c, (x, aux),
+            (tuple(params["groups"]), tuple(caches["groups"])),
+        )
+    else:
+        G = cfg.n_pattern_groups
+        outs = []
+        for g in range(G):
+            sl = jax.tree.map(
+                lambda p: p[g], (tuple(params["groups"]),
+                                 tuple(caches["groups"]))
+            )
+            (x, aux), nc = body_c((x, aux), sl)
+            outs.append(nc)
+        new_groups = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return x, dict(prologue=new_pro, groups=list(new_groups)), aux
+
+
+def forward(cfg: ModelConfig, params, tokens, media=None, positions=None):
+    """Training forward. Returns (logits_f32, aux_loss)."""
+    B, S = tokens.shape
+    x = act_btd(embed(tokens, params["embed"]).astype(cfg.dtype))
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    enc_states = None
+    if cfg.n_enc_layers:
+        enc_states = encoder_forward(cfg, params, media)
+    media_states = (
+        media.astype(cfg.dtype)
+        if media is not None and not cfg.n_enc_layers
+        else None
+    )
+    x, _, aux = apply_stack(cfg, params, x, positions,
+                            media_states=media_states, enc_states=enc_states)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed(x, table), aux

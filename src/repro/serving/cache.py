@@ -1,0 +1,87 @@
+"""KV/state cache construction per config (GQA ring-buffer, MLA latent,
+SSD state, cross-KV)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import make_gqa_cache, make_mla_cache
+from repro.models.config import LayerSpec, ModelConfig
+
+
+def _layer_cache(cfg: ModelConfig, spec: LayerSpec, B: int, max_len: int,
+                 has_xattn: bool, n_media: int):
+    c = {}
+    Lc = spec.window if spec.window else max_len
+    if spec.kind in ("attn",):
+        c["kv"] = make_gqa_cache(B, Lc, cfg.n_kv_heads, cfg.head_dim,
+                                 cfg.dtype)
+    elif spec.kind == "cross":
+        c["xkv"] = dict(
+            k=jnp.zeros((B, n_media, cfg.n_kv_heads, cfg.head_dim),
+                        cfg.dtype),
+            v=jnp.zeros((B, n_media, cfg.n_kv_heads, cfg.head_dim),
+                        cfg.dtype),
+        )
+    elif spec.kind == "mla":
+        c["kv"] = make_mla_cache(B, Lc, cfg.mla_kv_lora, cfg.mla_rope_dim,
+                                 cfg.dtype)
+    elif spec.kind == "ssm":
+        c["ssm"] = _ssm_cache(cfg, B)
+    if spec.kind == "hybrid":
+        c["kv"] = make_gqa_cache(B, Lc, cfg.n_kv_heads, cfg.head_dim,
+                                 cfg.dtype)
+        c["ssm"] = _ssm_cache(cfg, B)
+    if has_xattn:  # whisper decoder cross-KV over encoder frames
+        c["ekv"] = dict(
+            k=jnp.zeros((B, n_media, cfg.n_kv_heads, cfg.head_dim),
+                        cfg.dtype),
+            v=jnp.zeros((B, n_media, cfg.n_kv_heads, cfg.head_dim),
+                        cfg.dtype),
+        )
+    return c
+
+
+def _ssm_cache(cfg: ModelConfig, B: int):
+    H, hd, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K, di = cfg.ssm_conv, cfg.d_ssm_inner
+    return dict(
+        state=jnp.zeros((B, H, hd, N), jnp.float32),
+        conv=jnp.zeros((B, K - 1, di + 2 * N), cfg.dtype),
+    )
+
+
+def make_caches(cfg: ModelConfig, B: int, max_len: int,
+                n_media: int | None = None):
+    """Cache pytree mirroring params structure: prologue list + stacked
+    groups. For whisper, decode caches cover `n_media` encoder frames but
+    only `max_len` self positions (448 for whisper decode shapes)."""
+    n_media = n_media if n_media is not None else cfg.n_media_tokens
+    has_x = cfg.n_enc_layers > 0
+    pro = [
+        _layer_cache(cfg, s, B, max_len, has_x, n_media)
+        for s in cfg.prologue
+    ]
+    G = cfg.n_pattern_groups
+    groups = []
+    for spec in cfg.pattern:
+        one = _layer_cache(cfg, spec, B, max_len, has_x, n_media)
+        groups.append(
+            jax.tree.map(lambda x: jnp.broadcast_to(x, (G, *x.shape)), one)
+        )
+    return dict(prologue=pro, groups=groups)
+
+
+def abstract_caches(cfg: ModelConfig, B: int, max_len: int,
+                    n_media: int | None = None):
+    """ShapeDtypeStruct caches for the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda: make_caches(cfg, B, max_len, n_media)
+    )
+
+
+def cache_bytes(caches) -> int:
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(caches)
+    )

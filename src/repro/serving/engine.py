@@ -1,0 +1,73 @@
+"""Serving: prefill and decode steps + a batched request loop.
+
+`prefill(params, tokens)` runs the full causal forward AND fills the caches;
+`decode_step(params, caches, token, pos)` advances one token for the whole
+batch against the caches. These two functions are what the dry-run lowers
+for the `prefill_32k` / `decode_32k` / `long_500k` cells.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import embed, rms_norm, unembed
+from repro.models.transformer import apply_stack, encoder_forward
+
+
+def prefill(cfg: ModelConfig, params, tokens, caches, media=None):
+    """Returns (logits for the last position, filled caches)."""
+    B, S = tokens.shape
+    x = embed(tokens, params["embed"]).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc_states = (
+        encoder_forward(cfg, params, media) if cfg.n_enc_layers else None
+    )
+    media_states = (
+        media.astype(cfg.dtype)
+        if media is not None and not cfg.n_enc_layers
+        else None
+    )
+    x, new_caches, _ = apply_stack(
+        cfg, params, x, positions,
+        media_states=media_states, enc_states=enc_states, caches=caches,
+    )
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed(x, table)[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, token, pos):
+    """token: (B, 1) int32; pos: scalar int32 (uniform across the batch —
+    continuous-batching slots padded to a common position).
+    Returns (logits (B, V), new caches)."""
+    B = token.shape[0]
+    x = embed(token, params["embed"]).astype(cfg.dtype)
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+    x, new_caches, _ = apply_stack(
+        cfg, params, x, positions, caches=caches,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed(x, table)[:, 0], new_caches
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, caches, steps: int,
+                    media=None):
+    """Batched greedy decoding loop (the serving example driver)."""
+    logits, caches = jax.jit(
+        functools.partial(prefill, cfg), static_argnames=()
+    )(params, prompt, caches, media=media)
+    step_fn = jax.jit(functools.partial(decode_step, cfg))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    pos = jnp.int32(prompt.shape[1])
+    for _ in range(steps - 1):
+        logits, caches = step_fn(params, caches, tok, pos)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)

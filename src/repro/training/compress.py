@@ -1,0 +1,52 @@
+"""int8 error-feedback gradient compression (distributed-optimization trick).
+
+Before the data-parallel gradient reduction, each leaf is quantized to int8
+with a per-leaf f32 scale; the quantization error is carried in an error
+buffer and added back next step (error feedback keeps SGD/Adam convergence).
+Halves-to-quarters the cross-pod reduce bytes — the collective-bytes delta is
+visible in the dry-run roofline when `grad_compress=True`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_buffer(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize(g, err):
+    """Returns (int8 codes, f32 scale, new error)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads, errs):
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errs)
+    qs, scales, nes = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = quantize(g, e)
+        qs.append(q)
+        scales.append(s)
+        nes.append(ne)
+    return (
+        jax.tree.unflatten(tdef, qs),
+        jax.tree.unflatten(tdef, scales),
+        jax.tree.unflatten(tdef, nes),
+    )
+
+
+def decompress_tree(qs, scales, like):
+    return jax.tree.map(
+        lambda q, s, p: dequantize(q, s, jnp.float32), qs, scales, like
+    )

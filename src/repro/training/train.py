@@ -1,0 +1,95 @@
+"""Training step: CE loss + AdamW, microbatch accumulation, optional int8
+error-feedback gradient compression. Pure function of (params, opt, batch) —
+this is what the dry-run lowers for every `train_4k` cell."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward
+from repro.training.compress import compress_tree, decompress_tree, init_error_buffer
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def ce_loss(cfg: ModelConfig, params, batch):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(
+        cfg, params, batch["tokens"], media=batch.get("media")
+    )
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + 0.01 * aux, dict(loss=loss, aux=aux)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    With microbatches > 1, gradients accumulate over a lax.scan of micro
+    slices (activation memory / global batch trade — a §Perf knob).
+    """
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: ce_loss(cfg, p, b), has_aux=True
+    )
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0
+        mb = B // microbatches
+        resh = lambda x: x.reshape(microbatches, mb, *x.shape[1:])
+        stacked = jax.tree.map(resh, batch)
+
+        def body(carry, micro):
+            acc, _ = carry
+            (_, metrics), grads = grad_fn(params, micro)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return (acc, metrics), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (acc, metrics), _ = jax.lax.scan(
+            body, (zeros, dict(loss=jnp.float32(0), aux=jnp.float32(0))),
+            stacked,
+        )
+        grads = jax.tree.map(lambda a: a / microbatches, acc)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        if cfg.grad_compress:
+            # int8 error-feedback quantization around the DP reduction.
+            # (XLA's psum of the int8 codes is the compressed all-reduce.)
+            errs = opt_state.get("err")
+            qs, scales, new_err = compress_tree(grads, errs)
+            grads = decompress_tree(qs, scales, grads)
+            opt_state = dict(opt_state, err=new_err)
+        err = opt_state.pop("err") if "err" in opt_state else None
+        new_params, new_opt, stats = adamw_update(
+            opt_cfg, params, grads, opt_state
+        )
+        if err is not None:
+            new_opt["err"] = err
+        metrics.update(stats)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, params):
+    opt = init_opt_state(params)
+    if cfg.grad_compress:
+        opt["err"] = init_error_buffer(params)
+    return opt

@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests and
+# benches must see 1 device (dry-run isolation rule). Multi-device tests
+# spawn subprocesses with their own XLA_FLAGS.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,382 @@
+"""Engine end-to-end tests: algorithms vs oracles, mode/backend equivalence,
+sparse adaptation, shard-count invariance, Pregel semantics."""
+
+import collections
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BFS, SSSP, DegreeSum, GraphDEngine, HashMin, LabelSpread, PageRank,
+)
+from repro.graph import chain_graph, erdos_renyi_graph, partition_graph, rmat_graph
+
+
+def _nx_digraph(g):
+    G = nx.DiGraph()
+    G.add_nodes_from(g.vertex_ids.tolist())
+    G.add_weighted_edges_from(
+        zip(g.src.tolist(), g.dst.tolist(), g.weight.tolist())
+    )
+    return G
+
+
+def _pagerank_oracle(g, iters, damping=0.85):
+    """The paper's §2.1 update rule (lost mass at dangling vertices)."""
+    ids = {int(o): i for i, o in enumerate(sorted(g.vertex_ids.tolist()))}
+    V = g.n_vertices
+    out = collections.defaultdict(list)
+    deg = collections.Counter()
+    for s, d in zip(g.src.tolist(), g.dst.tolist()):
+        out[ids[s]].append(ids[d])
+        deg[ids[s]] += 1
+    a = np.full(V, 1.0 / V)
+    for _ in range(iters):
+        nxt = np.full(V, 0.15 / V)
+        for u, nbrs in out.items():
+            share = damping * a[u] / deg[u]
+            for v in nbrs:
+                nxt[v] += share
+        a = nxt
+    return {int(o): a[ids[int(o)]] for o in g.vertex_ids}
+
+
+class TestPageRank:
+    @pytest.mark.parametrize("n", [1, 2, 4, 7])
+    def test_vs_oracle(self, n):
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, _ = partition_graph(g, n_shards=n, edge_block=64)
+        eng = GraphDEngine(pg, PageRank(supersteps=10))
+        (vals, _), hist = eng.run()
+        got = eng.gather_values(vals)
+        want = _pagerank_oracle(g, 10)
+        err = max(abs(got[k] - want[k]) for k in want)
+        assert err < 1e-5
+        assert len(hist) == 10
+
+    def test_shard_count_invariance(self):
+        g = rmat_graph(scale=7, edge_factor=6, seed=11)
+        ref = None
+        for n in [1, 2, 4, 8]:
+            pg, _ = partition_graph(g, n_shards=n, edge_block=32)
+            eng = GraphDEngine(pg, PageRank(supersteps=6))
+            (vals, _), _ = eng.run()
+            got = eng.gather_values(vals)
+            if ref is None:
+                ref = got
+            else:
+                assert max(abs(got[k] - ref[k]) for k in ref) < 1e-6
+
+    def test_aggregator_monotone_convergence(self):
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=64)
+        (_, _), hist = GraphDEngine(pg, PageRank(supersteps=12)).run()
+        # L1 delta aggregator decreases (power iteration contracts)
+        aggs = [h.agg for h in hist[2:]]
+        assert all(b <= a * 1.01 for a, b in zip(aggs, aggs[1:]))
+
+
+class TestModesAndBackends:
+    """IO-Basic (raw + merge-sort) == IO-Basic w/ sender combine == IO-Recoded
+    == Pallas-kernel IO-Recoded (Tables 2–8 rows must agree on results)."""
+
+    @pytest.mark.parametrize("mode", ["basic", "basic_sc"])
+    def test_mode_equivalence(self, mode):
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=64)
+        (v_ref, _), _ = GraphDEngine(pg, PageRank(supersteps=5),
+                                     mode="recoded").run()
+        (v, _), _ = GraphDEngine(pg, PageRank(supersteps=5), mode=mode).run()
+        assert np.abs(np.asarray(v) - np.asarray(v_ref)).max() < 1e-6
+
+    @pytest.mark.parametrize(
+        "prog_f",
+        [lambda: PageRank(supersteps=5), lambda: HashMin(),
+         lambda: DegreeSum()],
+        ids=["pagerank", "hashmin", "degreesum"],
+    )
+    def test_pallas_backend(self, prog_f):
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=64, vertex_pad=32)
+        (vj, _), _ = GraphDEngine(pg, prog_f(), backend="jnp").run()
+        (vp, _), _ = GraphDEngine(pg, prog_f(), backend="pallas",
+                                  kernel_windows=32).run()
+        err = np.abs(
+            np.asarray(vj).astype(np.float64)
+            - np.asarray(vp).astype(np.float64)
+        ).max()
+        assert err < 1e-5
+
+    def test_pallas_sssp_with_inf(self):
+        g = rmat_graph(scale=7, edge_factor=4, seed=13)  # leaves unreachables
+        pg, rmap = partition_graph(g, n_shards=4, edge_block=64, vertex_pad=32)
+        src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
+        (vj, _), _ = GraphDEngine(pg, SSSP(src_new), backend="jnp").run()
+        (vp, _), _ = GraphDEngine(pg, SSSP(src_new), backend="pallas",
+                                  kernel_windows=32).run()
+        vj_, vp_ = np.asarray(vj), np.asarray(vp)
+        # unreached: jnp=inf, pallas=large-finite sentinel; reached: equal
+        assert ((vj_ == vp_) | (np.isinf(vj_) & (vp_ >= 1e29))).all()
+
+
+class TestMessageListPath:
+    """Non-combiner Pregel (paper §3.3): destination-sorted message lists."""
+
+    def test_distinct_in_labels_vs_oracle(self):
+        from repro.core.algorithms import DistinctInLabels
+
+        g = rmat_graph(scale=7, edge_factor=6, seed=9)
+        pg, rmap = partition_graph(g, n_shards=4, edge_block=32)
+        eng = GraphDEngine(pg, DistinctInLabels(n_groups=5), mode="basic")
+        (vals, _), hist = eng.run()
+        got = eng.gather_values(vals)
+        src_new, dst_new = rmap.to_new(g.src), rmap.to_new(g.dst)
+        lab = {int(gid): int(gid) % 5 for gid in rmap.new_for_old_sorted}
+        want = collections.defaultdict(set)
+        for s, d in zip(src_new.tolist(), dst_new.tolist()):
+            want[d].add(lab[s])
+        for old, v in got.items():
+            gid = int(rmap.to_new(np.array([old]))[0])
+            assert v == len(want.get(gid, set()))
+
+    def test_rejects_recoded_mode(self):
+        from repro.core.algorithms import DistinctInLabels
+
+        g = rmat_graph(scale=6, edge_factor=4, seed=1)
+        pg, _ = partition_graph(g, n_shards=2, edge_block=32)
+        with pytest.raises(ValueError, match="combiner"):
+            GraphDEngine(pg, DistinctInLabels(), mode="recoded")
+
+
+class TestTopologyMutation:
+    """Paper §3.4: edge/vertex mutation between supersteps."""
+
+    def test_add_remove_and_continue(self):
+        from repro.core.mutation import mutate
+
+        g = rmat_graph(scale=7, edge_factor=6, seed=9)
+        pg0, _ = partition_graph(g, n_shards=4, edge_block=32)
+        eng0 = GraphDEngine(pg0, PageRank(supersteps=4))
+        (v0, a0), _ = eng0.run(max_supersteps=2)
+        pg1, v1, a1, new_g = mutate(pg0, v0, a0, add_vertices=3)
+        assert pg1.n_vertices == pg0.n_vertices + 3
+        e_add = [(int(new_g[0]), int(new_g[1])),
+                 (int(new_g[1]), int(new_g[2]))]
+        pg2, v2, a2, _ = mutate(pg1, v1, a1, add_edges=e_add)
+        assert pg2.n_edges == pg1.n_edges + 2
+        eng1 = GraphDEngine(pg2, PageRank(supersteps=4))
+        (v3, _), _ = eng1.run(state=(v2, a2), start_step=2)
+        assert np.isfinite(np.asarray(v3)).all()
+        pg3, _, _, _ = mutate(pg2, v3, a2, remove_edges=e_add)
+        assert pg3.n_edges == pg2.n_edges - 2
+
+    def test_positions_stable_under_mutation(self):
+        from repro.core.mutation import mutate
+
+        g = rmat_graph(scale=6, edge_factor=4, seed=2)
+        pg0, _ = partition_graph(g, n_shards=4, edge_block=32)
+        eng = GraphDEngine(pg0, PageRank(supersteps=2))
+        (v0, a0), _ = eng.run()
+        pg1, v1, _, _ = mutate(pg0, v0, a0, add_vertices=5)
+        g0 = np.asarray(pg0.gids)[np.asarray(pg0.vmask)]
+        # every pre-existing gid keeps its (shard, pos) and value
+        old_vals = np.asarray(v0)
+        new_vals = np.asarray(v1)
+        for gid in g0[:50]:
+            s, p = int(gid) % 4, int(gid) // 4
+            assert old_vals[s, p] == new_vals[s, p]
+
+
+class TestCompactWire:
+    """§Perf beyond-paper variant: bf16+bool one-hop exchange."""
+
+    def test_pagerank_tolerance(self):
+        g = rmat_graph(scale=8, edge_factor=8, seed=3)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=64)
+        (v1, _), _ = GraphDEngine(pg, PageRank(supersteps=10),
+                                  mode="recoded").run()
+        (v2, _), _ = GraphDEngine(pg, PageRank(supersteps=10),
+                                  mode="recoded_compact").run()
+        a, b = np.asarray(v1), np.asarray(v2)
+        rel = np.abs(a - b) / np.maximum(np.abs(a), 1e-9)
+        assert rel.max() < 2e-2  # one bf16 rounding per message
+
+    def test_rejects_int_messages(self):
+        g = rmat_graph(scale=6, edge_factor=4, seed=1)
+        pg, _ = partition_graph(g, n_shards=2, edge_block=32)
+        with pytest.raises(ValueError, match="float messages"):
+            GraphDEngine(pg, HashMin(), mode="recoded_compact")
+
+
+class TestFlatHeadAttention:
+    """§Perf variant: repeated-KV flat heads == grouped GQA numerics."""
+
+    def test_forward_equivalence(self):
+        import jax
+        from repro.configs import ARCHS
+        from repro.data.tokens import synthetic_batch
+        from repro.models.attention import set_flat_heads
+        from repro.models.transformer import forward, init_params
+
+        cfg = ARCHS["minitron-4b"].reduced()
+        params = init_params(cfg, jax.random.key(0))
+        batch = synthetic_batch(cfg, 0, 32, 2)
+        l1, _ = jax.jit(lambda p, t: forward(cfg, p, t))(
+            params, batch["tokens"]
+        )
+        set_flat_heads(True)
+        try:
+            l2, _ = jax.jit(lambda p, t: forward(cfg, p, t))(
+                params, batch["tokens"]
+            )
+        finally:
+            set_flat_heads(False)
+        assert np.abs(np.asarray(l1) - np.asarray(l2)).max() < 1e-2
+
+
+class TestSSSPAndBFS:
+    def test_bfs_vs_networkx(self):
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, rmap = partition_graph(g, n_shards=4, edge_block=64)
+        G = _nx_digraph(g)
+        src_old = int(g.vertex_ids[0])
+        src_new = int(rmap.to_new(np.array([src_old]))[0])
+        eng = GraphDEngine(pg, BFS(src_new))
+        (vals, _), _ = eng.run()
+        got = eng.gather_values(vals)
+        want = nx.single_source_shortest_path_length(G, src_old)
+        for k, v in got.items():
+            w = want.get(k, np.inf)
+            assert v == w or (np.isinf(v) and np.isinf(w))
+
+    def test_weighted_sssp_vs_networkx(self):
+        g = rmat_graph(scale=7, edge_factor=8, seed=5, weights="uniform")
+        pg, rmap = partition_graph(g, n_shards=3, edge_block=64)
+        G = _nx_digraph(g)
+        src_old = int(g.vertex_ids[1])
+        src_new = int(rmap.to_new(np.array([src_old]))[0])
+        eng = GraphDEngine(pg, SSSP(src_new))
+        (vals, _), _ = eng.run()
+        got = eng.gather_values(vals)
+        want = nx.single_source_dijkstra_path_length(G, src_old)
+        for k, v in got.items():
+            w = want.get(k, np.inf)
+            assert (np.isinf(v) and np.isinf(w)) or abs(v - w) < 1e-4
+
+    def test_chain_sparse_adaptation(self):
+        """skip() engages on the pathological 1-vertex frontier (paper §6's
+        'graphs whose structure requires a large number of iterations')."""
+        g = chain_graph(256)
+        pg, rmap = partition_graph(g, n_shards=4, edge_block=16)
+        src_new = int(rmap.to_new(np.array([0]))[0])
+        eng = GraphDEngine(pg, SSSP(src_new), adapt_threshold=0.5,
+                           sparse_cap_frac=0.5)
+        (vals, _), hist = eng.run(max_supersteps=300)
+        modes = collections.Counter(h.mode for h in hist)
+        assert modes["sparse"] > modes["dense"]
+        got = eng.gather_values(vals)
+        assert all(got[k] == k for k in got)  # dist(0→k) = k on the chain
+
+    def test_sparse_equals_dense(self):
+        g = rmat_graph(scale=8, edge_factor=4, seed=21)
+        pg, rmap = partition_graph(g, n_shards=4, edge_block=32)
+        src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
+        (vd, _), _ = GraphDEngine(pg, SSSP(src_new),
+                                  adapt_threshold=-1).run()
+        (vs, _), hs = GraphDEngine(pg, SSSP(src_new), adapt_threshold=0.9,
+                                   sparse_cap_frac=0.9).run()
+        assert np.array_equal(np.asarray(vd), np.asarray(vs))
+        assert any(h.mode == "sparse" for h in hs)
+
+
+class TestHashMin:
+    @pytest.mark.parametrize("n", [1, 4])
+    def test_components_vs_networkx(self, n):
+        g = erdos_renyi_graph(400, 1.2, seed=5, directed=False)
+        pg, _ = partition_graph(g, n_shards=n, edge_block=32)
+        eng = GraphDEngine(pg, HashMin())
+        (vals, _), _ = eng.run()
+        got = eng.gather_values(vals)
+        G = nx.Graph()
+        G.add_nodes_from(g.vertex_ids.tolist())
+        G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+        comps = list(nx.connected_components(G))
+        labels = [frozenset(got[v] for v in c) for c in comps]
+        assert all(len(l) == 1 for l in labels)  # one label per component
+        assert len(set(labels)) == len(comps)  # distinct across components
+
+    def test_labelspread_max_dual(self):
+        g = erdos_renyi_graph(200, 1.5, seed=6, directed=False)
+        pg, _ = partition_graph(g, n_shards=3, edge_block=32)
+        eng = GraphDEngine(pg, LabelSpread())
+        (vals, _), _ = eng.run()
+        got = eng.gather_values(vals)
+        G = nx.Graph()
+        G.add_nodes_from(g.vertex_ids.tolist())
+        G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+        for c in nx.connected_components(G):
+            assert len({got[v] for v in c}) == 1
+
+
+class TestPregelSemantics:
+    def test_degree_sum_one_superstep(self):
+        g = rmat_graph(scale=6, edge_factor=6, seed=8)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=32)
+        eng = GraphDEngine(pg, DegreeSum())
+        (vals, active), hist = eng.run()
+        assert len(hist) == 1
+        assert int(hist[0].n_active) == 0  # everyone voted to halt
+        # oracle: sum of in-neighbours' out-degrees
+        got = eng.gather_values(vals)
+        deg = collections.Counter(g.src.tolist())
+        want = collections.defaultdict(float)
+        for s, d in zip(g.src.tolist(), g.dst.tolist()):
+            want[d] += deg[s]
+        for k, v in got.items():
+            assert abs(v - want.get(k, 0.0)) < 1e-4
+
+    def test_message_conservation(self):
+        """Every generated message is digested exactly once: n_msgs == number
+        of edges out of active vertices each superstep."""
+        g = rmat_graph(scale=6, edge_factor=6, seed=9)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=32)
+        eng = GraphDEngine(pg, PageRank(supersteps=3))
+        (_, _), hist = eng.run()
+        for h in hist:
+            assert h.n_msgs == g.n_edges  # all vertices active in PageRank
+
+    def test_quiescence_termination(self):
+        g = chain_graph(32)
+        pg, rmap = partition_graph(g, n_shards=2, edge_block=8)
+        src_new = int(rmap.to_new(np.array([31]))[0])  # sink: no out-edges
+        eng = GraphDEngine(pg, SSSP(src_new))
+        (_, _), hist = eng.run()
+        assert len(hist) == 1  # immediately quiescent
+
+
+@given(
+    st.lists(st.tuples(st.integers(0, 60), st.integers(0, 60)),
+             min_size=1, max_size=150),
+    st.integers(1, 5),
+)
+@settings(max_examples=15, deadline=None)
+def test_property_modes_agree_on_random_graphs(edges, n):
+    """Property: all exchange modes compute identical HashMin fixpoints."""
+    import numpy as np
+    from repro.graph import Graph
+
+    src = np.array([e[0] for e in edges], dtype=np.int64)
+    dst = np.array([e[1] for e in edges], dtype=np.int64)
+    keep = src != dst
+    if not keep.any():
+        return
+    g = Graph(src=src[keep], dst=dst[keep], weight=None, directed=False)
+    pg, _ = partition_graph(g, n_shards=n, edge_block=8)
+    outs = []
+    for mode in ["recoded", "basic", "basic_sc"]:
+        eng = GraphDEngine(pg, HashMin(), mode=mode)
+        (vals, _), _ = eng.run()
+        outs.append(eng.gather_values(vals))
+    assert outs[0] == outs[1] == outs[2]

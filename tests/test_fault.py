@@ -1,0 +1,160 @@
+"""Fault-tolerance drills: checkpoint/restore, message-log fast recovery,
+elastic repartitioning (paper §3.4 + [19])."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import GraphDEngine, HashMin, PageRank, SSSP
+from repro.core.checkpoint import Checkpointer, MessageLog, recover_shard
+from repro.core.elastic import extract_global, repartition
+from repro.graph import partition_graph, rmat_graph
+
+
+@pytest.fixture
+def job():
+    g = rmat_graph(scale=7, edge_factor=8, seed=3)
+    pg, rmap = partition_graph(g, n_shards=4, edge_block=64)
+    return g, pg, rmap
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, job, tmp_path):
+        _, pg, _ = job
+        eng = GraphDEngine(pg, PageRank(supersteps=6))
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=2)
+        (v, a), _ = eng.run(checkpointer=ck)
+        assert ck.latest() == 6
+        rv, ra, step = ck.restore()
+        (v6, a6), _ = eng.run(max_supersteps=6)
+        assert np.allclose(np.asarray(rv), np.asarray(v6))
+
+    def test_restart_equals_uninterrupted(self, job, tmp_path):
+        _, pg, _ = job
+        (v_ref, _), _ = GraphDEngine(pg, PageRank(supersteps=8)).run()
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=3)
+        eng = GraphDEngine(pg, PageRank(supersteps=8))
+        eng.run(max_supersteps=5, checkpointer=ck)  # "crash" after step 5
+        eng2 = GraphDEngine(pg, PageRank(supersteps=8))
+        (v2, _), hist = eng2.run(checkpointer=ck)  # resumes from step 3
+        assert hist[0].step == 3
+        assert np.allclose(np.asarray(v2), np.asarray(v_ref))
+
+    def test_gc_keeps_latest(self, job, tmp_path):
+        _, pg, _ = job
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=1, keep=2)
+        eng = GraphDEngine(pg, PageRank(supersteps=6))
+        eng.run(checkpointer=ck)
+        assert len(ck.all_steps()) == 2
+
+    def test_atomic_no_partial_visible(self, job, tmp_path):
+        _, pg, _ = job
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=1)
+        eng = GraphDEngine(pg, PageRank(supersteps=3))
+        eng.run(checkpointer=ck)
+        for name in os.listdir(str(tmp_path / "ckpt")):
+            assert not name.startswith(".tmp")
+
+
+class TestFastRecovery:
+    """[19]: only the failed shard recomputes, replaying logged messages."""
+
+    @pytest.mark.parametrize("failed", [0, 2, 3])
+    def test_single_shard_recovery(self, job, tmp_path, failed):
+        _, pg, _ = job
+        prog = PageRank(supersteps=8)
+        (v_ref, a_ref), _ = GraphDEngine(pg, prog).run()
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=3)
+        ml = MessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, prog, message_log=ml)
+        ck.save(0, *eng.init())
+        eng.run(checkpointer=ck)
+        vj, aj = recover_shard(pg, prog, failed=failed, ckpt=ck, log=ml,
+                               target_step=8)
+        assert np.abs(
+            np.asarray(vj) - np.asarray(v_ref)[failed]
+        ).max() < 1e-6
+        assert np.array_equal(np.asarray(aj), np.asarray(a_ref)[failed])
+
+    def test_recovery_min_combiner(self, job, tmp_path):
+        _, pg, _ = job
+        prog = HashMin()
+        (v_ref, _), hist = GraphDEngine(pg, prog).run()
+        steps = len(hist)
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=4)
+        ml = MessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, prog, message_log=ml)
+        ck.save(0, *eng.init())
+        eng.run(checkpointer=ck)
+        vj, _ = recover_shard(pg, prog, failed=1, ckpt=ck, log=ml,
+                              target_step=steps)
+        assert np.array_equal(np.asarray(vj), np.asarray(v_ref)[1])
+
+    def test_log_gc(self, job, tmp_path):
+        _, pg, _ = job
+        ml = MessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, PageRank(supersteps=4), message_log=ml)
+        eng.run()
+        ml.gc_before(2)
+        remaining = sorted(os.listdir(str(tmp_path / "logs")))
+        assert remaining == ["step-000002", "step-000003"]
+
+
+class TestElastic:
+    def test_scale_up_pagerank(self, job):
+        _, pg, _ = job
+        (v_ref, _), _ = GraphDEngine(pg, PageRank(supersteps=8)).run()
+        ref = GraphDEngine(pg, PageRank(supersteps=8)).gather_values(v_ref)
+        engA = GraphDEngine(pg, PageRank(supersteps=8))
+        (vA, aA), _ = engA.run(max_supersteps=4)
+        pgB, vB, aB = repartition(pg, vA, aA, n_new=6, edge_block=64)
+        engB = GraphDEngine(pgB, PageRank(supersteps=8))
+        (vC, _), _ = engB.run(state=(vB, aB), start_step=4)
+        got = engB.gather_values(vC)
+        assert max(abs(got[k] - ref[k]) for k in ref) < 1e-6
+
+    def test_scale_down_hashmin(self, job):
+        g, pg, _ = job
+        gu = rmat_graph(scale=8, edge_factor=2, seed=9, directed=False)
+        pgu, _ = partition_graph(gu, n_shards=4, edge_block=32)
+        (vr, _), _ = GraphDEngine(pgu, HashMin()).run()
+        want = GraphDEngine(pgu, HashMin()).gather_values(vr)
+        e1 = GraphDEngine(pgu, HashMin())
+        (v1, a1), _ = e1.run(max_supersteps=3)
+        pg2, v2, a2 = repartition(pgu, v1, a1, n_new=2, edge_block=32)
+        e2 = GraphDEngine(pg2, HashMin())
+        (v3, _), _ = e2.run(state=(v2, a2), start_step=3)
+        assert e2.gather_values(v3) == want
+
+    def test_extract_global_roundtrip(self, job):
+        g, pg, rmap = job
+        eng = GraphDEngine(pg, PageRank(supersteps=2))
+        (v, a), _ = eng.run()
+        g_real, old_real, val_real, act_real, src_g, dst_g, w_g = (
+            extract_global(pg, v, a)
+        )
+        assert len(g_real) == g.n_vertices
+        assert len(src_g) == g.n_edges
+        # repartition to the SAME n is an identity on results
+        pg2, v2, a2 = repartition(pg, v, a, n_new=pg.n_shards,
+                                  edge_block=pg.edge_block)
+        got = GraphDEngine(pg2, PageRank(supersteps=2)).gather_values(v2)
+        want = eng.gather_values(v)
+        assert got == want
+
+    def test_sssp_across_repartition(self, job):
+        g, pg, rmap = job
+        src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
+        (v_ref, _), _ = GraphDEngine(pg, SSSP(src_new)).run()
+        ref = GraphDEngine(pg, SSSP(src_new)).gather_values(v_ref)
+        e1 = GraphDEngine(pg, SSSP(src_new))
+        (v1, a1), _ = e1.run(max_supersteps=2)
+        pg2, v2, a2 = repartition(pg, v1, a1, n_new=5, edge_block=64)
+        e2 = GraphDEngine(pg2, SSSP(src_new))
+        (v3, _), _ = e2.run(state=(v2, a2), start_step=2)
+        got = e2.gather_values(v3)
+        for k in ref:
+            assert got[k] == ref[k] or (
+                np.isinf(got[k]) and np.isinf(ref[k])
+            )

@@ -1,0 +1,171 @@
+"""Graph substrate tests: recoding, partitioning, block metadata (+ Lemma 1)."""
+
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (
+    Graph, chain_graph, erdos_renyi_graph, partition_graph, recode_ids,
+    rmat_graph, star_graph,
+)
+from repro.graph.recode import recode_distributed
+
+
+def edge_strategy(max_v=200, max_e=400):
+    return st.lists(
+        st.tuples(st.integers(0, max_v - 1), st.integers(0, max_v - 1)),
+        min_size=1, max_size=max_e,
+    )
+
+
+class TestRecode:
+    @given(edge_strategy(), st.integers(1, 9))
+    @settings(max_examples=30, deadline=None)
+    def test_bijection(self, edges, n):
+        ids = np.unique(np.array([v for e in edges for v in e], dtype=np.int64))
+        rmap = recode_ids(ids, n)
+        new = rmap.to_new(ids)
+        # bijective, shard-consistent, position-consistent
+        assert len(set(new.tolist())) == len(ids)
+        assert np.array_equal(rmap.to_old(new), ids)
+        for g in new:
+            assert 0 <= g < n * rmap.max_positions
+
+    @given(edge_strategy(), st.integers(1, 6))
+    @settings(max_examples=20, deadline=None)
+    def test_distributed_recoding_matches_fast_path(self, edges, n):
+        """Paper §5: the 3-superstep recoding job produces the same streams."""
+        src = np.array([e[0] for e in edges], dtype=np.int64)
+        dst = np.array([e[1] for e in edges], dtype=np.int64)
+        ids = np.unique(np.concatenate([src, dst]))
+        s1, d1, rmap = recode_distributed(src, dst, ids, n)
+        assert np.array_equal(s1, rmap.to_new(src))
+        assert np.array_equal(d1, rmap.to_new(dst))
+
+    def test_sparse_ids(self):
+        g = rmat_graph(scale=7, edge_factor=4, seed=1, sparse_ids=True)
+        rmap = recode_ids(g.vertex_ids, 4)
+        assert np.array_equal(rmap.to_old(rmap.to_new(g.vertex_ids)),
+                              g.vertex_ids)
+
+
+class TestLemma1:
+    """Lemma 1: max shard size < 2|V|/n with high probability."""
+
+    @pytest.mark.parametrize("n", [2, 4, 8, 16])
+    def test_balance_bound(self, n):
+        g = rmat_graph(scale=12, edge_factor=2, seed=7, sparse_ids=True)
+        rmap = recode_ids(g.vertex_ids, n)
+        V = rmap.n_vertices
+        assert rmap.max_positions < 2 * V / n, (
+            f"hash partitioning violated Lemma 1: {rmap.max_positions} "
+            f">= 2*{V}/{n}"
+        )
+
+    @given(st.integers(2, 12))
+    @settings(max_examples=10, deadline=None)
+    def test_balance_random_ids(self, n):
+        rng = np.random.default_rng(n)
+        ids = np.unique(rng.integers(0, 2**48, size=5000))
+        rmap = recode_ids(ids, n)
+        assert rmap.max_positions < 2 * len(ids) / n
+
+
+class TestPartition:
+    def _check(self, g: Graph, n, edge_block):
+        pg, rmap = partition_graph(g, n_shards=n, edge_block=edge_block)
+        src_new, dst_new = rmap.to_new(g.src), rmap.to_new(g.dst)
+        want = collections.Counter(
+            zip((src_new % n).tolist(), (dst_new % n).tolist(),
+                (src_new // n).tolist(), (dst_new // n).tolist())
+        )
+        sp, dp = np.asarray(pg.src_pos), np.asarray(pg.dst_pos)
+        got = collections.Counter()
+        for i in range(n):
+            for k in range(n):
+                m = sp[i, k] >= 0
+                for s, d in zip(sp[i, k][m].tolist(), dp[i, k][m].tolist()):
+                    got[(i, k, s, d)] += 1
+        assert want == got  # every edge exactly once, correct positions
+        assert np.asarray(pg.degree).sum() == g.n_edges
+        # groups sorted by src (required by skip())
+        for i in range(n):
+            for k in range(n):
+                v = sp[i, k][sp[i, k] >= 0]
+                assert np.all(np.diff(v) >= 0)
+        # block metadata covers exactly the real src ranges
+        lo, hi = np.asarray(pg.blk_lo), np.asarray(pg.blk_hi)
+        spb = sp.reshape(n, n, pg.n_blocks, pg.edge_block)
+        for i in range(n):
+            for k in range(n):
+                for b in range(pg.n_blocks):
+                    real = spb[i, k, b][spb[i, k, b] >= 0]
+                    if real.size:
+                        assert lo[i, k, b] == real.min()
+                        assert hi[i, k, b] == real.max()
+                    else:
+                        assert hi[i, k, b] == -1
+
+    @pytest.mark.parametrize("n,blk", [(1, 32), (3, 16), (4, 64), (8, 8)])
+    def test_rmat(self, n, blk):
+        self._check(rmat_graph(scale=6, edge_factor=6, seed=2), n, blk)
+
+    def test_sparse_id_graph(self):
+        self._check(rmat_graph(scale=6, edge_factor=4, seed=5,
+                               sparse_ids=True), 4, 32)
+
+    def test_undirected_symmetry(self):
+        g = erdos_renyi_graph(150, 3.0, seed=4, directed=False)
+        pairs = set(zip(g.src.tolist(), g.dst.tolist()))
+        assert all((d, s) in pairs for s, d in pairs)
+
+    def test_star_hub_degree(self):
+        g = star_graph(100)
+        pg, rmap = partition_graph(g, 4, edge_block=16)
+        deg = np.asarray(pg.degree)
+        hub_new = int(rmap.to_new(np.array([0]))[0])
+        assert deg[hub_new % 4, hub_new // 4] == 99
+
+    def test_chain_structure(self):
+        g = chain_graph(64)
+        pg, _ = partition_graph(g, 4, edge_block=8)
+        assert np.asarray(pg.degree).sum() == 63
+
+
+class TestKernelLayout:
+    def test_layout_preserves_edges_and_invariants(self):
+        from repro.graph.kblocks import build_kernel_layout
+
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=64, vertex_pad=32)
+        kl = build_kernel_layout(pg, BLK=32, SRC_WIN=32, DST_WIN=32)
+        n = 4
+        sp0, dp0 = np.asarray(pg.src_pos), np.asarray(pg.dst_pos)
+        spk, dpk = np.asarray(kl.sp), np.asarray(kl.dp)
+        swin = np.asarray(kl.blk_swin)
+        dwin = np.asarray(kl.blk_dwin)
+        for i in range(n):
+            for k in range(n):
+                a = collections.Counter(
+                    zip(sp0[i, k][sp0[i, k] >= 0].tolist(),
+                        dp0[i, k][sp0[i, k] >= 0].tolist())
+                )
+                m = spk[i, k] >= 0
+                b = collections.Counter(
+                    zip(spk[i, k][m].tolist(), dpk[i, k][m].tolist())
+                )
+                assert a == b  # edge-conservation across re-tiling
+                for blk in range(kl.NB):
+                    real_s = spk[i, k, blk][spk[i, k, blk] >= 0]
+                    real_d = dpk[i, k, blk][spk[i, k, blk] >= 0]
+                    if real_s.size:
+                        # every block's srcs fit its aligned SRC_WIN window
+                        assert (real_s // kl.SRC_WIN == swin[i, k, blk]).all()
+                        # and dsts fit its DST_WIN window
+                        assert (real_d // kl.DST_WIN == dwin[i, k, blk]).all()
+                # every dst window initialized by some block
+                assert set(range(pg.P // kl.DST_WIN)) <= set(
+                    dwin[i, k].tolist()
+                )

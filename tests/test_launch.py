@@ -1,0 +1,134 @@
+"""Launch-layer unit tests: sharding spec rules and the HLO collective
+parser (these run with 1 device — no mesh construction that touches jax
+device state beyond a fake Mesh object)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch.roofline import (
+    collective_bytes_from_text, roofline_terms,
+)
+from repro.models.transformer import abstract_params
+
+
+def _fake_mesh(shape=(16, 16), names=("data", "model")):
+    # an abstract mesh over fake devices is enough for spec computation
+    devs = np.empty(shape, dtype=object)
+    for i in range(devs.size):
+        devs.flat[i] = jax.devices()[0]
+    return Mesh(devs, names)
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    @pytest.mark.parametrize("mode", ["train", "serve"])
+    def test_specs_divide_dims(self, arch, mode):
+        from repro.launch.mesh import param_specs
+
+        mesh = _fake_mesh()
+        tree = abstract_params(ARCHS[arch])
+        specs = param_specs(tree, mesh, mode=mode)
+
+        def check(leaf, spec):
+            assert len(spec) <= leaf.ndim
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if ax is None:
+                    continue
+                size = (
+                    np.prod([mesh.shape[a] for a in ax])
+                    if isinstance(ax, tuple) else mesh.shape[ax]
+                )
+                assert dim % size == 0, (leaf.shape, spec)
+
+        jax.tree.map(check, tree, specs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+    def test_serve_mode_has_no_fsdp_on_dense(self):
+        from repro.launch.mesh import param_specs
+
+        mesh = _fake_mesh()
+        tree = abstract_params(ARCHS["command-r-plus-104b"])
+        serve = param_specs(tree, mesh, mode="serve")
+        # dense wq under serve: no 'data' axis anywhere (weights resident)
+        wq_spec = serve["groups"][0]["attn"]["wq"]
+        assert "data" not in jax.tree.leaves(
+            tuple(a for a in wq_spec if a), is_leaf=lambda x: True
+        )
+
+
+class TestCollectiveParser:
+    HLO = """
+  ENTRY main {
+    %x = bf16[8,128]{1,0} parameter(0)
+    %ag = bf16[8,2048]{1,0} all-gather(%x), replica_groups=...
+    %ar = f32[16,16]{1,0} all-reduce(%y), to_apply=add
+    %cp = s32[64]{0} collective-permute-start(%z), source_target_pairs=...
+    %aa = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b)
+    %not_a_coll = f32[9999,9999]{1,0} add(%p, %q)
+  }
+    """
+
+    def test_bytes(self):
+        got = collective_bytes_from_text(self.HLO)
+        ag = 8 * 2048 * 2
+        ar = 16 * 16 * 4 * 2  # all-reduce counted twice (RS+AG)
+        cp = 64 * 4
+        aa = 2 * 4 * 4 * 4
+        assert got["by_op"]["all-gather"] == ag
+        assert got["by_op"]["all-reduce"] == ar
+        assert got["by_op"]["collective-permute"] == cp
+        assert got["by_op"]["all-to-all"] == aa
+        assert got["total"] == ag + ar + cp + aa
+
+    def test_ignores_non_collectives(self):
+        got = collective_bytes_from_text(self.HLO)
+        assert 9999 * 9999 * 4 > got["total"]
+
+
+class TestRooflineTerms:
+    def test_dominant_and_fraction(self):
+        cfg = ARCHS["minitron-4b"]
+        info = dict(kind="train", seq_len=4096, global_batch=256)
+        t = roofline_terms(cfg, info, flops=1e14, bytes_accessed=2e12,
+                           collective_bytes=1e10, n_chips=256)
+        assert t["dominant"] == "memory"
+        assert 0 < t["roofline_fraction"] <= 1.01
+        # useful flops: 6*N*D/chips
+        expect = 6 * cfg.n_active_params() * 4096 * 256 / 256
+        assert abs(t["model_flops_per_chip"] - expect) / expect < 1e-6
+
+    def test_decode_uses_2nd(self):
+        cfg = ARCHS["minitron-4b"]
+        info = dict(kind="decode", seq_len=32768, global_batch=128)
+        t = roofline_terms(cfg, info, flops=1e10, bytes_accessed=1e10,
+                           collective_bytes=1e9, n_chips=256)
+        expect = 2 * cfg.n_active_params() * 128 / 256
+        assert abs(t["model_flops_per_chip"] - expect) / expect < 1e-6
+
+
+class TestDryrunResultsIntegrity:
+    """The committed dryrun_results.json satisfies the deliverable: every
+    (arch x shape x mesh) cell present, ok or declared-skip."""
+
+    def test_all_80_cells(self):
+        import json
+        import os
+
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.json")
+        if not os.path.exists(path):
+            pytest.skip("dry-run sweep not yet recorded")
+        with open(path) as f:
+            rs = json.load(f)
+        cells = {(r["arch"], r["shape"], r["mesh"]) for r in rs}
+        assert len(cells) >= 80
+        bad = [r for r in rs if not r.get("ok") and not r.get("skipped")]
+        assert not bad, bad
+        for r in rs:
+            if r.get("ok"):
+                assert r["flops_per_chip"] > 0
+                assert r["argument_bytes"] < 16 * 2**30  # fits HBM
