@@ -23,3 +23,28 @@ def time_fn(fn, *args, iters=5, warmup=1):
 
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def rss_bytes() -> int:
+    """Current resident-set size of this process (Linux; 0 if unavailable).
+    Used by bench_memory to show the streamed mode's footprint is real, not
+    just the Lemma-1 model."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return 0
+
+
+def stream_report(reader) -> str:
+    """Derived-column summary of a StreamReader's last stream() pass."""
+    s = reader.stats
+    return (
+        f"blocks={s.blocks_read};edges={s.edges_staged};"
+        f"MiB={s.bytes_read / 2**20:.2f};"
+        f"read_ms={s.read_seconds * 1e3:.1f};wait_ms={s.wait_seconds * 1e3:.1f};"
+        f"edges_per_s={s.throughput_edges_per_s():.3g}"
+    )

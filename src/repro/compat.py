@@ -1,0 +1,39 @@
+"""Version-compatibility shims.
+
+The repo targets the current jax API surface; CI containers may ship an
+older release. Keep every cross-version branch here so call sites stay
+clean:
+
+* ``shard_map`` — moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+  and renamed its replication-check kwarg ``check_rep`` -> ``check_vma``.
+* ``cost_analysis`` — older jax returns a one-element list of dicts from
+  ``Compiled.cost_analysis()``, newer jax returns the dict directly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old;
+    ``check_vma=None`` means the version default."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

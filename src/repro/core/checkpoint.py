@@ -43,11 +43,14 @@ class Checkpointer:
         os.makedirs(directory, exist_ok=True)
 
     # -- write ---------------------------------------------------------------
-    def maybe_save(self, step: int, values, active):
+    def maybe_save(self, step: int, values, active, meta=None):
         if self.every and step % self.every == 0:
-            self.save(step, values, active)
+            self.save(step, values, active, meta=meta)
 
-    def save(self, step: int, values, active):
+    def save(self, step: int, values, active, meta=None):
+        """``meta`` (JSON-able) is recorded in the manifest; the streamed
+        engine passes the edge-stream store signature so recovery can refuse
+        to restore vertex state against mismatched edge streams."""
         vals = np.asarray(values)
         act = np.asarray(active)
         tmp = os.path.join(self.dir, f".tmp-step-{step:06d}")
@@ -57,7 +60,8 @@ class Checkpointer:
             np.savez(os.path.join(tmp, f"shard-{i}.npz"),
                      values=vals[i], active=act[i])
         manifest = dict(step=step, n_shards=int(vals.shape[0]),
-                        P=int(vals.shape[1]), dtype=str(vals.dtype))
+                        P=int(vals.shape[1]), dtype=str(vals.dtype),
+                        meta=meta)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -83,13 +87,23 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int | None = None):
+    def restore(self, step: int | None = None, expected_meta=None):
+        """Manifest-aware restore: when ``expected_meta`` is given and the
+        checkpoint recorded a (non-null) meta, the two must match — a
+        checkpoint written against different edge streams is unusable state,
+        not a silent wrong answer."""
         step = step if step is not None else self.latest()
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
         d = os.path.join(self.dir, f"step-{step:06d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
+        got = manifest.get("meta")
+        if expected_meta is not None and got is not None and got != expected_meta:
+            raise ValueError(
+                f"checkpoint step-{step:06d} was written against different "
+                f"edge streams: manifest meta {got} != expected {expected_meta}"
+            )
         vals, acts = [], []
         for i in range(manifest["n_shards"]):
             z = np.load(os.path.join(d, f"shard-{i}.npz"))

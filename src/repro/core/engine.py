@@ -19,6 +19,20 @@ Execution modes (benchmarked against each other, mirroring Tables 2–8):
   OMS (the external merge-sort of §3.3.1) before the ring exchange; transfer
   volume matches ``recoded`` but pays the sort.
 
+* ``streamed`` — the paper's actual out-of-core deployment (§3, Theorem 1):
+  per-shard resident state is ONLY the O(|V|/n) vertex arrays (values,
+  active bitmap, degree, masks) plus constant-size combine buffers; the edge
+  groups live on local disk in a ``streams.EdgeStreamStore`` and arrive
+  group-by-group through a double-buffered ``streams.StreamReader`` whose
+  background thread stages the next block chunk while the device digests the
+  current one (U_c ∥ U_s at the host/device boundary). The §3.2 ``skip()``
+  test runs against the store's block manifest BEFORE any I/O, so inactive
+  blocks are never read off disk. Resident bytes are independent of |E| —
+  see ``GraphDEngine.memory_model()`` and benchmarks/bench_memory.py.
+  Typically paired with ``graph.partition_graph_streamed`` (spill at
+  partition time, vertex-only PartitionedGraph). Host-driven: no mesh /
+  Pallas backend; pick it when the graph does not fit device memory.
+
 Sparse adaptation (C2, ``skip()``): per destination group the engine skips
 edge blocks whose source range contains no active vertex, using the
 ``blk_lo/blk_hi`` metadata and a prefix sum over the active bitmap. The
@@ -46,6 +60,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.api import Combiner, ShardContext, VertexProgram
 from repro.graph.partition import PartitionedGraph
 
@@ -448,6 +463,8 @@ class GraphDEngine:
 
     AXIS = "machines"
 
+    MODES = ("recoded", "recoded_compact", "basic", "basic_sc", "streamed")
+
     def __init__(
         self,
         pg: PartitionedGraph,
@@ -459,8 +476,19 @@ class GraphDEngine:
         message_log=None,  # core.checkpoint.MessageLog for fast recovery
         backend: str = "jnp",  # "jnp" | "pallas" (kernels/, §5 fast path)
         kernel_windows: int = 512,
+        stream_store=None,  # streams.EdgeStreamStore, required for "streamed"
+        stream_chunk_blocks: int = 8,  # blocks staged per chunk
+        stream_depth: int = 2,  # prefetch depth (2 = double buffering)
     ):
-        if mode in ("recoded", "recoded_compact", "basic_sc") and (
+        if mode not in self.MODES:
+            raise ValueError(f"unknown mode={mode!r}; pick one of {self.MODES}")
+        if mode != "streamed" and pg.E_cap > 0 and pg.src_pos.shape[-1] == 0:
+            raise ValueError(
+                "this partition is vertex-only (its edge groups were spilled "
+                "to disk by drop_edges/partition_graph_streamed); it can only "
+                "run with mode='streamed' and the matching stream_store"
+            )
+        if mode in ("recoded", "recoded_compact", "basic_sc", "streamed") and (
             program.combiner is None
         ):
             raise ValueError(f"mode={mode} requires a message combiner (paper §5)")
@@ -476,6 +504,30 @@ class GraphDEngine:
             raise ValueError(
                 "backend='pallas' needs mode='recoded' and a program.msg_kind"
             )
+        if mode == "streamed":
+            if stream_store is None:
+                raise ValueError(
+                    "mode='streamed' needs stream_store= (an "
+                    "streams.EdgeStreamStore; see graph.partition_graph_streamed)"
+                )
+            if backend != "jnp" or mesh is not None:
+                raise ValueError(
+                    "mode='streamed' is host-driven: backend='jnp', mesh=None"
+                )
+            if message_log is not None:
+                raise ValueError(
+                    "mode='streamed' does not support message_log yet "
+                    "(see ROADMAP: spill messages to the disk tier)"
+                )
+            geom = stream_store.geom
+            if (geom.n_shards, geom.P, geom.edge_block) != (
+                pg.n_shards, pg.P, pg.edge_block
+            ):
+                raise ValueError(
+                    "stream store geometry does not match the partition: "
+                    f"store (n={geom.n_shards}, P={geom.P}, B={geom.edge_block})"
+                    f" vs pg (n={pg.n_shards}, P={pg.P}, B={pg.edge_block})"
+                )
         self.pg = pg
         self.program = program
         self.mode = mode
@@ -484,7 +536,24 @@ class GraphDEngine:
         self.adapt_threshold = adapt_threshold
         self.sparse_cap = max(1, int(pg.n_blocks * sparse_cap_frac))
         self.message_log = message_log
+        self.stream_store = stream_store
         axis = self.AXIS
+
+        if mode == "streamed":
+            from repro.streams.reader import StreamReader
+
+            self._stream_reader = StreamReader(
+                stream_store, chunk_blocks=stream_chunk_blocks,
+                depth=stream_depth,
+            )
+            self._stream_fold = jax.jit(self._make_stream_fold())
+            self._stream_apply = jax.jit(self._make_stream_apply())
+            self._step_dense = self._step_sparse = self._step_logged = None
+            self._init = jax.jit(self._wrap(
+                lambda pg_: init_spmd(program, pg_, axis=axis), n_in=1,
+                n_stats=0,
+            ))
+            return
 
         self.kl = None
         if backend == "pallas":
@@ -556,7 +625,7 @@ class GraphDEngine:
             def body(pg_, v, a, s):
                 nv, na, st = fn(sq(pg_), sq(v), sq(a), s)
                 return nv[None], na[None], st
-            return jax.shard_map(
+            return shard_map(
                 body, mesh=self.mesh,
                 in_specs=(spec, spec, spec, P()), out_specs=(spec, spec, P()),
             )
@@ -564,7 +633,7 @@ class GraphDEngine:
         def body(pg_):
             v, a = fn(sq(pg_))
             return v[None], a[None]
-        return jax.shard_map(body, mesh=self.mesh, in_specs=(spec,),
+        return shard_map(body, mesh=self.mesh, in_specs=(spec,),
                              out_specs=(spec, spec))
 
     def _wrap_kl(self, fn):
@@ -586,7 +655,7 @@ class GraphDEngine:
 
         # check_vma=False: pallas_call outputs carry no varying-mesh-axes
         # metadata, which the vma checker would otherwise reject.
-        return jax.shard_map(
+        return shard_map(
             body, mesh=self.mesh,
             in_specs=(spec, spec, spec, spec, P()),
             out_specs=(spec, spec, P()),
@@ -609,11 +678,152 @@ class GraphDEngine:
             nv, na, st, As, cn = fn(sq(pg_), sq(v), sq(a), s)
             return nv[None], na[None], st, As[None], cn[None]
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=self.mesh,
             in_specs=(spec, spec, spec, P()),
             out_specs=(spec, spec, P(), spec, spec),
         )
+
+    # -- streamed mode (out-of-core, paper §3 / Theorem 1) --------------------
+    def _make_stream_fold(self):
+        """Jitted chunk combine: fold one staged edge chunk into the
+        destination accumulator (the in-memory A_s combine of §5, applied to
+        an O(1)-sized staged slice instead of the whole resident group)."""
+        program = self.program
+        comb = program.combiner
+
+        def fold(A, cnt, values, degree, active, sp, dp, w, step):
+            msg, dp2, aact = _gen_messages(
+                program, values, degree, sp, dp, w, active, step
+            )
+            A = comb.scatter(A, dp2, msg)
+            cnt = cnt.at[dp2].add(aact.astype(jnp.int32))
+            return A, cnt
+
+        return fold
+
+    def _make_stream_apply(self):
+        """Jitted per-shard digest + apply + vote (shard index is traced, so
+        one compilation serves all shards)."""
+        program = self.program
+        pg = self.pg
+
+        def apply_shard(values, degree, vmask, old_ids, gids, A_r, cnt,
+                        active, step, shard):
+            ctx = ShardContext(
+                shard=shard, n_shards=pg.n_shards, n_vertices=pg.n_vertices,
+                P=pg.P, degree=degree, vmask=vmask, old_ids=old_ids,
+                gids=gids,
+            )
+            has_msg = (cnt > 0) & vmask
+            new_values, new_active = program.apply(
+                values, degree, A_r, has_msg, active, step, ctx
+            )
+            new_active = new_active & vmask
+            agg = program.aggregate(values, new_values, has_msg)
+            agg = (
+                jnp.sum(agg.astype(jnp.float32))
+                if agg is not None
+                else jnp.float32(0)
+            )
+            return (
+                new_values.astype(program.value_dtype),
+                new_active,
+                jnp.sum(new_active.astype(jnp.int32)),
+                jnp.sum(cnt),
+                agg,
+            )
+
+        return apply_shard
+
+    def _run_streamed(self, max_supersteps, state, start_step, verbose,
+                      checkpointer, on_step):
+        """Out-of-core superstep loop: edges arrive from disk group-by-group
+        via the prefetching reader; resident per shard = vertex arrays +
+        constant-size buffers. Mirrors ``run``'s contract exactly."""
+        from repro.streams.schedule import plan_stream_schedule
+
+        program, pg, comb = self.program, self.pg, self.program.combiner
+        store, reader = self.stream_store, self._stream_reader
+        n = pg.n_shards
+        values, active = state if state is not None else self.init()
+        history: list[SuperstepRecord] = []
+        target = min(
+            program.num_supersteps
+            if program.num_supersteps is not None
+            else max_supersteps,
+            max_supersteps,
+        )
+        if checkpointer is not None and checkpointer.latest() is not None:
+            values, active, start_step = checkpointer.restore(
+                expected_meta=store.signature()
+            )
+        # skip() against the block manifest BEFORE any disk I/O; the plan for
+        # step s is made from step s's frontier, then re-made after apply so
+        # rec.density matches StepStats semantics (frontier of the NEXT step)
+        schedule, _, _ = plan_stream_schedule(store, np.asarray(active))
+        for s in range(start_step, target):
+            t0 = time.perf_counter()
+            A_r = [comb.identity((pg.P,), program.msg_dtype) for _ in range(n)]
+            cnt = [jnp.zeros((pg.P,), jnp.int32) for _ in range(n)]
+            step = jnp.int32(s)
+            # U_c ∥ U_s: the reader thread stages chunk t+1 while fold
+            # digests chunk t
+            for chunk in reader.stream(schedule):
+                i, k = chunk.src_shard, chunk.dst_shard
+                A_r[k], cnt[k] = self._stream_fold(
+                    A_r[k], cnt[k], values[i], pg.degree[i], active[i],
+                    chunk.sp, chunk.dp, chunk.w, step,
+                )
+                # block before the reader recycles this chunk's buffer: on
+                # CPU jax the jitted fold may zero-copy ALIAS the staged
+                # numpy arrays, and dispatch is async — advancing the
+                # iterator would let the prefetch thread overwrite memory a
+                # pending computation still reads. Disk I/O still overlaps:
+                # the producer thread reads ahead while we wait on compute.
+                jax.block_until_ready(cnt[k])
+            new_v, new_a = [], []
+            n_active = n_msgs = 0
+            agg = 0.0
+            for k in range(n):
+                nv, na, nact, nm, ag = self._stream_apply(
+                    values[k], pg.degree[k], pg.vmask[k], pg.old_ids[k],
+                    pg.gids[k], A_r[k], cnt[k], active[k], step,
+                    jnp.int32(k),
+                )
+                new_v.append(nv)
+                new_a.append(na)
+                n_active += int(nact)
+                n_msgs += int(nm)
+                agg += float(ag)
+            values, active = jnp.stack(new_v), jnp.stack(new_a)
+            schedule, density, max_grp = plan_stream_schedule(
+                store, np.asarray(active)
+            )
+            dt = time.perf_counter() - t0
+            rec = SuperstepRecord(
+                step=s, n_active=n_active, n_msgs=n_msgs, agg=agg,
+                density=density, mode="streamed", seconds=dt,
+            )
+            history.append(rec)
+            if verbose:
+                st = reader.stats
+                print(
+                    f"  superstep {s:4d}: active={n_active:>9d} "
+                    f"msgs={n_msgs:>10d} agg={agg:.6g} "
+                    f"density={density:.4f} [streamed "
+                    f"{st.blocks_read}blk/{st.bytes_read >> 10}KiB] "
+                    f"{dt*1e3:.1f} ms"
+                )
+            if on_step is not None:
+                on_step(rec, (values, active))
+            if checkpointer is not None:
+                checkpointer.maybe_save(
+                    s + 1, values, active, meta=store.signature()
+                )
+            if program.num_supersteps is None and n_active == 0:
+                break
+        return (values, active), history
 
     # -- job API --------------------------------------------------------------
     def init(self):
@@ -629,6 +839,11 @@ class GraphDEngine:
         on_step=None,
     ):
         """Host superstep loop with dense/sparse auto-dispatch (§3.2)."""
+        if self.mode == "streamed":
+            return self._run_streamed(
+                max_supersteps, state, start_step, verbose, checkpointer,
+                on_step,
+            )
         values, active = state if state is not None else self.init()
         history: list[SuperstepRecord] = []
         target = min(
@@ -689,11 +904,27 @@ class GraphDEngine:
         return dict(zip(old[mask].tolist(), vals[mask].tolist()))
 
     def memory_model(self) -> dict[str, int]:
-        """Bytes per shard held resident vs streamed (Lemma 1 accounting)."""
+        """Bytes per shard held resident vs streamed (Lemma 1 / Theorem 1
+        accounting).
+
+        ``resident`` + ``buffers`` + ``staging`` is what a machine must keep
+        in RAM. For the in-memory modes the edge groups are device-resident
+        (``streamed`` counts their HBM bytes); for ``mode="streamed"`` the
+        edge groups are on disk (``streamed`` counts disk bytes) and the only
+        edge-sized thing in RAM is the constant staging pool — so the RAM
+        total is O(|V|/n), independent of |E|.
+        """
         pg = self.pg
         vdt = np.dtype(self.program.value_dtype).itemsize
         mdt = np.dtype(self.program.msg_dtype).itemsize
         resident = pg.P * (vdt + 1 + 4 + 1 + 8)  # values, active, degree, vmask, old
         buffers = pg.P * (mdt + 4) * 2  # A_s + A_r (+ counts), two in flight (§5)
+        if self.mode == "streamed":
+            return dict(
+                resident=resident, buffers=buffers,
+                staging=self._stream_reader.staging_bytes(),
+                streamed=self.stream_store.disk_bytes() // pg.n_shards,
+            )
         streamed = pg.n_shards * pg.E_cap * (4 + 4 + 4)  # edge groups in HBM
-        return dict(resident=resident, buffers=buffers, streamed=streamed)
+        return dict(resident=resident, buffers=buffers, staging=0,
+                    streamed=streamed)

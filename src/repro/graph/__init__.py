@@ -3,7 +3,10 @@
 from repro.graph.generate import rmat_graph, erdos_renyi_graph, chain_graph, star_graph
 from repro.graph.csr import Graph, build_csr
 from repro.graph.recode import recode_ids, RecodeMap
-from repro.graph.partition import PartitionedGraph, partition_graph
+from repro.graph.partition import (
+    PartitionedGraph, drop_edges, partition_graph, partition_graph_streamed,
+    spill_partition,
+)
 
 __all__ = [
     "rmat_graph",
@@ -16,4 +19,7 @@ __all__ = [
     "RecodeMap",
     "PartitionedGraph",
     "partition_graph",
+    "partition_graph_streamed",
+    "spill_partition",
+    "drop_edges",
 ]

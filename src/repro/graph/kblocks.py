@@ -23,6 +23,12 @@ This trades bounded padding (reported by ``layout_stats``) for a kernel with
 zero unsupported ops: streams blocks HBM->VMEM (double-buffered by the Pallas
 pipeline = the paper's streaming buffer B), gathers via one-hot MXU matvec,
 combines via one-hot matmul / masked reduce (= in-memory A_s combining, §5).
+
+The on-disk stream layout (``repro/streams/store.py``, engine mode
+``streamed``) reuses the same block abstraction and ``blk_lo``/``blk_hi``
+skip() contract (``graph.partition.block_ranges``), applied at the
+disk->host boundary instead of HBM->VMEM; its per-superstep read plan lives
+in ``repro/streams/schedule.py``.
 """
 
 from __future__ import annotations

@@ -34,6 +34,16 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def block_ranges(sp_blocks: np.ndarray, P: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-block [min, max] source range over the trailing axis — the skip()
+    metadata of §3.2, shared by the device layout and the on-disk stream
+    layout (streams/store.py). Sentinels (P, -1) mark empty blocks."""
+    valid = sp_blocks >= 0
+    lo = np.where(valid, sp_blocks, P).min(axis=-1).astype(np.int32)
+    hi = np.where(valid, sp_blocks, -1).max(axis=-1).astype(np.int32)
+    return lo, hi
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class PartitionedGraph:
@@ -119,10 +129,9 @@ def build_partition(
             eweight[i, k, :c] = w[a:b]
 
     # block metadata: min/max src pos per block (P / -1 sentinels when empty)
-    sp_blocks = src_pos.reshape(n, n, n_blocks, edge_block)
-    valid = sp_blocks >= 0
-    blk_lo = np.where(valid, sp_blocks, P).min(axis=-1).astype(np.int32)
-    blk_hi = np.where(valid, sp_blocks, -1).max(axis=-1).astype(np.int32)
+    blk_lo, blk_hi = block_ranges(
+        src_pos.reshape(n, n, n_blocks, edge_block), P
+    )
 
     # state array A
     degree = np.zeros((n, P), dtype=np.int32)
@@ -174,6 +183,56 @@ def partition_graph(
         vertex_pad=vertex_pad,
     )
     return pg, rmap
+
+
+def drop_edges(pg: PartitionedGraph) -> PartitionedGraph:
+    """Vertex-only view of a partition: the O(|V|/n) state array A survives,
+    the O(|E|) edge groups are replaced by zero-length placeholders.
+
+    Used after spilling the edge streams to disk (``spill_partition``): the
+    static geometry (``E_cap``/``edge_block``/``n_blocks``) still describes
+    the on-disk layout, but nothing edge-sized is resident. Such a partition
+    only runs under ``mode="streamed"``.
+    """
+    n = pg.n_shards
+    return dataclasses.replace(
+        pg,
+        src_pos=jnp.full((n, n, 0), -1, jnp.int32),
+        dst_pos=jnp.zeros((n, n, 0), jnp.int32),
+        eweight=jnp.zeros((n, n, 0), jnp.float32),
+        blk_lo=jnp.zeros((n, n, 0), jnp.int32),
+        blk_hi=jnp.zeros((n, n, 0), jnp.int32),
+    )
+
+
+def spill_partition(pg: PartitionedGraph, directory: str):
+    """Write the edge groups of ``pg`` to an on-disk ``EdgeStreamStore`` and
+    return ``(vertex_only_pg, store)`` — the paper's partition-time spill:
+    edges are written once, sequentially, in the per-destination group
+    layout, and streamed back every superstep."""
+    from repro.streams.store import EdgeStreamStore  # deferred: streams -> partition
+
+    store = EdgeStreamStore.from_partition(pg, directory)
+    return drop_edges(pg), store
+
+
+def partition_graph_streamed(
+    g: Graph,
+    n_shards: int,
+    spill_dir: str,
+    edge_block: int = 512,
+    vertex_pad: int = 8,
+    recode: RecodeMap | None = None,
+):
+    """``partition_graph`` for the out-of-core path: partitions, spills the
+    edge streams to ``spill_dir``, and returns ``(pg, rmap, store)`` where
+    ``pg`` holds only the O(|V|/n) vertex arrays."""
+    pg_full, rmap = partition_graph(
+        g, n_shards, edge_block=edge_block, vertex_pad=vertex_pad,
+        recode=recode,
+    )
+    pg, store = spill_partition(pg_full, spill_dir)
+    return pg, rmap, store
 
 
 def abstract_partitioned_graph(

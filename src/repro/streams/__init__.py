@@ -1,0 +1,16 @@
+"""Out-of-core edge streaming (paper §3): the on-disk edge-block store and
+the double-buffered prefetching reader behind the engine's ``streamed`` mode.
+"""
+
+from repro.streams.store import EdgeStreamStore, StoreGeometry
+from repro.streams.reader import StagedChunk, StreamReader, StreamStats
+from repro.streams.schedule import plan_stream_schedule
+
+__all__ = [
+    "EdgeStreamStore",
+    "StoreGeometry",
+    "StagedChunk",
+    "StreamReader",
+    "StreamStats",
+    "plan_stream_schedule",
+]

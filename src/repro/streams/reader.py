@@ -1,0 +1,182 @@
+"""Double-buffered prefetching stream reader — the paper's U_c ∥ U_s overlap
+(C3) reproduced at the host/device boundary.
+
+A background thread stages the next chunk of edge blocks from the
+``EdgeStreamStore`` memmaps into a small pool of preallocated host buffers
+while the device digests the current chunk. With ``depth=2`` this is classic
+double buffering: one buffer in flight to the device, one being filled from
+disk, so stream I/O hides behind compute whenever compute is the bottleneck
+(and vice versa — exactly the full overlap GraphD argues for).
+
+The schedule handed to :meth:`StreamReader.stream` is a list of
+``(src_shard, dst_shard, block_ids)`` entries — typically the skip()-filtered
+active blocks of every group for one superstep (see
+``streams.schedule.plan_stream_schedule``). Blocks are staged in ``chunk_blocks``
+groups so every chunk has ONE static shape: the jitted combine compiles once,
+and partial chunks are padded with compute-neutral slots (``src = -1``).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.streams.store import EdgeStreamStore
+
+
+@dataclass
+class StagedChunk:
+    """One staged group-chunk: host arrays of shape (chunk_blocks*edge_block,)."""
+
+    src_shard: int
+    dst_shard: int
+    sp: np.ndarray
+    dp: np.ndarray
+    w: np.ndarray
+    n_real_blocks: int
+    _buf_id: int = -1  # pool slot, returned to the free list after consumption
+
+
+@dataclass
+class StreamStats:
+    """Per-stream() accounting (surfaced by benchmarks)."""
+
+    chunks: int = 0
+    blocks_read: int = 0
+    edges_staged: int = 0
+    bytes_read: int = 0
+    read_seconds: float = 0.0  # producer time spent filling buffers
+    wait_seconds: float = 0.0  # consumer time spent blocked on the producer
+
+    def throughput_edges_per_s(self) -> float:
+        return self.edges_staged / self.read_seconds if self.read_seconds else 0.0
+
+
+_DONE = object()
+
+
+class StreamReader:
+    """Background-thread prefetcher over an :class:`EdgeStreamStore`."""
+
+    def __init__(self, store: EdgeStreamStore, chunk_blocks: int = 8,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError("depth must be >= 1 (2 = double buffering)")
+        self.store = store
+        self.chunk_blocks = chunk_blocks
+        self.depth = depth
+        self.stats = StreamStats()
+        self._worker: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    def staging_bytes(self) -> int:
+        """Resident bytes pinned by one pass's buffer pool (a compiled-in
+        constant — part of the O(1) streaming overhead, NOT a function of
+        |E|): (depth+1) buffers of chunk_blocks*edge_block slots, 12 B each."""
+        B = self.store.geom.edge_block
+        return (self.depth + 1) * self.chunk_blocks * B * 12
+
+    # -- the streaming loop --------------------------------------------------
+    def stream(self, schedule):
+        """Yield :class:`StagedChunk`s for ``schedule`` (list of
+        ``(i, k, block_ids)``), prefetched ``depth`` chunks ahead by a
+        background thread. The yielded buffers are only valid until the next
+        iteration (the engine copies them to device on consumption)."""
+        # guard against a producer left over from an aborted pass: stop it
+        # before starting a new one, and never share buffers with it
+        prev = self._worker
+        if prev is not None and prev.is_alive():
+            self._stop.set()
+            prev.join(timeout=5.0)
+            if prev.is_alive():
+                raise RuntimeError(
+                    "previous edge-stream prefetch thread did not stop; "
+                    "refusing to start another pass"
+                )
+        self.stats = StreamStats()
+        stats = self.stats
+        CB = self.chunk_blocks
+        B = self.store.geom.edge_block
+        shape = (CB, B)
+        # per-pass buffer pool (depth in-flight + 1 being consumed): a stale
+        # producer from an earlier, abandoned pass can only ever touch its
+        # own pass's buffers, never this one's
+        pool = [
+            (np.empty(shape, np.int32), np.empty(shape, np.int32),
+             np.empty(shape, np.float32))
+            for _ in range(self.depth + 1)
+        ]
+        full: queue.Queue = queue.Queue(maxsize=self.depth)
+        free: queue.Queue = queue.Queue()
+        for bid in range(len(pool)):
+            free.put(bid)
+        stop = self._stop = threading.Event()
+
+        def _put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    full.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    pass
+            return False
+
+        def _produce():
+            try:
+                for i, k, ids in schedule:
+                    for off in range(0, len(ids), CB):
+                        bid = free.get()
+                        if stop.is_set():
+                            return
+                        sp, dp, w = pool[bid]
+                        t0 = time.perf_counter()
+                        c = self.store.read_blocks(
+                            i, k, ids[off:off + CB], sp, dp, w
+                        )
+                        stats.read_seconds += time.perf_counter() - t0
+                        stats.chunks += 1
+                        stats.blocks_read += c
+                        stats.bytes_read += c * B * 12  # i32+i32+f32 per edge
+                        stats.edges_staged += int((sp[:c] >= 0).sum())
+                        if not _put(StagedChunk(
+                            src_shard=i, dst_shard=k,
+                            sp=sp.reshape(-1), dp=dp.reshape(-1),
+                            w=w.reshape(-1), n_real_blocks=c, _buf_id=bid,
+                        )):
+                            return
+                _put(_DONE)
+            except BaseException as e:  # surface disk errors to the consumer
+                _put(e)
+
+        worker = threading.Thread(target=_produce, name="edge-stream-prefetch",
+                                  daemon=True)
+        self._worker = worker
+        worker.start()
+        held: StagedChunk | None = None
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = full.get()
+                stats.wait_seconds += time.perf_counter() - t0
+                # the consumer has moved past the previous chunk — its buffer
+                # can be refilled. The consumer MUST have finished reading it
+                # (jnp may alias, not copy, these arrays on CPU; the engine
+                # blocks on the fold's result before advancing)
+                if held is not None:
+                    free.put(held._buf_id)
+                    held = None
+                if item is _DONE:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                held = item
+                yield item
+        finally:
+            stop.set()
+            # unblock a producer waiting on a free buffer, then drain
+            free.put(0)
+            worker.join(timeout=5.0)

@@ -1,0 +1,211 @@
+"""On-disk edge-block store — the local edge stream S^E of the paper (§3.1).
+
+GraphD's memory theorem (each machine needs only O(|V|/n) RAM) holds because
+edges never live in memory: they are written once at partition time, in the
+per-destination group layout of §3.3.1, and *streamed* back every superstep.
+``EdgeStreamStore`` is that disk tier:
+
+* three flat binary files (``sp.bin``/``dp.bin``/``w.bin``), each a memmap of
+  logical shape ``(n, n, n_blocks, edge_block)`` in row-major order, so the
+  blocks of one ``(src_shard, dst_shard)`` group are **contiguous on disk**
+  and a group scan is one sequential read — the access pattern the paper's
+  streaming analysis assumes;
+* a JSON ``manifest.json`` with the static geometry plus a content signature
+  (used by checkpoint recovery to refuse restoring state against the wrong
+  edge streams);
+* the skip() metadata (``blk_lo``/``blk_hi`` per block, §3.2) in
+  ``blocks.npz``, kept host-resident — O(n · n_blocks) ints, not O(|E|) —
+  so inactive blocks are *never read off disk*.
+
+Padded slots carry ``src_pos = -1`` exactly like the in-memory layout, so a
+staged block is compute-neutral in the engine's combine.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+MANIFEST = "manifest.json"
+BLOCKS = "blocks.npz"
+_FILES = {"sp": np.int32, "dp": np.int32, "w": np.float32}
+FORMAT_VERSION = 1
+
+
+@dataclass(frozen=True)
+class StoreGeometry:
+    """Static shape of the on-disk layout (mirrors PartitionedGraph statics)."""
+
+    n_shards: int
+    n_vertices: int
+    n_edges: int
+    P: int
+    E_cap: int
+    edge_block: int
+    n_blocks: int
+
+    @property
+    def shape(self) -> tuple[int, int, int, int]:
+        n = self.n_shards
+        return (n, n, self.n_blocks, self.edge_block)
+
+
+class EdgeStreamStore:
+    """Memmap-backed, write-once edge-block store with a block manifest."""
+
+    def __init__(self, directory: str, geom: StoreGeometry,
+                 blk_lo: np.ndarray, blk_hi: np.ndarray, signature: str):
+        self.dir = directory
+        self.geom = geom
+        self.blk_lo = blk_lo  # (n, n, n_blocks) int32, P sentinel when empty
+        self.blk_hi = blk_hi  # (n, n, n_blocks) int32, -1 sentinel when empty
+        self._signature = signature
+        self._mm = {
+            name: np.memmap(os.path.join(directory, f"{name}.bin"),
+                            dtype=dt, mode="r", shape=geom.shape)
+            for name, dt in _FILES.items()
+        }
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def create(
+        cls,
+        directory: str,
+        src_pos: np.ndarray,  # (n, n, E_cap) int32, -1 padding
+        dst_pos: np.ndarray,  # (n, n, E_cap) int32
+        eweight: np.ndarray,  # (n, n, E_cap) float32
+        *,
+        edge_block: int,
+        P: int,
+        n_vertices: int,
+        n_edges: int,
+    ) -> "EdgeStreamStore":
+        """Spill the per-destination edge groups to disk (done once, at
+        partition time — the paper's graph-loading pass)."""
+        n = src_pos.shape[0]
+        E_cap = src_pos.shape[2]
+        assert E_cap % edge_block == 0
+        n_blocks = E_cap // edge_block
+        geom = StoreGeometry(
+            n_shards=n, n_vertices=n_vertices, n_edges=n_edges, P=P,
+            E_cap=E_cap, edge_block=edge_block, n_blocks=n_blocks,
+        )
+        os.makedirs(directory, exist_ok=True)
+        arrays = dict(
+            sp=np.ascontiguousarray(src_pos, dtype=np.int32),
+            dp=np.ascontiguousarray(dst_pos, dtype=np.int32),
+            w=np.ascontiguousarray(eweight, dtype=np.float32),
+        )
+        for name, arr in arrays.items():
+            mm = np.memmap(os.path.join(directory, f"{name}.bin"),
+                           dtype=_FILES[name], mode="w+", shape=geom.shape)
+            mm[:] = arr.reshape(geom.shape)
+            mm.flush()
+            del mm
+
+        # skip() metadata: per-block source range (same contract as the
+        # device layout's blk_lo/blk_hi)
+        from repro.graph.partition import block_ranges
+
+        blk_lo, blk_hi = block_ranges(arrays["sp"].reshape(geom.shape), P)
+        np.savez(os.path.join(directory, BLOCKS), blk_lo=blk_lo, blk_hi=blk_hi)
+
+        signature = cls._digest(geom, blk_lo, blk_hi, arrays)
+        manifest = dict(
+            version=FORMAT_VERSION, signature=signature,
+            files={k: f"{k}.bin" for k in _FILES},
+            **geom.__dict__,
+        )
+        tmp = os.path.join(directory, f".{MANIFEST}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, os.path.join(directory, MANIFEST))  # atomic publish
+        return cls(directory, geom, blk_lo, blk_hi, signature)
+
+    @classmethod
+    def from_partition(cls, pg, directory: str) -> "EdgeStreamStore":
+        """Spill a (fully materialized) PartitionedGraph's edge groups."""
+        return cls.create(
+            directory,
+            np.asarray(pg.src_pos), np.asarray(pg.dst_pos),
+            np.asarray(pg.eweight),
+            edge_block=pg.edge_block, P=pg.P,
+            n_vertices=pg.n_vertices, n_edges=pg.n_edges,
+        )
+
+    @classmethod
+    def open(cls, directory: str) -> "EdgeStreamStore":
+        with open(os.path.join(directory, MANIFEST)) as f:
+            m = json.load(f)
+        if m.get("version") != FORMAT_VERSION:
+            raise ValueError(f"unsupported stream-store version {m.get('version')}")
+        geom = StoreGeometry(**{k: m[k] for k in StoreGeometry.__dataclass_fields__})
+        z = np.load(os.path.join(directory, BLOCKS))
+        return cls(directory, geom, z["blk_lo"], z["blk_hi"], m["signature"])
+
+    @staticmethod
+    def _digest(geom: StoreGeometry, blk_lo, blk_hi, arrays) -> str:
+        """Content signature: geometry + skip metadata + the edge data
+        itself (two stores with equal topology but different weights must
+        not look interchangeable to checkpoint recovery)."""
+        h = hashlib.sha256()
+        h.update(json.dumps(geom.__dict__, sort_keys=True).encode())
+        h.update(np.ascontiguousarray(blk_lo).tobytes())
+        h.update(np.ascontiguousarray(blk_hi).tobytes())
+        for name in sorted(arrays):
+            h.update(np.ascontiguousarray(arrays[name]).tobytes())
+        return h.hexdigest()[:16]
+
+    # -- identity / accounting -----------------------------------------------
+    def signature(self) -> dict:
+        """Stable identity of the edge streams, recorded in checkpoint
+        manifests so recovery can detect a store/state mismatch."""
+        return dict(store="edge-stream", signature=self._signature,
+                    n_shards=self.geom.n_shards, n_edges=self.geom.n_edges)
+
+    def disk_bytes(self) -> int:
+        return sum(
+            os.path.getsize(os.path.join(self.dir, f"{name}.bin"))
+            for name in _FILES
+        )
+
+    # -- skip() (§3.2) -------------------------------------------------------
+    def active_blocks(self, i: int, k: int, prefix: np.ndarray) -> np.ndarray:
+        """Block ids of group (i, k) whose source range [lo, hi] contains an
+        active vertex; ``prefix`` is the inclusive prefix sum (P+1,) of shard
+        i's active bitmap. Returned ascending => the read is sequential."""
+        lo = self.blk_lo[i, k]
+        hi = self.blk_hi[i, k]
+        nonempty = hi >= 0
+        cnt = prefix[np.clip(hi + 1, 0, self.geom.P)] - prefix[np.clip(lo, 0, self.geom.P)]
+        return np.nonzero(nonempty & (cnt > 0))[0].astype(np.int64)
+
+    def nonempty_blocks(self) -> int:
+        return int((self.blk_hi >= 0).sum())
+
+    # -- reads ---------------------------------------------------------------
+    def read_blocks(self, i: int, k: int, ids: np.ndarray,
+                    out_sp: np.ndarray, out_dp: np.ndarray,
+                    out_w: np.ndarray) -> int:
+        """Read blocks ``ids`` of group (i, k) into the staging buffers
+        (shape (chunk_blocks, edge_block) each); unused tail rows are padded
+        (sp = -1) so the staged chunk is compute-neutral. Returns the number
+        of real blocks staged."""
+        c = len(ids)
+        out_sp[c:] = -1
+        out_dp[c:] = 0
+        out_w[c:] = 0.0
+        if c:
+            self._mm["sp"][i, k].take(ids, axis=0, out=out_sp[:c])
+            self._mm["dp"][i, k].take(ids, axis=0, out=out_dp[:c])
+            self._mm["w"][i, k].take(ids, axis=0, out=out_w[:c])
+        return c
+
+    def group_edges(self, i: int, k: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Whole-group read (tests / tooling — not the streaming hot path)."""
+        return (np.array(self._mm["sp"][i, k]), np.array(self._mm["dp"][i, k]),
+                np.array(self._mm["w"][i, k]))

@@ -1,0 +1,115 @@
+"""Combiner algebra (paper §2.1/§5): every combiner must be commutative and
+associative with a true identity e0, and its two concrete realizations — the
+scatter path (in-memory A_s/A_r combine) and the reduce path (stacked-buffer
+fold) — must agree. Fixed-seed and exhaustive-small-case versions that always
+run; hypothesis sweeps live in test_properties.py."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import IMAX, IMIN, MAX, MIN, OR, SUM
+
+COMBINERS = {"sum": SUM, "min": MIN, "max": MAX, "or": OR,
+             "imin": IMIN, "imax": IMAX}
+CORE_FOUR = ["sum", "min", "max", "or"]
+
+
+def _norm(name, x):
+    """Compare in each combiner's natural domain (OR = boolean semiring)."""
+    a = np.asarray(x)
+    return a.astype(bool) if name == "or" else a
+
+
+def _sample(name, rng, size):
+    if name == "or":
+        return rng.integers(0, 2, size=size).astype(np.float32)
+    return rng.integers(-50, 50, size=size).astype(np.float32)
+
+
+class TestAlgebra:
+    @pytest.mark.parametrize("name", list(COMBINERS))
+    def test_commutative(self, name):
+        comb = COMBINERS[name]
+        rng = np.random.default_rng(0)
+        a, b = (jnp.asarray(_sample(name, rng, 64)) for _ in range(2))
+        np.testing.assert_array_equal(
+            _norm(name, comb.combine(a, b)), _norm(name, comb.combine(b, a))
+        )
+
+    @pytest.mark.parametrize("name", list(COMBINERS))
+    def test_associative(self, name):
+        comb = COMBINERS[name]
+        rng = np.random.default_rng(1)
+        a, b, c = (jnp.asarray(_sample(name, rng, 64)) for _ in range(3))
+        lhs = comb.combine(comb.combine(a, b), c)
+        rhs = comb.combine(a, comb.combine(b, c))
+        np.testing.assert_array_equal(_norm(name, lhs), _norm(name, rhs))
+
+    @pytest.mark.parametrize("name", list(COMBINERS))
+    def test_identity(self, name):
+        comb = COMBINERS[name]
+        dtype = jnp.int32 if name in ("imin", "imax", "or") else jnp.float32
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(_sample(name, rng, 64)).astype(dtype)
+        e0 = jnp.asarray(comb.e0, dtype)
+        np.testing.assert_array_equal(
+            _norm(name, comb.combine(a, e0)), _norm(name, a)
+        )
+        np.testing.assert_array_equal(
+            _norm(name, comb.combine(e0, a)), _norm(name, a)
+        )
+
+    @pytest.mark.parametrize("name", CORE_FOUR)
+    def test_exhaustive_small_domain(self, name):
+        """Associativity over the full small domain — not just samples."""
+        comb = COMBINERS[name]
+        dom = [0.0, 1.0] if name == "or" else [-2.0, 0.0, 3.0]
+        for x, y, z in itertools.product(dom, repeat=3):
+            a, b, c = (jnp.float32(v) for v in (x, y, z))
+            lhs = comb.combine(comb.combine(a, b), c)
+            rhs = comb.combine(a, comb.combine(b, c))
+            assert _norm(name, lhs) == _norm(name, rhs)
+
+
+class TestScatterReduceAgree:
+    """identity+scatter (the engine's A_s path) == reduce over stacked
+    one-slot buffers (the engine's exchange-digest path)."""
+
+    @pytest.mark.parametrize("name", CORE_FOUR)
+    @pytest.mark.parametrize("seed", [0, 7, 23])
+    def test_agree(self, name, seed):
+        comb = COMBINERS[name]
+        rng = np.random.default_rng(seed)
+        P, M = 16, 80
+        idx = rng.integers(0, P, size=M).astype(np.int32)
+        msgs = _sample(name, rng, M)
+        scattered = comb.scatter(
+            comb.identity((P,), jnp.float32), jnp.asarray(idx),
+            jnp.asarray(msgs),
+        )
+        stack = np.full((M, P), float(comb.e0), dtype=np.float32)
+        stack[np.arange(M), idx] = msgs
+        reduced = comb.reduce(jnp.asarray(stack), 0)
+        if name == "or":
+            np.testing.assert_array_equal(
+                _norm(name, scattered), _norm(name, reduced)
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(scattered), np.asarray(reduced), rtol=1e-6
+            )
+
+    @pytest.mark.parametrize("name", CORE_FOUR)
+    def test_scatter_of_identity_is_noop(self, name):
+        """Padded edge slots scatter e0 — they must be compute-neutral
+        (this is what makes padded blocks free in every mode)."""
+        comb = COMBINERS[name]
+        P = 8
+        target = comb.identity((P,), jnp.float32)
+        idx = jnp.zeros((32,), jnp.int32)
+        e0s = jnp.full((32,), comb.e0, jnp.float32)
+        out = comb.scatter(target, idx, e0s)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(target))

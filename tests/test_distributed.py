@@ -33,8 +33,7 @@ def test_shard_map_equals_vmap_all_modes():
         from repro.core import GraphDEngine, PageRank
         g = rmat_graph(scale=8, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=8, edge_block=64)
-        mesh = jax.make_mesh((8,), ('machines',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ('machines',))
         for mode in ['recoded', 'basic', 'basic_sc']:
             (v_sm, _), _ = GraphDEngine(pg, PageRank(supersteps=5),
                                         mode=mode, mesh=mesh).run()
@@ -54,8 +53,7 @@ def test_shard_map_sparse_sssp():
         from repro.core import GraphDEngine, SSSP
         g = rmat_graph(scale=8, edge_factor=8, seed=3)
         pg, rmap = partition_graph(g, n_shards=8, edge_block=64)
-        mesh = jax.make_mesh((8,), ('machines',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ('machines',))
         src = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
         es = GraphDEngine(pg, SSSP(src), mesh=mesh, adapt_threshold=0.6,
                           sparse_cap_frac=0.6)
@@ -76,8 +74,7 @@ def test_shard_map_pallas_backend():
         from repro.core import GraphDEngine, PageRank
         g = rmat_graph(scale=8, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=4, edge_block=64, vertex_pad=32)
-        mesh = jax.make_mesh((4,), ('machines',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ('machines',))
         (vp, _), _ = GraphDEngine(pg, PageRank(supersteps=4),
                                   backend='pallas', kernel_windows=32,
                                   mesh=mesh).run()
@@ -98,8 +95,7 @@ def test_logged_mode_shard_map_and_recovery():
         from repro.core.checkpoint import Checkpointer, MessageLog, recover_shard
         g = rmat_graph(scale=7, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=4, edge_block=64)
-        mesh = jax.make_mesh((4,), ('machines',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ('machines',))
         prog = PageRank(supersteps=6)
         (v_ref, _), _ = GraphDEngine(pg, prog).run()
         with tempfile.TemporaryDirectory() as d:
@@ -137,8 +133,7 @@ def test_sharded_train_step_matches_single_device():
         ref_step = jax.jit(make_train_step(cfg, AdamWConfig(total_steps=10)))
         p1, o1, m1 = ref_step(params, opt, batch)
 
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
         ps = param_specs(params, mesh)
         os_ = dict(mu=ps, nu=ps, step=P())
         bs = batch_specs_tree(batch, mesh)
@@ -163,6 +158,7 @@ def test_graphd_dryrun_small_mesh():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.compat import shard_map
         from repro.core.algorithms import PageRank
         from repro.core.engine import superstep_spmd
         from repro.graph.partition import abstract_partitioned_graph
@@ -180,9 +176,9 @@ def test_graphd_dryrun_small_mesh():
             return nv[None], na[None], st
 
         spec = P('machines')
-        fn = jax.shard_map(step, mesh=mesh,
-                           in_specs=(spec, spec, spec, P()),
-                           out_specs=(spec, spec, P()))
+        fn = shard_map(step, mesh=mesh,
+                       in_specs=(spec, spec, spec, P()),
+                       out_specs=(spec, spec, P()))
         vals = jax.ShapeDtypeStruct((n, pg.P), jnp.float32)
         act = jax.ShapeDtypeStruct((n, pg.P), jnp.bool_)
         stp = jax.ShapeDtypeStruct((), jnp.int32)
@@ -191,7 +187,8 @@ def test_graphd_dryrun_small_mesh():
             fn, in_shardings=(jax.tree.map(lambda _: sh, pg), sh, sh,
                               NamedSharding(mesh, P())),
         ).lower(pg, vals, act, stp).compile()
-        cost = compiled.cost_analysis()
+        from repro.compat import cost_analysis
+        cost = cost_analysis(compiled)
         assert cost.get('flops', 0) > 0
         print('OK', cost.get('flops'))
     """)
@@ -209,8 +206,7 @@ def test_ring_vs_alltoall_collective_equivalence():
         from repro.core.checkpoint import MessageLog
         g = rmat_graph(scale=7, edge_factor=6, seed=5, directed=False)
         pg, _ = partition_graph(g, n_shards=8, edge_block=32)
-        mesh = jax.make_mesh((8,), ('machines',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ('machines',))
         (v1, _), _ = GraphDEngine(pg, HashMin(), mesh=mesh).run()
         with tempfile.TemporaryDirectory() as d:
             ml = MessageLog(os.path.join(d, 'l'))

@@ -4,7 +4,6 @@ import collections
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.graph import (
     Graph, chain_graph, erdos_renyi_graph, partition_graph, recode_ids,
@@ -13,36 +12,29 @@ from repro.graph import (
 from repro.graph.recode import recode_distributed
 
 
-def edge_strategy(max_v=200, max_e=400):
-    return st.lists(
-        st.tuples(st.integers(0, max_v - 1), st.integers(0, max_v - 1)),
-        min_size=1, max_size=max_e,
-    )
-
-
 class TestRecode:
-    @given(edge_strategy(), st.integers(1, 9))
-    @settings(max_examples=30, deadline=None)
-    def test_bijection(self, edges, n):
-        ids = np.unique(np.array([v for e in edges for v in e], dtype=np.int64))
-        rmap = recode_ids(ids, n)
-        new = rmap.to_new(ids)
-        # bijective, shard-consistent, position-consistent
-        assert len(set(new.tolist())) == len(ids)
-        assert np.array_equal(rmap.to_old(new), ids)
-        for g in new:
-            assert 0 <= g < n * rmap.max_positions
+    def test_bijection_fixed_ids(self):
+        rng = np.random.default_rng(0)
+        ids = np.unique(rng.integers(0, 200, size=300))
+        for n in [1, 3, 9]:
+            rmap = recode_ids(ids, n)
+            new = rmap.to_new(ids)
+            # bijective, shard-consistent, position-consistent
+            assert len(set(new.tolist())) == len(ids)
+            assert np.array_equal(rmap.to_old(new), ids)
+            for g in new:
+                assert 0 <= g < n * rmap.max_positions
 
-    @given(edge_strategy(), st.integers(1, 6))
-    @settings(max_examples=20, deadline=None)
-    def test_distributed_recoding_matches_fast_path(self, edges, n):
+    def test_distributed_recoding_matches_fast_path(self):
         """Paper §5: the 3-superstep recoding job produces the same streams."""
-        src = np.array([e[0] for e in edges], dtype=np.int64)
-        dst = np.array([e[1] for e in edges], dtype=np.int64)
+        rng = np.random.default_rng(1)
+        src = rng.integers(0, 200, size=400).astype(np.int64)
+        dst = rng.integers(0, 200, size=400).astype(np.int64)
         ids = np.unique(np.concatenate([src, dst]))
-        s1, d1, rmap = recode_distributed(src, dst, ids, n)
-        assert np.array_equal(s1, rmap.to_new(src))
-        assert np.array_equal(d1, rmap.to_new(dst))
+        for n in [1, 4, 6]:
+            s1, d1, rmap = recode_distributed(src, dst, ids, n)
+            assert np.array_equal(s1, rmap.to_new(src))
+            assert np.array_equal(d1, rmap.to_new(dst))
 
     def test_sparse_ids(self):
         g = rmat_graph(scale=7, edge_factor=4, seed=1, sparse_ids=True)
@@ -64,8 +56,7 @@ class TestLemma1:
             f">= 2*{V}/{n}"
         )
 
-    @given(st.integers(2, 12))
-    @settings(max_examples=10, deadline=None)
+    @pytest.mark.parametrize("n", [2, 5, 12])
     def test_balance_random_ids(self, n):
         rng = np.random.default_rng(n)
         ids = np.unique(rng.integers(0, 2**48, size=5000))

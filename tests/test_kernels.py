@@ -5,7 +5,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.graph import partition_graph, rmat_graph
 from repro.graph.kblocks import build_kernel_layout, layout_stats
@@ -134,12 +133,13 @@ class TestLayoutStats:
         assert s["real_edges"] == pg.n_edges
 
 
-@given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.0))
-@settings(max_examples=10, deadline=None)
-def test_property_kernel_matches_ref(seed, density):
-    """Property: kernel == oracle on random graphs × random frontiers."""
-    pg, kl = _setup(scale=6, ef=4, seed=seed % 1000, n=2, win=16, blk=16,
-                    vp=16)
+# NOTE: the hypothesis sweep of kernel-vs-oracle over random graphs and
+# frontier densities lives in test_properties.py (skipped when hypothesis
+# is absent); a fixed-seed version stays here so the kernel is always covered.
+@pytest.mark.parametrize("seed,density", [(3, 0.0), (17, 0.3), (91, 1.0)])
+def test_kernel_matches_ref_fixed(seed, density):
+    """Kernel == oracle on a few fixed graph × frontier combinations."""
+    pg, kl = _setup(scale=6, ef=4, seed=seed, n=2, win=16, blk=16, vp=16)
     state3 = _state(pg, density=density, seed=seed % 97)
     i, k = 0, 1
     args = (

@@ -1,0 +1,359 @@
+"""Out-of-core streamed execution (tentpole): the on-disk edge-block store,
+the prefetching reader, cross-mode result equivalence, the O(|V|/n) memory
+guarantee, skip()-driven I/O avoidance, and manifest-aware recovery."""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import GraphDEngine, HashMin, PageRank, SSSP
+from repro.core.checkpoint import Checkpointer
+from repro.graph import (
+    chain_graph, partition_graph, partition_graph_streamed, rmat_graph,
+    spill_partition,
+)
+from repro.streams import EdgeStreamStore, StreamReader, plan_stream_schedule
+
+
+@pytest.fixture
+def spilled(tmp_path):
+    g = rmat_graph(scale=7, edge_factor=8, seed=3)
+    pg_full, _ = partition_graph(g, n_shards=4, edge_block=64)
+    pg, rmap, store = partition_graph_streamed(
+        g, 4, str(tmp_path / "spill"), edge_block=64
+    )
+    return g, pg_full, pg, rmap, store
+
+
+# ---------------------------------------------------------------------------
+# the store: on-disk layout == in-memory layout, open() roundtrip, skip()
+# ---------------------------------------------------------------------------
+
+class TestEdgeStreamStore:
+    def test_spill_preserves_groups(self, spilled):
+        _, pg_full, pg, _, store = spilled
+        sp0 = np.asarray(pg_full.src_pos)
+        dp0 = np.asarray(pg_full.dst_pos)
+        w0 = np.asarray(pg_full.eweight)
+        n, E_cap = pg_full.n_shards, pg_full.E_cap
+        for i in range(n):
+            for k in range(n):
+                sp, dp, w = store.group_edges(i, k)
+                assert np.array_equal(sp.reshape(-1), sp0[i, k])
+                assert np.array_equal(dp.reshape(-1), dp0[i, k])
+                assert np.array_equal(w.reshape(-1), w0[i, k])
+        # and the vertex-only partition really dropped the O(|E|) arrays
+        assert np.asarray(pg.src_pos).size == 0
+        assert np.asarray(pg.blk_lo).size == 0
+
+    def test_open_roundtrip(self, spilled, tmp_path):
+        _, _, _, _, store = spilled
+        reopened = EdgeStreamStore.open(store.dir)
+        assert reopened.geom == store.geom
+        assert reopened.signature() == store.signature()
+        assert np.array_equal(reopened.blk_lo, store.blk_lo)
+        assert np.array_equal(reopened.blk_hi, store.blk_hi)
+
+    def test_block_manifest_matches_partition(self, spilled):
+        _, pg_full, _, _, store = spilled
+        assert np.array_equal(store.blk_lo, np.asarray(pg_full.blk_lo))
+        assert np.array_equal(store.blk_hi, np.asarray(pg_full.blk_hi))
+
+    def test_signature_covers_edge_content(self, tmp_path):
+        """Equal topology + different weights must NOT look interchangeable
+        to checkpoint recovery."""
+        g1 = rmat_graph(scale=6, edge_factor=4, seed=2)
+        g2 = rmat_graph(scale=6, edge_factor=4, seed=2, weights="uniform")
+        assert np.array_equal(g1.src, g2.src)  # same topology
+        _, _, s1 = partition_graph_streamed(g1, 2, str(tmp_path / "a"),
+                                            edge_block=32)
+        _, _, s2 = partition_graph_streamed(g2, 2, str(tmp_path / "b"),
+                                            edge_block=32)
+        assert s1.signature() != s2.signature()
+
+    def test_skip_no_active_no_blocks(self, spilled):
+        _, _, pg, _, store = spilled
+        dead = np.zeros(pg.P, bool)
+        prefix = np.concatenate([[0], np.cumsum(dead.astype(np.int64))])
+        for i in range(4):
+            for k in range(4):
+                assert store.active_blocks(i, k, prefix).size == 0
+
+    def test_skip_matches_block_ranges(self, spilled):
+        _, _, pg, _, store = spilled
+        rng = np.random.default_rng(0)
+        active = rng.random(pg.P) < 0.2
+        prefix = np.concatenate([[0], np.cumsum(active.astype(np.int64))])
+        for i in range(4):
+            for k in range(4):
+                got = set(store.active_blocks(i, k, prefix).tolist())
+                want = set()
+                for b in range(store.geom.n_blocks):
+                    lo, hi = store.blk_lo[i, k, b], store.blk_hi[i, k, b]
+                    if hi >= 0 and active[lo:hi + 1].any():
+                        want.add(b)
+                assert got == want
+
+
+class TestStreamReader:
+    def test_chunks_cover_schedule_exactly(self, spilled):
+        _, pg_full, pg, _, store = spilled
+        active = np.ones((4, pg.P), bool)
+        schedule, density, _ = plan_stream_schedule(store, active)
+        assert density == 1.0
+        reader = StreamReader(store, chunk_blocks=1, depth=2)
+        seen = collections.Counter()
+        edges = 0
+        for chunk in reader.stream(schedule):
+            seen[(chunk.src_shard, chunk.dst_shard)] += chunk.n_real_blocks
+            edges += int((chunk.sp >= 0).sum())
+        want = {
+            (i, k): int(ids.size) for i, k, ids in schedule
+        }
+        assert dict(seen) == want
+        assert edges == pg_full.n_edges
+        assert reader.stats.blocks_read == sum(want.values())
+
+    def test_partial_chunks_padded_neutral(self, spilled):
+        _, _, pg, _, store = spilled
+        active = np.ones((4, pg.P), bool)
+        schedule, _, _ = plan_stream_schedule(store, active)
+        # chunk_blocks larger than any group => every chunk is partial
+        reader = StreamReader(store, chunk_blocks=16, depth=2)
+        B = store.geom.edge_block
+        for chunk in reader.stream(schedule):
+            tail = chunk.sp[chunk.n_real_blocks * B:]
+            assert (tail == -1).all()  # compute-neutral padding
+
+    def test_staging_is_constant_sized(self, spilled):
+        _, _, _, _, store = spilled
+        r = StreamReader(store, chunk_blocks=4, depth=2)
+        B = store.geom.edge_block
+        assert r.staging_bytes() == 3 * (4 * B * 12)  # (depth+1) buffers
+
+
+# ---------------------------------------------------------------------------
+# cross-mode equivalence: streamed must agree with every in-memory mode
+# ---------------------------------------------------------------------------
+
+class TestCrossModeEquivalence:
+    MODES = ["recoded", "basic", "basic_sc"]
+
+    def _run_all(self, g, prog_factory, tmp_path, n=4, edge_block=64):
+        pg, rmap = partition_graph(g, n_shards=n, edge_block=edge_block)
+        pgs, _, store = partition_graph_streamed(
+            g, n, str(tmp_path / "s"), edge_block=edge_block, recode=rmap
+        )
+        outs = {}
+        for mode in self.MODES:
+            eng = GraphDEngine(pg, prog_factory(rmap), mode=mode)
+            (vals, _), _ = eng.run()
+            outs[mode] = eng.gather_values(vals)
+        eng = GraphDEngine(pgs, prog_factory(rmap), mode="streamed",
+                           stream_store=store)
+        (vals, _), _ = eng.run()
+        outs["streamed"] = eng.gather_values(vals)
+        return outs
+
+    def test_pagerank(self, tmp_path):
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        outs = self._run_all(g, lambda _: PageRank(supersteps=6), tmp_path)
+        ref = outs["recoded"]
+        for mode, got in outs.items():
+            # tolerance-aware: float accumulation order differs per mode
+            err = max(abs(got[k] - ref[k]) for k in ref)
+            assert err < 1e-6, (mode, err)
+
+    def test_sssp(self, tmp_path):
+        g = rmat_graph(scale=7, edge_factor=6, seed=5, weights="uniform")
+        def mk(rmap):
+            src = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
+            return SSSP(src)
+        outs = self._run_all(g, mk, tmp_path)
+        ref = outs["recoded"]
+        for mode, got in outs.items():
+            for k, v in ref.items():
+                o = got[k]
+                assert (np.isinf(v) and np.isinf(o)) or abs(o - v) < 1e-5, mode
+
+    def test_hashmin(self, tmp_path):
+        g = rmat_graph(scale=7, edge_factor=4, seed=11)
+        outs = self._run_all(g, lambda _: HashMin(), tmp_path)
+        ref = outs["recoded"]
+        for mode, got in outs.items():
+            assert got == ref, mode  # integer labels: bit-for-bit
+
+
+# ---------------------------------------------------------------------------
+# the memory guarantee: resident bytes are O(|V|/n), independent of |E|
+# ---------------------------------------------------------------------------
+
+class TestMemoryGuarantee:
+    def _engines(self, edge_factor, tmp_path, tag):
+        # |E| >> |V|: scale 8 => |V| <= 256, edge_factor up to 48 edges/vertex
+        g = rmat_graph(scale=8, edge_factor=edge_factor, seed=7)
+        pg, _ = partition_graph(g, n_shards=4, edge_block=32)
+        pgs, _, store = partition_graph_streamed(
+            g, 4, str(tmp_path / f"sp{tag}"), edge_block=32
+        )
+        mem = GraphDEngine(pg, PageRank(supersteps=2), mode="recoded")
+        out = GraphDEngine(pgs, PageRank(supersteps=2), mode="streamed",
+                           stream_store=store, stream_chunk_blocks=2)
+        return g, mem, out
+
+    @staticmethod
+    def _ram(m):
+        return m["resident"] + m["buffers"] + m["staging"]
+
+    def test_resident_independent_of_E(self, tmp_path):
+        g1, mem1, out1 = self._engines(4, tmp_path, "a")
+        g2, mem2, out2 = self._engines(48, tmp_path, "b")
+        assert g2.n_edges > 4 * g1.n_edges  # |E| really grew
+        assert g2.n_vertices == g1.n_vertices
+        s1, s2 = out1.memory_model(), out2.memory_model()
+        # streamed RAM footprint: exactly equal despite >4x the edges
+        assert self._ram(s1) == self._ram(s2)
+        # ... while the on-disk tier grows with |E|
+        assert s2["streamed"] > s1["streamed"]
+        # ... and the in-memory engine's device edge bytes grow too
+        m1, m2 = mem1.memory_model(), mem2.memory_model()
+        assert m2["streamed"] > 4 * m1["streamed"]
+
+    def test_resident_small_constant_of_V_over_n(self, tmp_path):
+        g, mem, out = self._engines(48, tmp_path, "c")
+        s = out.memory_model()
+        pg = out.pg
+        # per-shard vertex state: P slots, <= 32 B/slot across all arrays
+        vertex_bytes = pg.P * 32
+        # staging pool is a compiled-in constant: chunk_blocks * edge_block
+        assert self._ram(s) <= 4 * vertex_bytes + out._stream_reader.staging_bytes()
+        # and the in-memory engine holds edge-sized state the streamed one
+        # does not: its device footprint exceeds the streamed RAM total
+        m = mem.memory_model()
+        assert self._ram(m) + m["streamed"] > self._ram(s)
+        # the spilled partition itself holds no edge-sized arrays
+        per_shard_resident = sum(
+            np.asarray(a).nbytes
+            for a in (pg.degree, pg.vmask, pg.old_ids, pg.gids)
+        ) // pg.n_shards + np.asarray(pg.src_pos).nbytes
+        assert per_shard_resident <= vertex_bytes
+
+
+# ---------------------------------------------------------------------------
+# skip() really avoids I/O + streamed fault tolerance
+# ---------------------------------------------------------------------------
+
+class TestStreamedExecution:
+    def test_chain_sssp_reads_few_blocks(self, tmp_path):
+        """On a chain with a 1-vertex frontier, skip() must keep per-step
+        disk reads near-constant instead of scanning all blocks."""
+        g = chain_graph(256)
+        pgs, rmap, store = partition_graph_streamed(
+            g, 4, str(tmp_path / "chain"), edge_block=8
+        )
+        src_new = int(rmap.to_new(np.array([0]))[0])
+        eng = GraphDEngine(pgs, SSSP(src_new), mode="streamed",
+                           stream_store=store, stream_chunk_blocks=2)
+        blocks_per_step = []
+        (vals, _), hist = eng.run(
+            max_supersteps=300,
+            on_step=lambda rec, s: blocks_per_step.append(
+                eng._stream_reader.stats.blocks_read
+            ),
+        )
+        got = eng.gather_values(vals)
+        assert all(got[k] == k for k in got)  # dist(0 -> k) = k on the chain
+        total = store.nonempty_blocks()
+        # the frontier touches O(1) blocks per superstep; a full scan would
+        # read `total` every time
+        assert max(blocks_per_step[1:]) <= max(4, total // 4)
+
+    def test_streamed_quiescence(self, tmp_path):
+        g = chain_graph(32)
+        pgs, rmap, store = partition_graph_streamed(
+            g, 2, str(tmp_path / "q"), edge_block=8
+        )
+        src_new = int(rmap.to_new(np.array([31]))[0])  # sink: no out-edges
+        eng = GraphDEngine(pgs, SSSP(src_new), mode="streamed",
+                           stream_store=store)
+        (_, _), hist = eng.run()
+        assert len(hist) == 1  # immediately quiescent
+
+    def test_checkpoint_restart_matches(self, spilled, tmp_path):
+        _, _, pg, _, store = spilled
+        (v_ref, _), _ = GraphDEngine(
+            pg, PageRank(supersteps=8), mode="streamed", stream_store=store
+        ).run()
+        ck = Checkpointer(str(tmp_path / "ck"), every=3)
+        eng = GraphDEngine(pg, PageRank(supersteps=8), mode="streamed",
+                           stream_store=store)
+        eng.run(max_supersteps=5, checkpointer=ck)  # "crash" after step 5
+        eng2 = GraphDEngine(pg, PageRank(supersteps=8), mode="streamed",
+                            stream_store=store)
+        (v2, _), hist = eng2.run(checkpointer=ck)  # resumes from step 3
+        assert hist[0].step == 3
+        assert np.allclose(np.asarray(v2), np.asarray(v_ref))
+
+    def test_manifest_mismatch_refused(self, spilled, tmp_path):
+        """A checkpoint written against one edge stream must not silently
+        restore against another (manifest-aware recovery)."""
+        g, _, pg, _, store = spilled
+        ck = Checkpointer(str(tmp_path / "ck2"), every=2)
+        GraphDEngine(pg, PageRank(supersteps=4), mode="streamed",
+                     stream_store=store).run(checkpointer=ck)
+        g2 = rmat_graph(scale=7, edge_factor=4, seed=99)
+        pg2, _, store2 = partition_graph_streamed(
+            g2, 4, str(tmp_path / "other"), edge_block=64
+        )
+        with pytest.raises(ValueError, match="different edge streams"):
+            ck.restore(expected_meta=store2.signature())
+
+    def test_spilled_partition_rejected_by_in_memory_modes(self, spilled):
+        """A vertex-only partition in mode='recoded' would silently compute
+        a wrong fixpoint (no edges -> no messages); must raise instead."""
+        _, _, pg, _, _ = spilled
+        with pytest.raises(ValueError, match="vertex-only"):
+            GraphDEngine(pg, PageRank(), mode="recoded")
+
+    def test_density_semantics_match_in_memory(self, spilled):
+        """rec.density means 'fraction of blocks active NEXT superstep' in
+        every mode — histories must line up step for step."""
+        g, pg_full, pg, rmap, store = spilled
+        src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
+        (_, _), h_mem = GraphDEngine(pg_full, SSSP(src_new), mode="recoded",
+                                     adapt_threshold=-1).run()
+        eng = GraphDEngine(pg, SSSP(src_new), mode="streamed",
+                           stream_store=store)
+        (_, _), h_st = eng.run()
+        assert len(h_mem) == len(h_st)
+        for a, b in zip(h_mem, h_st):
+            assert abs(a.density - b.density) < 1e-6
+
+    def test_engine_validates_geometry(self, spilled, tmp_path):
+        g, _, _, _, store = spilled
+        pg_other, _ = partition_graph(g, n_shards=2, edge_block=64)
+        with pytest.raises(ValueError, match="geometry"):
+            GraphDEngine(pg_other, PageRank(), mode="streamed",
+                         stream_store=store)
+
+    def test_requires_store_and_combiner(self, spilled):
+        from repro.core.algorithms import DistinctInLabels
+
+        _, _, pg, _, store = spilled
+        with pytest.raises(ValueError, match="stream_store"):
+            GraphDEngine(pg, PageRank(), mode="streamed")
+        with pytest.raises(ValueError, match="combiner"):
+            GraphDEngine(pg, DistinctInLabels(), mode="streamed",
+                         stream_store=store)
+
+    def test_spill_partition_matches_streamed_ctor(self, tmp_path):
+        """spill_partition on an existing pg == partition_graph_streamed."""
+        g = rmat_graph(scale=6, edge_factor=6, seed=2)
+        pg_full, _ = partition_graph(g, n_shards=3, edge_block=32)
+        pg_v, store = spill_partition(pg_full, str(tmp_path / "sp"))
+        eng = GraphDEngine(pg_v, PageRank(supersteps=4), mode="streamed",
+                           stream_store=store)
+        (v, _), _ = eng.run()
+        (v_ref, _), _ = GraphDEngine(pg_full, PageRank(supersteps=4)).run()
+        assert np.abs(np.asarray(v) - np.asarray(v_ref)).max() < 1e-6
