@@ -18,11 +18,16 @@ import tempfile
 
 import numpy as np
 
-from benchmarks.common import emit, rss_bytes, stream_report
-from repro.core import GraphDEngine, PageRank
+from benchmarks.common import emit, rss_bytes, stream_report, write_json
+from repro.core import DistinctInLabels, GraphDEngine, PageRank
 from repro.graph import (
     partition_graph, partition_graph_streamed, recode_ids, rmat_graph,
 )
+
+
+def _ram(m):
+    return (m["resident"] + m["buffers"] + m["staging"]
+            + m.get("msg_staging", 0))
 
 
 def lemma1(g):
@@ -75,9 +80,40 @@ def streamed_model(g, edge_block, supersteps, chunk_blocks=8):
         return ram
 
 
+def streamed_nocombiner_model(g, edge_block, rounds=2, chunk_blocks=4):
+    """The disk message tier (§3.3): a combiner-less apply_list program runs
+    streamed with messages spilled to OMS runs and external-merged back —
+    resident RAM is the vertex arrays + constant merge/slice windows."""
+    with tempfile.TemporaryDirectory(prefix="graphd-oms-") as d:
+        pg, _, store = partition_graph_streamed(g, 8, d,
+                                                edge_block=edge_block)
+        eng = GraphDEngine(
+            pg, DistinctInLabels(n_groups=16, rounds=rounds),
+            mode="streamed", stream_store=store,
+            stream_chunk_blocks=chunk_blocks,
+        )
+        rss0 = rss_bytes()
+        (_, _), hist = eng.run()
+        rss1 = rss_bytes()
+        m = eng.memory_model()
+        ram = _ram(m)
+        emit("memory/oms_ram_per_shard", 0.0,
+             f"bytes={ram};resident={m['resident']};"
+             f"msg_staging={m['msg_staging']};"
+             f"slice_cap={eng._msg_slice_cap_eff}")
+        emit("memory/oms_disk_per_shard", 0.0, f"bytes={m['streamed']}")
+        emit("memory/oms_rss_delta", 0.0, f"bytes={max(rss1 - rss0, 0)}")
+        per_step = (np.mean([h.seconds for h in hist[1:]])
+                    if len(hist) > 1 else hist[0].seconds)
+        emit("memory/oms_superstep", per_step * 1e6,
+             f"msgs={hist[-1].n_msgs};supersteps={len(hist)}")
+        return ram
+
+
 def independence_of_E(scale, factors, edge_block):
-    """Same |V|, growing |E|: streamed RAM must stay flat."""
-    rams = []
+    """Same |V|, growing |E|: streamed RAM must stay flat — for the combiner
+    path AND the combiner-less (message-spilling) path."""
+    rams, oms_rams = [], []
     for ef in factors:
         g = rmat_graph(scale=scale, edge_factor=ef, seed=7)
         with tempfile.TemporaryDirectory(prefix="graphd-stream-") as d:
@@ -86,18 +122,34 @@ def independence_of_E(scale, factors, edge_block):
             eng = GraphDEngine(pg, PageRank(supersteps=2), mode="streamed",
                                stream_store=store)
             m = eng.memory_model()
-            ram = m["resident"] + m["buffers"] + m["staging"]
+            ram = _ram(m)
             rams.append(ram)
             emit(f"memory/streamed_ram_ef{ef}", 0.0,
                  f"E={g.n_edges};ram={ram};disk={m['streamed']}")
+        with tempfile.TemporaryDirectory(prefix="graphd-oms-") as d:
+            pg, _, store = partition_graph_streamed(g, 8, d,
+                                                    edge_block=edge_block)
+            eng = GraphDEngine(
+                pg, DistinctInLabels(n_groups=16), mode="streamed",
+                stream_store=store, msg_slice_cap=8192,
+            )
+            eng.run()
+            m = eng.memory_model()
+            oms_rams.append(_ram(m))
+            emit(f"memory/oms_ram_ef{ef}", 0.0,
+                 f"E={g.n_edges};ram={oms_rams[-1]};disk={m['streamed']}")
     emit("memory/streamed_ram_independent_of_E", 0.0,
          f"ok={len(set(rams)) == 1}")
+    emit("memory/oms_ram_independent_of_E", 0.0,
+         f"ok={len(set(oms_rams)) == 1}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="seconds-scale subset for CI smoke")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the emitted records as JSON (CI artifact)")
     args = ap.parse_args()
 
     if args.tiny:
@@ -105,14 +157,17 @@ def main():
         lemma1(g)
         in_memory_model(g, edge_block=64)
         streamed_model(g, edge_block=64, supersteps=2, chunk_blocks=4)
+        streamed_nocombiner_model(g, edge_block=64, rounds=2, chunk_blocks=4)
         independence_of_E(scale=8, factors=[4, 16], edge_block=32)
-        return
-
-    g = rmat_graph(scale=14, edge_factor=8, seed=3, sparse_ids=True)
-    lemma1(g)
-    in_memory_model(g, edge_block=512)
-    streamed_model(g, edge_block=512, supersteps=3)
-    independence_of_E(scale=12, factors=[4, 16, 48], edge_block=256)
+    else:
+        g = rmat_graph(scale=14, edge_factor=8, seed=3, sparse_ids=True)
+        lemma1(g)
+        in_memory_model(g, edge_block=512)
+        streamed_model(g, edge_block=512, supersteps=3)
+        streamed_nocombiner_model(g, edge_block=512, rounds=2)
+        independence_of_E(scale=12, factors=[4, 16, 48], edge_block=256)
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -21,8 +21,21 @@ def time_fn(fn, *args, iters=5, warmup=1):
     return float(np.median(times) * 1e6)
 
 
+_RECORDS: list[dict] = []
+
+
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+    _RECORDS.append(dict(name=name, us=round(us, 1), derived=derived))
+
+
+def write_json(path: str):
+    """Dump everything emit()ed so far as a JSON record list (uploaded as a
+    CI artifact so memory/throughput regressions are inspectable per run)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(_RECORDS, f, indent=1)
 
 
 def rss_bytes() -> int:

@@ -6,6 +6,7 @@ from repro.core.api import (
 from repro.core.engine import GraphDEngine, StepStats, SuperstepRecord, superstep_spmd
 from repro.core.algorithms import (
     BFS, SSSP, DegreeSum, DistinctInLabels, HashMin, LabelSpread, PageRank,
+    SecondMinLabel,
 )
 
 __all__ = [
@@ -13,5 +14,5 @@ __all__ = [
     "Combiner", "ShardContext", "VertexProgram",
     "GraphDEngine", "StepStats", "SuperstepRecord", "superstep_spmd",
     "PageRank", "HashMin", "SSSP", "BFS", "DegreeSum", "LabelSpread",
-    "DistinctInLabels",
+    "DistinctInLabels", "SecondMinLabel",
 ]

@@ -140,15 +140,18 @@ class DistinctInLabels(VertexProgram):
 
     Superstep 0: every vertex broadcasts its community label (here: its
     recoded id modulo `n_groups`). Superstep 1: each vertex counts distinct
-    incoming labels via the destination-sorted message runs."""
+    incoming labels via the destination-sorted message runs. With
+    ``rounds > 1`` the distinct count becomes the next round's label and
+    every vertex re-broadcasts — a multi-superstep combiner-less workload
+    (exercises per-superstep OMS spill + gc in the streamed engine)."""
 
-    combiner = None  # forces mode="basic" + apply_list
+    combiner = None  # forces the message-list path (basic / streamed OMS)
     value_dtype = jnp.int32
     msg_dtype = jnp.int32
-    num_supersteps = 1
 
-    def __init__(self, n_groups: int = 16):
+    def __init__(self, n_groups: int = 16, rounds: int = 1):
         self.n_groups = n_groups
+        self.num_supersteps = rounds
 
     def init(self, ctx: ShardContext):
         labels = (ctx.new_ids % self.n_groups).astype(jnp.int32)
@@ -162,7 +165,34 @@ class DistinctInLabels(VertexProgram):
         from repro.core.api import segment_count_distinct
 
         distinct = segment_count_distinct(sorted_dst, sorted_msg, ctx.P)
-        return distinct, jnp.zeros_like(active)
+        new_active = jnp.full_like(active, step + 1 < self.num_supersteps)
+        return distinct, new_active
+
+
+class SecondMinLabel(VertexProgram):
+    """Second-smallest DISTINCT incoming label (SENTINEL when fewer than two
+    arrive). Needs two ordered passes over each vertex's message list, so no
+    single combiner expresses it — a second combiner-less workload for the
+    OMS/IMS message-list path."""
+
+    combiner = None
+    value_dtype = jnp.int32
+    msg_dtype = jnp.int32
+    num_supersteps = 1
+    SENTINEL = 2**31 - 1
+
+    def init(self, ctx: ShardContext):
+        return ctx.new_ids.astype(jnp.int32), jnp.ones((ctx.P,), bool)
+
+    def message(self, value, degree, weight, step):
+        return value
+
+    def apply_list(self, value, degree, sorted_dst, sorted_msg, has_msg,
+                   active, step, ctx):
+        from repro.core.api import segment_second_min
+
+        m2 = segment_second_min(sorted_dst, sorted_msg, ctx.P, self.SENTINEL)
+        return jnp.where(has_msg, m2, self.SENTINEL), jnp.zeros_like(active)
 
 
 class LabelSpread(VertexProgram):

@@ -202,3 +202,26 @@ def segment_sum(sorted_dst, sorted_msg, P: int):
         .at[jnp.where(valid, sorted_dst, P)]
         .add(jnp.where(valid, sorted_msg, 0), mode="drop")
     )
+
+
+def segment_second_min(sorted_dst, sorted_msg, P: int, sentinel):
+    """Per-destination SECOND-smallest distinct payload (``sentinel`` where
+    fewer than two distinct payloads arrived). Needs two ordered passes over
+    the message list, so no single commutative combiner can express it —
+    the other canonical apply_list-only reduction. O(M) vector ops."""
+    import jax.numpy as jnp
+
+    valid = sorted_dst < P
+    big = jnp.asarray(sentinel, sorted_msg.dtype)
+    idx = jnp.where(valid, sorted_dst, P)
+    m1 = (
+        jnp.full((P,), big)
+        .at[idx]
+        .min(jnp.where(valid, sorted_msg, big), mode="drop")
+    )
+    gt = valid & (sorted_msg > m1[jnp.clip(sorted_dst, 0, P - 1)])
+    return (
+        jnp.full((P,), big)
+        .at[jnp.where(gt, sorted_dst, P)]
+        .min(jnp.where(gt, sorted_msg, big), mode="drop")
+    )

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 from dataclasses import dataclass
 
@@ -32,6 +33,8 @@ import numpy as np
 from repro.core.api import ShardContext, VertexProgram
 from repro.graph.partition import PartitionedGraph
 
+_STEP_DIR = re.compile(r"^step-(\d+)$")
+
 
 class Checkpointer:
     """Shard-file checkpoints with an atomic manifest."""
@@ -41,11 +44,21 @@ class Checkpointer:
         self.every = every
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        # a crash between makedirs(tmp) and the atomic rename in save()
+        # leaves a .tmp-step-* behind; sweep them so they can't pile up
+        for name in os.listdir(directory):
+            if name.startswith(".tmp-step-"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # -- write ---------------------------------------------------------------
-    def maybe_save(self, step: int, values, active, meta=None):
+    def maybe_save(self, step: int, values, active, meta=None) -> bool:
+        """Save if ``step`` is on the cadence; True iff a checkpoint landed
+        (the engine GCs message logs only after a durable save)."""
         if self.every and step % self.every == 0:
             self.save(step, values, active, meta=meta)
+            return True
+        return False
 
     def save(self, step: int, values, active, meta=None):
         """``meta`` (JSON-able) is recorded in the manifest; the streamed
@@ -77,10 +90,14 @@ class Checkpointer:
 
     # -- read ----------------------------------------------------------------
     def all_steps(self) -> list[int]:
+        """Published checkpoint steps; non-``step-NNNNNN`` entries (stray
+        files, foreign directories, malformed names) are ignored rather than
+        crashing every reader."""
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step-"):
-                out.append(int(name.split("-")[1]))
+            m = _STEP_DIR.match(name)
+            if m and os.path.isdir(os.path.join(self.dir, name)):
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest(self) -> int | None:
@@ -148,8 +165,246 @@ class MessageLog:
     def gc_before(self, step: int):
         """Paper §3.4: drop OMS logs once a newer checkpoint is durable."""
         for name in sorted(os.listdir(self.dir)):
-            if name.startswith("step-") and int(name.split("-")[1]) < step:
+            m = _STEP_DIR.match(name)
+            if m and int(m.group(1)) < step:
                 shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+
+class RunFileMessageLog(MessageLog):
+    """Message logs backed by the ``streams.msgstore`` run files — the
+    persisted OMSs of the paper, usable by ``mode="streamed"`` because they
+    are written *incrementally* (never materializing an (n, n, P) buffer).
+
+    Two content shapes share one on-disk format (a ``MessageRunStore`` per
+    superstep under ``step-NNNNNN/``):
+
+    * combiner path: one sorted run per (src→dest) group holding the
+      *combined* A_s as sparse ``(dst_pos, msg, cnt)`` triples, appended by
+      :meth:`save_group` as the streamed fold finishes each group;
+    * combiner-less path: the engine's raw OMS spill store for the superstep
+      is simply created under this directory (``open_step``) — the runs the
+      external merge consumes ARE the log, exactly §3.4's "keep OMSs on
+      local disk until a new checkpoint is written".
+
+    The engine calls :meth:`configure` with the program geometry; a log
+    reopened for recovery reads it back from the per-step run indexes.
+    """
+
+    def __init__(self, directory: str):
+        super().__init__(directory)
+        self._n_shards = None
+        self._P = None
+        self._msg_dtype = None
+        self._e0 = 0
+        self._combined = True
+        self._open_stores: dict[int, "object"] = {}
+
+    def configure(self, n_shards: int, P: int, msg_dtype, e0=0,
+                  combined: bool = True):
+        self._n_shards = int(n_shards)
+        self._P = int(P)
+        self._msg_dtype = np.dtype(msg_dtype)
+        self._e0 = e0
+        self._combined = bool(combined)
+
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step-{step:06d}")
+
+    def open_step(self, step: int):
+        """Fresh (truncated) per-step run store for the engine to spill
+        into; re-running a crashed superstep starts its OMS over."""
+        from repro.streams.msgstore import MessageRunStore
+
+        store = MessageRunStore(
+            self.step_dir(step), self._n_shards, self._P, self._msg_dtype,
+            with_counts=self._combined,
+        )
+        self._open_stores[step] = store
+        return store
+
+    def _store_for(self, step: int):
+        from repro.streams.msgstore import MessageRunStore
+
+        store = self._open_stores.get(step)
+        if store is None:
+            store = MessageRunStore.open(self.step_dir(step))
+            self._open_stores[step] = store
+        return store
+
+    # -- writes (combiner path) ----------------------------------------------
+    def save_group(self, step: int, src: int, dest: int, A_s: np.ndarray,
+                   cnt: np.ndarray):
+        """Persist one combined outgoing buffer A_s(src→dest) as a sparse
+        sorted run; positions with no messages are dropped (they are the
+        combiner identity by construction)."""
+        if self._n_shards is None:
+            raise ValueError(
+                "RunFileMessageLog is unconfigured; the engine calls "
+                "configure() from its constructor — do the same before "
+                "logging directly (the combiner identity e0 cannot be "
+                "guessed: densifying with the wrong one corrupts recovery)"
+            )
+        store = self._open_stores.get(step)
+        if store is None:
+            store = self.open_step(step)
+        dp = np.nonzero(np.asarray(cnt) > 0)[0].astype(np.int32)
+        store.append_run(dest, dp, np.asarray(A_s)[dp],
+                         cnt=np.asarray(cnt)[dp].astype(np.int32), tag=src)
+
+    def save(self, step: int, A_s_all, cnt_all):
+        """Compatibility with the in-memory logged driver: fan the dense
+        (n_src, n_dest, P) buffers out into per-group runs."""
+        A = np.asarray(A_s_all)
+        C = np.asarray(cnt_all)
+        for i in range(A.shape[0]):
+            for k in range(A.shape[1]):
+                self.save_group(step, i, k, A[i, k], C[i, k])
+        self.close_step(step)  # publish the index once per superstep
+
+    # -- reads ----------------------------------------------------------------
+    def load_for_dest(self, step: int, dest: int, n_shards: int,
+                      skip_shard: int):
+        """Densify the logged runs back into (A_s, cnt) pairs per surviving
+        source shard (groups the §3.2 skip() test pruned contributed the
+        identity and simply have no run)."""
+        store = self._store_for(step)
+        if not store.with_counts:
+            raise ValueError(
+                "this log holds raw combiner-less OMS runs; dense (A_s, cnt)"
+                " reads only apply to combined logs — recover with "
+                "recover_shard_streamed, which merge-streams the runs"
+            )
+        e0 = self._e0 if self._e0 is not None else 0
+        parts = []
+        for seg in store.runs(dest):
+            if seg.tag == skip_shard:
+                continue
+            dp, msg, cnt = store.read_run(dest, seg)
+            A = np.full((store.P,), e0, dtype=store.msg_dtype)
+            A[dp] = msg
+            c = np.zeros((store.P,), np.int32)
+            c[dp] = cnt
+            parts.append((A, c))
+        return parts
+
+    def close_step(self, step: int):
+        """Publish the step's run index once (save_group defers it — a full
+        JSON rewrite per group would be O(n²) redundant I/O per superstep),
+        release the write handles, and forget the in-memory store — keeping
+        one per superstep would grow host memory by O(|V|) ints per step.
+        Later reads reopen lazily from the saved index."""
+        store = self._open_stores.pop(step, None)
+        if store is not None:
+            store.save_index()
+            store.close()
+
+    def gc_before(self, step: int):
+        for s in list(self._open_stores):
+            if s < step:
+                self._open_stores.pop(s).close()
+        super().gc_before(step)
+
+
+def recover_shard_streamed(
+    pg: PartitionedGraph,
+    program: VertexProgram,
+    failed: int,
+    ckpt: Checkpointer,
+    log: RunFileMessageLog,
+    store,  # streams.EdgeStreamStore
+    target_step: int,
+):
+    """Single-shard fast recovery for ``mode="streamed"`` ([19] / §3.4).
+
+    Only shard ``failed`` recomputes: its vertex rows reload from the latest
+    checkpoint and supersteps replay forward. Incoming messages at step t
+    are the peers' logged OMSs for destination ``failed`` plus the shard's
+    own (failed→failed) contribution, regenerated by streaming that one edge
+    group back off disk — survivors do no work and the edge streams of other
+    groups are never read.
+
+    Handles both program classes: with a combiner the logged runs are
+    densified and combined; without one the peers' raw sorted runs are
+    merge-streamed together with the regenerated own-messages runs through
+    the same destination-aligned apply_list slicing the engine uses.
+    """
+    from repro.core.engine import GraphDEngine
+    from repro.streams.msgstore import MessageRunStore
+
+    eng = GraphDEngine(pg, program, mode="streamed", stream_store=store,
+                       message_log=log)
+    comb = program.combiner
+    v_j, a_j, start = ckpt.restore_shard(failed)
+    n, P = pg.n_shards, pg.P
+    reader = eng._stream_reader
+
+    for t in range(start, target_step):
+        step = jnp.int32(t)
+        prefix = np.concatenate(
+            [[0], np.cumsum(np.asarray(a_j).astype(np.int64))]
+        )
+        own_ids = store.active_blocks(failed, failed, prefix)
+        own_schedule = [(failed, failed, own_ids)] if own_ids.size else []
+        if comb is not None:
+            A_r = comb.identity((P,), program.msg_dtype)
+            cnt = jnp.zeros((P,), jnp.int32)
+            for chunk in reader.stream(own_schedule):
+                A_r, cnt = eng._stream_fold(
+                    A_r, cnt, v_j, pg.degree[failed], a_j,
+                    chunk.sp, chunk.dp, chunk.w, step,
+                )
+                jax.block_until_ready(cnt)
+            for pA, pc in log.load_for_dest(t, failed, n, skip_shard=failed):
+                A_r = comb.combine(A_r, jnp.asarray(pA))
+                cnt = cnt + jnp.asarray(pc)
+            v_j, a_j, _, _, _ = eng._stream_apply(
+                v_j, pg.degree[failed], pg.vmask[failed], pg.old_ids[failed],
+                pg.gids[failed], A_r, cnt, a_j, step, jnp.int32(failed),
+            )
+        else:
+            # rebuild a merge-ready store: peers' logged runs (re-chunked —
+            # chunking a sorted run yields sorted runs) + regenerated own
+            logged = log._store_for(t)
+            tmp = MessageRunStore(
+                os.path.join(eng.msg_spill_dir, f"recover-{t:06d}"), n, P,
+                np.dtype(program.msg_dtype),
+            )
+            try:
+                for seg in logged.runs(failed):
+                    if seg.tag == failed:
+                        continue  # recomputed below, never trusted from disk
+                    # chunked copy (a chunk of a sorted run is a sorted run)
+                    # keeps recovery at the same O(read_chunk) bound as
+                    # normal execution even after compaction made peer runs
+                    # O(messages-per-source) long
+                    for part in logged.iter_run(failed, seg,
+                                                eng.msg_read_chunk):
+                        tmp.append_run(failed, part[0], part[1], tag=seg.tag)
+                    # re-collapse so the final merge holds one cursor per
+                    # source, not one per copied chunk
+                    tmp.compact_tag(failed, seg.tag, eng.msg_merge_fanin,
+                                    eng.msg_read_chunk)
+                for chunk in reader.stream(own_schedule):
+                    msg, dp, valid = eng._stream_msgs(
+                        v_j, pg.degree[failed], a_j,
+                        chunk.sp, chunk.dp, chunk.w, step,
+                    )
+                    msg, dp, valid = map(np.asarray, (msg, dp, valid))
+                    dpv = dp[valid]
+                    if dpv.size:
+                        order = np.argsort(dpv, kind="stable")
+                        tmp.append_run(failed, dpv[order], msg[valid][order],
+                                       tag=failed)
+                tmp.compact_tag(failed, failed, eng.msg_merge_fanin,
+                                eng.msg_read_chunk)
+                # identical merge/apply slicing as normal execution — shared
+                # helper, so recovered results can never drift from a rerun
+                v_j, a_j, _ = eng._apply_list_merged(
+                    tmp, failed, v_j, a_j, step
+                )
+            finally:
+                tmp.delete()
+    return v_j, a_j
 
 
 def recover_shard(

@@ -49,6 +49,7 @@ device mesh (the production path; the dry-run lowers it on 256/512 chips).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -455,6 +456,8 @@ class SuperstepRecord:
     density: float
     mode: str
     seconds: float
+    # step a checkpoint auto-restore resumed from (first record only)
+    restored_from: int | None = None
 
 
 class GraphDEngine:
@@ -479,6 +482,10 @@ class GraphDEngine:
         stream_store=None,  # streams.EdgeStreamStore, required for "streamed"
         stream_chunk_blocks: int = 8,  # blocks staged per chunk
         stream_depth: int = 2,  # prefetch depth (2 = double buffering)
+        msg_slice_cap: int = 4096,  # combiner-less streamed: msgs per apply slice
+        msg_read_chunk: int = 4096,  # msgs staged per merge-cursor refill
+        msg_merge_fanin: int = 16,  # max runs held open by the external merge
+        msg_spill_dir: str | None = None,  # OMS spill dir (default: store/oms)
     ):
         if mode not in self.MODES:
             raise ValueError(f"unknown mode={mode!r}; pick one of {self.MODES}")
@@ -488,7 +495,7 @@ class GraphDEngine:
                 "to disk by drop_edges/partition_graph_streamed); it can only "
                 "run with mode='streamed' and the matching stream_store"
             )
-        if mode in ("recoded", "recoded_compact", "basic_sc", "streamed") and (
+        if mode in ("recoded", "recoded_compact", "basic_sc") and (
             program.combiner is None
         ):
             raise ValueError(f"mode={mode} requires a message combiner (paper §5)")
@@ -514,10 +521,10 @@ class GraphDEngine:
                 raise ValueError(
                     "mode='streamed' is host-driven: backend='jnp', mesh=None"
                 )
-            if message_log is not None:
+            if message_log is not None and not hasattr(message_log, "save_group"):
                 raise ValueError(
-                    "mode='streamed' does not support message_log yet "
-                    "(see ROADMAP: spill messages to the disk tier)"
+                    "mode='streamed' logs messages incrementally to run files;"
+                    " pass a core.checkpoint.RunFileMessageLog"
                 )
             geom = stream_store.geom
             if (geom.n_shards, geom.P, geom.edge_block) != (
@@ -528,6 +535,16 @@ class GraphDEngine:
                     f"store (n={geom.n_shards}, P={geom.P}, B={geom.edge_block})"
                     f" vs pg (n={pg.n_shards}, P={pg.P}, B={pg.edge_block})"
                 )
+        if message_log is not None and hasattr(message_log, "configure"):
+            # run-file logs densify sparse runs back with the combiner
+            # identity; they must learn it (and the geometry) from the
+            # program, whatever the mode
+            message_log.configure(
+                n_shards=pg.n_shards, P=pg.P,
+                msg_dtype=np.dtype(program.msg_dtype),
+                e0=program.combiner.e0 if program.combiner is not None else 0,
+                combined=program.combiner is not None,
+            )
         self.pg = pg
         self.program = program
         self.mode = mode
@@ -546,8 +563,30 @@ class GraphDEngine:
                 stream_store, chunk_blocks=stream_chunk_blocks,
                 depth=stream_depth,
             )
-            self._stream_fold = jax.jit(self._make_stream_fold())
-            self._stream_apply = jax.jit(self._make_stream_apply())
+            if msg_slice_cap < 1 or msg_read_chunk < 1 or msg_merge_fanin < 2:
+                raise ValueError(
+                    "msg_slice_cap and msg_read_chunk must be >= 1 and "
+                    "msg_merge_fanin >= 2"
+                )
+            self.msg_slice_cap = int(msg_slice_cap)
+            # effective slice capacity; bumped (in powers of two) if a vertex
+            # in-degree ever exceeds it — Pregel's compute() needs a vertex's
+            # whole message list in one slice
+            self._msg_slice_cap_eff = int(msg_slice_cap)
+            self.msg_read_chunk = int(msg_read_chunk)
+            self.msg_merge_fanin = int(msg_merge_fanin)
+            self.msg_spill_dir = msg_spill_dir or os.path.join(
+                stream_store.dir, "oms"
+            )
+            if program.combiner is not None:
+                self._stream_fold = jax.jit(self._make_stream_fold())
+                self._stream_apply = jax.jit(self._make_stream_apply())
+            else:
+                self._stream_msgs = jax.jit(self._make_stream_msgs())
+                self._stream_apply_list = jax.jit(
+                    self._make_stream_apply_list()
+                )
+                self._stream_finish = jax.jit(self._make_stream_finish())
             self._step_dense = self._step_sparse = self._step_logged = None
             self._init = jax.jit(self._wrap(
                 lambda pg_: init_spmd(program, pg_, axis=axis), n_in=1,
@@ -736,39 +775,81 @@ class GraphDEngine:
 
         return apply_shard
 
-    def _run_streamed(self, max_supersteps, state, start_step, verbose,
-                      checkpointer, on_step):
-        """Out-of-core superstep loop: edges arrive from disk group-by-group
-        via the prefetching reader; resident per shard = vertex arrays +
-        constant-size buffers. Mirrors ``run``'s contract exactly."""
-        from repro.streams.schedule import plan_stream_schedule
+    def _make_stream_msgs(self):
+        """Jitted raw-message generation for one staged edge chunk (the
+        combiner-less scatter half): returns ``(payload, dst_pos, valid)``
+        for the host to sort by destination and spill into an OMS run."""
+        program = self.program
 
-        program, pg, comb = self.program, self.pg, self.program.combiner
-        store, reader = self.stream_store, self._stream_reader
-        n = pg.n_shards
-        values, active = state if state is not None else self.init()
-        history: list[SuperstepRecord] = []
-        target = min(
-            program.num_supersteps
-            if program.num_supersteps is not None
-            else max_supersteps,
-            max_supersteps,
-        )
-        if checkpointer is not None and checkpointer.latest() is not None:
-            values, active, start_step = checkpointer.restore(
-                expected_meta=store.signature()
+        def gen(values, degree, active, sp, dp, w, step):
+            msg, dp2, aact = _gen_messages(
+                program, values, degree, sp, dp, w, active, step
             )
-        # skip() against the block manifest BEFORE any disk I/O; the plan for
-        # step s is made from step s's frontier, then re-made after apply so
-        # rec.density matches StepStats semantics (frontier of the NEXT step)
-        schedule, _, _ = plan_stream_schedule(store, np.asarray(active))
-        for s in range(start_step, target):
-            t0 = time.perf_counter()
-            A_r = [comb.identity((pg.P,), program.msg_dtype) for _ in range(n)]
-            cnt = [jnp.zeros((pg.P,), jnp.int32) for _ in range(n)]
-            step = jnp.int32(s)
-            # U_c ∥ U_s: the reader thread stages chunk t+1 while fold
-            # digests chunk t
+            return msg, dp2, aact
+
+        return gen
+
+    def _make_stream_apply_list(self):
+        """Jitted apply over ONE destination-aligned slice of the merged
+        message stream. ``cnt`` is the full per-position message count, so
+        ``has_msg`` matches mode="basic" exactly; only the destinations whose
+        runs live in this slice are kept by the caller."""
+        program = self.program
+        pg = self.pg
+
+        def apply_slice(values, degree, vmask, old_ids, gids, sdp, smsg,
+                        cnt, active, step, shard):
+            ctx = ShardContext(
+                shard=shard, n_shards=pg.n_shards, n_vertices=pg.n_vertices,
+                P=pg.P, degree=degree, vmask=vmask, old_ids=old_ids,
+                gids=gids,
+            )
+            has_msg = (cnt > 0) & vmask
+            new_values, new_active = program.apply_list(
+                values, degree, sdp, smsg, has_msg, active, step, ctx
+            )
+            return new_values.astype(program.value_dtype), new_active & vmask
+
+        return apply_slice
+
+    def _make_stream_finish(self):
+        """Jitted per-shard superstep tail for the combiner-less path
+        (active count, message count, aggregator)."""
+        program = self.program
+
+        def fin(values, new_values, new_active, cnt, vmask):
+            has_msg = (cnt > 0) & vmask
+            agg = program.aggregate(values, new_values, has_msg)
+            agg = (
+                jnp.sum(agg.astype(jnp.float32))
+                if agg is not None
+                else jnp.float32(0)
+            )
+            return (
+                jnp.sum(new_active.astype(jnp.int32)),
+                jnp.sum(cnt),
+                agg,
+            )
+
+        return fin
+
+    def _superstep_streamed_comb(self, values, active, s, plan):
+        """One streamed superstep with a combiner: fold staged edge chunks
+        straight into the O(|V|/n) destination accumulators (§5 applied to
+        O(1)-sized staged slices). With a message log, fold per (src,dst)
+        group instead so each combined OMS A_s(i→k) persists to the run
+        files as its group completes (§3.4)."""
+        program, pg, comb = self.program, self.pg, self.program.combiner
+        n = pg.n_shards
+        reader = self._stream_reader
+        log = self.message_log
+        step = jnp.int32(s)
+        A_r = [comb.identity((pg.P,), program.msg_dtype) for _ in range(n)]
+        cnt = [jnp.zeros((pg.P,), jnp.int32) for _ in range(n)]
+        schedule = [entry for per_dest in plan for entry in per_dest]
+        # U_c ∥ U_s: the reader thread stages chunk t+1 while fold digests
+        # chunk t
+        if log is None:
             for chunk in reader.stream(schedule):
                 i, k = chunk.src_shard, chunk.dst_shard
                 A_r[k], cnt[k] = self._stream_fold(
@@ -782,45 +863,258 @@ class GraphDEngine:
                 # pending computation still reads. Disk I/O still overlaps:
                 # the producer thread reads ahead while we wait on compute.
                 jax.block_until_ready(cnt[k])
-            new_v, new_a = [], []
-            n_active = n_msgs = 0
-            agg = 0.0
-            for k in range(n):
-                nv, na, nact, nm, ag = self._stream_apply(
-                    values[k], pg.degree[k], pg.vmask[k], pg.old_ids[k],
-                    pg.gids[k], A_r[k], cnt[k], active[k], step,
-                    jnp.int32(k),
+        else:
+            # create the step's run store up front: even an all-skipped
+            # superstep must publish an (empty) index or recovery of that
+            # step would find no directory at all
+            log.open_step(s)
+            cur = None
+            A_g = cnt_g = None
+
+            def _flush_group():
+                nonlocal cur
+                if cur is None:
+                    return
+                gi, gk = cur
+                A_r[gk] = comb.combine(A_r[gk], A_g)
+                cnt[gk] = cnt[gk] + cnt_g
+                log.save_group(s, gi, gk, np.asarray(A_g), np.asarray(cnt_g))
+                cur = None
+
+            for chunk in reader.stream(schedule):
+                i, k = chunk.src_shard, chunk.dst_shard
+                if cur != (i, k):
+                    _flush_group()
+                    cur = (i, k)
+                    A_g = comb.identity((pg.P,), program.msg_dtype)
+                    cnt_g = jnp.zeros((pg.P,), jnp.int32)
+                A_g, cnt_g = self._stream_fold(
+                    A_g, cnt_g, values[i], pg.degree[i], active[i],
+                    chunk.sp, chunk.dp, chunk.w, step,
                 )
-                new_v.append(nv)
-                new_a.append(na)
+                jax.block_until_ready(cnt_g)  # see buffer-recycle note above
+            _flush_group()
+            log.close_step(s)  # release write handles; runs stay readable
+        new_v, new_a = [], []
+        n_active = n_msgs = 0
+        agg = 0.0
+        for k in range(n):
+            nv, na, nact, nm, ag = self._stream_apply(
+                values[k], pg.degree[k], pg.vmask[k], pg.old_ids[k],
+                pg.gids[k], A_r[k], cnt[k], active[k], step,
+                jnp.int32(k),
+            )
+            new_v.append(nv)
+            new_a.append(na)
+            n_active += int(nact)
+            n_msgs += int(nm)
+            agg += float(ag)
+        st = reader.stats
+        io_note = f"{st.blocks_read}blk/{st.bytes_read >> 10}KiB"
+        return (jnp.stack(new_v), jnp.stack(new_a), n_active, n_msgs, agg,
+                io_note)
+
+    def _apply_list_merged(self, mstore, dest, values_k, active_k, step):
+        """Merge destination ``dest``'s spilled runs and fold destination-
+        aligned apply_list slices into that shard's new (values, active)
+        rows; returns them with the full per-position message count. Shared
+        by the superstep loop and single-shard recovery so the two can never
+        drift in slice semantics."""
+        from repro.streams.reader import prefetch_iter
+
+        program, pg = self.program, self.pg
+        counts = mstore.dest_counts(dest)
+        max_run = int(counts.max()) if counts.size else 0
+        while self._msg_slice_cap_eff < max_run:
+            self._msg_slice_cap_eff *= 2
+        cap = self._msg_slice_cap_eff
+        cnt_k = jnp.asarray(
+            np.minimum(counts, np.iinfo(np.int32).max).astype(np.int32)
+        )
+        shard = jnp.int32(dest)
+        acc_v = acc_a = None
+        # slices are prefetched so merge-read I/O hides behind apply compute
+        for sdp, smsg, covered in prefetch_iter(
+            mstore.merged_slices(dest, cap, self.msg_read_chunk),
+            depth=self._stream_reader.depth,
+        ):
+            nv, na = self._stream_apply_list(
+                values_k, pg.degree[dest], pg.vmask[dest], pg.old_ids[dest],
+                pg.gids[dest], jnp.asarray(sdp), jnp.asarray(smsg),
+                cnt_k, active_k, step, shard,
+            )
+            if acc_v is None:
+                # any one call is already exact for every vertex without
+                # messages; per-slice overwrites fix the covered rest
+                acc_v, acc_a = nv, na
+            else:
+                cov = jnp.asarray(covered)
+                acc_v = jnp.where(cov, nv, acc_v)
+                acc_a = jnp.where(cov, na, acc_a)
+        if acc_v is None:  # no messages at all: one padding-only call
+            acc_v, acc_a = self._stream_apply_list(
+                values_k, pg.degree[dest], pg.vmask[dest], pg.old_ids[dest],
+                pg.gids[dest],
+                jnp.asarray(np.full((cap,), pg.P, np.int32)),
+                jnp.asarray(np.zeros((cap,), np.dtype(program.msg_dtype))),
+                cnt_k, active_k, step, shard,
+            )
+        return acc_v, acc_a, cnt_k
+
+    def _superstep_streamed_nocomb(self, values, active, s, plan):
+        """One combiner-less streamed superstep (§3.3): stream edges in,
+        spill destination-sorted raw-message runs to local disk, external-
+        merge them back, and apply destination-aligned slices — O(|E|)
+        messages flow through, never resident.
+
+        ``plan`` is destination-grouped: destination k's spill, merge, apply
+        and run cleanup all finish before destination k+1's edges are read,
+        so peak spill disk is one destination's traffic, not the superstep's.
+        """
+        from repro.streams.msgstore import MessageRunStore
+
+        program, pg = self.program, self.pg
+        n = pg.n_shards
+        reader = self._stream_reader
+        log = self.message_log
+        step = jnp.int32(s)
+        if log is not None:
+            # the run files persist under the log: the OMSs ARE the log (§3.4)
+            mstore = log.open_step(s)
+        else:
+            mstore = MessageRunStore(
+                os.path.join(self.msg_spill_dir, f"step-{s:06d}"), n, pg.P,
+                np.dtype(program.msg_dtype),
+            )
+        new_v, new_a = [], []
+        n_active = n_msgs = 0
+        agg = 0.0
+        blocks = kib = 0
+        try:
+            for k in range(n):
+                # -- spill: raw messages out, one sorted run per edge chunk
+                cur_src = None
+                for chunk in reader.stream(plan[k]):
+                    i = chunk.src_shard
+                    if cur_src is not None and i != cur_src:
+                        # keep the merge fan-in bounded: collapse the finished
+                        # source's runs down to one (multi-pass §3.3.1)
+                        mstore.compact_tag(k, cur_src, self.msg_merge_fanin,
+                                           self.msg_read_chunk)
+                    cur_src = i
+                    msg, dp, valid = self._stream_msgs(
+                        values[i], pg.degree[i], active[i],
+                        chunk.sp, chunk.dp, chunk.w, step,
+                    )
+                    # np.asarray both blocks on the async result and copies
+                    # out of the reader's recycled staging buffers
+                    msg = np.asarray(msg)
+                    dp = np.asarray(dp)
+                    valid = np.asarray(valid)
+                    dpv = dp[valid]
+                    if dpv.size:
+                        order = np.argsort(dpv, kind="stable")
+                        mstore.append_run(k, dpv[order], msg[valid][order],
+                                          tag=i)
+                if cur_src is not None:
+                    mstore.compact_tag(k, cur_src, self.msg_merge_fanin,
+                                       self.msg_read_chunk)
+                blocks += reader.stats.blocks_read
+                kib += reader.stats.bytes_read >> 10
+
+                # -- merge + apply (shared with recovery)
+                acc_v, acc_a, cnt_k = self._apply_list_merged(
+                    mstore, k, values[k], active[k], step
+                )
+                nact, nm, ag = self._stream_finish(
+                    values[k], acc_v, acc_a, cnt_k, pg.vmask[k]
+                )
+                new_v.append(acc_v)
+                new_a.append(acc_a)
                 n_active += int(nact)
                 n_msgs += int(nm)
                 agg += float(ag)
-            values, active = jnp.stack(new_v), jnp.stack(new_a)
-            schedule, density, max_grp = plan_stream_schedule(
-                store, np.asarray(active)
+                if log is None:
+                    mstore.clear_dest(k)  # applied => this OMS is dead (§3.3)
+        finally:
+            if log is not None:
+                log.close_step(s)  # publish the run index once, drop handles
+            else:
+                mstore.delete()
+        io_note = f"{blocks}blk/{kib}KiB"
+        return (jnp.stack(new_v), jnp.stack(new_a), n_active, n_msgs, agg,
+                io_note)
+
+    def _run_streamed(self, max_supersteps, state, start_step, verbose,
+                      checkpointer, on_step):
+        """Out-of-core superstep loop: edges arrive from disk group-by-group
+        via the prefetching reader; resident per shard = vertex arrays +
+        constant-size buffers. Mirrors ``run``'s contract exactly."""
+        from repro.streams.schedule import plan_stream_schedule
+
+        program, pg, comb = self.program, self.pg, self.program.combiner
+        store = self.stream_store
+        values, active = state if state is not None else self.init()
+        history: list[SuperstepRecord] = []
+        target = min(
+            program.num_supersteps
+            if program.num_supersteps is not None
+            else max_supersteps,
+            max_supersteps,
+        )
+        restored_from = None
+        if (
+            checkpointer is not None
+            and state is None
+            and checkpointer.latest() is not None
+        ):
+            values, active, start_step = checkpointer.restore(
+                expected_meta=store.signature()
+            )
+            restored_from = start_step
+        # skip() against the block manifest BEFORE any disk I/O; the plan for
+        # step s is made from step s's frontier, then re-made after apply so
+        # rec.density matches StepStats semantics (frontier of the NEXT step)
+        plan, _, _ = plan_stream_schedule(
+            store, np.asarray(active), by_dest=True
+        )
+        for s in range(start_step, target):
+            t0 = time.perf_counter()
+            superstep = (
+                self._superstep_streamed_nocomb
+                if comb is None
+                else self._superstep_streamed_comb
+            )
+            values, active, n_active, n_msgs, agg, io_note = superstep(
+                values, active, s, plan
+            )
+            plan, density, max_grp = plan_stream_schedule(
+                store, np.asarray(active), by_dest=True
             )
             dt = time.perf_counter() - t0
             rec = SuperstepRecord(
                 step=s, n_active=n_active, n_msgs=n_msgs, agg=agg,
                 density=density, mode="streamed", seconds=dt,
+                restored_from=restored_from if s == start_step else None,
             )
             history.append(rec)
             if verbose:
-                st = reader.stats
                 print(
                     f"  superstep {s:4d}: active={n_active:>9d} "
                     f"msgs={n_msgs:>10d} agg={agg:.6g} "
-                    f"density={density:.4f} [streamed "
-                    f"{st.blocks_read}blk/{st.bytes_read >> 10}KiB] "
+                    f"density={density:.4f} [streamed {io_note}] "
                     f"{dt*1e3:.1f} ms"
                 )
             if on_step is not None:
                 on_step(rec, (values, active))
             if checkpointer is not None:
-                checkpointer.maybe_save(
+                saved = checkpointer.maybe_save(
                     s + 1, values, active, meta=store.signature()
                 )
+                if saved and self.message_log is not None:
+                    # paper §3.4: OMS logs live until a newer checkpoint is
+                    # durable
+                    self.message_log.gc_before(s + 1)
             if program.num_supersteps is None and n_active == 0:
                 break
         return (values, active), history
@@ -854,8 +1148,17 @@ class GraphDEngine:
         )
         density = 1.0  # step 0: unknown, assume dense
         max_grp = self.pg.n_blocks  # hard per-group bound; start pessimistic
-        if checkpointer is not None and checkpointer.latest() is not None:
+        restored_from = None
+        # auto-restore only when the caller did NOT hand us state: an
+        # explicit (state, start_step) — e.g. after elastic repartitioning —
+        # must win over whatever the checkpoint directory holds
+        if (
+            checkpointer is not None
+            and state is None
+            and checkpointer.latest() is not None
+        ):
             values, active, start_step = checkpointer.restore()
+            restored_from = start_step
         for s in range(start_step, target):
             use_sparse = (
                 self.mode in ("recoded", "basic_sc")
@@ -879,6 +1182,7 @@ class GraphDEngine:
                 step=s, n_active=n_active, n_msgs=int(stats.n_msgs),
                 agg=float(stats.agg), density=density,
                 mode="sparse" if use_sparse else "dense", seconds=dt,
+                restored_from=restored_from if s == start_step else None,
             )
             history.append(rec)
             if verbose:
@@ -890,7 +1194,11 @@ class GraphDEngine:
             if on_step is not None:
                 on_step(rec, (values, active))
             if checkpointer is not None:
-                checkpointer.maybe_save(s + 1, values, active)
+                saved = checkpointer.maybe_save(s + 1, values, active)
+                if saved and self.message_log is not None:
+                    # paper §3.4: OMS logs live until a newer checkpoint is
+                    # durable — GC everything older as soon as one lands
+                    self.message_log.gc_before(s + 1)
             if self.program.num_supersteps is None and n_active == 0:
                 break
         return (values, active), history
@@ -920,11 +1228,28 @@ class GraphDEngine:
         resident = pg.P * (vdt + 1 + 4 + 1 + 8)  # values, active, degree, vmask, old
         buffers = pg.P * (mdt + 4) * 2  # A_s + A_r (+ counts), two in flight (§5)
         if self.mode == "streamed":
-            return dict(
+            out = dict(
                 resident=resident, buffers=buffers,
                 staging=self._stream_reader.staging_bytes(),
                 streamed=self.stream_store.disk_bytes() // pg.n_shards,
             )
+            if self.program.combiner is None:
+                # the disk message tier (§3.3): messages are spilled to OMS
+                # runs and merge-streamed back, so the only message-sized RAM
+                # is (a) merge cursor windows — fan-in bounded by compaction,
+                # (b) one destination-aligned apply slice, (c) the spill-sort
+                # staging for one staged edge chunk. All compiled-in
+                # constants (slice cap auto-bumps only to the max per-vertex
+                # in-degree — Pregel's own compute() lower bound).
+                per_msg = 4 + mdt  # dst_pos + payload
+                fanin = max(self.msg_merge_fanin, pg.n_shards)
+                out["msg_staging"] = (
+                    fanin * self.msg_read_chunk * per_msg
+                    + self._msg_slice_cap_eff * per_msg
+                    + self._stream_reader.chunk_blocks * pg.edge_block
+                    * per_msg
+                )
+            return out
         streamed = pg.n_shards * pg.E_cap * (4 + 4 + 4)  # edge groups in HBM
         return dict(resident=resident, buffers=buffers, staging=0,
                     streamed=streamed)

@@ -1,10 +1,15 @@
-"""Out-of-core edge streaming (paper §3): the on-disk edge-block store and
-the double-buffered prefetching reader behind the engine's ``streamed`` mode.
+"""Out-of-core streaming (paper §3): the on-disk edge-block store, the
+double-buffered prefetching reader behind the engine's ``streamed`` mode, and
+the disk-spilled outgoing-message (OMS) run store with its §3.3.1 external
+merge for combiner-less programs.
 """
 
 from repro.streams.store import EdgeStreamStore, StoreGeometry
-from repro.streams.reader import StagedChunk, StreamReader, StreamStats
+from repro.streams.reader import (
+    StagedChunk, StreamReader, StreamStats, prefetch_iter,
+)
 from repro.streams.schedule import plan_stream_schedule
+from repro.streams.msgstore import MessageRunStore, RunSegment
 
 __all__ = [
     "EdgeStreamStore",
@@ -12,5 +17,8 @@ __all__ = [
     "StagedChunk",
     "StreamReader",
     "StreamStats",
+    "prefetch_iter",
     "plan_stream_schedule",
+    "MessageRunStore",
+    "RunSegment",
 ]

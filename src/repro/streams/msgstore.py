@@ -1,0 +1,419 @@
+"""Disk-spilled outgoing-message streams — the OMS tier of the paper (§3.3).
+
+Combiner-less Pregel programs consume destination-sorted message *lists*
+(``VertexProgram.apply_list``), so the streamed engine cannot scatter-combine
+messages into an O(|V|/n) accumulator as it digests edge chunks. GraphD's
+answer (§3.3.1) is the external merge-sort: every chunk of raw messages is
+sorted by destination and appended to a local-disk run, and the runs are
+k-way merged back into one destination-sorted stream at apply time. Pregelix
+pays an external join/group-by for the same class of programs; here the
+merge is a sequential scan of sorted runs — the access pattern the paper's
+streaming analysis assumes.
+
+``MessageRunStore`` is that tier:
+
+* per destination shard ``k``, two flat binary append-only files
+  (``oms-k.dp.bin`` int32 destination positions, ``oms-k.msg.bin`` payloads;
+  an optional ``oms-k.cnt.bin`` int32 channel carries combined-message
+  counts when the store backs a message log) plus an in-memory run table —
+  each run is a contiguous, destination-sorted segment of those files;
+* ``iter_merged`` — a k-way heap merge over the sorted runs that reads each
+  run through a small fixed-size cursor buffer, so merge-time resident
+  memory is O(fan-in · read_chunk), never O(messages);
+* ``compact_tag`` — the multi-pass bounded-fan-in merge of §3.3.1: when a
+  destination accumulates more runs than the merge may hold open, same-tag
+  runs are merged into longer runs on disk until the fan-in bound holds
+  (tags record the producing source shard, so log-backed stores never lose
+  message attribution — single-shard recovery excludes the failed shard's
+  own runs and regenerates them instead);
+* ``merged_slices`` — fixed-capacity, *destination-aligned* slices of the
+  merged stream, padded with the ``dst = P`` sentinel, ready for
+  ``program.apply_list``. A vertex's whole message run always lands in one
+  slice (the Pregel contract: ``compute()`` sees the full message list of a
+  vertex), so slicing is invisible to any vertex-local program.
+
+A JSON index (run table + geometry) makes a store re-openable after a crash,
+which is what lets ``RunFileMessageLog`` (core/checkpoint.py) use these same
+run files as the persisted OMSs of the paper's fast-recovery protocol.
+"""
+
+from __future__ import annotations
+
+import heapq
+import json
+import os
+import shutil
+from dataclasses import dataclass
+
+import numpy as np
+
+INDEX = "index.json"
+
+
+@dataclass(frozen=True)
+class RunSegment:
+    """One sorted run: a contiguous slice of a destination's OMS files."""
+
+    tag: int  # producing source shard (-1 = untagged)
+    offset: int  # messages before this run in the files
+    length: int  # messages in this run
+
+
+class MessageRunStore:
+    """Append-only per-destination sorted message runs + bounded k-way merge."""
+
+    def __init__(self, directory: str, n_shards: int, P: int, msg_dtype,
+                 with_counts: bool = False, create: bool = True):
+        self.dir = directory
+        self.n_shards = n_shards
+        self.P = P
+        self.msg_dtype = np.dtype(msg_dtype)
+        self.with_counts = with_counts
+        self._runs: list[list[RunSegment]] = [[] for _ in range(n_shards)]
+        self._sizes = [0] * n_shards  # messages written per destination
+        # per-(dest, position) message counts: O(|V|) host ints, the slice
+        # planner's only state (NOT O(messages))
+        self._counts = np.zeros((n_shards, P), np.int64)
+        self._wfh: dict[tuple[int, str], object] = {}
+        # destinations whose _counts row must be rebuilt from the live runs
+        # before use (set by open(); rebuilding eagerly would scan every
+        # destination when a reader typically wants just one)
+        self._stale_counts: set[int] = set()
+        if create:
+            os.makedirs(directory, exist_ok=True)
+            # a re-created store restarts its step from scratch: truncate the
+            # data files AND drop any index a crashed earlier attempt
+            # published, or a later open() would map past the truncated files
+            try:
+                os.remove(os.path.join(directory, INDEX))
+            except OSError:
+                pass
+            for k in range(n_shards):
+                for ch in self._channels():
+                    open(self._path(k, ch), "wb").close()
+
+    def _channels(self) -> tuple[str, ...]:
+        return ("dp", "msg", "cnt") if self.with_counts else ("dp", "msg")
+
+    def _dtype(self, ch: str):
+        return self.msg_dtype if ch == "msg" else np.dtype(np.int32)
+
+    def _path(self, dest: int, ch: str) -> str:
+        return os.path.join(self.dir, f"oms-{dest:03d}.{ch}.bin")
+
+    # -- writes ---------------------------------------------------------------
+    def _handle(self, dest: int, ch: str):
+        fh = self._wfh.get((dest, ch))
+        if fh is None:
+            fh = open(self._path(dest, ch), "ab")
+            self._wfh[(dest, ch)] = fh
+        return fh
+
+    def append_run(self, dest: int, dp: np.ndarray, msg: np.ndarray,
+                   cnt: np.ndarray | None = None, tag: int = -1) -> RunSegment:
+        """Append one destination-sorted run for shard ``dest``.
+
+        ``dp`` must be ascending (the chunk was sorted by destination before
+        spilling); ``cnt`` is required iff the store carries a count channel.
+        """
+        if dp.size and np.any(np.diff(dp) < 0):
+            raise ValueError("append_run requires destination-sorted input")
+        if self.with_counts and cnt is None:
+            raise ValueError("this store carries a count channel; pass cnt=")
+        seg = RunSegment(tag=tag, offset=self._sizes[dest], length=int(dp.size))
+        self._handle(dest, "dp").write(
+            np.ascontiguousarray(dp, np.int32).tobytes())
+        self._handle(dest, "msg").write(
+            np.ascontiguousarray(msg, self.msg_dtype).tobytes())
+        if self.with_counts:
+            self._handle(dest, "cnt").write(
+                np.ascontiguousarray(cnt, np.int32).tobytes())
+        for ch in self._channels():
+            self._wfh[(dest, ch)].flush()
+        self._sizes[dest] += seg.length
+        if dp.size:
+            self._ensure_counts(dest)
+            np.add.at(
+                self._counts[dest], dp,
+                cnt.astype(np.int64) if cnt is not None else 1,
+            )
+        self._runs[dest].append(seg)
+        return seg
+
+    # -- run access -----------------------------------------------------------
+    def runs(self, dest: int) -> list[RunSegment]:
+        return list(self._runs[dest])
+
+    def n_messages(self, dest: int) -> int:
+        return int(self.dest_counts(dest).sum())
+
+    def _ensure_counts(self, dest: int) -> None:
+        if dest in self._stale_counts:
+            self._stale_counts.discard(dest)
+            for seg in self._runs[dest]:
+                for part in self.iter_run(dest, seg, read_chunk=1 << 20):
+                    weights = part[2] if self.with_counts else None
+                    self._counts[dest] += np.bincount(
+                        part[0], weights=weights, minlength=self.P
+                    ).astype(np.int64)
+
+    def dest_counts(self, dest: int) -> np.ndarray:
+        """(P,) messages per destination position (max = the in-degree bound
+        a single apply_list slice must hold — Pregel's per-vertex list)."""
+        self._ensure_counts(dest)
+        return self._counts[dest]
+
+    def _read_mm(self, dest: int):
+        """Fresh read memmaps over the currently-written extent (writers only
+        ever append, so an open memmap never sees moving data)."""
+        for (d, ch), fh in self._wfh.items():
+            if d == dest:
+                fh.flush()
+        size = self._sizes[dest]
+        if size == 0:
+            return {ch: np.empty((0,), self._dtype(ch))
+                    for ch in self._channels()}
+        return {
+            ch: np.memmap(self._path(dest, ch), dtype=self._dtype(ch),
+                          mode="r", shape=(size,))
+            for ch in self._channels()
+        }
+
+    def read_run(self, dest: int, seg: RunSegment):
+        """Materialize one run (tests / log densification — small runs)."""
+        mm = self._read_mm(dest)
+        sl = slice(seg.offset, seg.offset + seg.length)
+        out = tuple(np.array(mm[ch][sl]) for ch in self._channels())
+        return out
+
+    def iter_run(self, dest: int, seg: RunSegment, read_chunk: int = 4096):
+        """Stream one run in bounded chunks (per-channel tuples) — for
+        copying arbitrarily long runs without materializing them."""
+        mm = self._read_mm(dest)
+        end = seg.offset + seg.length
+        for off in range(seg.offset, end, max(1, read_chunk)):
+            hi = min(off + max(1, read_chunk), end)
+            yield tuple(np.array(mm[ch][off:hi]) for ch in self._channels())
+
+    # -- the external merge (§3.3.1) -----------------------------------------
+    def iter_merged(self, dest: int, read_chunk: int = 4096,
+                    segments: list[RunSegment] | None = None):
+        """K-way heap merge of the sorted runs of ``dest``; yields ascending
+        per-channel numpy chunk tuples (``(dp, msg)``, plus ``cnt`` when the
+        store carries it). Resident memory is O(runs · read_chunk): each run
+        is read through a fixed-size cursor buffer, never whole."""
+        segs = self._runs[dest] if segments is None else segments
+        segs = [s for s in segs if s.length]
+        if not segs:
+            return
+        mm = self._read_mm(dest)
+        channels = self._channels()
+        cursors = [_Cursor(mm, s, read_chunk, channels) for s in segs]
+        heap = [(c.head, j) for j, c in enumerate(cursors)]
+        heapq.heapify(heap)
+        while heap:
+            _, j = heapq.heappop(heap)
+            cur = cursors[j]
+            bound = heap[0][0] if heap else None
+            yield cur.take_until(bound)
+            if not cur.exhausted:
+                heapq.heappush(heap, (cur.head, j))
+
+    def compact_tag(self, dest: int, tag: int, fanin: int = 16,
+                    read_chunk: int = 4096) -> None:
+        """Multi-pass merge of all runs with this ``tag`` down to ONE run,
+        never holding more than ``fanin`` cursors open (§3.3.1's bounded
+        external merge-sort). All channels are rewritten together. Merged
+        output is appended to the same files; superseded segments become
+        dead file regions (reclaimed when the per-step store is deleted)."""
+        channels = self._channels()
+        while True:
+            mine = [s for s in self._runs[dest] if s.tag == tag]
+            if len(mine) <= 1:
+                return
+            batch = mine[:max(2, fanin)]
+            offset = self._sizes[dest]
+            length = 0
+            for part in self.iter_merged(dest, read_chunk, segments=batch):
+                for ch, arr in zip(channels, part):
+                    self._handle(dest, ch).write(
+                        np.ascontiguousarray(arr, self._dtype(ch)).tobytes())
+                length += int(part[0].size)
+            for ch in channels:
+                if (dest, ch) in self._wfh:
+                    self._wfh[(dest, ch)].flush()
+            self._sizes[dest] += length
+            merged = RunSegment(tag=tag, offset=offset, length=length)
+            keep = [s for s in self._runs[dest] if s not in batch]
+            self._runs[dest] = keep + [merged]
+
+    def merged_slices(self, dest: int, capacity: int, read_chunk: int = 4096):
+        """Destination-aligned fixed-shape slices of the merged stream.
+
+        Yields ``(sdp, smsg, covered)``: ``sdp``/``smsg`` are (capacity,)
+        padded with the ``dst = P`` sentinel (payload 0), exactly the sorted
+        IMS layout ``apply_list`` consumes in mode="basic"; ``covered`` is the
+        (P,) bool mask of destinations whose ENTIRE message run is in this
+        slice. Whole runs never straddle slices, so any vertex-local
+        ``apply_list`` sees the same per-vertex list as the in-memory path.
+        Buffers are freshly allocated per slice (safe to alias into jax).
+        """
+        counts = self.dest_counts(dest)
+        max_run = int(counts.max()) if counts.size else 0
+        if max_run > capacity:
+            raise ValueError(
+                f"slice capacity {capacity} < max per-vertex message run "
+                f"{max_run}; raise msg_slice_cap (Pregel's compute() needs a "
+                "vertex's whole message list resident)"
+            )
+        # plan cut points: greedily pack whole destination runs, ascending
+        positions = np.nonzero(counts > 0)[0]
+        plans: list[tuple[int, int, int]] = []  # (first_pos, last_pos, n_msgs)
+        lo = 0
+        acc = 0
+        for idx, p in enumerate(positions):
+            c = int(counts[p])
+            if acc and acc + c > capacity:
+                plans.append((int(positions[lo]), int(positions[idx - 1]), acc))
+                lo, acc = idx, 0
+            acc += c
+        if acc:
+            plans.append((int(positions[lo]), int(positions[-1]), acc))
+
+        chunks = self.iter_merged(dest, read_chunk)
+        carry_dp = np.empty((0,), np.int32)
+        carry_msg = np.empty((0,), self.msg_dtype)
+        for first, last, n_msgs in plans:
+            sdp = np.full((capacity,), self.P, np.int32)
+            smsg = np.zeros((capacity,), self.msg_dtype)
+            filled = 0
+            while filled < n_msgs:
+                if carry_dp.size == 0:
+                    carry_dp, carry_msg = next(chunks)[:2]
+                take = min(n_msgs - filled, carry_dp.size)
+                sdp[filled:filled + take] = carry_dp[:take]
+                smsg[filled:filled + take] = carry_msg[:take]
+                carry_dp, carry_msg = carry_dp[take:], carry_msg[take:]
+                filled += take
+            covered = np.zeros((self.P,), bool)
+            covered[first:last + 1] = counts[first:last + 1] > 0
+            yield sdp, smsg, covered
+
+    # -- persistence (the log-backed use) ------------------------------------
+    def save_index(self) -> None:
+        index = dict(
+            n_shards=self.n_shards, P=self.P,
+            msg_dtype=self.msg_dtype.name, with_counts=self.with_counts,
+            sizes=self._sizes,
+            runs=[[s.__dict__ for s in runs] for runs in self._runs],
+        )
+        tmp = os.path.join(self.dir, f".{INDEX}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(index, f)
+        os.replace(tmp, os.path.join(self.dir, INDEX))
+
+    @classmethod
+    def open(cls, directory: str) -> "MessageRunStore":
+        with open(os.path.join(directory, INDEX)) as f:
+            m = json.load(f)
+        store = cls(directory, m["n_shards"], m["P"],
+                    np.dtype(m["msg_dtype"]), with_counts=m["with_counts"],
+                    create=False)
+        store._sizes = list(m["sizes"])
+        store._runs = [
+            [RunSegment(**s) for s in runs] for runs in m["runs"]
+        ]
+        # counts rebuild lazily, per destination, on first use (one chunked
+        # scan of that destination's LIVE runs — compaction leaves dead file
+        # regions that must not be counted): recovery reads one destination
+        # per replayed step, so eagerly scanning all of them would multiply
+        # recovery I/O by n for nothing
+        store._stale_counts = {
+            k for k in range(store.n_shards) if store._runs[k]
+        }
+        return store
+
+    # -- accounting / lifecycle ----------------------------------------------
+    def disk_bytes(self) -> int:
+        total = 0
+        for k in range(self.n_shards):
+            for ch in self._channels():
+                try:
+                    total += os.path.getsize(self._path(k, ch))
+                except OSError:
+                    pass
+        return total
+
+    def clear_dest(self, dest: int) -> None:
+        """Drop one destination's runs (its messages were applied; §3.3:
+        an OMS is deleted once consumed — unless a log retains it)."""
+        for ch in self._channels():
+            fh = self._wfh.pop((dest, ch), None)
+            if fh is not None:
+                fh.close()
+            try:
+                os.remove(self._path(dest, ch))
+            except OSError:
+                pass
+        self._runs[dest] = []
+        self._sizes[dest] = 0
+        self._counts[dest] = 0
+        self._stale_counts.discard(dest)
+
+    def close(self) -> None:
+        for fh in self._wfh.values():
+            fh.close()
+        self._wfh = {}
+
+    def delete(self) -> None:
+        self.close()
+        shutil.rmtree(self.dir, ignore_errors=True)
+
+
+class _Cursor:
+    """Fixed-size read window over one sorted run (the merge's only per-run
+    resident state). Tracks every store channel so compaction can rewrite
+    payload AND count data together."""
+
+    def __init__(self, mm: dict, seg: RunSegment, read_chunk: int,
+                 channels: tuple[str, ...]):
+        self._mm = mm
+        self._channels = channels
+        self._pos = seg.offset
+        self._end = seg.offset + seg.length
+        self._chunk = max(1, read_chunk)
+        self._bufs: tuple[np.ndarray, ...] = ()
+        self._bpos = 0
+        self._fill()
+
+    def _fill(self) -> None:
+        n = min(self._chunk, self._end - self._pos)
+        self._bufs = tuple(
+            np.array(self._mm[ch][self._pos:self._pos + n])
+            for ch in self._channels
+        )
+        self._pos += n
+        self._bpos = 0
+
+    @property
+    def head(self) -> int:
+        return int(self._bufs[0][self._bpos])
+
+    @property
+    def exhausted(self) -> bool:
+        return self._bpos >= self._bufs[0].size and self._pos >= self._end
+
+    def take_until(self, bound: int | None):
+        """Return buffered elements with dp <= bound (>= 1 element; the heap
+        guarantees head <= bound), refilling the window afterwards if empty."""
+        dp = self._bufs[0]
+        if bound is None:
+            hi = dp.size
+        else:
+            hi = int(np.searchsorted(dp[self._bpos:], bound,
+                                     side="right")) + self._bpos
+        out = tuple(buf[self._bpos:hi] for buf in self._bufs)
+        self._bpos = hi
+        if self._bpos >= dp.size and self._pos < self._end:
+            self._fill()
+        return out

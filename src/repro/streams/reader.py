@@ -59,6 +59,58 @@ class StreamStats:
 _DONE = object()
 
 
+def prefetch_iter(iterable, depth: int = 2):
+    """Run ``iterable`` in a background thread, ``depth`` items ahead — the
+    same bounded-queue producer/consumer machinery :class:`StreamReader` uses
+    for edge chunks, reusable for any staged stream (the msgstore external
+    merge prefetches its destination-sorted apply slices through this, so
+    merge-read I/O hides behind the apply compute exactly like edge reads
+    hide behind the fold). Items must own their memory (no recycled buffers:
+    the producer is ``depth`` items ahead of the consumer)."""
+    if depth < 1:
+        raise ValueError("depth must be >= 1")
+    full: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def _put(item) -> bool:
+        while not stop.is_set():
+            try:
+                full.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                pass
+        return False
+
+    def _produce():
+        try:
+            for item in iterable:
+                if not _put(item):
+                    return
+            _put(_DONE)
+        except BaseException as e:  # surface producer errors to the consumer
+            _put(e)
+
+    worker = threading.Thread(target=_produce, name="stream-prefetch",
+                              daemon=True)
+    worker.start()
+    try:
+        while True:
+            item = full.get()
+            if item is _DONE:
+                break
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+        while True:  # unblock a producer waiting on a full queue, then drain
+            try:
+                full.get_nowait()
+            except queue.Empty:
+                break
+        worker.join(timeout=5.0)
+
+
 class StreamReader:
     """Background-thread prefetcher over an :class:`EdgeStreamStore`."""
 

@@ -7,7 +7,8 @@ import numpy as np
 from repro.streams.store import EdgeStreamStore
 
 
-def plan_stream_schedule(store: EdgeStreamStore, active: np.ndarray):
+def plan_stream_schedule(store: EdgeStreamStore, active: np.ndarray, *,
+                         by_dest: bool = False):
     """skip()-filtered sequential read plan for one streamed superstep.
 
     ``active`` is the (n, P) host active bitmap. Returns
@@ -22,6 +23,14 @@ def plan_stream_schedule(store: EdgeStreamStore, active: np.ndarray):
       dispatch signal the in-memory engine derives from ``StepStats``);
     * ``max_grp`` — max active blocks in any group (Table-style accounting).
 
+    With ``by_dest=True`` the first element is instead a length-n list whose
+    entry k is dest shard k's slice of the same destination-major schedule
+    (possibly empty). The combiner-less streamed path consumes this shape:
+    it finishes one destination's message spill, merge-applies it, and frees
+    its runs before the next destination's edges are even read — peak
+    message-spill disk is the largest single destination, not the whole
+    superstep's traffic.
+
     Blocks failing the §3.2 skip() test never appear in the schedule, so the
     reader never touches them on disk.
     """
@@ -30,15 +39,17 @@ def plan_stream_schedule(store: EdgeStreamStore, active: np.ndarray):
         np.concatenate([[0], np.cumsum(active[i].astype(np.int64))])
         for i in range(n)
     ]
-    schedule = []
+    grouped: list[list] = [[] for _ in range(n)]
     total_active = 0
     max_grp = 0
     for k in range(n):
         for i in range(n):
             ids = store.active_blocks(i, k, prefixes[i])
             if ids.size:
-                schedule.append((i, k, ids))
+                grouped[k].append((i, k, ids))
                 total_active += int(ids.size)
                 max_grp = max(max_grp, int(ids.size))
     density = total_active / max(store.nonempty_blocks(), 1)
-    return schedule, density, max_grp
+    if by_dest:
+        return grouped, density, max_grp
+    return [entry for per_dest in grouped for entry in per_dest], density, max_grp

@@ -56,6 +56,57 @@ class TestCheckpoint:
         for name in os.listdir(str(tmp_path / "ckpt")):
             assert not name.startswith(".tmp")
 
+    def test_stale_tmp_dirs_swept_on_init(self, tmp_path):
+        """A crash between makedirs(tmp) and the atomic rename used to leak
+        .tmp-step-* directories forever; __init__ sweeps them."""
+        d = str(tmp_path / "ckpt")
+        os.makedirs(os.path.join(d, ".tmp-step-000004"))
+        with open(os.path.join(d, ".tmp-step-000004", "shard-0.npz"), "wb"):
+            pass
+        ck = Checkpointer(d, every=1)
+        assert not any(
+            name.startswith(".tmp") for name in os.listdir(d)
+        )
+        assert ck.all_steps() == []
+
+    def test_all_steps_ignores_malformed_entries(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        ck = Checkpointer(d, every=1)
+        os.makedirs(os.path.join(d, "step-000002"))
+        os.makedirs(os.path.join(d, "step-garbage"))  # used to raise
+        with open(os.path.join(d, "step-000009"), "w"):
+            pass  # a FILE named like a step is not a checkpoint
+        with open(os.path.join(d, "notes.txt"), "w"):
+            pass
+        assert ck.all_steps() == [2]
+        assert ck.latest() == 2
+
+    def test_explicit_state_wins_over_checkpoint(self, job, tmp_path):
+        """run(state=..., start_step=...) must NOT be silently discarded
+        when the checkpoint directory already has a newer snapshot."""
+        _, pg, _ = job
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=2)
+        eng = GraphDEngine(pg, PageRank(supersteps=6))
+        eng.run(checkpointer=ck)  # leaves a step-6 checkpoint behind
+        assert ck.latest() == 6
+        v0, a0 = eng.init()
+        (_, _), hist = eng.run(state=(v0, a0), start_step=0,
+                               checkpointer=ck)
+        assert hist[0].step == 0  # not fast-forwarded to 6
+        assert hist[0].restored_from is None
+
+    def test_auto_restore_records_step(self, job, tmp_path):
+        _, pg, _ = job
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=2)
+        eng = GraphDEngine(pg, PageRank(supersteps=6))
+        eng.run(max_supersteps=4, checkpointer=ck)
+        (_, _), hist = GraphDEngine(pg, PageRank(supersteps=6)).run(
+            checkpointer=ck
+        )
+        assert hist[0].step == 4
+        assert hist[0].restored_from == 4
+        assert all(r.restored_from is None for r in hist[1:])
+
 
 class TestFastRecovery:
     """[19]: only the failed shard recomputes, replaying logged messages."""
@@ -99,6 +150,27 @@ class TestFastRecovery:
         ml.gc_before(2)
         remaining = sorted(os.listdir(str(tmp_path / "logs")))
         assert remaining == ["step-000002", "step-000003"]
+
+    def test_engine_gcs_logs_after_checkpoint(self, job, tmp_path):
+        """Regression: gc_before was never invoked — OMS logs grew without
+        bound. The driver must GC right after each durable checkpoint
+        (paper §3.4: keep OMSs until a new checkpoint is written)."""
+        _, pg, _ = job
+        ck = Checkpointer(str(tmp_path / "ckpt"), every=3)
+        ml = MessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, PageRank(supersteps=8), message_log=ml)
+        eng.run(checkpointer=ck)
+        # checkpoints landed at steps 3 and 6 => logs 0..5 are gone, and
+        # recovery from the latest checkpoint still has every log it needs
+        assert sorted(os.listdir(str(tmp_path / "logs"))) == [
+            "step-000006", "step-000007",
+        ]
+        vj, _ = recover_shard(pg, PageRank(supersteps=8), failed=1, ckpt=ck,
+                              log=ml, target_step=8)
+        (v_ref, _), _ = GraphDEngine(pg, PageRank(supersteps=8)).run()
+        assert np.abs(
+            np.asarray(vj) - np.asarray(v_ref)[1]
+        ).max() < 1e-6
 
 
 class TestElastic:

@@ -1,0 +1,452 @@
+"""The disk message tier (tentpole): OMS run store + §3.3.1 external merge,
+combiner-less streamed execution bit-matching mode="basic", the run-file
+message log, and single-shard recovery for streamed jobs."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DistinctInLabels, GraphDEngine, PageRank, SecondMinLabel,
+)
+from repro.core.checkpoint import (
+    Checkpointer, RunFileMessageLog, recover_shard_streamed,
+)
+from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
+from repro.streams import MessageRunStore
+
+
+@pytest.fixture
+def spilled(tmp_path):
+    g = rmat_graph(scale=7, edge_factor=6, seed=9)
+    pg_full, rmap = partition_graph(g, n_shards=4, edge_block=32)
+    pg, _, store = partition_graph_streamed(
+        g, 4, str(tmp_path / "spill"), edge_block=32, recode=rmap
+    )
+    return g, pg_full, pg, rmap, store
+
+
+def _random_runs(rng, n_runs, P, max_len):
+    runs = []
+    for _ in range(n_runs):
+        m = int(rng.integers(1, max_len))
+        dp = np.sort(rng.integers(0, P, size=m)).astype(np.int32)
+        msg = rng.integers(0, 1000, size=m).astype(np.int32)
+        runs.append((dp, msg))
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# the run store: sorted-run append, k-way merge, compaction, persistence
+# ---------------------------------------------------------------------------
+
+class TestMessageRunStore:
+    P = 97
+
+    def _store(self, tmp_path, **kw):
+        return MessageRunStore(str(tmp_path / "oms"), 2, self.P, np.int32,
+                               **kw)
+
+    def test_merge_matches_global_sort(self, tmp_path):
+        """Runs much longer than the cursor window: the k-way merge must
+        equal one global sort of all spilled messages."""
+        rng = np.random.default_rng(0)
+        store = self._store(tmp_path)
+        runs = _random_runs(rng, n_runs=7, P=self.P, max_len=300)
+        for dp, msg in runs:
+            store.append_run(0, dp, msg, tag=0)
+        got_dp, got_msg = [], []
+        for dp, msg in store.iter_merged(0, read_chunk=16):
+            got_dp.append(dp)
+            got_msg.append(msg)
+        got_dp = np.concatenate(got_dp)
+        got_msg = np.concatenate(got_msg)
+        all_dp = np.concatenate([r[0] for r in runs])
+        all_msg = np.concatenate([r[1] for r in runs])
+        assert (np.diff(got_dp) >= 0).all()
+        # same multiset of (dst, payload) pairs as a global sort
+        want = np.lexsort((all_msg, all_dp))
+        got = np.lexsort((got_msg, got_dp))
+        assert np.array_equal(got_dp[got], all_dp[want])
+        assert np.array_equal(got_msg[got], all_msg[want])
+
+    def test_rejects_unsorted_run(self, tmp_path):
+        store = self._store(tmp_path)
+        with pytest.raises(ValueError, match="sorted"):
+            store.append_run(0, np.array([3, 1], np.int32),
+                            np.array([0, 0], np.int32))
+
+    def test_merged_slices_destination_aligned(self, tmp_path):
+        rng = np.random.default_rng(1)
+        store = self._store(tmp_path)
+        for dp, msg in _random_runs(rng, n_runs=5, P=self.P, max_len=120):
+            store.append_run(0, dp, msg)
+        counts = store.dest_counts(0).copy()
+        cap = max(32, int(counts.max()))
+        seen = np.zeros(self.P, np.int64)
+        covered_union = np.zeros(self.P, bool)
+        for sdp, smsg, covered in store.merged_slices(0, cap, read_chunk=16):
+            assert sdp.shape == (cap,) and smsg.shape == (cap,)
+            real = sdp < self.P
+            # padding carries the P sentinel
+            assert (sdp[~real] == self.P).all()
+            # every covered destination's run is ENTIRELY in this slice
+            in_slice = np.bincount(sdp[real], minlength=self.P)
+            assert np.array_equal(in_slice[covered], counts[covered])
+            assert not covered_union[covered].any()  # disjoint coverage
+            covered_union |= covered
+            seen += in_slice
+        assert np.array_equal(seen, counts)
+        assert np.array_equal(covered_union, counts > 0)
+
+    def test_slice_capacity_guard(self, tmp_path):
+        store = self._store(tmp_path)
+        dp = np.zeros(40, np.int32)  # one destination, 40 messages
+        store.append_run(0, dp, np.arange(40, dtype=np.int32))
+        with pytest.raises(ValueError, match="capacity"):
+            list(store.merged_slices(0, 16))
+
+    def test_compact_tag_bounds_fanin(self, tmp_path):
+        """Many same-tag runs collapse to ONE (multi-pass, fan-in 2), and the
+        merged stream is unchanged."""
+        rng = np.random.default_rng(2)
+        store = self._store(tmp_path)
+        runs = _random_runs(rng, n_runs=9, P=self.P, max_len=50)
+        for dp, msg in runs:
+            store.append_run(0, dp, msg, tag=3)
+        before = [np.concatenate(x) for x in zip(
+            *store.iter_merged(0, read_chunk=8))]
+        store.compact_tag(0, 3, fanin=2, read_chunk=8)
+        assert len(store.runs(0)) == 1
+        after = [np.concatenate(x) for x in zip(
+            *store.iter_merged(0, read_chunk=8))]
+        assert np.array_equal(before[0], after[0])
+        order_b = np.lexsort((before[1], before[0]))
+        order_a = np.lexsort((after[1], after[0]))
+        assert np.array_equal(before[1][order_b], after[1][order_a])
+
+    def test_index_roundtrip_and_counts_rebuild(self, tmp_path):
+        rng = np.random.default_rng(3)
+        store = self._store(tmp_path)
+        for j, (dp, msg) in enumerate(
+                _random_runs(rng, n_runs=4, P=self.P, max_len=60)):
+            store.append_run(j % 2, dp, msg, tag=j)
+        store.save_index()
+        store.close()
+        re = MessageRunStore.open(store.dir)
+        for k in range(2):
+            assert re.runs(k) == store.runs(k)
+            assert np.array_equal(re.dest_counts(k), store.dest_counts(k))
+
+    def test_counts_rebuild_ignores_dead_regions(self, tmp_path):
+        """Regression: compaction leaves superseded segments in the files;
+        a reopened store must rebuild counts from the LIVE runs only (or the
+        merge planner would expect phantom messages and die mid-stream)."""
+        rng = np.random.default_rng(4)
+        store = self._store(tmp_path)
+        for dp, msg in _random_runs(rng, n_runs=5, P=self.P, max_len=40):
+            store.append_run(0, dp, msg, tag=1)
+        store.compact_tag(0, 1, fanin=2, read_chunk=8)
+        want = store.dest_counts(0).copy()
+        store.save_index()
+        store.close()
+        re = MessageRunStore.open(store.dir)
+        assert np.array_equal(re.dest_counts(0), want)
+        merged = np.concatenate(
+            [dp for dp, _ in re.iter_merged(0, read_chunk=8)]
+        )
+        assert merged.size == want.sum()  # merge plan == live messages
+
+    def test_counts_rebuild_uses_cnt_channel(self, tmp_path):
+        store = self._store(tmp_path, with_counts=True)
+        dp = np.array([2, 5], np.int32)
+        store.append_run(0, dp, np.array([7, 9], np.int32),
+                         cnt=np.array([3, 4], np.int32), tag=0)
+        store.save_index()
+        store.close()
+        re = MessageRunStore.open(store.dir)
+        assert re.dest_counts(0)[2] == 3 and re.dest_counts(0)[5] == 4
+
+    def test_compact_preserves_cnt_channel(self, tmp_path):
+        """Regression: compaction must rewrite ALL channels — dropping cnt
+        left _sizes pointing past the cnt file's extent (memmap error)."""
+        store = self._store(tmp_path, with_counts=True)
+        for j in range(3):
+            dp = np.array([j, j + 10], np.int32)
+            store.append_run(0, dp, dp * 2,
+                             cnt=np.array([j + 1, j + 2], np.int32), tag=4)
+        store.compact_tag(0, 4, fanin=2, read_chunk=2)
+        assert len(store.runs(0)) == 1
+        dp, msg, cnt = store.read_run(0, store.runs(0)[0])
+        assert (np.diff(dp) >= 0).all() and dp.size == 6
+        # (dp, msg, cnt) triples survive compaction intact
+        triples = sorted(zip(dp.tolist(), msg.tolist(), cnt.tolist()))
+        want = sorted(
+            (j + 10 * b, (j + 10 * b) * 2, j + 1 + b)
+            for j in range(3) for b in (0, 1)
+        )
+        assert triples == want
+
+    def test_rejects_degenerate_slice_cap(self, tmp_path, spilled):
+        _, _, pg, _, store = spilled
+        with pytest.raises(ValueError, match="msg_slice_cap"):
+            GraphDEngine(pg, DistinctInLabels(), mode="streamed",
+                         stream_store=store, msg_slice_cap=0)
+
+    def test_clear_dest_frees_disk(self, tmp_path):
+        store = self._store(tmp_path)
+        dp = np.arange(10, dtype=np.int32)
+        store.append_run(0, dp, dp)
+        assert store.disk_bytes() > 0
+        store.clear_dest(0)
+        assert store.disk_bytes() == 0
+        assert store.n_messages(0) == 0 and store.runs(0) == []
+
+
+# ---------------------------------------------------------------------------
+# combiner-less streamed execution: bit-match mode="basic" (§3.3 OMS claim)
+# ---------------------------------------------------------------------------
+
+class TestStreamedNoCombiner:
+    def _pair(self, spilled, prog_factory, **eng_kw):
+        _, pg_full, pg, _, store = spilled
+        eb = GraphDEngine(pg_full, prog_factory(), mode="basic")
+        (vb, _), hb = eb.run()
+        es = GraphDEngine(pg, prog_factory(), mode="streamed",
+                          stream_store=store, stream_chunk_blocks=2,
+                          **eng_kw)
+        (vs, _), hs = es.run()
+        return eb.gather_values(vb), es.gather_values(vs), hb, hs
+
+    def test_distinct_labels_multistep_bitmatch(self, spilled):
+        got_b, got_s, hb, hs = self._pair(
+            spilled, lambda: DistinctInLabels(n_groups=5, rounds=3),
+            msg_slice_cap=256, msg_read_chunk=64,
+        )
+        assert got_b == got_s  # integer values: bit-for-bit
+        assert [h.n_msgs for h in hb] == [h.n_msgs for h in hs]
+        assert [h.n_active for h in hb] == [h.n_active for h in hs]
+
+    def test_second_min_label_bitmatch(self, spilled):
+        got_b, got_s, _, _ = self._pair(
+            spilled, SecondMinLabel, msg_slice_cap=128, msg_read_chunk=32,
+        )
+        assert got_b == got_s
+
+    def test_tiny_slices_force_many_apply_calls(self, spilled):
+        """Slice capacity just above the max in-degree: the merged stream is
+        consumed through MANY destination-aligned slices and results must
+        still be exact."""
+        g, pg_full, pg, _, store = spilled
+        prog = lambda: DistinctInLabels(n_groups=5)
+        eb = GraphDEngine(pg_full, prog(), mode="basic")
+        (vb, _), _ = eb.run()
+        es = GraphDEngine(pg, prog(), mode="streamed", stream_store=store,
+                          msg_slice_cap=1, msg_read_chunk=8,
+                          msg_merge_fanin=2)
+        (vs, _), _ = es.run()
+        assert eb.gather_values(vb) == es.gather_values(vs)
+        # the cap auto-bumped (in powers of two) to the max in-degree —
+        # Pregel's own lower bound (compute() holds one vertex's list) —
+        # and no further
+        max_in = int(np.unique(np.asarray(g.dst), return_counts=True)[1].max())
+        assert es._msg_slice_cap_eff < 2 * max_in
+
+    def test_spill_dir_cleaned_after_run(self, spilled):
+        _, _, pg, _, store = spilled
+        es = GraphDEngine(pg, DistinctInLabels(n_groups=5, rounds=2),
+                          mode="streamed", stream_store=store)
+        es.run()
+        spill = es.msg_spill_dir
+        assert (not os.path.exists(spill)) or os.listdir(spill) == []
+
+    def test_resident_independent_of_E(self, tmp_path):
+        """The acceptance bound: combiner-less streamed RAM (vertex arrays +
+        staging + merge windows + one apply slice) is a constant of the
+        config, not of |E|."""
+        def engine(edge_factor, tag):
+            g = rmat_graph(scale=8, edge_factor=edge_factor, seed=7)
+            pg, _, store = partition_graph_streamed(
+                g, 4, str(tmp_path / f"sp{tag}"), edge_block=32
+            )
+            return g, GraphDEngine(
+                pg, DistinctInLabels(n_groups=8), mode="streamed",
+                stream_store=store, stream_chunk_blocks=2,
+                msg_slice_cap=8192,
+            )
+
+        g1, e1 = engine(4, "a")
+        g2, e2 = engine(48, "b")
+        assert g2.n_edges > 4 * g1.n_edges and g2.n_vertices == g1.n_vertices
+        e1.run()
+        e2.run()
+        ram = lambda m: (m["resident"] + m["buffers"] + m["staging"]
+                         + m["msg_staging"])
+        m1, m2 = e1.memory_model(), e2.memory_model()
+        assert ram(m1) == ram(m2)  # flat despite >4x the edges
+        assert m2["streamed"] > m1["streamed"]  # ... while disk grows
+
+
+# ---------------------------------------------------------------------------
+# run-file message log: engine-driven GC + single-shard streamed recovery
+# ---------------------------------------------------------------------------
+
+class TestRunFileMessageLog:
+    def test_kill_and_recover_combiner(self, tmp_path):
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, _, store = partition_graph_streamed(
+            g, 4, str(tmp_path / "s"), edge_block=64
+        )
+        prog = lambda: PageRank(supersteps=8)
+        (v_ref, a_ref), _ = GraphDEngine(
+            pg, prog(), mode="streamed", stream_store=store
+        ).run()
+        ck = Checkpointer(str(tmp_path / "ck"), every=3)
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, prog(), mode="streamed", stream_store=store,
+                           message_log=ml)
+        ck.save(0, *eng.init())
+        eng.run(checkpointer=ck)  # then "kill" shard 2
+        vj, aj = recover_shard_streamed(
+            pg, prog(), failed=2, ckpt=ck, log=ml, store=store,
+            target_step=8,
+        )
+        assert np.abs(np.asarray(vj) - np.asarray(v_ref)[2]).max() < 1e-6
+        assert np.array_equal(np.asarray(aj), np.asarray(a_ref)[2])
+
+    def test_kill_and_recover_combinerless(self, tmp_path):
+        g = rmat_graph(scale=7, edge_factor=6, seed=9)
+        pg, _, store = partition_graph_streamed(
+            g, 4, str(tmp_path / "s"), edge_block=32
+        )
+        prog = lambda: DistinctInLabels(n_groups=7, rounds=4)
+        (v_ref, _), _ = GraphDEngine(
+            pg, prog(), mode="streamed", stream_store=store
+        ).run()
+        ck = Checkpointer(str(tmp_path / "ck"), every=2)
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, prog(), mode="streamed", stream_store=store,
+                           message_log=ml)
+        ck.save(0, *eng.init())
+        eng.run(checkpointer=ck)
+        vj, _ = recover_shard_streamed(
+            pg, prog(), failed=1, ckpt=ck, log=ml, store=store,
+            target_step=4,
+        )
+        assert np.array_equal(np.asarray(vj), np.asarray(v_ref)[1])
+
+    def test_engine_gcs_logs_after_checkpoint(self, tmp_path):
+        """Regression (paper §3.4): OMS logs must be dropped as soon as a
+        newer checkpoint is durable, in the streamed driver too."""
+        g = rmat_graph(scale=7, edge_factor=8, seed=3)
+        pg, _, store = partition_graph_streamed(
+            g, 4, str(tmp_path / "s"), edge_block=64
+        )
+        ck = Checkpointer(str(tmp_path / "ck"), every=3)
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, PageRank(supersteps=8), mode="streamed",
+                           stream_store=store, message_log=ml)
+        eng.run(checkpointer=ck)
+        # checkpoints landed at steps 3 and 6 => only logs >= 6 survive
+        assert sorted(os.listdir(str(tmp_path / "logs"))) == [
+            "step-000006", "step-000007",
+        ]
+
+    def test_reopened_step_drops_stale_index(self, tmp_path):
+        """Regression: re-executing a crashed superstep truncates the run
+        files; the PREVIOUS attempt's index.json must go with them, or a
+        later open() maps past the truncated files."""
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        ml.configure(n_shards=2, P=16, msg_dtype=np.float32, e0=0.0,
+                     combined=False)
+        s1 = ml.open_step(5)
+        s1.append_run(0, np.arange(8, dtype=np.int32),
+                      np.ones(8, np.float32), tag=1)
+        ml.close_step(5)  # crash at step 6, restart, re-run step 5:
+        s2 = ml.open_step(5)
+        assert not os.path.exists(os.path.join(s2.dir, "index.json"))
+        s2.append_run(0, np.arange(2, dtype=np.int32),
+                      np.ones(2, np.float32), tag=1)
+        ml.close_step(5)  # second crash AFTER publishing; reopen must work
+        re = ml._store_for(5)
+        assert [seg.length for seg in re.runs(0)] == [2]
+
+    def test_recover_across_empty_superstep(self, tmp_path):
+        """Regression: a superstep whose frontier died (empty skip() plan)
+        must still publish an (empty) per-step log dir, or recovery of that
+        step crashes on a missing index."""
+        from repro.core import DegreeSum
+
+        class OneShotSum(DegreeSum):
+            num_supersteps = 3  # steps 1..2 run with an all-inactive frontier
+
+        g = rmat_graph(scale=6, edge_factor=4, seed=2)
+        pg, _, store = partition_graph_streamed(
+            g, 2, str(tmp_path / "s"), edge_block=32
+        )
+        (v_ref, _), _ = GraphDEngine(
+            pg, OneShotSum(), mode="streamed", stream_store=store
+        ).run()
+        ck = Checkpointer(str(tmp_path / "ck"), every=10)  # never fires
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, OneShotSum(), mode="streamed",
+                           stream_store=store, message_log=ml)
+        ck.save(0, *eng.init())
+        eng.run(checkpointer=ck)
+        vj, _ = recover_shard_streamed(
+            pg, OneShotSum(), failed=0, ckpt=ck, log=ml, store=store,
+            target_step=3,
+        )
+        assert np.array_equal(np.asarray(vj), np.asarray(v_ref)[0])
+
+    def test_dense_reads_rejected_on_raw_log(self, tmp_path):
+        """load_for_dest (the combined-A_s recovery read) must fail loudly,
+        not with a tuple-unpack error, on a raw combiner-less log."""
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        ml.configure(n_shards=2, P=16, msg_dtype=np.int32, e0=0,
+                     combined=False)
+        st = ml.open_step(0)
+        st.append_run(1, np.arange(4, dtype=np.int32),
+                      np.arange(4, dtype=np.int32), tag=0)
+        ml.close_step(0)
+        with pytest.raises(ValueError, match="recover_shard_streamed"):
+            ml.load_for_dest(0, 1, 2, skip_shard=1)
+
+    def test_runfile_log_with_min_combiner_in_memory_driver(self, tmp_path):
+        """Regression: the run-file log densifies sparse runs with the
+        combiner identity e0. Used with the IN-MEMORY logged driver and a
+        MIN combiner (SSSP: e0=inf), a wrong default identity (0) poisons
+        every position some source shard never messaged."""
+        from repro.core import SSSP
+        from repro.core.checkpoint import recover_shard
+
+        g = rmat_graph(scale=7, edge_factor=6, seed=5, weights="uniform")
+        pg, rmap = partition_graph(g, n_shards=4, edge_block=64)
+        src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
+        prog = lambda: SSSP(src_new)
+        (v_ref, _), hist = GraphDEngine(pg, prog()).run()
+        ck = Checkpointer(str(tmp_path / "ck"), every=3)
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, prog(), message_log=ml)
+        ck.save(0, *eng.init())
+        eng.run(checkpointer=ck)
+        vj, _ = recover_shard(pg, prog(), failed=1, ckpt=ck, log=ml,
+                              target_step=len(hist))
+        vj, vr = np.asarray(vj), np.asarray(v_ref)[1]
+        assert ((vj == vr) | (np.isinf(vj) & np.isinf(vr))).all()
+
+    def test_log_survives_until_next_checkpoint(self, tmp_path):
+        """No checkpointer => nothing is ever GC'd (the engine may not drop
+        OMSs it might still need for recovery)."""
+        g = rmat_graph(scale=6, edge_factor=4, seed=2)
+        pg, _, store = partition_graph_streamed(
+            g, 2, str(tmp_path / "s"), edge_block=32
+        )
+        ml = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pg, PageRank(supersteps=3), mode="streamed",
+                           stream_store=store, message_log=ml)
+        eng.run()
+        assert sorted(os.listdir(str(tmp_path / "logs"))) == [
+            f"step-{s:06d}" for s in range(3)
+        ]

@@ -337,15 +337,21 @@ class TestStreamedExecution:
             GraphDEngine(pg_other, PageRank(), mode="streamed",
                          stream_store=store)
 
-    def test_requires_store_and_combiner(self, spilled):
+    def test_requires_store_and_rejects_plain_log(self, spilled, tmp_path):
         from repro.core.algorithms import DistinctInLabels
+        from repro.core.checkpoint import MessageLog
 
         _, _, pg, _, store = spilled
         with pytest.raises(ValueError, match="stream_store"):
             GraphDEngine(pg, PageRank(), mode="streamed")
-        with pytest.raises(ValueError, match="combiner"):
-            GraphDEngine(pg, DistinctInLabels(), mode="streamed",
-                         stream_store=store)
+        # combiner-less programs are first-class in streamed mode now (the
+        # OMS disk tier, tests/test_msgstore.py); what IS rejected is a
+        # dense MessageLog, which would materialize O(n²·P) buffers
+        GraphDEngine(pg, DistinctInLabels(), mode="streamed",
+                     stream_store=store)
+        with pytest.raises(ValueError, match="RunFileMessageLog"):
+            GraphDEngine(pg, PageRank(), mode="streamed", stream_store=store,
+                         message_log=MessageLog(str(tmp_path / "ml")))
 
     def test_spill_partition_matches_streamed_ctor(self, tmp_path):
         """spill_partition on an existing pg == partition_graph_streamed."""
