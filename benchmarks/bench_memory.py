@@ -1,12 +1,15 @@
-"""Lemma 1 / §3.3.3 / Theorem 1 — the O(|V|/n) memory bound.
+"""Lemma 1 / §3.3.3 / Theorem 1 — the O(|V|/n) memory bound, plus the §4
+pipeline overlap and the varint-delta stream compression.
 
 Measures: (a) hash-partition balance (max shard < 2|V|/n, Lemma 1),
 (b) resident vs streamed bytes per shard (the DSS split: state array A in
 "RAM" vs edge stream in the big tier) for the in-memory engine AND the
 out-of-core ``streamed`` engine, (c) that the streamed resident footprint is
-independent of |E| while disk grows, (d) stream throughput and the compute ∥
-I/O overlap of the prefetching reader. Derived columns carry the bound
-checks.
+independent of |E| while disk grows — pipeline on AND off, (d) stream
+throughput and the compute ∥ I/O overlap of the prefetching reader,
+(e) sender overlap of the pipelined channel (transmit time hidden under
+compute must be > 0), (f) on-disk bytes of compressed vs uncompressed edge
+and message streams. Derived columns carry the bound checks.
 
 ``--tiny`` runs a seconds-scale subset (CI smoke job).
 """
@@ -14,12 +17,14 @@ checks.
 from __future__ import annotations
 
 import argparse
+import os
 import tempfile
 
 import numpy as np
 
 from benchmarks.common import emit, rss_bytes, stream_report, write_json
 from repro.core import DistinctInLabels, GraphDEngine, PageRank
+from repro.core.checkpoint import RunFileMessageLog
 from repro.graph import (
     partition_graph, partition_graph_streamed, recode_ids, rmat_graph,
 )
@@ -27,7 +32,7 @@ from repro.graph import (
 
 def _ram(m):
     return (m["resident"] + m["buffers"] + m["staging"]
-            + m.get("msg_staging", 0))
+            + m.get("msg_staging", 0) + m.get("channel", 0))
 
 
 def lemma1(g):
@@ -112,8 +117,9 @@ def streamed_nocombiner_model(g, edge_block, rounds=2, chunk_blocks=4):
 
 def independence_of_E(scale, factors, edge_block):
     """Same |V|, growing |E|: streamed RAM must stay flat — for the combiner
-    path AND the combiner-less (message-spilling) path."""
-    rams, oms_rams = [], []
+    path AND the combiner-less (message-spilling) path AND the pipelined
+    path (whose channel budget is a compiled-in constant)."""
+    rams, oms_rams, pipe_rams = [], [], []
     for ef in factors:
         g = rmat_graph(scale=scale, edge_factor=ef, seed=7)
         with tempfile.TemporaryDirectory(prefix="graphd-stream-") as d:
@@ -126,6 +132,13 @@ def independence_of_E(scale, factors, edge_block):
             rams.append(ram)
             emit(f"memory/streamed_ram_ef{ef}", 0.0,
                  f"E={g.n_edges};ram={ram};disk={m['streamed']}")
+            eng_p = GraphDEngine(pg, PageRank(supersteps=2), mode="streamed",
+                                 stream_store=store, pipeline=True)
+            mp = eng_p.memory_model()
+            pipe_rams.append(_ram(mp))
+            emit(f"memory/pipelined_ram_ef{ef}", 0.0,
+                 f"E={g.n_edges};ram={pipe_rams[-1]};"
+                 f"channel={mp['channel']}")
         with tempfile.TemporaryDirectory(prefix="graphd-oms-") as d:
             pg, _, store = partition_graph_streamed(g, 8, d,
                                                     edge_block=edge_block)
@@ -140,8 +153,70 @@ def independence_of_E(scale, factors, edge_block):
                  f"E={g.n_edges};ram={oms_rams[-1]};disk={m['streamed']}")
     emit("memory/streamed_ram_independent_of_E", 0.0,
          f"ok={len(set(rams)) == 1}")
+    emit("memory/pipelined_ram_independent_of_E", 0.0,
+         f"ok={len(set(pipe_rams)) == 1}")
     emit("memory/oms_ram_independent_of_E", 0.0,
          f"ok={len(set(oms_rams)) == 1}")
+
+
+def pipeline_overlap(g, edge_block, supersteps, chunk_blocks=4):
+    """§4's full-overlap claim, measured: the channel sender's busy time
+    minus the compute thread's stalls on it = transmit time hidden under
+    compute. ``ok`` iff that overlap is positive."""
+    with tempfile.TemporaryDirectory(prefix="graphd-pipe-") as d:
+        pg, _, store = partition_graph_streamed(g, 8, d,
+                                                edge_block=edge_block)
+        eng = GraphDEngine(pg, PageRank(supersteps=supersteps),
+                           mode="streamed", stream_store=store,
+                           stream_chunk_blocks=chunk_blocks, pipeline=True)
+        (_, _), hist = eng.run()
+        st = eng.channel_stats
+        ov = st.overlap_seconds()
+        emit("memory/pipeline_sender_overlap", ov * 1e6,
+             f"send_ms={st.send_seconds * 1e3:.1f};"
+             f"stall_ms={st.stall_seconds * 1e3:.1f};"
+             f"overlap_ms={ov * 1e3:.1f};packets={st.packets};"
+             f"tx_KiB={st.payload_bytes >> 10};ok={ov > 0}")
+        m = eng.memory_model()
+        emit("memory/pipeline_ram_per_shard", 0.0,
+             f"bytes={_ram(m)};channel={m['channel']}")
+        per_step = (np.mean([h.seconds for h in hist[1:]])
+                    if len(hist) > 1 else hist[0].seconds)
+        emit("memory/pipeline_superstep", per_step * 1e6,
+             stream_report(eng._stream_reader))
+
+
+def compression_bytes_on_disk(g, edge_block, rounds=2):
+    """The compress= knob end to end: varint-delta edge streams and message
+    run logs must be measurably smaller than their raw counterparts."""
+    with tempfile.TemporaryDirectory(prefix="graphd-cmp-") as d:
+        _, _, plain = partition_graph_streamed(
+            g, 8, os.path.join(d, "p"), edge_block=edge_block
+        )
+        pg, _, comp = partition_graph_streamed(
+            g, 8, os.path.join(d, "c"), edge_block=edge_block, compress=True
+        )
+        pb, cb = plain.disk_bytes(), comp.disk_bytes()
+        emit("memory/edge_stream_bytes", 0.0,
+             f"plain={pb};compressed={cb};ratio={cb / max(pb, 1):.3f};"
+             f"ok={cb < pb}")
+        log_bytes = {}
+        for compress in (False, True):
+            tag = "c" if compress else "p"
+            log = RunFileMessageLog(os.path.join(d, f"log-{tag}"))
+            eng = GraphDEngine(
+                pg, DistinctInLabels(n_groups=16, rounds=rounds),
+                mode="streamed", stream_store=comp, message_log=log,
+                compress=compress,
+            )
+            eng.run()
+            log_bytes[tag] = sum(
+                log._store_for(s).disk_bytes() for s in range(rounds)
+            )
+        emit("memory/msg_run_bytes", 0.0,
+             f"plain={log_bytes['p']};compressed={log_bytes['c']};"
+             f"ratio={log_bytes['c'] / max(log_bytes['p'], 1):.3f};"
+             f"ok={log_bytes['c'] < log_bytes['p']}")
 
 
 def main():
@@ -158,6 +233,8 @@ def main():
         in_memory_model(g, edge_block=64)
         streamed_model(g, edge_block=64, supersteps=2, chunk_blocks=4)
         streamed_nocombiner_model(g, edge_block=64, rounds=2, chunk_blocks=4)
+        pipeline_overlap(g, edge_block=64, supersteps=2, chunk_blocks=4)
+        compression_bytes_on_disk(g, edge_block=64)
         independence_of_E(scale=8, factors=[4, 16], edge_block=32)
     else:
         g = rmat_graph(scale=14, edge_factor=8, seed=3, sparse_ids=True)
@@ -165,6 +242,8 @@ def main():
         in_memory_model(g, edge_block=512)
         streamed_model(g, edge_block=512, supersteps=3)
         streamed_nocombiner_model(g, edge_block=512, rounds=2)
+        pipeline_overlap(g, edge_block=512, supersteps=3)
+        compression_bytes_on_disk(g, edge_block=512)
         independence_of_E(scale=12, factors=[4, 16, 48], edge_block=256)
     if args.json:
         write_json(args.json)

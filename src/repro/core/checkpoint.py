@@ -180,7 +180,9 @@ class RunFileMessageLog(MessageLog):
 
     * combiner path: one sorted run per (src→dest) group holding the
       *combined* A_s as sparse ``(dst_pos, msg, cnt)`` triples, appended by
-      :meth:`save_group` as the streamed fold finishes each group;
+      :meth:`save_group` as the streamed fold finishes each group — or by
+      the pipelined engine's channel sender, whose inbox store IS this
+      log's per-step store (transmitted messages are persisted OMSs);
     * combiner-less path: the engine's raw OMS spill store for the superstep
       is simply created under this directory (``open_step``) — the runs the
       external merge consumes ARE the log, exactly §3.4's "keep OMSs on
@@ -197,15 +199,17 @@ class RunFileMessageLog(MessageLog):
         self._msg_dtype = None
         self._e0 = 0
         self._combined = True
+        self._compress = False
         self._open_stores: dict[int, "object"] = {}
 
     def configure(self, n_shards: int, P: int, msg_dtype, e0=0,
-                  combined: bool = True):
+                  combined: bool = True, compress: bool = False):
         self._n_shards = int(n_shards)
         self._P = int(P)
         self._msg_dtype = np.dtype(msg_dtype)
         self._e0 = e0
         self._combined = bool(combined)
+        self._compress = bool(compress)
 
     def step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step-{step:06d}")
@@ -217,7 +221,7 @@ class RunFileMessageLog(MessageLog):
 
         store = MessageRunStore(
             self.step_dir(step), self._n_shards, self._P, self._msg_dtype,
-            with_counts=self._combined,
+            with_counts=self._combined, compress=self._compress,
         )
         self._open_stores[step] = store
         return store
@@ -247,9 +251,7 @@ class RunFileMessageLog(MessageLog):
         store = self._open_stores.get(step)
         if store is None:
             store = self.open_step(step)
-        dp = np.nonzero(np.asarray(cnt) > 0)[0].astype(np.int32)
-        store.append_run(dest, dp, np.asarray(A_s)[dp],
-                         cnt=np.asarray(cnt)[dp].astype(np.int32), tag=src)
+        store.append_combined(dest, A_s, cnt, tag=src)
 
     def save(self, step: int, A_s_all, cnt_all):
         """Compatibility with the in-memory logged driver: fan the dense
@@ -275,17 +277,10 @@ class RunFileMessageLog(MessageLog):
                 "recover_shard_streamed, which merge-streams the runs"
             )
         e0 = self._e0 if self._e0 is not None else 0
-        parts = []
-        for seg in store.runs(dest):
-            if seg.tag == skip_shard:
-                continue
-            dp, msg, cnt = store.read_run(dest, seg)
-            A = np.full((store.P,), e0, dtype=store.msg_dtype)
-            A[dp] = msg
-            c = np.zeros((store.P,), np.int32)
-            c[dp] = cnt
-            parts.append((A, c))
-        return parts
+        return [
+            store.read_combined(dest, seg, e0)
+            for seg in store.runs(dest) if seg.tag != skip_shard
+        ]
 
     def close_step(self, step: int):
         """Publish the step's run index once (save_group defers it — a full
@@ -346,17 +341,34 @@ def recover_shard_streamed(
         own_ids = store.active_blocks(failed, failed, prefix)
         own_schedule = [(failed, failed, own_ids)] if own_ids.size else []
         if comb is not None:
-            A_r = comb.identity((P,), program.msg_dtype)
-            cnt = jnp.zeros((P,), jnp.int32)
+            # regenerate the failed shard's own combined group A_s(j→j)
+            # chunk-wise — exactly the live fold's sequence
+            own_A = comb.identity((P,), program.msg_dtype)
+            own_cnt = jnp.zeros((P,), jnp.int32)
             for chunk in reader.stream(own_schedule):
-                A_r, cnt = eng._stream_fold(
-                    A_r, cnt, v_j, pg.degree[failed], a_j,
+                own_A, own_cnt = eng._stream_fold(
+                    own_A, own_cnt, v_j, pg.degree[failed], a_j,
                     chunk.sp, chunk.dp, chunk.w, step,
                 )
-                jax.block_until_ready(cnt)
-            for pA, pc in log.load_for_dest(t, failed, n, skip_shard=failed):
-                A_r = comb.combine(A_r, jnp.asarray(pA))
-                cnt = cnt + jnp.asarray(pc)
+                jax.block_until_ready(own_cnt)
+            # digest peers' logged groups AND the regenerated own group in
+            # ascending source order — the live engine's transmit order —
+            # so replay is bit-identical even for float-SUM combiners
+            # (reassociating the digest would legally drift the last ulp)
+            store_t = log._store_for(t)
+            parts = [
+                (seg.tag, *(jnp.asarray(x) for x in
+                            store_t.read_combined(failed, seg,
+                                                  program.combiner.e0)))
+                for seg in store_t.runs(failed) if seg.tag != failed
+            ]
+            parts.append((failed, own_A, own_cnt))
+            parts.sort(key=lambda p: p[0])
+            A_r = comb.identity((P,), program.msg_dtype)
+            cnt = jnp.zeros((P,), jnp.int32)
+            for _, pA, pc in parts:
+                A_r = comb.combine(A_r, pA)
+                cnt = cnt + pc
             v_j, a_j, _, _, _ = eng._stream_apply(
                 v_j, pg.degree[failed], pg.vmask[failed], pg.old_ids[failed],
                 pg.gids[failed], A_r, cnt, a_j, step, jnp.int32(failed),
@@ -370,33 +382,40 @@ def recover_shard_streamed(
                 np.dtype(program.msg_dtype),
             )
             try:
+                peer_segs: dict[int, list] = {}
                 for seg in logged.runs(failed):
-                    if seg.tag == failed:
-                        continue  # recomputed below, never trusted from disk
-                    # chunked copy (a chunk of a sorted run is a sorted run)
-                    # keeps recovery at the same O(read_chunk) bound as
-                    # normal execution even after compaction made peer runs
-                    # O(messages-per-source) long
-                    for part in logged.iter_run(failed, seg,
-                                                eng.msg_read_chunk):
-                        tmp.append_run(failed, part[0], part[1], tag=seg.tag)
+                    if seg.tag != failed:
+                        peer_segs.setdefault(seg.tag, []).append(seg)
+                # rebuild in ascending source order — the live spill's run-
+                # table order — so the k-way merge's equal-dp tie-breaking
+                # (and with it any message-order-sensitive apply_list)
+                # replays exactly like an uninterrupted run
+                for tag in sorted(set(peer_segs) | {failed}):
+                    if tag == failed:
+                        # regenerated own messages, never trusted from disk
+                        for chunk in reader.stream(own_schedule):
+                            msg, dp, valid = eng._stream_msgs(
+                                v_j, pg.degree[failed], a_j,
+                                chunk.sp, chunk.dp, chunk.w, step,
+                            )
+                            msg, dp, valid = map(np.asarray,
+                                                 (msg, dp, valid))
+                            tmp.append_raw(failed, dp, msg, valid,
+                                           tag=failed)
+                    else:
+                        # chunked copy (a chunk of a sorted run is a sorted
+                        # run) keeps recovery at the same O(read_chunk)
+                        # bound as normal execution even after compaction
+                        # made peer runs O(messages-per-source) long
+                        for seg in peer_segs[tag]:
+                            for part in logged.iter_run(failed, seg,
+                                                        eng.msg_read_chunk):
+                                tmp.append_run(failed, part[0], part[1],
+                                               tag=tag)
                     # re-collapse so the final merge holds one cursor per
                     # source, not one per copied chunk
-                    tmp.compact_tag(failed, seg.tag, eng.msg_merge_fanin,
+                    tmp.compact_tag(failed, tag, eng.msg_merge_fanin,
                                     eng.msg_read_chunk)
-                for chunk in reader.stream(own_schedule):
-                    msg, dp, valid = eng._stream_msgs(
-                        v_j, pg.degree[failed], a_j,
-                        chunk.sp, chunk.dp, chunk.w, step,
-                    )
-                    msg, dp, valid = map(np.asarray, (msg, dp, valid))
-                    dpv = dp[valid]
-                    if dpv.size:
-                        order = np.argsort(dpv, kind="stable")
-                        tmp.append_run(failed, dpv[order], msg[valid][order],
-                                       tag=failed)
-                tmp.compact_tag(failed, failed, eng.msg_merge_fanin,
-                                eng.msg_read_chunk)
                 # identical merge/apply slicing as normal execution — shared
                 # helper, so recovered results can never drift from a rerun
                 v_j, a_j, _ = eng._apply_list_merged(

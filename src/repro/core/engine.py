@@ -32,6 +32,13 @@ Execution modes (benchmarked against each other, mirroring Tables 2–8):
   Typically paired with ``graph.partition_graph_streamed`` (spill at
   partition time, vertex-only PartitionedGraph). Host-driven: no mesh /
   Pallas backend; pick it when the graph does not fit device memory.
+  With ``pipeline=True`` the §4 sender pipeline comes on: a background
+  channel (``streams/channel.py``) serializes each combined outgoing group
+  (optionally varint-delta compressed, ``compress=True``) and appends it to
+  the destination's inbox run files while the fold is still digesting the
+  next group — transmit hidden under compute, a bounded in-flight budget,
+  and per-source owner views of the edge store (each emulated machine maps
+  only its own rows).
 
 Sparse adaptation (C2, ``skip()``): per destination group the engine skips
 edge blocks whose source range contains no active vertex, using the
@@ -486,9 +493,19 @@ class GraphDEngine:
         msg_read_chunk: int = 4096,  # msgs staged per merge-cursor refill
         msg_merge_fanin: int = 16,  # max runs held open by the external merge
         msg_spill_dir: str | None = None,  # OMS spill dir (default: store/oms)
+        pipeline: bool = False,  # §4 overlap: background sender channels
+        compress: bool = False,  # varint-delta the message runs' dp channel
+        channel_inflight: int = 4,  # bounded in-flight packets (O(1) budget)
+        channel_fault=None,  # streams.channel.FaultPoint (fault drills only)
     ):
         if mode not in self.MODES:
             raise ValueError(f"unknown mode={mode!r}; pick one of {self.MODES}")
+        if mode != "streamed" and (pipeline or compress
+                                   or channel_fault is not None):
+            raise ValueError(
+                "pipeline=/compress=/channel_fault= are streamed-mode knobs "
+                "(the in-memory modes already overlap on-device, §5/C3)"
+            )
         if mode != "streamed" and pg.E_cap > 0 and pg.src_pos.shape[-1] == 0:
             raise ValueError(
                 "this partition is vertex-only (its edge groups were spilled "
@@ -544,6 +561,7 @@ class GraphDEngine:
                 msg_dtype=np.dtype(program.msg_dtype),
                 e0=program.combiner.e0 if program.combiner is not None else 0,
                 combined=program.combiner is not None,
+                compress=compress,
             )
         self.pg = pg
         self.program = program
@@ -554,20 +572,34 @@ class GraphDEngine:
         self.sparse_cap = max(1, int(pg.n_blocks * sparse_cap_frac))
         self.message_log = message_log
         self.stream_store = stream_store
+        self.pipeline = bool(pipeline)
+        self.compress = bool(compress)
         axis = self.AXIS
 
         if mode == "streamed":
+            from repro.streams.channel import ChannelStats
             from repro.streams.reader import StreamReader
 
             self._stream_reader = StreamReader(
                 stream_store, chunk_blocks=stream_chunk_blocks,
-                depth=stream_depth,
+                depth=stream_depth, owner_views=self.pipeline,
             )
             if msg_slice_cap < 1 or msg_read_chunk < 1 or msg_merge_fanin < 2:
                 raise ValueError(
                     "msg_slice_cap and msg_read_chunk must be >= 1 and "
                     "msg_merge_fanin >= 2"
                 )
+            if channel_inflight < 1:
+                raise ValueError("channel_inflight must be >= 1")
+            self.channel_inflight = int(channel_inflight)
+            self._channel_fault = channel_fault
+            # cumulative over the current run(); bench_memory reads it for
+            # the sender-overlap section
+            self.channel_stats = ChannelStats()
+            self._inbox_dir = os.path.join(stream_store.dir, "inbox")
+            self.msg_spill_dir = msg_spill_dir or os.path.join(
+                stream_store.dir, "oms"
+            )
             self.msg_slice_cap = int(msg_slice_cap)
             # effective slice capacity; bumped (in powers of two) if a vertex
             # in-degree ever exceeds it — Pregel's compute() needs a vertex's
@@ -575,12 +607,16 @@ class GraphDEngine:
             self._msg_slice_cap_eff = int(msg_slice_cap)
             self.msg_read_chunk = int(msg_read_chunk)
             self.msg_merge_fanin = int(msg_merge_fanin)
-            self.msg_spill_dir = msg_spill_dir or os.path.join(
-                stream_store.dir, "oms"
-            )
             if program.combiner is not None:
                 self._stream_fold = jax.jit(self._make_stream_fold())
                 self._stream_apply = jax.jit(self._make_stream_apply())
+                comb = program.combiner
+                # receiver digest of one densified inbox group (pipelined
+                # path): identical per-position sequence to the unpipelined
+                # grouped fold, so pipelining cannot change results
+                self._stream_digest = jax.jit(
+                    lambda A, c, A2, c2: (comb.combine(A, A2), c + c2)
+                )
             else:
                 self._stream_msgs = jax.jit(self._make_stream_msgs())
                 self._stream_apply_list = jax.jit(
@@ -833,6 +869,39 @@ class GraphDEngine:
 
         return fin
 
+    def _fold_groups(self, values, active, step, schedule, sink):
+        """Fold staged edge chunks into per-(src, dst) group accumulators
+        (§5's A_s, one group at a time) and hand each COMPLETED group to
+        ``sink(src, dst, A_g, cnt_g)``. Shared by the logged unpipelined
+        superstep (sink: combine locally + save_group) and the pipelined
+        superstep (sink: channel transmit) — the group keying, identity
+        re-init and buffer-recycle contract live in exactly one place, so
+        the two paths' bit-identical-grouping guarantee cannot drift."""
+        program, pg, comb = self.program, self.pg, self.program.combiner
+        cur = None
+        A_g = cnt_g = None
+        for chunk in self._stream_reader.stream(schedule):
+            i, k = chunk.src_shard, chunk.dst_shard
+            if cur != (i, k):
+                if cur is not None:
+                    sink(cur[0], cur[1], A_g, cnt_g)
+                cur = (i, k)
+                A_g = comb.identity((pg.P,), program.msg_dtype)
+                cnt_g = jnp.zeros((pg.P,), jnp.int32)
+            A_g, cnt_g = self._stream_fold(
+                A_g, cnt_g, values[i], pg.degree[i], active[i],
+                chunk.sp, chunk.dp, chunk.w, step,
+            )
+            # block before the reader recycles this chunk's buffer: on CPU
+            # jax the jitted fold may zero-copy ALIAS the staged numpy
+            # arrays, and dispatch is async — advancing the iterator would
+            # let the prefetch thread overwrite memory a pending computation
+            # still reads. Disk I/O still overlaps: the producer thread
+            # reads ahead while we wait on compute.
+            jax.block_until_ready(cnt_g)
+        if cur is not None:
+            sink(cur[0], cur[1], A_g, cnt_g)
+
     def _superstep_streamed_comb(self, values, active, s, plan):
         """One streamed superstep with a combiner: fold staged edge chunks
         straight into the O(|V|/n) destination accumulators (§5 applied to
@@ -868,32 +937,13 @@ class GraphDEngine:
             # superstep must publish an (empty) index or recovery of that
             # step would find no directory at all
             log.open_step(s)
-            cur = None
-            A_g = cnt_g = None
 
-            def _flush_group():
-                nonlocal cur
-                if cur is None:
-                    return
-                gi, gk = cur
+            def _digest_and_log(gi, gk, A_g, cnt_g):
                 A_r[gk] = comb.combine(A_r[gk], A_g)
                 cnt[gk] = cnt[gk] + cnt_g
                 log.save_group(s, gi, gk, np.asarray(A_g), np.asarray(cnt_g))
-                cur = None
 
-            for chunk in reader.stream(schedule):
-                i, k = chunk.src_shard, chunk.dst_shard
-                if cur != (i, k):
-                    _flush_group()
-                    cur = (i, k)
-                    A_g = comb.identity((pg.P,), program.msg_dtype)
-                    cnt_g = jnp.zeros((pg.P,), jnp.int32)
-                A_g, cnt_g = self._stream_fold(
-                    A_g, cnt_g, values[i], pg.degree[i], active[i],
-                    chunk.sp, chunk.dp, chunk.w, step,
-                )
-                jax.block_until_ready(cnt_g)  # see buffer-recycle note above
-            _flush_group()
+            self._fold_groups(values, active, step, schedule, _digest_and_log)
             log.close_step(s)  # release write handles; runs stay readable
         new_v, new_a = [], []
         n_active = n_msgs = 0
@@ -911,6 +961,113 @@ class GraphDEngine:
             agg += float(ag)
         st = reader.stats
         io_note = f"{st.blocks_read}blk/{st.bytes_read >> 10}KiB"
+        return (jnp.stack(new_v), jnp.stack(new_a), n_active, n_msgs, agg,
+                io_note)
+
+    def _open_inbox(self, s: int, with_counts: bool):
+        """The superstep's inbox store: the message log's per-step run store
+        when a log is attached (transmitted groups ARE the persisted OMSs of
+        §3.4 — recoverable and GC'd with the log), else a scratch store under
+        the stream store, deleted once applied."""
+        from repro.streams.msgstore import MessageRunStore
+
+        if self.message_log is not None:
+            return self.message_log.open_step(s)
+        return MessageRunStore(
+            os.path.join(self._inbox_dir, f"step-{s:06d}"),
+            self.pg.n_shards, self.pg.P, np.dtype(self.program.msg_dtype),
+            with_counts=with_counts, compress=self.compress,
+        )
+
+    def _close_inbox(self, s: int, inbox, ok: bool) -> None:
+        """Publish/delete the inbox at superstep end. On failure (``ok``
+        False, e.g. a sender crash) the step store is left WITHOUT an index:
+        a rerun's ``open_step`` truncates it and the engine's startup sweep
+        removes scratch leftovers — a torn inbox is never consumed."""
+        if self.message_log is not None:
+            if ok:
+                self.message_log.close_step(s)
+        elif ok:
+            inbox.delete()
+
+    def _accum_channel(self, channel) -> None:
+        st, tot = channel.stats, self.channel_stats
+        tot.packets += st.packets
+        tot.messages += st.messages
+        tot.payload_bytes += st.payload_bytes
+        tot.send_seconds += st.send_seconds
+        tot.stall_seconds += st.stall_seconds
+
+    def _superstep_streamed_comb_pipelined(self, values, active, s, plan):
+        """One pipelined streamed superstep with a combiner — the paper's §4
+        compute ∥ communicate overlap: while the fold is still digesting
+        edge chunks of the NEXT group, each finished combined group
+        A_s(i→k) is serialized (sparse, optionally varint-delta compressed)
+        and appended to destination k's inbox run files by the background
+        sender. The receiver digests an inbox only after its per-destination
+        flush barrier, folding groups in transmit order — bit-identical to
+        the unpipelined grouped fold.
+
+        ``plan`` is destination-grouped; resident state stays O(|V|/n):
+        one group accumulator, one receiver accumulator, and at most
+        ``channel_inflight`` sparse packets in flight.
+        """
+        from repro.streams.channel import ShardChannels
+
+        program, pg, comb = self.program, self.pg, self.program.combiner
+        n = pg.n_shards
+        reader = self._stream_reader
+        step = jnp.int32(s)
+        inbox = self._open_inbox(s, with_counts=True)
+        channel = ShardChannels(inbox, inflight=self.channel_inflight,
+                                fault=self._channel_fault)
+        new_v, new_a = [], []
+        n_active = n_msgs = 0
+        agg = 0.0
+        blocks = kib = 0
+        ok = False
+        try:
+            for k in range(n):
+
+                def _transmit(gi, gk, A_g, cnt_g):
+                    # the sender sparsifies on its own thread (the shared
+                    # append_combined wire format, streams/msgstore.py)
+                    channel.send_combined(gk, np.asarray(A_g),
+                                          np.asarray(cnt_g), tag=gi)
+
+                self._fold_groups(values, active, step, plan[k], _transmit)
+                blocks += reader.stats.blocks_read
+                kib += reader.stats.bytes_read >> 10
+                # barrier: every group for dest k has landed in its inbox
+                channel.flush()
+                # receiver digest (U_r): fold inbox runs in transmit order
+                A_r = comb.identity((pg.P,), program.msg_dtype)
+                cnt = jnp.zeros((pg.P,), jnp.int32)
+                for seg in inbox.runs(k):
+                    A_d, c_d = inbox.read_combined(k, seg, comb.e0)
+                    A_r, cnt = self._stream_digest(
+                        A_r, cnt, jnp.asarray(A_d), jnp.asarray(c_d)
+                    )
+                nv, na, nact, nm, ag = self._stream_apply(
+                    values[k], pg.degree[k], pg.vmask[k], pg.old_ids[k],
+                    pg.gids[k], A_r, cnt, active[k], step, jnp.int32(k),
+                )
+                new_v.append(nv)
+                new_a.append(na)
+                n_active += int(nact)
+                n_msgs += int(nm)
+                agg += float(ag)
+            channel.close()  # surface a late sender error before publishing
+            ok = True
+        finally:
+            if not ok:
+                channel.abort()
+            self._accum_channel(channel)
+            self._close_inbox(s, inbox, ok)
+        st = channel.stats
+        io_note = (f"{blocks}blk/{kib}KiB "
+                   f"tx={st.packets}pk/{st.payload_bytes >> 10}KiB "
+                   f"ov={st.overlap_seconds() * 1e3:.1f}ms")
         return (jnp.stack(new_v), jnp.stack(new_a), n_active, n_msgs, agg,
                 io_note)
 
@@ -970,7 +1127,14 @@ class GraphDEngine:
         ``plan`` is destination-grouped: destination k's spill, merge, apply
         and run cleanup all finish before destination k+1's edges are read,
         so peak spill disk is one destination's traffic, not the superstep's.
+
+        With ``pipeline=True`` the spill sort + run append (and the §3.3.1
+        compaction passes) run on the channel's background sender in strict
+        send order — the run table evolves exactly as inline, so results are
+        byte-identical — while the compute thread goes on generating the
+        next chunk's messages (§4's U_c ∥ U_s).
         """
+        from repro.streams.channel import ShardChannels
         from repro.streams.msgstore import MessageRunStore
 
         program, pg = self.program, self.pg
@@ -984,12 +1148,22 @@ class GraphDEngine:
         else:
             mstore = MessageRunStore(
                 os.path.join(self.msg_spill_dir, f"step-{s:06d}"), n, pg.P,
-                np.dtype(program.msg_dtype),
+                np.dtype(program.msg_dtype), compress=self.compress,
             )
+        channel = (
+            ShardChannels(mstore, inflight=self.channel_inflight,
+                          fault=self._channel_fault)
+            if self.pipeline else None
+        )
+        # one compaction entry point for both paths (the channel enqueues the
+        # same op in FIFO order, so the run table evolves identically)
+        compact = (channel.compact if channel is not None
+                   else mstore.compact_tag)
         new_v, new_a = [], []
         n_active = n_msgs = 0
         agg = 0.0
         blocks = kib = 0
+        ok = False
         try:
             for k in range(n):
                 # -- spill: raw messages out, one sorted run per edge chunk
@@ -999,8 +1173,8 @@ class GraphDEngine:
                     if cur_src is not None and i != cur_src:
                         # keep the merge fan-in bounded: collapse the finished
                         # source's runs down to one (multi-pass §3.3.1)
-                        mstore.compact_tag(k, cur_src, self.msg_merge_fanin,
-                                           self.msg_read_chunk)
+                        compact(k, cur_src, self.msg_merge_fanin,
+                                self.msg_read_chunk)
                     cur_src = i
                     msg, dp, valid = self._stream_msgs(
                         values[i], pg.degree[i], active[i],
@@ -1011,16 +1185,19 @@ class GraphDEngine:
                     msg = np.asarray(msg)
                     dp = np.asarray(dp)
                     valid = np.asarray(valid)
-                    dpv = dp[valid]
-                    if dpv.size:
-                        order = np.argsort(dpv, kind="stable")
-                        mstore.append_run(k, dpv[order], msg[valid][order],
-                                          tag=i)
+                    if channel is not None:
+                        # sort + append move to the sender thread; the next
+                        # chunk's message generation overlaps them
+                        channel.send_raw(k, dp, msg, valid, tag=i)
+                    else:
+                        mstore.append_raw(k, dp, msg, valid, tag=i)
                 if cur_src is not None:
-                    mstore.compact_tag(k, cur_src, self.msg_merge_fanin,
-                                       self.msg_read_chunk)
+                    compact(k, cur_src, self.msg_merge_fanin,
+                            self.msg_read_chunk)
                 blocks += reader.stats.blocks_read
                 kib += reader.stats.bytes_read >> 10
+                if channel is not None:
+                    channel.flush()  # dest k's runs all landed; safe to merge
 
                 # -- merge + apply (shared with recovery)
                 acc_v, acc_a, cnt_k = self._apply_list_merged(
@@ -1036,12 +1213,24 @@ class GraphDEngine:
                 agg += float(ag)
                 if log is None:
                     mstore.clear_dest(k)  # applied => this OMS is dead (§3.3)
+            if channel is not None:
+                channel.close()
+            ok = True
         finally:
+            if channel is not None:
+                if not ok:
+                    channel.abort()
+                self._accum_channel(channel)
             if log is not None:
-                log.close_step(s)  # publish the run index once, drop handles
-            else:
+                if ok:
+                    log.close_step(s)  # publish the run index, drop handles
+            elif ok:
                 mstore.delete()
         io_note = f"{blocks}blk/{kib}KiB"
+        if channel is not None:
+            st = channel.stats
+            io_note += (f" tx={st.packets}pk/{st.payload_bytes >> 10}KiB "
+                        f"ov={st.overlap_seconds() * 1e3:.1f}ms")
         return (jnp.stack(new_v), jnp.stack(new_a), n_active, n_msgs, agg,
                 io_note)
 
@@ -1054,6 +1243,22 @@ class GraphDEngine:
 
         program, pg, comb = self.program, self.pg, self.program.combiner
         store = self.stream_store
+        import shutil
+
+        from repro.streams.channel import ChannelStats
+
+        # scratch inboxes / OMS spills live under the store; a crashed
+        # superstep leaves its step dir behind — sweep at run start (like
+        # Checkpointer sweeps .tmp-step-*) so crashes cannot leak disk.
+        # Done here, not at construction: a recovery engine (which never
+        # runs) must not clobber another engine's in-flight scratch state.
+        for d in (self._inbox_dir, self.msg_spill_dir):
+            if os.path.isdir(d):
+                for name in os.listdir(d):
+                    if name.startswith(("step-", "recover-")):
+                        shutil.rmtree(os.path.join(d, name),
+                                      ignore_errors=True)
+        self.channel_stats = ChannelStats()  # fresh overlap accounting
         values, active = state if state is not None else self.init()
         history: list[SuperstepRecord] = []
         target = min(
@@ -1080,11 +1285,12 @@ class GraphDEngine:
         )
         for s in range(start_step, target):
             t0 = time.perf_counter()
-            superstep = (
-                self._superstep_streamed_nocomb
-                if comb is None
-                else self._superstep_streamed_comb
-            )
+            if comb is None:
+                superstep = self._superstep_streamed_nocomb
+            elif self.pipeline:
+                superstep = self._superstep_streamed_comb_pipelined
+            else:
+                superstep = self._superstep_streamed_comb
             values, active, n_active, n_msgs, agg, io_note = superstep(
                 values, active, s, plan
             )
@@ -1233,6 +1439,17 @@ class GraphDEngine:
                 staging=self._stream_reader.staging_bytes(),
                 streamed=self.stream_store.disk_bytes() // pg.n_shards,
             )
+            if self.pipeline:
+                # the channel's bounded in-flight budget (§4): a compiled-in
+                # constant, NOT a function of |E| — combiner packets are one
+                # sparse group (<= P slots of dp+msg+cnt), raw packets one
+                # staged chunk (dp+msg+valid per slot)
+                if self.program.combiner is not None:
+                    per_packet = pg.P * (4 + mdt + 4)
+                else:
+                    per_packet = (self._stream_reader.chunk_blocks
+                                  * pg.edge_block * (4 + mdt + 1))
+                out["channel"] = self.channel_inflight * per_packet
             if self.program.combiner is None:
                 # the disk message tier (§3.3): messages are spilled to OMS
                 # runs and merge-streamed back, so the only message-sized RAM

@@ -205,14 +205,16 @@ def drop_edges(pg: PartitionedGraph) -> PartitionedGraph:
     )
 
 
-def spill_partition(pg: PartitionedGraph, directory: str):
+def spill_partition(pg: PartitionedGraph, directory: str,
+                    compress: bool = False):
     """Write the edge groups of ``pg`` to an on-disk ``EdgeStreamStore`` and
     return ``(vertex_only_pg, store)`` — the paper's partition-time spill:
     edges are written once, sequentially, in the per-destination group
-    layout, and streamed back every superstep."""
+    layout, and streamed back every superstep. ``compress=True`` varint-delta
+    encodes the position channels (streams/codec.py)."""
     from repro.streams.store import EdgeStreamStore  # deferred: streams -> partition
 
-    store = EdgeStreamStore.from_partition(pg, directory)
+    store = EdgeStreamStore.from_partition(pg, directory, compress=compress)
     return drop_edges(pg), store
 
 
@@ -223,6 +225,7 @@ def partition_graph_streamed(
     edge_block: int = 512,
     vertex_pad: int = 8,
     recode: RecodeMap | None = None,
+    compress: bool = False,
 ):
     """``partition_graph`` for the out-of-core path: partitions, spills the
     edge streams to ``spill_dir``, and returns ``(pg, rmap, store)`` where
@@ -231,7 +234,7 @@ def partition_graph_streamed(
         g, n_shards, edge_block=edge_block, vertex_pad=vertex_pad,
         recode=recode,
     )
-    pg, store = spill_partition(pg_full, spill_dir)
+    pg, store = spill_partition(pg_full, spill_dir, compress=compress)
     return pg, rmap, store
 
 

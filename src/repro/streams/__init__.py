@@ -1,7 +1,9 @@
-"""Out-of-core streaming (paper §3): the on-disk edge-block store, the
-double-buffered prefetching reader behind the engine's ``streamed`` mode, and
+"""Out-of-core streaming (paper §3–§4): the on-disk edge-block store, the
+double-buffered prefetching reader behind the engine's ``streamed`` mode,
 the disk-spilled outgoing-message (OMS) run store with its §3.3.1 external
-merge for combiner-less programs.
+merge for combiner-less programs, the outbox→inbox channel layer that
+overlaps transmission with compute (§4), and the varint-delta codec behind
+the ``compress=`` knobs.
 """
 
 from repro.streams.store import EdgeStreamStore, StoreGeometry
@@ -10,6 +12,12 @@ from repro.streams.reader import (
 )
 from repro.streams.schedule import plan_stream_schedule
 from repro.streams.msgstore import MessageRunStore, RunSegment
+from repro.streams.channel import (
+    ChannelError, ChannelStats, FaultPoint, ShardChannels,
+)
+from repro.streams.codec import (
+    VarintDeltaDecoder, decode_varint_delta, encode_varint_delta,
+)
 
 __all__ = [
     "EdgeStreamStore",
@@ -21,4 +29,11 @@ __all__ = [
     "plan_stream_schedule",
     "MessageRunStore",
     "RunSegment",
+    "ChannelError",
+    "ChannelStats",
+    "FaultPoint",
+    "ShardChannels",
+    "VarintDeltaDecoder",
+    "decode_varint_delta",
+    "encode_varint_delta",
 ]

@@ -1,0 +1,292 @@
+"""Per-destination outbox→inbox message channels — the paper's §4 parallel
+sender pipeline (U_s ∥ U_c), reproduced at the host-thread boundary.
+
+GraphD's headline design is that every worker "fully overlaps computation
+with communication": while the compute thread is still folding edge blocks
+for one destination group, the message groups that are already combined are
+being serialized, optionally varint-delta compressed, and *transmitted* in
+parallel by a dedicated sender. In this reproduction "transmission" is an
+append to the destination shard's **inbox run files** (a
+``streams.msgstore.MessageRunStore`` — one sorted run per transmitted group,
+tagged with the producing source shard), which is exactly what a remote
+GraphD machine would do with the bytes on arrival, and doubles as the
+persisted-OMS message log of §3.4 when a ``RunFileMessageLog`` backs it.
+
+:class:`ShardChannels` is that pipeline:
+
+* ``send`` / ``send_raw`` enqueue one outgoing packet (a combined ``A_s``
+  group, or one edge chunk's raw messages) onto a **bounded** in-flight
+  queue — the producer blocks once ``inflight`` packets are queued, so the
+  channel adds only a compiled-in constant to the engine's O(|V|/n) resident
+  budget (each packet is at most one sparse group / one staged chunk);
+* one background sender thread drains the queue in FIFO order: serializes,
+  sorts raw packets by destination, appends to the inbox store, and runs the
+  enqueued §3.3.1 compaction ops — all strictly in send order, so the inbox
+  run table evolves exactly as the unpipelined engine's did (results can
+  never depend on thread timing);
+* ``flush`` is the per-destination barrier (all packets sent before the
+  receiver digests an inbox), ``close`` the end-of-superstep join;
+* :class:`ChannelStats` measures the overlap: ``send_seconds`` the sender
+  spent transmitting vs ``stall_seconds`` the compute thread spent blocked
+  on the channel — ``overlap_seconds`` (their difference) is transmit time
+  hidden under compute, the quantity the paper's full-overlap claim is
+  about (surfaced by ``benchmarks/bench_memory.py``);
+* :class:`FaultPoint` is deterministic crash injection for fault drills: the
+  sender thread dies after exactly N packets, mid-superstep, and the error
+  surfaces on the next channel call — ``tests/test_fault.py`` drives
+  recovery through it.
+
+A sender crash can never publish a torn run: packets are appended atomically
+at the Python level and the inbox index is only written at ``close_step``,
+so recovery (``MessageRunStore`` re-``create`` on rerun, or
+``recover_shard_streamed`` replay) starts from a consistent store.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.streams.msgstore import MessageRunStore
+
+
+class ChannelError(RuntimeError):
+    """The sender thread died; the original error is the ``__cause__``."""
+
+
+@dataclass
+class FaultPoint:
+    """Deterministic fault injection: kill the sender thread once it has
+    fully transmitted ``after_packets`` packets (barriers and compaction ops
+    do not count). The count is cumulative across channels — i.e. across
+    supersteps of one engine run, since packets flow in FIFO program order —
+    so a single integer pins the crash to an exact packet of an exact
+    superstep. Used by the crash drills in tests/test_fault.py."""
+
+    after_packets: int
+    message: str = "injected sender fault"
+    fired: bool = field(default=False)
+    _count: int = field(default=0, repr=False)
+
+    def record(self) -> None:
+        self._count += 1
+        if self._count >= self.after_packets:
+            self.fired = True
+            raise RuntimeError(self.message)
+
+
+@dataclass
+class ChannelStats:
+    """Per-superstep channel accounting (surfaced by bench_memory)."""
+
+    packets: int = 0
+    messages: int = 0
+    payload_bytes: int = 0  # pre-serialization bytes handed to the sender
+    send_seconds: float = 0.0  # sender busy (serialize/compress/append)
+    stall_seconds: float = 0.0  # compute thread blocked on the channel
+
+    def overlap_seconds(self) -> float:
+        """Transmit time hidden under compute: the sender was busy for
+        ``send_seconds`` but only ``stall_seconds`` of it ever held the
+        compute thread up — the rest ran under the fold (U_c ∥ U_s)."""
+        return max(self.send_seconds - self.stall_seconds, 0.0)
+
+
+_CLOSE = object()
+
+
+class ShardChannels:
+    """Outbox→inbox channels over one inbox store, one sender thread, and a
+    bounded in-flight budget."""
+
+    def __init__(self, inbox: MessageRunStore, inflight: int = 4,
+                 fault: FaultPoint | None = None):
+        if inflight < 1:
+            raise ValueError("inflight budget must be >= 1")
+        self.inbox = inbox
+        self.inflight = inflight
+        self.stats = ChannelStats()
+        self._fault = fault
+        self._q: queue.Queue = queue.Queue(maxsize=inflight)
+        self._exc: BaseException | None = None
+        self._dead = threading.Event()
+        self._aborting = threading.Event()
+        self._worker = threading.Thread(
+            target=self._run, name="channel-sender", daemon=True
+        )
+        self._worker.start()
+
+    # -- producer side (the compute thread) ----------------------------------
+    def send(self, dest: int, dp: np.ndarray, msg: np.ndarray,
+             cnt: np.ndarray | None = None, tag: int = -1) -> None:
+        """Transmit one already-combined, destination-sorted group (the
+        sparse A_s(tag→dest) of §5): appended to ``dest``'s inbox as one
+        tagged run. The arrays must be owned by the caller (they cross a
+        thread boundary)."""
+        self._put(("run", dest, dp, msg, cnt, tag))
+
+    def send_combined(self, dest: int, A: np.ndarray, cnt: np.ndarray,
+                      tag: int = -1) -> None:
+        """Transmit one dense combined group A_s(tag→dest) (§5): the sender
+        sparsifies (positions with cnt == 0 hold the combiner identity and
+        are dropped on the wire) and appends one tagged run — serialization
+        moves off the compute thread."""
+        self._put(("combined", dest, A, cnt, tag))
+
+    def send_raw(self, dest: int, dp: np.ndarray, msg: np.ndarray,
+                 valid: np.ndarray, tag: int = -1) -> None:
+        """Transmit one edge chunk's raw messages (combiner-less path): the
+        sender filters invalid lanes, destination-sorts, and appends — the
+        spill sort itself moves off the compute thread."""
+        self._put(("raw", dest, dp, msg, valid, tag))
+
+    def compact(self, dest: int, tag: int, fanin: int,
+                read_chunk: int) -> None:
+        """Enqueue a §3.3.1 bounded-fan-in compaction of ``tag``'s inbox
+        runs; runs in send order like every other op."""
+        self._put(("compact", dest, tag, fanin, read_chunk))
+
+    def flush(self) -> None:
+        """Barrier: returns once every previously enqueued op has been
+        applied to the inbox (the receiver may digest after this). Raises
+        if the sender died first — a barrier released by the death-path
+        drain does NOT mean the ops before it landed."""
+        done = threading.Event()
+        self._put(("barrier", done))
+        t0 = time.perf_counter()
+        while not done.wait(timeout=0.05):
+            if self._dead.is_set():
+                break
+        self.stats.stall_seconds += time.perf_counter() - t0
+        if self._dead.is_set():
+            # the sender processes ops FIFO and this thread is the only
+            # producer, so a dead sender at this point means the barrier was
+            # drained, not executed — ops before it may be missing
+            self._raise()
+            raise ChannelError("channel sender died before the barrier")
+
+    def close(self) -> None:
+        """Flush, stop the sender, and surface any sender error."""
+        if self._worker.is_alive():
+            self._offer_close()
+            self._worker.join(timeout=10.0)
+            self._check_stopped()
+        self._raise()
+
+    def abort(self) -> None:
+        """Stop the sender WITHOUT surfacing its error — the crash-path
+        cleanup (the superstep already failed; a second raise would mask
+        the original). The sender discards any queued backlog (it is all
+        destined for a store the caller is about to drop) instead of
+        transmitting it, so abort returns promptly. A sender that still
+        will not stop — hung mid-op — is the one exception that stays
+        loud, or a rerun would truncate files a zombie thread keeps
+        appending to."""
+        self._aborting.set()
+        self._offer_close()
+        self._worker.join(timeout=10.0)
+        self._check_stopped()
+
+    def _offer_close(self) -> None:
+        """Try to hand the sender a _CLOSE, giving up after 10s: a sender
+        hung mid-op behind a full queue must fall through to join +
+        _check_stopped (the loud hang report), not spin here forever."""
+        deadline = time.monotonic() + 10.0
+        while (self._worker.is_alive() and not self._dead.is_set()
+               and time.monotonic() < deadline):
+            try:
+                self._q.put((_CLOSE,), timeout=0.05)
+                return
+            except queue.Full:
+                pass
+
+    def _check_stopped(self) -> None:
+        if self._worker.is_alive():
+            # python cannot kill a thread: surface the hang rather than let
+            # the caller truncate/republish files the sender still writes
+            raise ChannelError(
+                "channel sender did not stop within 10s; its open file "
+                "handles make the inbox store unsafe to reuse"
+            )
+
+    # -- internals ------------------------------------------------------------
+    def _raise(self) -> None:
+        if self._exc is not None:
+            raise ChannelError("channel sender thread died") from self._exc
+
+    def _put(self, item) -> None:
+        t0 = time.perf_counter()
+        while True:
+            if self._dead.is_set():
+                self.stats.stall_seconds += time.perf_counter() - t0
+                self._raise()
+                raise ChannelError("channel is closed")
+            try:
+                self._q.put(item, timeout=0.05)
+                break
+            except queue.Full:
+                pass
+        self.stats.stall_seconds += time.perf_counter() - t0
+
+    def _run(self) -> None:
+        try:
+            while True:
+                item = self._q.get()
+                op = item[0]
+                if op is _CLOSE or self._aborting.is_set():
+                    return
+                if op == "barrier":
+                    item[1].set()
+                    continue
+                t0 = time.perf_counter()
+                if op == "run":
+                    _, dest, dp, msg, cnt, tag = item
+                    self.inbox.append_run(dest, dp, msg, cnt=cnt, tag=tag)
+                    self._account(dp, msg, cnt)
+                elif op == "combined":
+                    _, dest, A, cnt, tag = item
+                    seg = self.inbox.append_combined(dest, A, cnt, tag=tag)
+                    self._account_n(seg.length,
+                                    seg.length * (4 + A.itemsize + 4))
+                elif op == "raw":
+                    _, dest, dp, msg, valid, tag = item
+                    seg = self.inbox.append_raw(dest, dp, msg, valid, tag=tag)
+                    n = seg.length if seg is not None else 0
+                    per = dp.itemsize + msg.itemsize
+                    self._account_n(n, n * per)
+                elif op == "compact":
+                    _, dest, tag, fanin, read_chunk = item
+                    self.inbox.compact_tag(dest, tag, fanin, read_chunk)
+                    self.stats.send_seconds += time.perf_counter() - t0
+                    continue
+                self.stats.send_seconds += time.perf_counter() - t0
+                if self._fault is not None:
+                    self._fault.record()
+        except BaseException as e:
+            self._exc = e
+        finally:
+            self._dead.set()
+            # unblock producers waiting on a full queue; drained barriers
+            # are set only to wake their waiters fast — flush() re-checks
+            # _dead and refuses to treat a drained barrier as success
+            while True:
+                try:
+                    leftover = self._q.get_nowait()
+                    if leftover[0] == "barrier":
+                        leftover[1].set()
+                except queue.Empty:
+                    break
+
+    def _account(self, dp, msg, cnt) -> None:
+        self._account_n(int(dp.size), int(
+            dp.nbytes + msg.nbytes + (cnt.nbytes if cnt is not None else 0)
+        ))
+
+    def _account_n(self, messages: int, payload_bytes: int) -> None:
+        self.stats.packets += 1
+        self.stats.messages += messages
+        self.stats.payload_bytes += payload_bytes

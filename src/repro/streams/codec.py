@@ -1,0 +1,139 @@
+"""Varint-delta codec for the sorted position columns of on-disk streams.
+
+The paper's streaming analysis (§3) argues cost in terms of *sequential disk
+bandwidth*, so shrinking the byte stream is a direct superstep speedup: the
+sorted ``dst_pos`` column of a message run (and the source-sorted ``src_pos``
+column of an edge block) is monotone, so consecutive deltas are tiny and a
+varint encoding stores most of them in one byte instead of four.
+
+Encoding: first value absolute, the rest first-order deltas; every delta is
+zigzag-mapped (so out-of-order inputs — e.g. the unsorted ``dst_pos`` column
+of a source-sorted edge block, or the ``-1`` padding tail — still round-trip,
+they just compress less) and LEB128 varint-packed, 7 bits per byte with a
+continuation MSB.
+
+Both directions are numpy-vectorized (no per-value Python loop):
+
+* :func:`encode_varint_delta` builds the byte-length table for all values at
+  once and scatters the 7-bit groups by position;
+* :func:`decode_varint_delta` recovers value boundaries from the
+  continuation bits with one cumulative sum and reassembles every value with
+  a single ``np.add.at``.
+
+:class:`VarintDeltaDecoder` is the streaming form: it decodes a blob in
+bounded chunks while carrying the delta predecessor across calls, so the
+external-merge cursors of ``streams/msgstore.py`` keep their O(read_chunk)
+residency over compressed runs. Chained encoding (``prev=``) is the mirror
+image, used by run compaction to emit one logical stream chunk-by-chunk.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_U64 = np.uint64
+_MAX_VARINT_BYTES = 10  # ceil(64 / 7)
+
+
+def encode_varint_delta(values: np.ndarray, prev: int | None = None) -> bytes:
+    """Delta + zigzag + LEB128 encode ``values`` (any integer dtype).
+
+    ``prev`` chains encoding across chunks of one logical stream: when given,
+    the first delta is ``values[0] - prev`` instead of an absolute value, so
+    ``encode(a) + encode(b, prev=a[-1])`` decodes identically to
+    ``encode(concat(a, b))``.
+    """
+    v = np.asarray(values, dtype=np.int64)
+    if v.ndim != 1:
+        raise ValueError("encode_varint_delta takes a 1-D integer array")
+    if v.size == 0:
+        return b""
+    d = np.empty_like(v)
+    d[0] = v[0] if prev is None else v[0] - int(prev)
+    np.subtract(v[1:], v[:-1], out=d[1:])
+    # zigzag: sign bit to bit 0, magnitude doubled -> small |delta| stays small
+    z = ((d << 1) ^ (d >> 63)).astype(_U64)
+
+    nbytes = np.ones(z.shape, np.int64)
+    rest = z >> _U64(7)
+    while rest.any():
+        nbytes += (rest > 0)
+        rest >>= _U64(7)
+    ends = np.cumsum(nbytes)
+    starts = ends - nbytes
+    out = np.zeros(int(ends[-1]), np.uint8)
+    for j in range(int(nbytes.max())):
+        m = nbytes > j
+        group = ((z[m] >> _U64(7 * j)) & _U64(0x7F)).astype(np.uint8)
+        cont = (nbytes[m] - 1 > j).astype(np.uint8) << 7
+        out[starts[m] + j] = group | cont
+    return out.tobytes()
+
+
+def decode_varint_delta(data: bytes | np.ndarray,
+                        prev: int | None = None) -> np.ndarray:
+    """Inverse of :func:`encode_varint_delta`; returns int64 values.
+
+    ``prev`` must match the value passed at encode time (None for a
+    self-contained blob, the predecessor value for a chained chunk).
+    """
+    b = np.frombuffer(data, np.uint8) if not isinstance(data, np.ndarray) \
+        else data.astype(np.uint8, copy=False)
+    if b.size == 0:
+        return np.empty((0,), np.int64)
+    is_end = (b & 0x80) == 0
+    if not is_end[-1]:
+        raise ValueError("truncated varint stream (dangling continuation)")
+    vid = np.zeros(b.size, np.int64)
+    np.cumsum(is_end[:-1], out=vid[1:])
+    val_starts = np.concatenate([[0], np.nonzero(is_end)[0][:-1] + 1])
+    pos = np.arange(b.size, dtype=np.int64) - val_starts[vid]
+    if int(pos.max()) >= _MAX_VARINT_BYTES:
+        raise ValueError("varint longer than 10 bytes (corrupt stream)")
+    z = np.zeros(int(vid[-1]) + 1, _U64)
+    contrib = (b & 0x7F).astype(_U64) << (_U64(7) * pos.astype(_U64))
+    np.add.at(z, vid, contrib)  # 7-bit groups never overlap -> add == or
+    # un-zigzag in uint64 (a signed shift would sign-extend bit 63 and
+    # corrupt |values| >= 2^62), then reinterpret the bits as int64
+    d = ((z >> _U64(1)) ^ (_U64(0) - (z & _U64(1)))).view(np.int64)
+    if prev is not None:
+        d = d.copy()
+        d[0] += int(prev)
+    return np.cumsum(d)
+
+
+class VarintDeltaDecoder:
+    """Streaming decoder over one encoded blob: yields bounded chunks of
+    values in order, holding only a cursor (byte position + predecessor) —
+    the compressed-run counterpart of a fixed-size read window."""
+
+    def __init__(self, blob: np.ndarray | bytes, n_values: int):
+        self._blob = (np.frombuffer(blob, np.uint8)
+                      if not isinstance(blob, np.ndarray) else blob)
+        self._n = int(n_values)
+        self._done = 0
+        self._byte = 0
+        self._prev: int | None = None
+
+    @property
+    def remaining(self) -> int:
+        return self._n - self._done
+
+    def take(self, count: int) -> np.ndarray:
+        """Decode the next ``min(count, remaining)`` values."""
+        count = min(int(count), self.remaining)
+        if count <= 0:
+            return np.empty((0,), np.int64)
+        # a value is <= 10 bytes: a bounded byte window always covers `count`
+        window = self._blob[self._byte:
+                            self._byte + count * _MAX_VARINT_BYTES]
+        is_end = (window & 0x80) == 0
+        ends = np.nonzero(is_end)[0]
+        if ends.size < count:
+            raise ValueError("truncated varint stream (short blob)")
+        used = int(ends[count - 1]) + 1
+        vals = decode_varint_delta(window[:used], prev=self._prev)
+        self._byte += used
+        self._done += count
+        self._prev = int(vals[-1])
+        return vals

@@ -13,10 +13,15 @@ streaming analysis assumes.
 ``MessageRunStore`` is that tier:
 
 * per destination shard ``k``, two flat binary append-only files
-  (``oms-k.dp.bin`` int32 destination positions, ``oms-k.msg.bin`` payloads;
-  an optional ``oms-k.cnt.bin`` int32 channel carries combined-message
-  counts when the store backs a message log) plus an in-memory run table —
-  each run is a contiguous, destination-sorted segment of those files;
+  (``oms-k.dp.bin`` destination positions, ``oms-k.msg.bin`` payloads; an
+  optional ``oms-k.cnt.bin`` int32 channel carries combined-message counts
+  when the store backs a message log) plus an in-memory run table — each run
+  is a contiguous, destination-sorted segment of those files;
+* with ``compress=True`` the sorted ``dp`` channel is varint-delta encoded
+  (``streams/codec.py``): each run's positions become one self-contained
+  blob, read back through a bounded streaming decoder, so the paper's
+  sequential-bandwidth argument gets a smaller stream at the same
+  O(read_chunk) residency;
 * ``iter_merged`` — a k-way heap merge over the sorted runs that reads each
   run through a small fixed-size cursor buffer, so merge-time resident
   memory is O(fan-in · read_chunk), never O(messages);
@@ -25,7 +30,10 @@ streaming analysis assumes.
   runs are merged into longer runs on disk until the fan-in bound holds
   (tags record the producing source shard, so log-backed stores never lose
   message attribution — single-shard recovery excludes the failed shard's
-  own runs and regenerates them instead);
+  own runs and regenerates them instead). Superseded segments become dead
+  file regions; once a destination's dead bytes reach its live bytes,
+  :meth:`vacuum` rewrites the files compactly, so compaction can no longer
+  leak disk until the per-step store is deleted;
 * ``merged_slices`` — fixed-capacity, *destination-aligned* slices of the
   merged stream, padded with the ``dst = P`` sentinel, ready for
   ``program.apply_list``. A vertex's whole message run always lands in one
@@ -34,11 +42,14 @@ streaming analysis assumes.
 
 A JSON index (run table + geometry) makes a store re-openable after a crash,
 which is what lets ``RunFileMessageLog`` (core/checkpoint.py) use these same
-run files as the persisted OMSs of the paper's fast-recovery protocol.
+run files as the persisted OMSs of the paper's fast-recovery protocol — and
+the pipelined engine's *inbox* files (streams/channel.py) are exactly these
+stores, so transmitted-but-unapplied messages survive a crash the same way.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import json
 import os
@@ -47,30 +58,45 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.streams.codec import (
+    VarintDeltaDecoder, decode_varint_delta, encode_varint_delta,
+)
+
 INDEX = "index.json"
 
 
 @dataclass(frozen=True)
 class RunSegment:
-    """One sorted run: a contiguous slice of a destination's OMS files."""
+    """One sorted run: a contiguous slice of a destination's OMS files.
+
+    ``offset``/``length`` are in messages (the msg/cnt channels are fixed
+    width); ``dp_off``/``dp_nbytes`` are the *byte* extent of the run's
+    varint-delta blob in the dp file when the store is compressed (-1 on
+    uncompressed stores, where the dp extent is implied by offset/length).
+    """
 
     tag: int  # producing source shard (-1 = untagged)
     offset: int  # messages before this run in the files
     length: int  # messages in this run
+    dp_off: int = -1  # byte offset of the compressed dp blob
+    dp_nbytes: int = -1  # byte length of the compressed dp blob
 
 
 class MessageRunStore:
     """Append-only per-destination sorted message runs + bounded k-way merge."""
 
     def __init__(self, directory: str, n_shards: int, P: int, msg_dtype,
-                 with_counts: bool = False, create: bool = True):
+                 with_counts: bool = False, create: bool = True,
+                 compress: bool = False):
         self.dir = directory
         self.n_shards = n_shards
         self.P = P
         self.msg_dtype = np.dtype(msg_dtype)
         self.with_counts = with_counts
+        self.compress = bool(compress)
         self._runs: list[list[RunSegment]] = [[] for _ in range(n_shards)]
         self._sizes = [0] * n_shards  # messages written per destination
+        self._dp_bytes = [0] * n_shards  # dp file bytes (compressed stores)
         # per-(dest, position) message counts: O(|V|) host ints, the slice
         # planner's only state (NOT O(messages))
         self._counts = np.zeros((n_shards, P), np.int64)
@@ -96,7 +122,11 @@ class MessageRunStore:
         return ("dp", "msg", "cnt") if self.with_counts else ("dp", "msg")
 
     def _dtype(self, ch: str):
-        return self.msg_dtype if ch == "msg" else np.dtype(np.int32)
+        if ch == "msg":
+            return self.msg_dtype
+        if ch == "dp" and self.compress:
+            return np.dtype(np.uint8)
+        return np.dtype(np.int32)
 
     def _path(self, dest: int, ch: str) -> str:
         return os.path.join(self.dir, f"oms-{dest:03d}.{ch}.bin")
@@ -120,9 +150,18 @@ class MessageRunStore:
             raise ValueError("append_run requires destination-sorted input")
         if self.with_counts and cnt is None:
             raise ValueError("this store carries a count channel; pass cnt=")
-        seg = RunSegment(tag=tag, offset=self._sizes[dest], length=int(dp.size))
-        self._handle(dest, "dp").write(
-            np.ascontiguousarray(dp, np.int32).tobytes())
+        if self.compress:
+            blob = encode_varint_delta(np.asarray(dp, np.int64))
+            seg = RunSegment(tag=tag, offset=self._sizes[dest],
+                             length=int(dp.size),
+                             dp_off=self._dp_bytes[dest], dp_nbytes=len(blob))
+            self._handle(dest, "dp").write(blob)
+            self._dp_bytes[dest] += len(blob)
+        else:
+            seg = RunSegment(tag=tag, offset=self._sizes[dest],
+                             length=int(dp.size))
+            self._handle(dest, "dp").write(
+                np.ascontiguousarray(dp, np.int32).tobytes())
         self._handle(dest, "msg").write(
             np.ascontiguousarray(msg, self.msg_dtype).tobytes())
         if self.with_counts:
@@ -139,6 +178,41 @@ class MessageRunStore:
             )
         self._runs[dest].append(seg)
         return seg
+
+    def append_combined(self, dest: int, A: np.ndarray, cnt: np.ndarray,
+                        tag: int = -1) -> RunSegment:
+        """One dense combined buffer A_s(tag→dest) -> one sparse sorted run:
+        positions with no messages hold the combiner identity by
+        construction and are dropped on the wire. THE combined-group format
+        — shared by the channel sender, the message log and recovery, so
+        the three can never drift."""
+        dp = np.nonzero(np.asarray(cnt) > 0)[0].astype(np.int32)
+        return self.append_run(dest, dp, np.asarray(A)[dp],
+                               cnt=np.asarray(cnt)[dp].astype(np.int32),
+                               tag=tag)
+
+    def read_combined(self, dest: int, seg: RunSegment, e0):
+        """Inverse of :meth:`append_combined`: densify one sparse run back
+        to full (P,) ``(A, cnt)`` buffers, identity at absent positions."""
+        dp, msg, cnt = self.read_run(dest, seg)
+        A = np.full((self.P,), e0, dtype=self.msg_dtype)
+        A[dp] = msg
+        c = np.zeros((self.P,), np.int32)
+        c[dp] = cnt
+        return A, c
+
+    def append_raw(self, dest: int, dp: np.ndarray, msg: np.ndarray,
+                   valid: np.ndarray, tag: int = -1) -> RunSegment | None:
+        """One edge chunk's raw messages -> one sorted run: drop invalid
+        lanes, stable-sort by destination, append. THE spill transform —
+        shared by the inline engine path and the channel sender, so the
+        pipelined run's byte-identical-results guarantee can never drift.
+        Returns None when the chunk had no valid messages."""
+        dpv = dp[valid]
+        if not dpv.size:
+            return None
+        order = np.argsort(dpv, kind="stable")
+        return self.append_run(dest, dpv[order], msg[valid][order], tag=tag)
 
     # -- run access -----------------------------------------------------------
     def runs(self, dest: int) -> list[RunSegment]:
@@ -165,35 +239,53 @@ class MessageRunStore:
 
     def _read_mm(self, dest: int):
         """Fresh read memmaps over the currently-written extent (writers only
-        ever append, so an open memmap never sees moving data)."""
-        for (d, ch), fh in self._wfh.items():
+        ever append, so an open memmap never sees moving data). Snapshot the
+        handle table: a channel sender may be opening handles for OTHER
+        destinations while this destination is being merged."""
+        for (d, ch), fh in list(self._wfh.items()):
             if d == dest:
                 fh.flush()
-        size = self._sizes[dest]
-        if size == 0:
-            return {ch: np.empty((0,), self._dtype(ch))
-                    for ch in self._channels()}
+        sizes = {ch: self._sizes[dest] for ch in self._channels()}
+        if self.compress:
+            sizes["dp"] = self._dp_bytes[dest]
         return {
-            ch: np.memmap(self._path(dest, ch), dtype=self._dtype(ch),
-                          mode="r", shape=(size,))
+            ch: (np.empty((0,), self._dtype(ch)) if sizes[ch] == 0 else
+                 np.memmap(self._path(dest, ch), dtype=self._dtype(ch),
+                           mode="r", shape=(sizes[ch],)))
             for ch in self._channels()
         }
+
+    def _dp_blob(self, mm: dict, seg: RunSegment) -> np.ndarray:
+        return mm["dp"][seg.dp_off:seg.dp_off + seg.dp_nbytes]
 
     def read_run(self, dest: int, seg: RunSegment):
         """Materialize one run (tests / log densification — small runs)."""
         mm = self._read_mm(dest)
         sl = slice(seg.offset, seg.offset + seg.length)
-        out = tuple(np.array(mm[ch][sl]) for ch in self._channels())
-        return out
+        if self.compress:
+            dp = decode_varint_delta(np.array(self._dp_blob(mm, seg)))
+            dp = dp.astype(np.int32)
+        else:
+            dp = np.array(mm["dp"][sl])
+        rest = tuple(np.array(mm[ch][sl]) for ch in self._channels()[1:])
+        return (dp,) + rest
 
     def iter_run(self, dest: int, seg: RunSegment, read_chunk: int = 4096):
         """Stream one run in bounded chunks (per-channel tuples) — for
         copying arbitrarily long runs without materializing them."""
         mm = self._read_mm(dest)
+        # the blob stays a memmap view: the decoder reads it in bounded
+        # windows, so even a compaction-length run costs O(read_chunk) heap
+        dec = (VarintDeltaDecoder(self._dp_blob(mm, seg), seg.length)
+               if self.compress else None)
         end = seg.offset + seg.length
         for off in range(seg.offset, end, max(1, read_chunk)):
             hi = min(off + max(1, read_chunk), end)
-            yield tuple(np.array(mm[ch][off:hi]) for ch in self._channels())
+            dp = (dec.take(hi - off).astype(np.int32) if dec is not None
+                  else np.array(mm["dp"][off:hi]))
+            yield (dp,) + tuple(
+                np.array(mm[ch][off:hi]) for ch in self._channels()[1:]
+            )
 
     # -- the external merge (§3.3.1) -----------------------------------------
     def iter_merged(self, dest: int, read_chunk: int = 4096,
@@ -208,7 +300,11 @@ class MessageRunStore:
             return
         mm = self._read_mm(dest)
         channels = self._channels()
-        cursors = [_Cursor(mm, s, read_chunk, channels) for s in segs]
+        cursors = [
+            _Cursor(mm, s, read_chunk, channels,
+                    dp_blob=self._dp_blob(mm, s) if self.compress else None)
+            for s in segs
+        ]
         heap = [(c.head, j) for j, c in enumerate(cursors)]
         heapq.heapify(heap)
         while heap:
@@ -224,18 +320,32 @@ class MessageRunStore:
         """Multi-pass merge of all runs with this ``tag`` down to ONE run,
         never holding more than ``fanin`` cursors open (§3.3.1's bounded
         external merge-sort). All channels are rewritten together. Merged
-        output is appended to the same files; superseded segments become
-        dead file regions (reclaimed when the per-step store is deleted)."""
+        output is appended to the same files and the superseded segments
+        become dead regions; :meth:`vacuum` reclaims them as soon as they
+        outweigh the live data, so repeated compaction holds disk usage at
+        <= 2x the live bytes instead of leaking until store deletion."""
         channels = self._channels()
         while True:
             mine = [s for s in self._runs[dest] if s.tag == tag]
             if len(mine) <= 1:
+                self.vacuum_if_worthwhile(dest)
                 return
             batch = mine[:max(2, fanin)]
             offset = self._sizes[dest]
+            dp_off = self._dp_bytes[dest]
             length = 0
+            prev = None  # chains the varint deltas across merge chunks
             for part in self.iter_merged(dest, read_chunk, segments=batch):
-                for ch, arr in zip(channels, part):
+                if self.compress:
+                    blob = encode_varint_delta(
+                        np.asarray(part[0], np.int64), prev=prev)
+                    prev = int(part[0][-1])
+                    self._handle(dest, "dp").write(blob)
+                    self._dp_bytes[dest] += len(blob)
+                else:
+                    self._handle(dest, "dp").write(
+                        np.ascontiguousarray(part[0], np.int32).tobytes())
+                for ch, arr in zip(channels[1:], part[1:]):
                     self._handle(dest, ch).write(
                         np.ascontiguousarray(arr, self._dtype(ch)).tobytes())
                 length += int(part[0].size)
@@ -243,9 +353,95 @@ class MessageRunStore:
                 if (dest, ch) in self._wfh:
                     self._wfh[(dest, ch)].flush()
             self._sizes[dest] += length
-            merged = RunSegment(tag=tag, offset=offset, length=length)
+            merged = RunSegment(
+                tag=tag, offset=offset, length=length,
+                dp_off=dp_off if self.compress else -1,
+                dp_nbytes=(self._dp_bytes[dest] - dp_off)
+                if self.compress else -1,
+            )
             keep = [s for s in self._runs[dest] if s not in batch]
             self._runs[dest] = keep + [merged]
+
+    # -- dead-region reclamation ---------------------------------------------
+    def _per_msg_fixed_bytes(self) -> int:
+        """Bytes per message in the fixed-width channels (msg [+ cnt], and dp
+        when uncompressed)."""
+        b = self.msg_dtype.itemsize
+        if self.with_counts:
+            b += 4
+        if not self.compress:
+            b += 4
+        return b
+
+    def live_bytes(self, dest: int) -> int:
+        live = sum(s.length for s in self._runs[dest])
+        b = live * self._per_msg_fixed_bytes()
+        if self.compress:
+            b += sum(max(s.dp_nbytes, 0) for s in self._runs[dest])
+        return b
+
+    def dead_bytes(self, dest: int) -> int:
+        """Bytes of superseded (compacted-away) run data still on disk."""
+        live = sum(s.length for s in self._runs[dest])
+        b = (self._sizes[dest] - live) * self._per_msg_fixed_bytes()
+        if self.compress:
+            live_dp = sum(max(s.dp_nbytes, 0) for s in self._runs[dest])
+            b += self._dp_bytes[dest] - live_dp
+        return b
+
+    def vacuum_if_worthwhile(self, dest: int) -> bool:
+        """Vacuum when the dead regions outweigh the live data — amortized
+        O(1) rewrites per byte of compacted traffic."""
+        dead = self.dead_bytes(dest)
+        if dead and dead >= self.live_bytes(dest):
+            self.vacuum(dest)
+            return True
+        return False
+
+    def vacuum(self, dest: int) -> None:
+        """Rewrite ``dest``'s files with only the live segments (chunked
+        sequential copy — never materializes a run), atomically replacing
+        the originals and re-basing every run's offsets. Reclaims the dead
+        regions compaction leaves behind."""
+        if not self.dead_bytes(dest):
+            return
+        channels = self._channels()
+        for ch in channels:
+            fh = self._wfh.pop((dest, ch), None)
+            if fh is not None:
+                fh.close()
+        mm = self._read_mm(dest)
+        tmp = {ch: open(self._path(dest, ch) + ".vacuum", "wb")
+               for ch in channels}
+        new_runs = []
+        off = 0
+        dp_off = 0
+        for seg in self._runs[dest]:
+            if self.compress:
+                blob = np.ascontiguousarray(self._dp_blob(mm, seg))
+                tmp["dp"].write(blob.tobytes())
+                nbytes = int(blob.size)
+            else:
+                tmp["dp"].write(np.ascontiguousarray(
+                    mm["dp"][seg.offset:seg.offset + seg.length]).tobytes())
+                nbytes = -1
+            for ch in channels[1:]:
+                tmp[ch].write(np.ascontiguousarray(
+                    mm[ch][seg.offset:seg.offset + seg.length]).tobytes())
+            new_runs.append(dataclasses.replace(
+                seg, offset=off,
+                dp_off=dp_off if self.compress else -1, dp_nbytes=nbytes,
+            ))
+            off += seg.length
+            dp_off += max(nbytes, 0)
+        del mm  # drop the read maps over the old inodes before replacing
+        for ch in channels:
+            tmp[ch].close()
+            os.replace(self._path(dest, ch) + ".vacuum",
+                       self._path(dest, ch))
+        self._runs[dest] = new_runs
+        self._sizes[dest] = off
+        self._dp_bytes[dest] = dp_off
 
     def merged_slices(self, dest: int, capacity: int, read_chunk: int = 4096):
         """Destination-aligned fixed-shape slices of the merged stream.
@@ -304,7 +500,8 @@ class MessageRunStore:
         index = dict(
             n_shards=self.n_shards, P=self.P,
             msg_dtype=self.msg_dtype.name, with_counts=self.with_counts,
-            sizes=self._sizes,
+            compress=self.compress,
+            sizes=self._sizes, dp_bytes=self._dp_bytes,
             runs=[[s.__dict__ for s in runs] for runs in self._runs],
         )
         tmp = os.path.join(self.dir, f".{INDEX}.tmp")
@@ -318,8 +515,9 @@ class MessageRunStore:
             m = json.load(f)
         store = cls(directory, m["n_shards"], m["P"],
                     np.dtype(m["msg_dtype"]), with_counts=m["with_counts"],
-                    create=False)
+                    create=False, compress=m.get("compress", False))
         store._sizes = list(m["sizes"])
+        store._dp_bytes = list(m.get("dp_bytes", [0] * m["n_shards"]))
         store._runs = [
             [RunSegment(**s) for s in runs] for runs in m["runs"]
         ]
@@ -357,6 +555,7 @@ class MessageRunStore:
                 pass
         self._runs[dest] = []
         self._sizes[dest] = 0
+        self._dp_bytes[dest] = 0
         self._counts[dest] = 0
         self._stale_counts.discard(dest)
 
@@ -373,25 +572,38 @@ class MessageRunStore:
 class _Cursor:
     """Fixed-size read window over one sorted run (the merge's only per-run
     resident state). Tracks every store channel so compaction can rewrite
-    payload AND count data together."""
+    payload AND count data together; on compressed stores the dp window is
+    refilled by a streaming varint-delta decoder instead of a memmap slice,
+    keeping the same O(read_chunk) residency."""
 
     def __init__(self, mm: dict, seg: RunSegment, read_chunk: int,
-                 channels: tuple[str, ...]):
+                 channels: tuple[str, ...],
+                 dp_blob: np.ndarray | None = None):
         self._mm = mm
         self._channels = channels
         self._pos = seg.offset
         self._end = seg.offset + seg.length
         self._chunk = max(1, read_chunk)
+        self._dec = (VarintDeltaDecoder(dp_blob, seg.length)
+                     if dp_blob is not None else None)
         self._bufs: tuple[np.ndarray, ...] = ()
         self._bpos = 0
         self._fill()
 
     def _fill(self) -> None:
         n = min(self._chunk, self._end - self._pos)
-        self._bufs = tuple(
-            np.array(self._mm[ch][self._pos:self._pos + n])
-            for ch in self._channels
-        )
+        if self._dec is not None:
+            dp = self._dec.take(n).astype(np.int32)
+            rest = tuple(
+                np.array(self._mm[ch][self._pos:self._pos + n])
+                for ch in self._channels[1:]
+            )
+            self._bufs = (dp,) + rest
+        else:
+            self._bufs = tuple(
+                np.array(self._mm[ch][self._pos:self._pos + n])
+                for ch in self._channels
+            )
         self._pos += n
         self._bpos = 0
 

@@ -115,7 +115,7 @@ class StreamReader:
     """Background-thread prefetcher over an :class:`EdgeStreamStore`."""
 
     def __init__(self, store: EdgeStreamStore, chunk_blocks: int = 8,
-                 depth: int = 2):
+                 depth: int = 2, owner_views: bool = False):
         if depth < 1:
             raise ValueError("depth must be >= 1 (2 = double buffering)")
         self.store = store
@@ -124,6 +124,21 @@ class StreamReader:
         self.stats = StreamStats()
         self._worker: threading.Thread | None = None
         self._stop = threading.Event()
+        # owner_views: read each source shard's blocks through a view that
+        # maps ONLY that shard's store row (manifest-driven row ownership —
+        # the per-machine access pattern of a multi-process deployment,
+        # exercised in-process by the pipelined engine)
+        self._views: dict[int, EdgeStreamStore] | None = (
+            {} if owner_views else None
+        )
+
+    def _reader_for(self, i: int) -> EdgeStreamStore:
+        if self._views is None:
+            return self.store
+        view = self._views.get(i)
+        if view is None:
+            view = self._views[i] = self.store.owner_view(i)
+        return view
 
     def staging_bytes(self) -> int:
         """Resident bytes pinned by one pass's buffer pool (a compiled-in
@@ -186,7 +201,7 @@ class StreamReader:
                             return
                         sp, dp, w = pool[bid]
                         t0 = time.perf_counter()
-                        c = self.store.read_blocks(
+                        c = self._reader_for(i).read_blocks(
                             i, k, ids[off:off + CB], sp, dp, w
                         )
                         stats.read_seconds += time.perf_counter() - t0

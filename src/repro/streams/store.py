@@ -5,14 +5,21 @@ edges never live in memory: they are written once at partition time, in the
 per-destination group layout of §3.3.1, and *streamed* back every superstep.
 ``EdgeStreamStore`` is that disk tier:
 
-* three flat binary files (``sp.bin``/``dp.bin``/``w.bin``), each a memmap of
-  logical shape ``(n, n, n_blocks, edge_block)`` in row-major order, so the
-  blocks of one ``(src_shard, dst_shard)`` group are **contiguous on disk**
-  and a group scan is one sequential read — the access pattern the paper's
-  streaming analysis assumes;
-* a JSON ``manifest.json`` with the static geometry plus a content signature
+* three flat binary files (``sp.bin``/``dp.bin``/``w.bin``); uncompressed,
+  each is a memmap of logical shape ``(n, n, n_blocks, edge_block)`` in
+  row-major order, so the blocks of one ``(src_shard, dst_shard)`` group are
+  **contiguous on disk** and a group scan is one sequential read — the
+  access pattern the paper's streaming analysis assumes. With
+  ``compress=True`` the two position channels are stored as per-block
+  varint-delta blobs (``streams/codec.py``; ``sp`` is sorted within a group,
+  so its deltas are tiny) with an int64 offset table, shrinking the stream
+  the paper's sequential-bandwidth argument pays for every superstep;
+* a JSON ``manifest.json`` with the static geometry, a content signature
   (used by checkpoint recovery to refuse restoring state against the wrong
-  edge streams);
+  edge streams), and a **row-ownership table**: per channel, the byte extent
+  of every source shard's row, so machine i can map *only its own* stream
+  S^E_i (``open(dir, owner=i)`` / :meth:`owner_view`) — the stepping stone
+  to multi-process deployment where no machine ever maps a peer's edges;
 * the skip() metadata (``blk_lo``/``blk_hi`` per block, §3.2) in
   ``blocks.npz``, kept host-resident — O(n · n_blocks) ints, not O(|E|) —
   so inactive blocks are *never read off disk*.
@@ -30,10 +37,13 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.streams.codec import decode_varint_delta, encode_varint_delta
+
 MANIFEST = "manifest.json"
 BLOCKS = "blocks.npz"
 _FILES = {"sp": np.int32, "dp": np.int32, "w": np.float32}
-FORMAT_VERSION = 1
+_COMPRESSED_CHANNELS = ("sp", "dp")  # w is float: no delta structure
+FORMAT_VERSION = 2  # v1 readable: v2 added compress + row ownership
 
 
 @dataclass(frozen=True)
@@ -55,20 +65,81 @@ class StoreGeometry:
 
 
 class EdgeStreamStore:
-    """Memmap-backed, write-once edge-block store with a block manifest."""
+    """Memmap-backed, write-once edge-block store with a block manifest.
+
+    ``owner`` restricts the instance to ONE source shard's row: only the
+    bytes listed for that row in the manifest's ownership table are mapped,
+    and reads for any other source raise — the per-machine view of the
+    paper's deployment, emulated in-process by the pipelined engine.
+    """
 
     def __init__(self, directory: str, geom: StoreGeometry,
-                 blk_lo: np.ndarray, blk_hi: np.ndarray, signature: str):
+                 blk_lo: np.ndarray, blk_hi: np.ndarray, signature: str,
+                 *, compress: bool = False,
+                 row_bytes: dict[str, list[int]] | None = None,
+                 block_index: dict[str, np.ndarray] | None = None,
+                 owner: int | None = None):
         self.dir = directory
         self.geom = geom
         self.blk_lo = blk_lo  # (n, n, n_blocks) int32, P sentinel when empty
         self.blk_hi = blk_hi  # (n, n, n_blocks) int32, -1 sentinel when empty
+        self.compress = bool(compress)
+        self.owner = owner
         self._signature = signature
-        self._mm = {
-            name: np.memmap(os.path.join(directory, f"{name}.bin"),
-                            dtype=dt, mode="r", shape=geom.shape)
-            for name, dt in _FILES.items()
-        }
+        self._row_bytes = row_bytes or self._default_row_bytes(geom)
+        self._block_index = block_index or {}
+        if owner is not None and not 0 <= owner < geom.n_shards:
+            raise ValueError(f"owner={owner} outside 0..{geom.n_shards - 1}")
+        n, nb, B = geom.n_shards, geom.n_blocks, geom.edge_block
+        rows = (owner, owner + 1) if owner is not None else (0, n)
+        self._mm = {}
+        for name, dt in _FILES.items():
+            path = os.path.join(directory, f"{name}.bin")
+            off = self._row_bytes[name][rows[0]]
+            length = self._row_bytes[name][rows[1]] - off
+            if self.compress and name in _COMPRESSED_CHANNELS:
+                # byte-granular map of the owned rows' blobs only
+                self._mm[name] = np.memmap(path, dtype=np.uint8, mode="r",
+                                           offset=off, shape=(length,))
+            else:
+                self._mm[name] = np.memmap(
+                    path, dtype=dt, mode="r", offset=off,
+                    shape=(rows[1] - rows[0], n, nb, B),
+                )
+
+    @staticmethod
+    def _default_row_bytes(geom: StoreGeometry) -> dict[str, list[int]]:
+        """Uncompressed layout: every channel row is one fixed stride."""
+        n, nb, B = geom.n_shards, geom.n_blocks, geom.edge_block
+        out = {}
+        for name, dt in _FILES.items():
+            stride = n * nb * B * np.dtype(dt).itemsize
+            out[name] = [r * stride for r in range(n + 1)]
+        return out
+
+    def _row(self, name: str, i: int) -> np.ndarray:
+        """The (n_dest, n_blocks, B) view of source row ``i`` (raw channels)."""
+        if self.owner is not None:
+            if i != self.owner:
+                raise PermissionError(
+                    f"store view owns only source shard {self.owner}'s rows; "
+                    f"refusing to read shard {i}'s edge stream"
+                )
+            return self._mm[name][0]
+        return self._mm[name][i]
+
+    def _blob(self, name: str, i: int, k: int, b: int) -> np.ndarray:
+        """One block's varint blob (compressed channels)."""
+        if self.owner is not None and i != self.owner:
+            raise PermissionError(
+                f"store view owns only source shard {self.owner}'s rows; "
+                f"refusing to read shard {i}'s edge stream"
+            )
+        idx = self._block_index[name]
+        nb = self.geom.n_blocks
+        flat = (i * self.geom.n_shards + k) * nb + b
+        base = self._row_bytes[name][self.owner] if self.owner is not None else 0
+        return self._mm[name][idx[flat] - base:idx[flat + 1] - base]
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -83,6 +154,7 @@ class EdgeStreamStore:
         P: int,
         n_vertices: int,
         n_edges: int,
+        compress: bool = False,
     ) -> "EdgeStreamStore":
         """Spill the per-destination edge groups to disk (done once, at
         partition time — the paper's graph-loading pass)."""
@@ -100,34 +172,60 @@ class EdgeStreamStore:
             dp=np.ascontiguousarray(dst_pos, dtype=np.int32),
             w=np.ascontiguousarray(eweight, dtype=np.float32),
         )
+        row_bytes: dict[str, list[int]] = {}
+        index_arrays: dict[str, np.ndarray] = {}
         for name, arr in arrays.items():
-            mm = np.memmap(os.path.join(directory, f"{name}.bin"),
-                           dtype=_FILES[name], mode="w+", shape=geom.shape)
-            mm[:] = arr.reshape(geom.shape)
-            mm.flush()
-            del mm
+            if compress and name in _COMPRESSED_CHANNELS:
+                blocks = arr.reshape(n * n * n_blocks, edge_block)
+                idx = np.zeros(len(blocks) + 1, np.int64)
+                with open(os.path.join(directory, f"{name}.bin"), "wb") as f:
+                    for j, blk in enumerate(blocks):
+                        idx[j + 1] = idx[j] + f.write(
+                            encode_varint_delta(blk))
+                index_arrays[name] = idx
+                row_stride = n * n_blocks  # blocks per source row
+                row_bytes[name] = [
+                    int(idx[r * row_stride]) for r in range(n + 1)
+                ]
+            else:
+                mm = np.memmap(os.path.join(directory, f"{name}.bin"),
+                               dtype=_FILES[name], mode="w+", shape=geom.shape)
+                mm[:] = arr.reshape(geom.shape)
+                mm.flush()
+                del mm
+                stride = n * n_blocks * edge_block * np.dtype(
+                    _FILES[name]).itemsize
+                row_bytes[name] = [r * stride for r in range(n + 1)]
 
         # skip() metadata: per-block source range (same contract as the
         # device layout's blk_lo/blk_hi)
         from repro.graph.partition import block_ranges
 
         blk_lo, blk_hi = block_ranges(arrays["sp"].reshape(geom.shape), P)
-        np.savez(os.path.join(directory, BLOCKS), blk_lo=blk_lo, blk_hi=blk_hi)
+        np.savez(os.path.join(directory, BLOCKS), blk_lo=blk_lo, blk_hi=blk_hi,
+                 **{f"{name}_idx": idx for name, idx in index_arrays.items()})
 
         signature = cls._digest(geom, blk_lo, blk_hi, arrays)
         manifest = dict(
             version=FORMAT_VERSION, signature=signature,
             files={k: f"{k}.bin" for k in _FILES},
+            compress=bool(compress),
+            # manifest-driven row ownership: machine i maps only the byte
+            # extent [row_bytes[ch][i], row_bytes[ch][i+1]) of each channel
+            row_ownership=dict(axis="src_shard", row_bytes=row_bytes),
             **geom.__dict__,
         )
         tmp = os.path.join(directory, f".{MANIFEST}.tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
         os.replace(tmp, os.path.join(directory, MANIFEST))  # atomic publish
-        return cls(directory, geom, blk_lo, blk_hi, signature)
+        return cls(directory, geom, blk_lo, blk_hi, signature,
+                   compress=compress, row_bytes=row_bytes,
+                   block_index=index_arrays)
 
     @classmethod
-    def from_partition(cls, pg, directory: str) -> "EdgeStreamStore":
+    def from_partition(cls, pg, directory: str,
+                       compress: bool = False) -> "EdgeStreamStore":
         """Spill a (fully materialized) PartitionedGraph's edge groups."""
         return cls.create(
             directory,
@@ -135,23 +233,44 @@ class EdgeStreamStore:
             np.asarray(pg.eweight),
             edge_block=pg.edge_block, P=pg.P,
             n_vertices=pg.n_vertices, n_edges=pg.n_edges,
+            compress=compress,
         )
 
     @classmethod
-    def open(cls, directory: str) -> "EdgeStreamStore":
+    def open(cls, directory: str, owner: int | None = None) -> "EdgeStreamStore":
         with open(os.path.join(directory, MANIFEST)) as f:
             m = json.load(f)
-        if m.get("version") != FORMAT_VERSION:
+        if m.get("version") not in (1, FORMAT_VERSION):
             raise ValueError(f"unsupported stream-store version {m.get('version')}")
         geom = StoreGeometry(**{k: m[k] for k in StoreGeometry.__dataclass_fields__})
         z = np.load(os.path.join(directory, BLOCKS))
-        return cls(directory, geom, z["blk_lo"], z["blk_hi"], m["signature"])
+        compress = m.get("compress", False)
+        ownership = m.get("row_ownership") or {}
+        row_bytes = ownership.get("row_bytes")
+        block_index = {
+            name: z[f"{name}_idx"] for name in _COMPRESSED_CHANNELS
+            if f"{name}_idx" in z.files
+        }
+        return cls(directory, geom, z["blk_lo"], z["blk_hi"], m["signature"],
+                   compress=compress, row_bytes=row_bytes,
+                   block_index=block_index, owner=owner)
+
+    def owner_view(self, shard: int) -> "EdgeStreamStore":
+        """A view of this store that maps ONLY ``shard``'s source row — what
+        machine ``shard`` would open in a multi-process deployment."""
+        return EdgeStreamStore(
+            self.dir, self.geom, self.blk_lo, self.blk_hi, self._signature,
+            compress=self.compress, row_bytes=self._row_bytes,
+            block_index=self._block_index, owner=shard,
+        )
 
     @staticmethod
     def _digest(geom: StoreGeometry, blk_lo, blk_hi, arrays) -> str:
         """Content signature: geometry + skip metadata + the edge data
         itself (two stores with equal topology but different weights must
-        not look interchangeable to checkpoint recovery)."""
+        not look interchangeable to checkpoint recovery). Computed over the
+        LOGICAL arrays, so a compressed and an uncompressed spill of the
+        same graph are interchangeable to recovery — as they should be."""
         h = hashlib.sha256()
         h.update(json.dumps(geom.__dict__, sort_keys=True).encode())
         h.update(np.ascontiguousarray(blk_lo).tobytes())
@@ -199,13 +318,29 @@ class EdgeStreamStore:
         out_sp[c:] = -1
         out_dp[c:] = 0
         out_w[c:] = 0.0
-        if c:
-            self._mm["sp"][i, k].take(ids, axis=0, out=out_sp[:c])
-            self._mm["dp"][i, k].take(ids, axis=0, out=out_dp[:c])
-            self._mm["w"][i, k].take(ids, axis=0, out=out_w[:c])
+        if not c:
+            return 0
+        if self.compress:
+            for j, b in enumerate(ids):
+                out_sp[j] = decode_varint_delta(self._blob("sp", i, k, int(b)))
+                out_dp[j] = decode_varint_delta(self._blob("dp", i, k, int(b)))
+            self._row("w", i)[k].take(ids, axis=0, out=out_w[:c])
+        else:
+            self._row("sp", i)[k].take(ids, axis=0, out=out_sp[:c])
+            self._row("dp", i)[k].take(ids, axis=0, out=out_dp[:c])
+            self._row("w", i)[k].take(ids, axis=0, out=out_w[:c])
         return c
 
     def group_edges(self, i: int, k: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Whole-group read (tests / tooling — not the streaming hot path)."""
-        return (np.array(self._mm["sp"][i, k]), np.array(self._mm["dp"][i, k]),
-                np.array(self._mm["w"][i, k]))
+        if self.compress:
+            nb, B = self.geom.n_blocks, self.geom.edge_block
+            sp = np.empty((nb, B), np.int32)
+            dp = np.empty((nb, B), np.int32)
+            for b in range(nb):
+                sp[b] = decode_varint_delta(self._blob("sp", i, k, b))
+                dp[b] = decode_varint_delta(self._blob("dp", i, k, b))
+            return sp, dp, np.array(self._row("w", i)[k])
+        return (np.array(self._row("sp", i)[k]),
+                np.array(self._row("dp", i)[k]),
+                np.array(self._row("w", i)[k]))

@@ -1,0 +1,265 @@
+"""The outbox→inbox channel layer (streams/channel.py) and the varint-delta
+codec (streams/codec.py): fixed-seed versions of the load-bearing checks
+(the hypothesis sweeps live in tests/test_properties.py and skip without the
+package), plus compressed-store and dead-region-reclamation coverage."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.streams import (
+    ChannelError, FaultPoint, MessageRunStore, ShardChannels,
+    VarintDeltaDecoder, decode_varint_delta, encode_varint_delta,
+)
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+class TestVarintDeltaCodec:
+    CASES = [
+        np.array([], np.int64),
+        np.array([0], np.int32),
+        np.array([7, 7, 7, 7], np.int32),
+        np.arange(1000, dtype=np.int32),
+        np.array([5, 3, 1, -1, -1, -1], np.int32),  # sorted run + padding
+        np.array([2**31 - 1, 0, -(2**31)], np.int64),
+        # bit-63 zigzag range: a signed un-zigzag shift used to corrupt these
+        np.array([2**62, -(2**62), 2**63 - 1, -(2**63) + 1, 0], np.int64),
+        np.array([0, 2**63 - 1], np.int64),  # delta wraps mod 2^64
+    ]
+
+    @pytest.mark.parametrize("case", range(len(CASES)))
+    def test_roundtrip(self, case):
+        v = self.CASES[case]
+        out = decode_varint_delta(encode_varint_delta(v))
+        assert np.array_equal(out, v.astype(np.int64))
+
+    def test_random_roundtrips(self):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            n = int(rng.integers(1, 400))
+            v = (np.sort(rng.integers(0, 1 << 20, n)) if rng.random() < 0.5
+                 else rng.integers(-(1 << 40), 1 << 40, n))
+            assert np.array_equal(
+                decode_varint_delta(encode_varint_delta(v)), v
+            )
+
+    def test_chained_chunks_equal_whole(self):
+        rng = np.random.default_rng(1)
+        v = np.sort(rng.integers(0, 10_000, 777))
+        cut = 300
+        b1 = encode_varint_delta(v[:cut])
+        b2 = encode_varint_delta(v[cut:], prev=int(v[cut - 1]))
+        got = np.concatenate([
+            decode_varint_delta(b1),
+            decode_varint_delta(b2, prev=int(v[cut - 1])),
+        ])
+        assert np.array_equal(got, v)
+        # and the two chained blobs ARE the whole blob, byte for byte
+        assert b1 + b2 == encode_varint_delta(v)
+
+    def test_streaming_decoder_bounded_takes(self):
+        rng = np.random.default_rng(2)
+        v = np.sort(rng.integers(0, 1 << 16, 1234))
+        dec = VarintDeltaDecoder(encode_varint_delta(v), len(v))
+        parts = []
+        while dec.remaining:
+            parts.append(dec.take(int(rng.integers(1, 100))))
+        assert np.array_equal(np.concatenate(parts), v)
+
+    def test_sorted_positions_compress_hard(self):
+        """The point of the knob: a dense sorted dst_pos column must shrink
+        well below 4 bytes/value (most deltas fit one byte)."""
+        rng = np.random.default_rng(3)
+        v = np.sort(rng.integers(0, 1 << 14, 50_000))
+        assert len(encode_varint_delta(v)) < 0.3 * v.size * 4
+
+    def test_truncated_stream_raises(self):
+        blob = encode_varint_delta(np.array([1 << 40]))
+        with pytest.raises(ValueError, match="truncated"):
+            decode_varint_delta(blob[:-1])
+
+
+# ---------------------------------------------------------------------------
+# the channel layer
+# ---------------------------------------------------------------------------
+
+def _mk_store(tmp_path, n=3, P=64, compress=False, name="inbox"):
+    return MessageRunStore(str(tmp_path / name), n, P, np.float32,
+                           compress=compress)
+
+
+class TestShardChannels:
+    def test_interleaved_sends_yield_sorted_merged_runs(self, tmp_path):
+        """Per-shard appends in an arbitrary interleaving must still merge
+        into one destination-sorted stream per inbox (fixed-seed version of
+        the hypothesis property)."""
+        rng = np.random.default_rng(0)
+        n, P = 3, 64
+        store = _mk_store(tmp_path, n, P)
+        chan = ShardChannels(store, inflight=2)
+        sent = {k: [] for k in range(n)}
+        packets = []
+        for src in range(n):
+            for _ in range(5):
+                k = int(rng.integers(0, n))
+                dp = np.sort(rng.integers(0, P, 40)).astype(np.int32)
+                msg = rng.random(40).astype(np.float32)
+                packets.append((k, dp, msg, src))
+        rng.shuffle(packets)  # arbitrary interleaving across sources
+        for k, dp, msg, src in packets:
+            chan.send(k, dp, msg, tag=src)
+            sent[k].append((dp, msg))
+        chan.close()
+        for k in range(n):
+            merged = list(store.iter_merged(k, read_chunk=16))
+            got_dp = (np.concatenate([m[0] for m in merged])
+                      if merged else np.empty(0, np.int32))
+            want = (np.concatenate([dp for dp, _ in sent[k]])
+                    if sent[k] else np.empty(0, np.int32))
+            assert np.all(np.diff(got_dp) >= 0)  # destination-sorted
+            assert np.array_equal(np.sort(want), got_dp[np.argsort(
+                np.argsort(got_dp, kind="stable"), kind="stable")])
+            assert np.array_equal(np.sort(want), np.sort(got_dp))
+
+    def test_send_raw_sorts_on_sender_thread(self, tmp_path):
+        store = _mk_store(tmp_path)
+        chan = ShardChannels(store, inflight=2)
+        dp = np.array([9, 3, 7, 3, 0], np.int32)
+        msg = np.array([9., 3., 7., 3.5, 0.], np.float32)
+        valid = np.array([True, True, False, True, True])
+        chan.send_raw(1, dp, msg, valid, tag=0)
+        chan.flush()
+        got_dp, got_msg = store.read_run(1, store.runs(1)[0])
+        assert np.array_equal(got_dp, [0, 3, 3, 9])
+        assert np.array_equal(got_msg, [0., 3., 3.5, 9.])  # stable sort
+        chan.close()
+
+    def test_flush_is_a_barrier(self, tmp_path):
+        store = _mk_store(tmp_path)
+        chan = ShardChannels(store, inflight=8)
+        for j in range(6):
+            chan.send(0, np.arange(10, dtype=np.int32),
+                      np.full(10, float(j), np.float32), tag=0)
+        chan.flush()
+        assert len(store.runs(0)) == 6  # every packet landed before return
+        chan.close()
+
+    def test_fifo_order_preserved(self, tmp_path):
+        """Run-table order == send order: the pipelined engine's results
+        depend on it (digest folds in transmit order)."""
+        store = _mk_store(tmp_path)
+        chan = ShardChannels(store, inflight=1)
+        for j in range(10):
+            chan.send(0, np.array([j], np.int32),
+                      np.array([float(j)], np.float32), tag=j)
+        chan.close()
+        assert [s.tag for s in store.runs(0)] == list(range(10))
+
+    def test_compact_op_runs_in_order(self, tmp_path):
+        store = _mk_store(tmp_path)
+        chan = ShardChannels(store, inflight=2)
+        rng = np.random.default_rng(1)
+        for _ in range(4):
+            dp = np.sort(rng.integers(0, 64, 30)).astype(np.int32)
+            chan.send(2, dp, rng.random(30).astype(np.float32), tag=5)
+        chan.compact(2, 5, fanin=2, read_chunk=8)
+        chan.flush()
+        assert len([s for s in store.runs(2) if s.tag == 5]) == 1
+        assert store.n_messages(2) == 120
+        chan.close()
+
+    def test_fault_surfaces_as_channel_error(self, tmp_path):
+        store = _mk_store(tmp_path)
+        fault = FaultPoint(after_packets=3)
+        chan = ShardChannels(store, inflight=1, fault=fault)
+        with pytest.raises(ChannelError) as ei:
+            for j in range(50):
+                chan.send(0, np.array([j], np.int32),
+                          np.array([0.], np.float32))
+            chan.flush()
+        assert fault.fired
+        assert "injected" in str(ei.value.__cause__)
+        # exactly the packets before the fault landed — no torn extras
+        assert len(store.runs(0)) == 3
+        chan.abort()  # crash-path cleanup never raises
+
+    def test_flush_raises_when_sender_died_before_barrier(self, tmp_path):
+        """Regression: the death-path drain sets pending barrier events to
+        wake their waiters — flush() must still RAISE, not report success,
+        because the ops ahead of the drained barrier never landed."""
+        store = _mk_store(tmp_path)
+        chan = ShardChannels(store, inflight=16, fault=FaultPoint(2))
+        for j in range(5):  # all queue without blocking (budget is 16)
+            chan.send(0, np.array([j], np.int32),
+                      np.array([0.], np.float32))
+        with pytest.raises(ChannelError):
+            chan.flush()
+        assert len(store.runs(0)) == 2  # only pre-fault packets landed
+        chan.abort()
+
+    def test_close_surfaces_error_even_without_blocking_send(self, tmp_path):
+        store = _mk_store(tmp_path)
+        chan = ShardChannels(store, inflight=16, fault=FaultPoint(1))
+        chan.send(0, np.array([1], np.int32), np.array([1.], np.float32))
+        with pytest.raises(ChannelError):
+            chan.close()
+
+    def test_stats_account_packets_and_overlap(self, tmp_path):
+        store = _mk_store(tmp_path)
+        chan = ShardChannels(store, inflight=4)
+        for _ in range(8):
+            chan.send(1, np.arange(50, dtype=np.int32),
+                      np.zeros(50, np.float32))
+            time.sleep(0.002)  # compute-bound producer => sender overlaps
+        chan.close()
+        st = chan.stats
+        assert st.packets == 8
+        assert st.messages == 400
+        assert st.payload_bytes == 8 * 50 * 8
+        assert st.send_seconds > 0
+        assert st.overlap_seconds() >= 0
+
+    def test_inflight_budget_bounds_queue(self, tmp_path):
+        """The producer must block once `inflight` packets are queued — the
+        O(1) memory contract. A slow sender + small budget => the producer's
+        stall time is visible in the stats."""
+        store = _mk_store(tmp_path)
+        orig = store.append_run
+
+        def slow_append(*a, **kw):
+            time.sleep(0.01)
+            return orig(*a, **kw)
+
+        store.append_run = slow_append
+        chan = ShardChannels(store, inflight=1)
+        for _ in range(6):
+            chan.send(0, np.arange(4, dtype=np.int32),
+                      np.zeros(4, np.float32))
+        chan.close()
+        assert chan.stats.stall_seconds > 0
+
+    def test_compressed_inbox_equals_plain(self, tmp_path):
+        rng = np.random.default_rng(4)
+        plain = _mk_store(tmp_path, name="plain")
+        comp = _mk_store(tmp_path, compress=True, name="comp")
+        for store in (plain, comp):
+            chan = ShardChannels(store, inflight=2)
+            rng2 = np.random.default_rng(7)
+            for src in range(3):
+                for _ in range(4):
+                    dp = np.sort(rng2.integers(0, 64, 200)).astype(np.int32)
+                    chan.send(1, dp, rng2.random(200).astype(np.float32),
+                              tag=src)
+                chan.compact(1, src, fanin=2, read_chunk=64)
+            chan.close()
+        a = [np.concatenate(x) for x in zip(*plain.iter_merged(1, 32))]
+        b = [np.concatenate(x) for x in zip(*comp.iter_merged(1, 32))]
+        assert np.array_equal(a[0], b[0])
+        assert np.array_equal(a[1], b[1])
+        assert comp.disk_bytes() < plain.disk_bytes()

@@ -1,0 +1,127 @@
+"""Cross-mode equivalence matrix: EVERY algorithm in ``core/algorithms.py``
+runs under ``basic`` / ``streamed`` (combiner path and combiner-less OMS
+path) / pipelined-streamed (plain and varint-delta compressed), and the
+results must agree *bit for bit* — same halt step, same active bitmaps, same
+final values.
+
+One documented carve-out: float-SUM programs (PageRank). The pipelined
+sender combines each outgoing group A_s(i→k) before transmitting (§4/§5) —
+a legal reassociation of IEEE additions, so grouped modes can differ from
+``basic``'s message-sequential sum in the last ulp (observed <= 4e-9 on
+values of ~1e-2; everything else about the run, including the halt step and
+message counts, stays identical). Order-insensitive reductions (MIN/MAX,
+integer programs, exact-integer float sums) have no such freedom: for them
+the assertion is strict equality, which is what pins down chunk-boundary,
+slice-boundary and channel-ordering bugs.
+
+``GRAPHD_TEST_EDGE_BLOCK`` (CI sets it tiny) forces many chunk boundaries so
+every block/chunk/slice edge case is crossed; the default keeps local runs
+quick.
+"""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import GraphDEngine
+from repro.core.algorithms import (
+    BFS, DegreeSum, DistinctInLabels, HashMin, LabelSpread, PageRank,
+    SecondMinLabel, SSSP,
+)
+from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
+
+EDGE_BLOCK = int(os.environ.get("GRAPHD_TEST_EDGE_BLOCK", "32"))
+N_SHARDS = 3
+
+# (name, program factory, exact): ``exact`` means bit-identical values are
+# REQUIRED; False allows the ulp slack of reassociated float sums.
+ALGORITHMS = [
+    ("pagerank", lambda g, rmap: PageRank(supersteps=5), False),
+    ("hashmin", lambda g, rmap: HashMin(), True),
+    ("sssp", lambda g, rmap: SSSP(
+        int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])), True),
+    ("bfs", lambda g, rmap: BFS(
+        int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])), True),
+    ("degreesum", lambda g, rmap: DegreeSum(), True),
+    ("labelspread", lambda g, rmap: LabelSpread(), True),
+    ("distinct", lambda g, rmap: DistinctInLabels(n_groups=8, rounds=2), True),
+    ("secondmin", lambda g, rmap: SecondMinLabel(), True),
+]
+
+# every streamed variant the engine offers; basic is the reference
+STREAMED_VARIANTS = [
+    ("streamed", dict()),
+    ("pipelined", dict(pipeline=True)),
+    ("pipelined-compressed", dict(pipeline=True, compress=True)),
+]
+
+
+@pytest.fixture(scope="module")
+def matrix_graph():
+    g = rmat_graph(scale=6, edge_factor=6, seed=5, weights="uniform")
+    pg, rmap = partition_graph(g, n_shards=N_SHARDS, edge_block=EDGE_BLOCK)
+    with tempfile.TemporaryDirectory(prefix="graphd-eqv-") as d:
+        pgs, _, store = partition_graph_streamed(
+            g, N_SHARDS, os.path.join(d, "plain"), edge_block=EDGE_BLOCK,
+            recode=rmap,
+        )
+        # a compressed spill of the SAME graph: the pipelined-compressed
+        # variant reads varint-delta edge blocks end to end
+        _, _, store_c = partition_graph_streamed(
+            g, N_SHARDS, os.path.join(d, "compressed"),
+            edge_block=EDGE_BLOCK, recode=rmap, compress=True,
+        )
+        assert store_c.disk_bytes() < store.disk_bytes()
+        yield g, rmap, pg, pgs, store, store_c
+
+
+def _run(eng):
+    (values, active), hist = eng.run(max_supersteps=60)
+    return (np.asarray(values), np.asarray(active), len(hist),
+            [r.n_active for r in hist], [r.n_msgs for r in hist])
+
+
+@pytest.mark.parametrize("name,factory,exact",
+                         ALGORITHMS, ids=[a[0] for a in ALGORITHMS])
+def test_matrix_all_modes_match_basic(matrix_graph, name, factory, exact):
+    g, rmap, pg, pgs, store, store_c = matrix_graph
+    v_ref, a_ref, steps_ref, act_ref, msgs_ref = _run(
+        GraphDEngine(pg, factory(g, rmap), mode="basic")
+    )
+    for variant, kwargs in STREAMED_VARIANTS:
+        st = store_c if kwargs.get("compress") else store
+        v, a, steps, act, msgs = _run(
+            GraphDEngine(pgs, factory(g, rmap), mode="streamed",
+                         stream_store=st, stream_chunk_blocks=2, **kwargs)
+        )
+        assert steps == steps_ref, (name, variant, "halt step")
+        assert act == act_ref, (name, variant, "active trajectory")
+        assert msgs == msgs_ref, (name, variant, "message counts")
+        assert np.array_equal(a, a_ref), (name, variant, "active bitmap")
+        if exact:
+            assert np.array_equal(v, v_ref), (name, variant, "values")
+        else:
+            # reassociated IEEE sums: ulp-scale slack, nothing more
+            np.testing.assert_allclose(v, v_ref, rtol=3e-6, atol=0)
+
+
+def test_matrix_streamed_variants_agree_exactly(matrix_graph):
+    """The streamed variants must agree bit-for-bit with EACH OTHER even for
+    float-SUM programs when their grouping matches: pipelining and
+    compression are transport changes, and transport must never touch
+    values. (The pipelined sender combines per group like the log-attached
+    fold does, so those two families are compared, not the direct fold.)"""
+    g, rmap, pg, pgs, store, store_c = matrix_graph
+    prog = lambda: PageRank(supersteps=5)
+    v_pipe, a_pipe, *_ = _run(
+        GraphDEngine(pgs, prog(), mode="streamed", stream_store=store,
+                     stream_chunk_blocks=2, pipeline=True)
+    )
+    v_cmp, a_cmp, *_ = _run(
+        GraphDEngine(pgs, prog(), mode="streamed", stream_store=store_c,
+                     stream_chunk_blocks=2, pipeline=True, compress=True)
+    )
+    assert np.array_equal(v_pipe, v_cmp)
+    assert np.array_equal(a_pipe, a_cmp)

@@ -1,15 +1,20 @@
 """Fault-tolerance drills: checkpoint/restore, message-log fast recovery,
-elastic repartitioning (paper §3.4 + [19])."""
+elastic repartitioning (paper §3.4 + [19]), and deterministic crash
+injection into the pipelined sender (streams/channel.py)."""
 
 import os
 
 import numpy as np
 import pytest
 
-from repro.core import GraphDEngine, HashMin, PageRank, SSSP
-from repro.core.checkpoint import Checkpointer, MessageLog, recover_shard
+from repro.core import DistinctInLabels, GraphDEngine, HashMin, PageRank, SSSP
+from repro.core.checkpoint import (
+    Checkpointer, MessageLog, RunFileMessageLog, recover_shard,
+    recover_shard_streamed,
+)
 from repro.core.elastic import extract_global, repartition
-from repro.graph import partition_graph, rmat_graph
+from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
+from repro.streams import ChannelError, FaultPoint
 
 
 @pytest.fixture
@@ -230,3 +235,128 @@ class TestElastic:
             assert got[k] == ref[k] or (
                 np.isinf(got[k]) and np.isinf(ref[k])
             )
+
+
+# ---------------------------------------------------------------------------
+# crash injection into the pipelined sender (ISSUE 3: kill the thread
+# mid-superstep, recovery must replay to the same state)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def streamed_job(tmp_path):
+    g = rmat_graph(scale=7, edge_factor=6, seed=3)
+    pgs, rmap, store = partition_graph_streamed(
+        g, 4, str(tmp_path / "spill"), edge_block=64
+    )
+    return g, pgs, rmap, store
+
+
+@pytest.fixture
+def fault_point():
+    """Deterministic fault: the sender dies after exactly 40 transmitted
+    packets. PageRank on 4 fully-active shards ships 16 group packets per
+    superstep, so this lands MID-superstep 2 (packet 8 of 16) — after the
+    step-2 checkpoint is durable, before the step's inbox is complete."""
+    return FaultPoint(after_packets=40)
+
+
+class TestStreamedCrashInjection:
+    def test_sender_crash_surfaces_midstep_then_rerun_matches(
+        self, streamed_job, tmp_path, fault_point
+    ):
+        _, pgs, _, store = streamed_job
+        mk = lambda: PageRank(supersteps=6)
+        (v_ref, a_ref), _ = GraphDEngine(
+            pgs, mk(), mode="streamed", stream_store=store, pipeline=True
+        ).run()
+
+        ck = Checkpointer(str(tmp_path / "ck"), every=2)
+        log = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pgs, mk(), mode="streamed", stream_store=store,
+                           pipeline=True, message_log=log,
+                           channel_fault=fault_point)
+        with pytest.raises(ChannelError):
+            eng.run(checkpointer=ck)
+        assert fault_point.fired
+        assert ck.latest() == 2  # crash happened after the step-2 checkpoint
+        # the torn superstep-2 inbox must NOT have published an index: a
+        # partially transmitted step is unusable state, not a silent replay
+        assert not os.path.exists(
+            os.path.join(str(tmp_path / "logs"), "step-000002", "index.json")
+        )
+
+        # restart: resumes from the checkpoint, re-runs the torn superstep
+        # from scratch (open_step truncates), finishes bit-identically
+        eng2 = GraphDEngine(
+            pgs, mk(), mode="streamed", stream_store=store, pipeline=True,
+            message_log=RunFileMessageLog(str(tmp_path / "logs")),
+        )
+        (v2, a2), hist = eng2.run(checkpointer=ck)
+        assert hist[0].step == 2 and hist[0].restored_from == 2
+        assert np.array_equal(np.asarray(v2), np.asarray(v_ref))
+        assert np.array_equal(np.asarray(a2), np.asarray(a_ref))
+
+    @pytest.mark.parametrize("failed", [0, 3])
+    def test_recover_shard_from_pipelined_logs(self, streamed_job, tmp_path,
+                                               failed):
+        """Single-shard fast recovery over CHANNEL-written logs: the inbox
+        runs the background sender appended are the persisted OMSs of §3.4,
+        and replaying them must land on the same state bit for bit."""
+        _, pgs, _, store = streamed_job
+        mk = lambda: PageRank(supersteps=6)
+        ck = Checkpointer(str(tmp_path / "ck"), every=3)
+        log = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pgs, mk(), mode="streamed", stream_store=store,
+                           pipeline=True, message_log=log)
+        ck.save(0, *eng.init())
+        (v_ref, a_ref), _ = eng.run(checkpointer=ck)
+        vj, aj = recover_shard_streamed(
+            pgs, mk(), failed=failed, ckpt=ck, log=log, store=store,
+            target_step=6,
+        )
+        assert np.array_equal(np.asarray(vj), np.asarray(v_ref)[failed])
+        assert np.array_equal(np.asarray(aj), np.asarray(a_ref)[failed])
+
+    def test_sender_crash_combinerless_rerun_matches(self, streamed_job,
+                                                     tmp_path):
+        """Same drill on the OMS path: the sender dies while sorting/spilling
+        raw message runs; a rerun over the truncated step store must
+        bit-match an uninterrupted run."""
+        _, pgs, _, store = streamed_job
+        mk = lambda: DistinctInLabels(n_groups=8, rounds=3)
+        (v_ref, a_ref), _ = GraphDEngine(
+            pgs, mk(), mode="streamed", stream_store=store, pipeline=True
+        ).run()
+        ck = Checkpointer(str(tmp_path / "ck"), every=1)
+        log = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(pgs, mk(), mode="streamed", stream_store=store,
+                           pipeline=True, message_log=log,
+                           channel_fault=FaultPoint(after_packets=20))
+        with pytest.raises(ChannelError):
+            eng.run(checkpointer=ck)
+        eng2 = GraphDEngine(
+            pgs, mk(), mode="streamed", stream_store=store, pipeline=True,
+            message_log=RunFileMessageLog(str(tmp_path / "logs")),
+        )
+        (v2, a2), _ = eng2.run(checkpointer=ck)
+        assert np.array_equal(np.asarray(v2), np.asarray(v_ref))
+        assert np.array_equal(np.asarray(a2), np.asarray(a_ref))
+
+    def test_crash_without_log_leaves_no_scratch_leak(self, streamed_job,
+                                                      tmp_path):
+        """A sender crash with NO message log leaves the scratch inbox of
+        the torn step behind; the next run on the same store must sweep it
+        (like Checkpointer sweeps .tmp-step-*) and finish clean."""
+        _, pgs, _, store = streamed_job
+        eng = GraphDEngine(pgs, PageRank(supersteps=4), mode="streamed",
+                           stream_store=store, pipeline=True,
+                           channel_fault=FaultPoint(after_packets=20))
+        with pytest.raises(ChannelError):
+            eng.run()
+        inbox = os.path.join(store.dir, "inbox")
+        leftovers = [n for n in os.listdir(inbox)
+                     if n.startswith("step-")]
+        assert leftovers  # the torn step really was left on disk
+        GraphDEngine(pgs, PageRank(supersteps=4), mode="streamed",
+                     stream_store=store, pipeline=True).run()
+        assert [n for n in os.listdir(inbox) if n.startswith("step-")] == []

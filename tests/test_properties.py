@@ -195,3 +195,95 @@ def test_property_kernel_matches_ref(seed, density):
     A_r, _ = edge_combine_ref(*args, **kw)
     np.testing.assert_allclose(np.asarray(A_k), np.asarray(A_r),
                                rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# varint-delta codec: arbitrary integer streams round-trip (streams/codec.py)
+# ---------------------------------------------------------------------------
+
+@given(
+    st.lists(st.integers(-(2**50), 2**50), min_size=0, max_size=300),
+    st.booleans(),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_varint_delta_roundtrip(vals, presort):
+    """encode∘decode == id for sorted (the real use: dst_pos columns) AND
+    unsorted input (zigzag covers sign flips, e.g. the -1 padding tail)."""
+    from repro.streams.codec import decode_varint_delta, encode_varint_delta
+
+    v = np.array(sorted(vals) if presort else vals, dtype=np.int64)
+    out = decode_varint_delta(encode_varint_delta(v))
+    assert np.array_equal(out, v)
+
+
+@given(
+    st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=300),
+    st.integers(1, 64),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_streaming_decoder_matches_bulk(vals, take):
+    """Chunked streaming decode == bulk decode for every take size (the
+    merge cursors rely on this to keep O(read_chunk) residency)."""
+    from repro.streams.codec import (
+        VarintDeltaDecoder, decode_varint_delta, encode_varint_delta,
+    )
+
+    v = np.array(sorted(vals), dtype=np.int64)
+    blob = encode_varint_delta(v)
+    dec = VarintDeltaDecoder(blob, len(v))
+    parts = []
+    while dec.remaining:
+        parts.append(dec.take(take))
+    assert np.array_equal(np.concatenate(parts), decode_varint_delta(blob))
+
+
+# ---------------------------------------------------------------------------
+# channel ordering: arbitrary interleavings of per-shard appends must merge
+# into destination-sorted runs (streams/channel.py + msgstore external merge)
+# ---------------------------------------------------------------------------
+
+@given(
+    st.lists(  # per packet: (source shard, destination shard, run length)
+        st.tuples(st.integers(0, 2), st.integers(0, 2), st.integers(0, 40)),
+        min_size=0, max_size=25,
+    ),
+    st.integers(0, 2**31 - 1),
+    st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_channel_interleavings_merge_sorted(packets, seed, compress):
+    """Whatever interleaving of per-shard sends (and whatever payload), each
+    inbox's k-way merge must yield one globally destination-sorted stream
+    holding exactly the multiset of transmitted messages."""
+    import tempfile
+
+    from repro.streams import MessageRunStore, ShardChannels
+
+    P = 32
+    rng = np.random.default_rng(seed % (2**32))
+    with tempfile.TemporaryDirectory(prefix="graphd-chan-prop-") as d:
+        store = MessageRunStore(d, 3, P, np.float32, compress=compress)
+        chan = ShardChannels(store, inflight=2)
+        want = {k: [] for k in range(3)}
+        for src, k, ln in packets:
+            dp = np.sort(rng.integers(0, P, ln)).astype(np.int32)
+            msg = rng.random(ln).astype(np.float32)
+            chan.send(k, dp, msg, tag=src)
+            want[k].append((dp, msg))
+        chan.close()
+        for k in range(3):
+            merged = list(store.iter_merged(k, read_chunk=7))
+            got_dp = (np.concatenate([m[0] for m in merged])
+                      if merged else np.empty(0, np.int64))
+            got_msg = (np.concatenate([m[1] for m in merged])
+                       if merged else np.empty(0, np.float32))
+            all_dp = (np.concatenate([dp for dp, _ in want[k]])
+                      if want[k] else np.empty(0, np.int32))
+            all_msg = (np.concatenate([m for _, m in want[k]])
+                       if want[k] else np.empty(0, np.float32))
+            assert np.all(np.diff(got_dp) >= 0)
+            # multiset equality of (dst, payload) pairs
+            ow = np.lexsort((all_msg, all_dp))
+            og = np.lexsort((got_msg, got_dp))
+            assert np.array_equal(all_dp[ow], got_dp[og])
+            assert np.array_equal(all_msg[ow], got_msg[og])
