@@ -10,7 +10,7 @@ import collections
 import time
 
 from benchmarks.common import emit
-from repro.core import GraphDEngine, HashMin
+from repro.core import EngineConfig, GraphDEngine, HashMin
 from repro.graph import partition_graph, rmat_graph
 
 
@@ -19,8 +19,8 @@ def main():
     pg, _ = partition_graph(g, n_shards=8, edge_block=512)
 
     for mode in ["basic", "recoded"]:
-        eng = GraphDEngine(pg, HashMin(), mode=mode,
-                           adapt_threshold=0.2, sparse_cap_frac=0.5)
+        eng = GraphDEngine(pg, HashMin(), config=EngineConfig(
+            mode=mode, adapt_threshold=0.2, sparse_cap_frac=0.5))
         eng.run()  # warmup: compile both variants
         t0 = time.perf_counter()
         (_, _), hist = eng.run()
@@ -30,13 +30,14 @@ def main():
              f"supersteps={len(hist)};sparse={modes.get('sparse', 0)}")
 
     # sparse-adaptive vs dense-forced (the skip() win on the tail supersteps)
-    eng_d = GraphDEngine(pg, HashMin(), adapt_threshold=-1)
+    eng_d = GraphDEngine(pg, HashMin(),
+                         config=EngineConfig(adapt_threshold=-1))
     eng_d.run()  # warmup
     t0 = time.perf_counter()
     (_, _), hist_d = eng_d.run()
     dt_dense = time.perf_counter() - t0
-    eng_s = GraphDEngine(pg, HashMin(), adapt_threshold=0.3,
-                         sparse_cap_frac=0.6)
+    eng_s = GraphDEngine(pg, HashMin(), config=EngineConfig(
+        adapt_threshold=0.3, sparse_cap_frac=0.6))
     eng_s.run()  # warmup
     t0 = time.perf_counter()
     (_, _), hist_s = eng_s.run()

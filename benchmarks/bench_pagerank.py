@@ -13,7 +13,7 @@ import time
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import GraphDEngine, PageRank
+from repro.core import EngineConfig, GraphDEngine, PageRank
 from repro.graph import partition_graph, rmat_graph
 
 
@@ -26,7 +26,8 @@ def main():
          f"V={g.n_vertices};E={g.n_edges}")
 
     for mode in ["basic", "basic_sc", "recoded"]:
-        eng = GraphDEngine(pg, PageRank(supersteps=3), mode=mode)
+        eng = GraphDEngine(pg, PageRank(supersteps=3),
+                           config=EngineConfig(mode=mode))
         state = eng.init()
         us = time_fn(
             lambda s: eng._step_dense(eng.pg, s[0], s[1], jnp.int32(1)),
@@ -35,8 +36,9 @@ def main():
         emit(f"pagerank/superstep_{mode}", us,
              f"MTEPS={g.n_edges / us:.1f}")
 
-    eng = GraphDEngine(pg, PageRank(supersteps=3), backend="pallas",
-                       kernel_windows=64)
+    eng = GraphDEngine(pg, PageRank(supersteps=3),
+                       config=EngineConfig(backend="pallas",
+                                           kernel_windows=64))
     state = eng.init()
     us = time_fn(
         lambda s: eng._step_dense(eng.pg, s[0], s[1], jnp.int32(1)),

@@ -14,13 +14,13 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import SSSP, GraphDEngine
+from repro.core import EngineConfig, GraphDEngine, SSSP
 from repro.graph import chain_graph, partition_graph, rmat_graph
 
 
 def _run(pg, src_new, adapt, cap, max_steps=4000):
-    eng = GraphDEngine(pg, SSSP(src_new), adapt_threshold=adapt,
-                       sparse_cap_frac=cap)
+    eng = GraphDEngine(pg, SSSP(src_new), config=EngineConfig(
+        adapt_threshold=adapt, sparse_cap_frac=cap))
     eng.run(max_supersteps=max_steps)  # warmup: compile all variants
     t0 = time.perf_counter()
     (_, _), hist = eng.run(max_supersteps=max_steps)

@@ -3,7 +3,16 @@
 from repro.core.api import (
     SUM, MIN, MAX, IMIN, IMAX, OR, Combiner, ShardContext, VertexProgram,
 )
+from repro.core.config import (
+    ChannelConfig, ConfigError, EngineConfig, MessageSpillConfig,
+    RecoveryConfig, StreamConfig,
+)
 from repro.core.engine import GraphDEngine, StepStats, SuperstepRecord, superstep_spmd
+from repro.core.plan import (
+    ExecutionPlan, GraphMeta, MemoryBudget, PlanInfeasible, estimate_memory,
+    plan,
+)
+from repro.core.job import GraphDJob, JobResult
 from repro.core.algorithms import (
     BFS, SSSP, DegreeSum, DistinctInLabels, HashMin, LabelSpread, PageRank,
     SecondMinLabel,
@@ -12,7 +21,12 @@ from repro.core.algorithms import (
 __all__ = [
     "SUM", "MIN", "MAX", "IMIN", "IMAX", "OR",
     "Combiner", "ShardContext", "VertexProgram",
+    "EngineConfig", "StreamConfig", "MessageSpillConfig", "ChannelConfig",
+    "RecoveryConfig", "ConfigError",
     "GraphDEngine", "StepStats", "SuperstepRecord", "superstep_spmd",
+    "ExecutionPlan", "GraphMeta", "MemoryBudget", "PlanInfeasible",
+    "estimate_memory", "plan",
+    "GraphDJob", "JobResult",
     "PageRank", "HashMin", "SSSP", "BFS", "DegreeSum", "LabelSpread",
     "DistinctInLabels", "SecondMinLabel",
 ]

@@ -323,11 +323,12 @@ def recover_shard_streamed(
     merge-streamed together with the regenerated own-messages runs through
     the same destination-aligned apply_list slicing the engine uses.
     """
+    from repro.core.config import EngineConfig
     from repro.core.engine import GraphDEngine
     from repro.streams.msgstore import MessageRunStore
 
-    eng = GraphDEngine(pg, program, mode="streamed", stream_store=store,
-                       message_log=log)
+    eng = GraphDEngine(pg, program, config=EngineConfig(mode="streamed"),
+                       stream_store=store, message_log=log)
     comb = program.combiner
     v_j, a_j, start = ckpt.restore_shard(failed)
     n, P = pg.n_shards, pg.P

@@ -1,0 +1,285 @@
+"""Typed engine configuration (the declarative half of the job API).
+
+``GraphDEngine`` grew ~20 mode-dependent keyword arguments with their
+validation scattered through ``__init__``. This module replaces that surface
+with small dataclasses that *own* their validation:
+
+* :class:`StreamConfig`       — the out-of-core edge tier (reader staging),
+* :class:`MessageSpillConfig` — the combiner-less OMS tier (merge windows),
+* :class:`ChannelConfig`      — the §4 sender pipeline (overlap/compression),
+* :class:`RecoveryConfig`     — checkpoint cadence + message logging policy
+  (consumed by :class:`repro.core.job.GraphDJob`, which owns the lifecycle),
+
+composed into one :class:`EngineConfig`. Field-local checks live in each
+``validate()``; cross-config invariants (e.g. "pipeline is a streamed-mode
+knob") live in :meth:`EngineConfig.finalize`, which every consumer calls
+before use. Checks that need the *program* or the *partition* (combiner
+requirements, store geometry) stay in the engine — a config cannot know them.
+
+The legacy ``GraphDEngine(pg, prog, mode=..., stream_chunk_blocks=..., ...)``
+kwargs keep working for one release through :meth:`EngineConfig.resolve`,
+which maps them onto config fields and emits a single ``DeprecationWarning``
+naming every legacy kwarg used. Passing a ``config=`` *and* legacy kwargs is
+a hard error — silently merging the two surfaces would make "which knob won"
+ambiguous.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
+from typing import Any
+
+#: engine execution modes (mirrors GraphDEngine.MODES; kept here so configs
+#: can validate without importing the engine)
+MODES = ("recoded", "recoded_compact", "basic", "basic_sc", "streamed")
+
+
+class ConfigError(ValueError):
+    """A config field (or a combination of fields) is invalid."""
+
+
+@dataclass
+class StreamConfig:
+    """Out-of-core edge tier: the prefetching reader's staging pool.
+
+    RAM cost: ``(depth + 1) * chunk_blocks * edge_block`` staged slots —
+    a compiled-in constant, never O(|E|).
+    """
+
+    chunk_blocks: int = 8  # edge blocks staged per chunk
+    depth: int = 2  # prefetch depth (2 = double buffering)
+
+    def validate(self) -> None:
+        if self.chunk_blocks < 1:
+            raise ConfigError("stream.chunk_blocks must be >= 1")
+        if self.depth < 1:
+            raise ConfigError("stream.depth must be >= 1 (2 = double buffering)")
+
+
+@dataclass
+class MessageSpillConfig:
+    """Combiner-less OMS tier (§3.3.1): merge-window and apply-slice sizing.
+
+    RAM cost: ``max(merge_fanin, n_shards) * read_chunk`` merge-cursor slots
+    plus one ``slice_cap`` apply slice — the dominant term of the measured
+    combiner-less ceiling, which the planner now sizes from the budget
+    instead of these compiled-in defaults.
+    """
+
+    slice_cap: int = 4096  # messages per destination-aligned apply slice
+    read_chunk: int = 4096  # messages staged per merge-cursor refill
+    merge_fanin: int = 16  # max runs held open by the external merge
+    spill_dir: str | None = None  # OMS spill dir (default: <store>/oms)
+
+    def validate(self) -> None:
+        if self.slice_cap < 1 or self.read_chunk < 1:
+            raise ConfigError(
+                "spill.slice_cap and spill.read_chunk must be >= 1"
+            )
+        if self.merge_fanin < 2:
+            raise ConfigError("spill.merge_fanin must be >= 2")
+
+
+@dataclass
+class ChannelConfig:
+    """§4 sender pipeline: background transmit channels + wire compression."""
+
+    pipeline: bool = False  # overlap transmit with the next group's fold
+    compress: bool = False  # varint-delta the message runs' dp channel
+    inflight: int = 4  # bounded in-flight packets (O(1) RAM budget)
+    fault: Any = None  # streams.channel.FaultPoint (fault drills only)
+
+    def validate(self) -> None:
+        if self.inflight < 1:
+            raise ConfigError("channel.inflight must be >= 1")
+
+
+@dataclass
+class RecoveryConfig:
+    """Checkpoint cadence and message-log policy (paper §3.4).
+
+    The engine itself does not consume this — checkpointers are passed to
+    ``run()`` — but :class:`repro.core.job.GraphDJob` builds the
+    ``Checkpointer`` / ``MessageLog`` wiring from it, and the planner carries
+    it through so a plan fully describes a job.
+    """
+
+    checkpoint_every: int = 0  # supersteps between checkpoints; 0 = off
+    keep: int = 2  # checkpoints retained
+    log_messages: bool = False  # persist OMSs for single-shard fast recovery
+
+    def validate(self) -> None:
+        if self.checkpoint_every < 0:
+            raise ConfigError("recovery.checkpoint_every must be >= 0")
+        if self.keep < 1:
+            raise ConfigError("recovery.keep must be >= 1")
+        if self.log_messages and not self.checkpoint_every:
+            raise ConfigError(
+                "recovery.log_messages needs a checkpoint cadence: message "
+                "logs are replayed from the latest checkpoint (§3.4) and "
+                "GC'd when a newer one lands — without checkpoints they "
+                "would grow forever"
+            )
+
+
+#: legacy GraphDEngine kwarg -> (sub-config attr | None, field name)
+LEGACY_KWARGS: dict[str, tuple[str | None, str]] = {
+    "mode": (None, "mode"),
+    "sparse_cap_frac": (None, "sparse_cap_frac"),
+    "adapt_threshold": (None, "adapt_threshold"),
+    "backend": (None, "backend"),
+    "kernel_windows": (None, "kernel_windows"),
+    "stream_chunk_blocks": ("stream", "chunk_blocks"),
+    "stream_depth": ("stream", "depth"),
+    "msg_slice_cap": ("spill", "slice_cap"),
+    "msg_read_chunk": ("spill", "read_chunk"),
+    "msg_merge_fanin": ("spill", "merge_fanin"),
+    "msg_spill_dir": ("spill", "spill_dir"),
+    "pipeline": ("channel", "pipeline"),
+    "compress": ("channel", "compress"),
+    "channel_inflight": ("channel", "inflight"),
+    "channel_fault": ("channel", "fault"),
+}
+
+
+@dataclass
+class EngineConfig:
+    """Everything the engine needs to know that is not the program, the
+    partition, or a live object (mesh / store / log)."""
+
+    mode: str = "recoded"
+    backend: str = "jnp"  # "jnp" | "pallas" (kernels/, §5 fast path)
+    kernel_windows: int = 512
+    sparse_cap_frac: float = 0.25  # skip(): max gathered blocks fraction
+    adapt_threshold: float = 0.125  # dense->sparse dispatch density
+    stream: StreamConfig = field(default_factory=StreamConfig)
+    spill: MessageSpillConfig = field(default_factory=MessageSpillConfig)
+    channel: ChannelConfig = field(default_factory=ChannelConfig)
+    recovery: RecoveryConfig = field(default_factory=RecoveryConfig)
+
+    # -- validation ----------------------------------------------------------
+    def finalize(self) -> "EngineConfig":
+        """Validate every sub-config, then the cross-config invariants.
+        Returns ``self`` so call sites can write ``cfg = cfg.finalize()``."""
+        if self.mode not in MODES:
+            raise ConfigError(
+                f"unknown mode={self.mode!r}; pick one of {MODES}"
+            )
+        if self.backend not in ("jnp", "pallas"):
+            raise ConfigError(
+                f"unknown backend={self.backend!r}; pick 'jnp' or 'pallas'"
+            )
+        for sub in (self.stream, self.spill, self.channel, self.recovery):
+            sub.validate()
+        if not 0 < self.sparse_cap_frac <= 1:
+            raise ConfigError("sparse_cap_frac must be in (0, 1]")
+        if self.kernel_windows < 8:
+            raise ConfigError("kernel_windows must be >= 8")
+        ch = self.channel
+        if self.mode != "streamed" and (
+            ch.pipeline or ch.compress or ch.fault is not None
+        ):
+            raise ConfigError(
+                "pipeline=/compress=/channel_fault= are streamed-mode knobs "
+                "(the in-memory modes already overlap on-device, §5/C3)"
+            )
+        if self.backend == "pallas" and self.mode != "recoded":
+            raise ConfigError("backend='pallas' needs mode='recoded'")
+        if self.mode == "streamed" and self.backend != "jnp":
+            raise ConfigError(
+                "mode='streamed' is host-driven: backend='jnp' only"
+            )
+        return self
+
+    # -- serialization -------------------------------------------------------
+    def to_json(self) -> dict:
+        """JSON-able dict. ``channel.fault`` (a live object) is recorded only
+        by presence — fault injection is a test harness, not job state."""
+        out = dataclasses.asdict(self)
+        out["channel"]["fault"] = (
+            None if self.channel.fault is None else "<FaultPoint>"
+        )
+        return out
+
+    @classmethod
+    def from_json(cls, d: dict) -> "EngineConfig":
+        d = dict(d)
+        ch = dict(d.get("channel", {}))
+        if ch.get("fault") is not None:
+            ch["fault"] = None  # fault points do not round-trip
+        return cls(
+            mode=d.get("mode", "recoded"),
+            backend=d.get("backend", "jnp"),
+            kernel_windows=d.get("kernel_windows", 512),
+            sparse_cap_frac=d.get("sparse_cap_frac", 0.25),
+            adapt_threshold=d.get("adapt_threshold", 0.125),
+            stream=StreamConfig(**d.get("stream", {})),
+            spill=MessageSpillConfig(**d.get("spill", {})),
+            channel=ChannelConfig(**ch),
+            recovery=RecoveryConfig(**d.get("recovery", {})),
+        )
+
+    # -- the deprecation shim ------------------------------------------------
+    @classmethod
+    def resolve(cls, config: "EngineConfig | str | None",
+                legacy: dict[str, Any]) -> "EngineConfig":
+        """Turn a ``GraphDEngine`` call's ``(config, **legacy)`` into one
+        finalized EngineConfig.
+
+        * ``config`` an EngineConfig and no legacy kwargs — the new surface;
+        * ``config`` None and legacy kwargs — the old surface: map every
+          kwarg onto its config field and emit ONE ``DeprecationWarning``
+          naming them all;
+        * ``config`` a plain string — the old positional ``mode`` argument,
+          treated as the legacy kwarg it was;
+        * both — a hard :class:`ConfigError`: two sources of truth for the
+          same knob cannot be merged unambiguously.
+        """
+        if isinstance(config, str):  # GraphDEngine(pg, prog, "basic")
+            legacy = dict(legacy)
+            if "mode" in legacy:
+                raise ConfigError(
+                    "mode given both positionally and as a keyword"
+                )
+            legacy["mode"] = config
+            config = None
+        unknown = set(legacy) - set(LEGACY_KWARGS)
+        if unknown:
+            raise TypeError(
+                f"unknown GraphDEngine argument(s): {sorted(unknown)}"
+            )
+        if config is not None:
+            if legacy:
+                raise ConfigError(
+                    f"conflicting arguments: config= was given together with "
+                    f"legacy kwarg(s) {sorted(legacy)} — set "
+                    f"{', '.join(_field_path(k) for k in sorted(legacy))} "
+                    f"on the EngineConfig instead"
+                )
+            if not isinstance(config, cls):
+                raise TypeError(
+                    f"config must be an EngineConfig, got {type(config).__name__}"
+                )
+            return config.finalize()
+        cfg = cls()
+        if legacy:
+            warnings.warn(
+                "passing GraphDEngine knobs as keyword arguments is "
+                f"deprecated ({', '.join(sorted(legacy))}); build an "
+                "EngineConfig instead: "
+                + ", ".join(f"{_field_path(k)}={legacy[k]!r}"
+                            for k in sorted(legacy)),
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            for k, v in legacy.items():
+                sub, attr = LEGACY_KWARGS[k]
+                setattr(cfg if sub is None else getattr(cfg, sub), attr, v)
+        return cfg.finalize()
+
+
+def _field_path(legacy_name: str) -> str:
+    sub, attr = LEGACY_KWARGS[legacy_name]
+    return attr if sub is None else f"{sub}.{attr}"

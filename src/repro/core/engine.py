@@ -70,6 +70,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.api import Combiner, ShardContext, VertexProgram
+from repro.core.config import MODES, EngineConfig
 from repro.graph.partition import PartitionedGraph
 
 
@@ -473,39 +474,29 @@ class GraphDEngine:
 
     AXIS = "machines"
 
-    MODES = ("recoded", "recoded_compact", "basic", "basic_sc", "streamed")
+    MODES = MODES  # single source of truth: repro.core.config.MODES
 
     def __init__(
         self,
         pg: PartitionedGraph,
         program: VertexProgram,
-        mode: str = "recoded",
+        config: EngineConfig | str | None = None,
+        *,
         mesh: Mesh | None = None,
-        sparse_cap_frac: float = 0.25,
-        adapt_threshold: float = 0.125,
         message_log=None,  # core.checkpoint.MessageLog for fast recovery
-        backend: str = "jnp",  # "jnp" | "pallas" (kernels/, §5 fast path)
-        kernel_windows: int = 512,
         stream_store=None,  # streams.EdgeStreamStore, required for "streamed"
-        stream_chunk_blocks: int = 8,  # blocks staged per chunk
-        stream_depth: int = 2,  # prefetch depth (2 = double buffering)
-        msg_slice_cap: int = 4096,  # combiner-less streamed: msgs per apply slice
-        msg_read_chunk: int = 4096,  # msgs staged per merge-cursor refill
-        msg_merge_fanin: int = 16,  # max runs held open by the external merge
-        msg_spill_dir: str | None = None,  # OMS spill dir (default: store/oms)
-        pipeline: bool = False,  # §4 overlap: background sender channels
-        compress: bool = False,  # varint-delta the message runs' dp channel
-        channel_inflight: int = 4,  # bounded in-flight packets (O(1) budget)
-        channel_fault=None,  # streams.channel.FaultPoint (fault drills only)
+        **legacy,  # deprecated flat kwargs (mode=, pipeline=, ...) — one
+        #            release of shim via EngineConfig.resolve
     ):
-        if mode not in self.MODES:
-            raise ValueError(f"unknown mode={mode!r}; pick one of {self.MODES}")
-        if mode != "streamed" and (pipeline or compress
-                                   or channel_fault is not None):
-            raise ValueError(
-                "pipeline=/compress=/channel_fault= are streamed-mode knobs "
-                "(the in-memory modes already overlap on-device, §5/C3)"
-            )
+        cfg = EngineConfig.resolve(config, legacy)
+        self.config = cfg
+        mode = cfg.mode
+        backend = cfg.backend
+        pipeline = cfg.channel.pipeline
+        compress = cfg.channel.compress
+        # Config-value and cross-config validation happened in finalize();
+        # what follows needs the program, the partition, or a live object —
+        # facts no config can know.
         if mode != "streamed" and pg.E_cap > 0 and pg.src_pos.shape[-1] == 0:
             raise ValueError(
                 "this partition is vertex-only (its edge groups were spilled "
@@ -522,9 +513,7 @@ class GraphDEngine:
             # bf16 wire rounds integers > 256 — min-label algorithms would
             # silently merge distinct labels. Float-message programs only.
             raise ValueError("recoded_compact needs float messages")
-        if backend == "pallas" and (
-            mode != "recoded" or getattr(program, "msg_kind", None) is None
-        ):
+        if backend == "pallas" and getattr(program, "msg_kind", None) is None:
             raise ValueError(
                 "backend='pallas' needs mode='recoded' and a program.msg_kind"
             )
@@ -534,7 +523,7 @@ class GraphDEngine:
                     "mode='streamed' needs stream_store= (an "
                     "streams.EdgeStreamStore; see graph.partition_graph_streamed)"
                 )
-            if backend != "jnp" or mesh is not None:
+            if mesh is not None:
                 raise ValueError(
                     "mode='streamed' is host-driven: backend='jnp', mesh=None"
                 )
@@ -568,8 +557,8 @@ class GraphDEngine:
         self.mode = mode
         self.mesh = mesh
         self.backend = backend
-        self.adapt_threshold = adapt_threshold
-        self.sparse_cap = max(1, int(pg.n_blocks * sparse_cap_frac))
+        self.adapt_threshold = cfg.adapt_threshold
+        self.sparse_cap = max(1, int(pg.n_blocks * cfg.sparse_cap_frac))
         self.message_log = message_log
         self.stream_store = stream_store
         self.pipeline = bool(pipeline)
@@ -581,32 +570,25 @@ class GraphDEngine:
             from repro.streams.reader import StreamReader
 
             self._stream_reader = StreamReader(
-                stream_store, chunk_blocks=stream_chunk_blocks,
-                depth=stream_depth, owner_views=self.pipeline,
+                stream_store, chunk_blocks=cfg.stream.chunk_blocks,
+                depth=cfg.stream.depth, owner_views=self.pipeline,
             )
-            if msg_slice_cap < 1 or msg_read_chunk < 1 or msg_merge_fanin < 2:
-                raise ValueError(
-                    "msg_slice_cap and msg_read_chunk must be >= 1 and "
-                    "msg_merge_fanin >= 2"
-                )
-            if channel_inflight < 1:
-                raise ValueError("channel_inflight must be >= 1")
-            self.channel_inflight = int(channel_inflight)
-            self._channel_fault = channel_fault
+            self.channel_inflight = int(cfg.channel.inflight)
+            self._channel_fault = cfg.channel.fault
             # cumulative over the current run(); bench_memory reads it for
             # the sender-overlap section
             self.channel_stats = ChannelStats()
             self._inbox_dir = os.path.join(stream_store.dir, "inbox")
-            self.msg_spill_dir = msg_spill_dir or os.path.join(
+            self.msg_spill_dir = cfg.spill.spill_dir or os.path.join(
                 stream_store.dir, "oms"
             )
-            self.msg_slice_cap = int(msg_slice_cap)
+            self.msg_slice_cap = int(cfg.spill.slice_cap)
             # effective slice capacity; bumped (in powers of two) if a vertex
             # in-degree ever exceeds it — Pregel's compute() needs a vertex's
             # whole message list in one slice
-            self._msg_slice_cap_eff = int(msg_slice_cap)
-            self.msg_read_chunk = int(msg_read_chunk)
-            self.msg_merge_fanin = int(msg_merge_fanin)
+            self._msg_slice_cap_eff = int(cfg.spill.slice_cap)
+            self.msg_read_chunk = int(cfg.spill.read_chunk)
+            self.msg_merge_fanin = int(cfg.spill.merge_fanin)
             if program.combiner is not None:
                 self._stream_fold = jax.jit(self._make_stream_fold())
                 self._stream_apply = jax.jit(self._make_stream_apply())
@@ -634,7 +616,7 @@ class GraphDEngine:
         if backend == "pallas":
             from repro.graph.kblocks import build_kernel_layout
 
-            win = kernel_windows
+            win = cfg.kernel_windows
             while pg.P % win:
                 win //= 2  # largest power-of-2 window dividing P
             self.kl = build_kernel_layout(
@@ -1421,52 +1403,46 @@ class GraphDEngine:
         """Bytes per shard held resident vs streamed (Lemma 1 / Theorem 1
         accounting).
 
-        ``resident`` + ``buffers`` + ``staging`` is what a machine must keep
-        in RAM. For the in-memory modes the edge groups are device-resident
-        (``streamed`` counts their HBM bytes); for ``mode="streamed"`` the
-        edge groups are on disk (``streamed`` counts disk bytes) and the only
-        edge-sized thing in RAM is the constant staging pool — so the RAM
-        total is O(|V|/n), independent of |E|.
+        ``resident`` + ``buffers`` + ``staging`` (+ ``msg_staging`` +
+        ``channel``) is what a machine must keep in RAM. For the in-memory
+        modes the edge groups are device-resident (``streamed`` counts their
+        HBM bytes); for ``mode="streamed"`` the edge groups are on disk
+        (``streamed`` counts disk bytes) and the only edge-sized thing in
+        RAM is the constant staging pool — so the RAM total is O(|V|/n),
+        independent of |E|.
+
+        Delegates to ``core.plan.estimate_memory`` — the SAME algebra the
+        resource planner runs predictively — parameterized with the
+        *realized* geometry and knobs (including the auto-bumped effective
+        apply-slice cap and the actual on-disk stream bytes), so planned and
+        realized models cannot drift.
         """
+        from repro.core.plan import estimate_memory
+
         pg = self.pg
-        vdt = np.dtype(self.program.value_dtype).itemsize
-        mdt = np.dtype(self.program.msg_dtype).itemsize
-        resident = pg.P * (vdt + 1 + 4 + 1 + 8)  # values, active, degree, vmask, old
-        buffers = pg.P * (mdt + 4) * 2  # A_s + A_r (+ counts), two in flight (§5)
-        if self.mode == "streamed":
-            out = dict(
-                resident=resident, buffers=buffers,
-                staging=self._stream_reader.staging_bytes(),
-                streamed=self.stream_store.disk_bytes() // pg.n_shards,
-            )
-            if self.pipeline:
-                # the channel's bounded in-flight budget (§4): a compiled-in
-                # constant, NOT a function of |E| — combiner packets are one
-                # sparse group (<= P slots of dp+msg+cnt), raw packets one
-                # staged chunk (dp+msg+valid per slot)
-                if self.program.combiner is not None:
-                    per_packet = pg.P * (4 + mdt + 4)
-                else:
-                    per_packet = (self._stream_reader.chunk_blocks
-                                  * pg.edge_block * (4 + mdt + 1))
-                out["channel"] = self.channel_inflight * per_packet
-            if self.program.combiner is None:
-                # the disk message tier (§3.3): messages are spilled to OMS
-                # runs and merge-streamed back, so the only message-sized RAM
-                # is (a) merge cursor windows — fan-in bounded by compaction,
-                # (b) one destination-aligned apply slice, (c) the spill-sort
-                # staging for one staged edge chunk. All compiled-in
-                # constants (slice cap auto-bumps only to the max per-vertex
-                # in-degree — Pregel's own compute() lower bound).
-                per_msg = 4 + mdt  # dst_pos + payload
-                fanin = max(self.msg_merge_fanin, pg.n_shards)
-                out["msg_staging"] = (
-                    fanin * self.msg_read_chunk * per_msg
-                    + self._msg_slice_cap_eff * per_msg
-                    + self._stream_reader.chunk_blocks * pg.edge_block
-                    * per_msg
-                )
-            return out
-        streamed = pg.n_shards * pg.E_cap * (4 + 4 + 4)  # edge groups in HBM
-        return dict(resident=resident, buffers=buffers, staging=0,
-                    streamed=streamed)
+        streamed = self.mode == "streamed"
+        return estimate_memory(
+            mode=self.mode,
+            n_shards=pg.n_shards,
+            P=pg.P,
+            E_cap=pg.E_cap,
+            edge_block=pg.edge_block,
+            value_itemsize=np.dtype(self.program.value_dtype).itemsize,
+            msg_itemsize=np.dtype(self.program.msg_dtype).itemsize,
+            combined=self.program.combiner is not None,
+            pipeline=self.pipeline,
+            compress=self.compress,
+            chunk_blocks=(self._stream_reader.chunk_blocks if streamed
+                          else self.config.stream.chunk_blocks),
+            depth=(self._stream_reader.depth if streamed
+                   else self.config.stream.depth),
+            slice_cap=(self._msg_slice_cap_eff if streamed
+                       else self.config.spill.slice_cap),
+            read_chunk=self.config.spill.read_chunk,
+            merge_fanin=self.config.spill.merge_fanin,
+            inflight=self.config.channel.inflight,
+            disk_bytes_per_shard=(
+                self.stream_store.disk_bytes() // pg.n_shards
+                if streamed else None
+            ),
+        )

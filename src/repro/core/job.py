@@ -1,0 +1,335 @@
+"""`GraphDJob` — the one-call session facade over the full job lifecycle.
+
+The paper's promise is "very large graphs on ordinary resources" without the
+user hand-wiring the physical plan. Before this module an out-of-core run
+took five manual steps (partition+spill, edge store, message log,
+checkpointer, engine — each with its own knobs); now:
+
+    from repro.core import GraphDJob, MemoryBudget, PageRank
+
+    result = GraphDJob(
+        PageRank(supersteps=10), graph,
+        budget=MemoryBudget(ram_per_shard=64 << 10, n_shards=8),
+        workdir="/data/job",
+    ).run()
+
+The job owns, under one ``workdir``:
+
+* the plan (``core.plan.plan`` — or an explicit ``plan=`` for experts),
+* the partition, spilling edge groups to ``workdir/edges`` automatically
+  when the plan picked the out-of-core mode (``partition_for_plan``),
+* the recovery wiring (``workdir/ckpt`` checkpoints + ``workdir/logs``
+  message logs, built from the plan's RecoveryConfig),
+* the engine, the superstep loop, single-shard fast recovery, and elastic
+  rescaling (state migrates by original vertex id, so it works for every
+  mode including vertex-only streamed partitions),
+
+and returns a structured :class:`JobResult` carrying the final values, the
+superstep history, and the realized-vs-planned memory model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.checkpoint import (
+    Checkpointer, MessageLog, RunFileMessageLog, recover_shard,
+    recover_shard_streamed,
+)
+from repro.core.config import RecoveryConfig
+from repro.core.engine import GraphDEngine, SuperstepRecord
+from repro.core.plan import (
+    ExecutionPlan, GraphMeta, MemoryBudget, plan as make_plan, ram_total,
+)
+from repro.graph.partition import partition_for_plan
+
+
+@dataclass
+class JobResult:
+    """What a run produced, plus the audit trail: what was planned and what
+    it actually cost. ``summary()`` is JSON-able for benchmarks/CI artifacts."""
+
+    values: dict[int, object]  # {original vertex id: final value}
+    history: list[SuperstepRecord]
+    plan: ExecutionPlan
+    realized_model: dict[str, int]
+    realized_ram: int
+    workdir: str
+
+    @property
+    def planned_ram(self) -> int:
+        return self.plan.ram_total
+
+    @property
+    def n_supersteps(self) -> int:
+        return len(self.history)
+
+    def summary(self) -> dict:
+        """JSON-able record of the run (values excluded — they are the
+        payload, not the audit trail; ``values`` stays on the object)."""
+        ratio = (self.planned_ram / self.realized_ram
+                 if self.realized_ram else float("inf"))
+        return dict(
+            mode=self.plan.mode,
+            pipeline=self.plan.pipeline,
+            compress=self.plan.compress,
+            n_shards=self.plan.n_shards,
+            n_vertices=len(self.values),
+            n_supersteps=self.n_supersteps,
+            halted_at=self.history[-1].step if self.history else None,
+            planned=dict(ram=self.planned_ram, model=self.plan.model),
+            realized=dict(ram=self.realized_ram, model=self.realized_model),
+            planned_over_realized_ram=ratio,
+            history=[dataclasses.asdict(r) for r in self.history],
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.summary())
+
+
+class GraphDJob:
+    """Plan → partition → run → recover/rescale, one object, one workdir.
+
+    ``budget`` drives the planner; pass ``plan=`` instead to pin an exact
+    physical plan (mutually exclusive — a plan already embeds its budget).
+    ``checkpoint_every`` overrides the plan's RecoveryConfig and turns on
+    message logging, enabling :meth:`recover_shard`. Without a ``workdir``
+    the job creates (and owns) a temporary one; use the job as a context
+    manager or call :meth:`close` to release it.
+    """
+
+    def __init__(
+        self,
+        program,
+        graph,
+        *,
+        budget: MemoryBudget | None = None,
+        plan: ExecutionPlan | None = None,
+        workdir: str | None = None,
+        checkpoint_every: int | None = None,
+        edge_block: int = 512,
+        vertex_pad: int = 8,
+    ):
+        if plan is not None and budget is not None:
+            raise ValueError(
+                "pass budget= (to plan) or plan= (pre-planned), not both — "
+                "an ExecutionPlan already embeds the budget it was made for"
+            )
+        self.program = program
+        self.graph = graph
+        if plan is None:
+            plan = make_plan(program, GraphMeta.of(graph), budget,
+                             edge_block=edge_block, vertex_pad=vertex_pad)
+        if checkpoint_every is not None:
+            # message logging (=> single-shard fast recovery) needs either a
+            # combined A_s log or the streamed OMS run files; a combiner-less
+            # in-memory plan has neither, so it gets checkpoints only
+            log_ok = (plan.mode == "streamed"
+                      or program.combiner is not None)
+            plan = dataclasses.replace(plan, config=dataclasses.replace(
+                plan.config,
+                recovery=RecoveryConfig(
+                    checkpoint_every=checkpoint_every,
+                    log_messages=checkpoint_every > 0 and log_ok,
+                ),
+            ))
+            plan.config.finalize()
+        self.plan = plan
+        self.budget = plan.budget
+        self._tmp = workdir is None
+        self.workdir = workdir or tempfile.mkdtemp(prefix="graphd-job-")
+        os.makedirs(self.workdir, exist_ok=True)
+        self._guard_workdir_identity()
+        self._state = None  # (values, active) after a run / rescale
+        self._next_step = 0
+        self._closed = False
+        self._build(tag="")
+
+    def _guard_workdir_identity(self) -> None:
+        """A reused workdir may hold another job's checkpoints; silently
+        restoring them would hand this program a different program's state.
+        The identity file pins (program, graph); a mismatch is an error, a
+        match means resume is intended."""
+        ident = dict(
+            program=type(self.program).__name__,
+            value_dtype=str(np.dtype(self.program.value_dtype)),
+            n_vertices=self.plan.meta.n_vertices,
+            n_edges=self.plan.meta.n_edges,
+        )
+        path = os.path.join(self.workdir, "job.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                existing = json.load(f)
+            if existing != ident:
+                raise ValueError(
+                    f"workdir {self.workdir!r} belongs to a different job "
+                    f"({existing}) than this one ({ident}); its checkpoints "
+                    "would be restored as this program's state — use a "
+                    "fresh workdir (or delete the old one)"
+                )
+        else:
+            with open(path, "w") as f:
+                json.dump(ident, f)
+
+    # -- wiring ---------------------------------------------------------------
+    def _dir(self, name: str, tag: str) -> str:
+        return os.path.join(self.workdir, name + tag)
+
+    def _build(self, tag: str) -> None:
+        """Partition (spilling if planned) and wire store/log/ckpt/engine
+        under ``workdir``; ``tag`` namespaces the layout after a rescale (the
+        shard count changed, so checkpoints/logs/streams are a new lineage)."""
+        plan = self.plan
+        self.pg, self.rmap, self.store = partition_for_plan(
+            self.graph, plan, self._dir("edges", tag)
+        )
+        rec = plan.config.recovery
+        self.checkpointer = (
+            Checkpointer(self._dir("ckpt", tag), every=rec.checkpoint_every,
+                         keep=rec.keep)
+            if rec.checkpoint_every else None
+        )
+        if rec.log_messages:
+            if plan.mode != "streamed" and self.program.combiner is None:
+                raise ValueError(
+                    "recovery.log_messages needs combined A_s buffers (a "
+                    "program combiner) or the streamed OMS tier; a "
+                    "combiner-less in-memory plan has neither — tighten the "
+                    "budget so the plan goes streamed, or drop log_messages "
+                    "(checkpoint-only restarts still work)"
+                )
+            log_dir = self._dir("logs", tag)
+            self.message_log = (RunFileMessageLog(log_dir)
+                                if plan.mode == "streamed"
+                                else MessageLog(log_dir))
+        else:
+            self.message_log = None
+        self.engine = GraphDEngine(
+            self.pg, self.program, config=plan.config,
+            stream_store=self.store, message_log=self.message_log,
+        )
+
+    # -- lifecycle ------------------------------------------------------------
+    def run(self, max_supersteps: int = 10_000, *,
+            verbose: bool = False, on_step=None) -> JobResult:
+        """Run (or continue, after :meth:`rescale`) to completion and return
+        the structured result. With recovery enabled a step-0 checkpoint is
+        saved before the first superstep so single-shard recovery always has
+        a base to replay from. Re-running a job whose workdir already holds
+        a finished run's checkpoint is a RESUME: the state restores and the
+        result carries zero new supersteps (the identity file written at
+        construction guards against resuming a different job's state)."""
+        self._check_open()
+        if (self.checkpointer is not None and self._state is None
+                and self.checkpointer.latest() is None):
+            meta = (self.store.signature()
+                    if self.store is not None else None)
+            self.checkpointer.save(0, *self.engine.init(), meta=meta)
+        (values, active), history = self.engine.run(
+            max_supersteps=max_supersteps, state=self._state,
+            start_step=self._next_step, verbose=verbose,
+            checkpointer=self.checkpointer, on_step=on_step,
+        )
+        self._state = (values, active)
+        if history:
+            self._next_step = history[-1].step + 1
+        realized = self.engine.memory_model()
+        return JobResult(
+            values=self.engine.gather_values(values),
+            history=history,
+            plan=self.plan,
+            realized_model=realized,
+            realized_ram=ram_total(realized, self.plan.mode),
+            workdir=self.workdir,
+        )
+
+    def recover_shard(self, failed: int, target_step: int | None = None):
+        """Single-shard fast recovery ([19]/§3.4): only ``failed`` recomputes
+        from the latest checkpoint + peers' logged messages. Returns that
+        shard's ``(values_row, active_row)`` at ``target_step`` (default: the
+        last completed superstep)."""
+        self._check_open()
+        if self.checkpointer is None or self.message_log is None:
+            raise RuntimeError(
+                "recovery needs checkpoints + message logs: construct the "
+                "job with checkpoint_every= (or a RecoveryConfig on the "
+                "plan) before run()"
+            )
+        target = self._next_step if target_step is None else target_step
+        if self.plan.mode == "streamed":
+            return recover_shard_streamed(
+                self.pg, self.program, failed, self.checkpointer,
+                self.message_log, self.store, target,
+            )
+        return recover_shard(self.pg, self.program, failed,
+                             self.checkpointer, self.message_log, target)
+
+    def rescale(self, n_shards: int) -> "GraphDJob":
+        """Elastic rescale: re-plan for ``n_shards`` under the same budget,
+        rebuild the physical layout (respilling edge streams when streamed),
+        and migrate live vertex state by original id — works for every mode,
+        including vertex-only spilled partitions. The job then continues
+        from the same superstep: ``job.rescale(12).run()``."""
+        self._check_open()
+        if self._state is None:
+            raise RuntimeError("rescale() needs a prior run(): no live state")
+        old_vals = np.asarray(self._state[0])
+        old_act = np.asarray(self._state[1])
+        vmask = np.asarray(self.pg.vmask)
+        old_ids = np.asarray(self.pg.old_ids)[vmask]
+        vals_real = old_vals[vmask]
+        act_real = old_act[vmask]
+
+        self.plan = make_plan(
+            self.program, GraphMeta.of(self.graph),
+            dataclasses.replace(self.budget, n_shards=n_shards),
+            edge_block=self.plan.edge_block,
+            vertex_pad=self.plan.vertex_pad,
+            recovery=self.plan.config.recovery,
+        )
+        self.budget = self.plan.budget
+        self._build(tag=f"-n{n_shards}")
+        # migrate by original id: the new recode map decides (shard, pos)
+        g_new = np.asarray(self.rmap.to_new(old_ids))
+        import jax.numpy as jnp
+
+        vals2 = np.zeros((n_shards, self.pg.P), dtype=old_vals.dtype)
+        act2 = np.zeros((n_shards, self.pg.P), dtype=bool)
+        vals2[g_new % n_shards, g_new // n_shards] = vals_real
+        act2[g_new % n_shards, g_new // n_shards] = act_real
+        self._state = (jnp.asarray(vals2), jnp.asarray(act2))
+        # seed the new lineage with the migrated state: recovery replays
+        # from the latest checkpoint, and the rescaled ckpt dir would
+        # otherwise stay empty until a cadence boundary happens to be
+        # crossed — recover_shard() right after a rescale must still work
+        if self.checkpointer is not None:
+            meta = self.store.signature() if self.store is not None else None
+            self.checkpointer.save(self._next_step, *self._state, meta=meta)
+        return self
+
+    # -- teardown -------------------------------------------------------------
+    def close(self, delete: bool | None = None) -> None:
+        """Release the workdir. ``delete`` defaults to True only when the
+        job created a temporary one; an explicit user workdir is kept."""
+        if self._closed:
+            return
+        self._closed = True
+        if delete if delete is not None else self._tmp:
+            shutil.rmtree(self.workdir, ignore_errors=True)
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("job is closed (workdir released)")
+
+    def __enter__(self) -> "GraphDJob":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,585 @@
+"""Resource-aware job planning: from a logical job description to a plan.
+
+The paper's pitch is that GraphD processes very large graphs "with ordinary
+computing resources" without the user thinking about memory. This module is
+that promise as code: :func:`plan` takes a vertex program, the graph's size,
+and a :class:`MemoryBudget`, runs the engine's memory-model algebra
+*predictively* over every execution mode the engine offers, and returns an
+:class:`ExecutionPlan` — the chosen mode plus every staging/window/fan-in
+knob derived from the budget instead of compiled-in constants.
+
+The algebra (:func:`estimate_memory`) is the SAME function the engine's
+``memory_model()`` reports after construction — prediction and realization
+cannot drift because they are one formula, parameterized by (estimated vs
+realized) partition geometry. The per-format byte units live next to the
+formats they describe (``streams.store.EDGE_SLOT_BYTES``,
+``MessageRunStore.fixed_bytes_per_message``, ``ShardChannels.packet_bytes``).
+
+Mode preference (first feasible wins, all alternatives reported):
+
+* combiner programs:   ``recoded`` → ``recoded_compact`` → ``streamed`` →
+  ``streamed+pipeline`` — in-memory combining is fastest; the out-of-core
+  tier engages when the edge groups stop fitting; the §4 pipeline engages
+  when even the n destination accumulators of the unpipelined streamed fold
+  stop fitting (the pipelined fold keeps ONE group + ONE receiver
+  accumulator and spills finished groups to inbox runs);
+* combiner-less:       ``basic`` → ``streamed`` (OMS spill) →
+  ``streamed+pipeline``.
+
+``compress`` is engaged per streamed candidate when the disk budget demands
+it. An over-constrained budget raises :class:`PlanInfeasible` carrying the
+most frugal candidate's per-tier byte breakdown.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.config import (
+    ChannelConfig, EngineConfig, MessageSpillConfig, RecoveryConfig,
+    StreamConfig,
+)
+from repro.streams.channel import ShardChannels
+from repro.streams.msgstore import MessageRunStore
+from repro.streams.store import (
+    COMPRESS_RATIO_ESTIMATE, EDGE_SLOT_BYTES, estimate_edge_disk_bytes,
+)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fmt(b: int | None) -> str:
+    if b is None:
+        return "unbounded"
+    b = int(b)
+    if b >= 1 << 30:
+        return f"{b / (1 << 30):.2f} GiB"
+    if b >= 1 << 20:
+        return f"{b / (1 << 20):.2f} MiB"
+    if b >= 1 << 10:
+        return f"{b / (1 << 10):.1f} KiB"
+    return f"{b} B"
+
+
+# --------------------------------------------------------------------------
+# the shared memory-model algebra (Lemma 1 / Theorem 1 accounting)
+# --------------------------------------------------------------------------
+
+#: model keys that live in RAM for every mode; ``streamed`` is the big tier
+#: (device memory for in-memory modes, local disk for mode="streamed")
+RAM_KEYS = ("resident", "buffers", "staging", "msg_staging", "channel", "wire")
+
+
+def estimate_memory(
+    *,
+    mode: str,
+    n_shards: int,
+    P: int,
+    E_cap: int,
+    edge_block: int,
+    value_itemsize: int,
+    msg_itemsize: int,
+    combined: bool,
+    pipeline: bool = False,
+    compress: bool = False,
+    chunk_blocks: int = 8,
+    depth: int = 2,
+    slice_cap: int = 4096,
+    read_chunk: int = 4096,
+    merge_fanin: int = 16,
+    inflight: int = 4,
+    disk_bytes_per_shard: int | None = None,
+) -> dict[str, int]:
+    """Per-shard bytes by tier for one (mode, geometry, knobs) point.
+
+    This is the engine's ``memory_model()`` algebra factored out so the
+    planner can run it over *candidate* geometries before anything is
+    partitioned. Keys: ``resident`` (state array A), ``buffers`` (combine
+    accumulators), ``staging`` (edge-reader pool), ``msg_staging``
+    (combiner-less merge/slice windows), ``channel`` (§4 in-flight budget),
+    ``wire`` (mode="basic" raw exchange buffers), ``streamed`` (the big
+    tier: device edge groups, or on-disk streams for mode="streamed").
+    """
+    resident = P * (value_itemsize + 1 + 4 + 1 + 8)  # values, active, degree, vmask, old
+    per_slot = msg_itemsize + 4  # message + count, the A_s/A_r unit (§5)
+    if mode != "streamed":
+        out = dict(
+            resident=resident,
+            buffers=P * per_slot * 2,  # A_s + A_r, two in flight (§5)
+            staging=0,
+            streamed=n_shards * E_cap * EDGE_SLOT_BYTES,  # edge groups in HBM
+        )
+        if mode == "basic":
+            # raw (dst, payload) all_to_all: E-sized send + receive buffers
+            out["wire"] = 2 * n_shards * E_cap * (4 + msg_itemsize)
+        return out
+    staging = (depth + 1) * chunk_blocks * edge_block * EDGE_SLOT_BYTES
+    if combined:
+        if pipeline:
+            # one group accumulator folding + one receiver accumulator
+            buffers = 2 * P * per_slot
+        else:
+            # all n destination accumulators resident until apply, plus the
+            # group accumulator when a message log splits the fold per group
+            buffers = (n_shards + 1) * P * per_slot
+    else:
+        # double-buffered (values, active) rows for the slice overwrite
+        # merge, plus the per-position message counts
+        buffers = 2 * P * (value_itemsize + 1) + P * 4
+    out = dict(
+        resident=resident,
+        buffers=buffers,
+        staging=staging,
+        streamed=(
+            disk_bytes_per_shard
+            if disk_bytes_per_shard is not None
+            else estimate_edge_disk_bytes(n_shards, E_cap, compress)
+        ),
+    )
+    if pipeline:
+        out["channel"] = inflight * ShardChannels.packet_bytes(
+            P=P, msg_itemsize=msg_itemsize, combined=combined,
+            chunk_slots=chunk_blocks * edge_block,
+        )
+    if not combined:
+        # the disk message tier (§3.3): merge cursor windows (fan-in bounded
+        # by compaction), one destination-aligned apply slice, and the
+        # spill-sort staging for one staged edge chunk
+        per_msg = MessageRunStore.fixed_bytes_per_message(msg_itemsize)
+        fanin = max(merge_fanin, n_shards)
+        out["msg_staging"] = (
+            fanin * read_chunk * per_msg
+            + slice_cap * per_msg
+            + chunk_blocks * edge_block * per_msg
+        )
+    return out
+
+
+def ram_total(model: dict[str, int], mode: str) -> int:
+    """What one machine must keep in RAM under ``model``. For the in-memory
+    modes the edge groups (the ``streamed`` tier) are device-resident and
+    count; for ``mode="streamed"`` they are on local disk and do not."""
+    total = sum(model.get(k, 0) for k in RAM_KEYS)
+    if mode != "streamed":
+        total += model.get("streamed", 0)
+    return int(total)
+
+
+def estimate_net(mode: str, *, n_shards: int, P: int, E_cap: int,
+                 msg_itemsize: int, combined: bool) -> int:
+    """Bytes one shard puts on the wire per superstep (the Table 2-8 axis)."""
+    if mode == "recoded_compact":
+        return n_shards * P * 3  # bf16 value + 1-byte has-msg flag
+    if mode in ("recoded", "basic_sc"):
+        return n_shards * P * (msg_itemsize + 4)  # combined A_s + counts
+    if mode == "basic" or not combined:
+        return n_shards * E_cap * (4 + msg_itemsize)  # raw (dst, payload)
+    return n_shards * P * (4 + msg_itemsize + 4)  # sparse combined groups
+
+
+# --------------------------------------------------------------------------
+# budget / metadata inputs
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MemoryBudget:
+    """What one machine may spend. ``None`` = unconstrained tier."""
+
+    ram_per_shard: int | None = None
+    n_shards: int = 4
+    disk_per_shard: int | None = None
+    net_per_superstep: int | None = None
+
+    def validate(self) -> "MemoryBudget":
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        for name in ("ram_per_shard", "disk_per_shard", "net_per_superstep"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive (or None)")
+        return self
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class GraphMeta:
+    """The logical facts the planner needs about a graph.
+
+    When built from an already-partitioned graph the exact per-shard
+    geometry rides along (``max_shard_vertices``/``for_n_shards``), making
+    the plan's P — and with it every P-proportional tier — exact instead of
+    the ``ceil(|V|/n)`` estimate (the hash partition is near-balanced but
+    not perfect; Lemma 1 only bounds the skew by 2)."""
+
+    n_vertices: int
+    n_edges: int
+    max_shard_vertices: int | None = None  # realized P (pre-padding) if known
+    for_n_shards: int | None = None  # shard count that P was realized for
+
+    @classmethod
+    def of(cls, graph) -> "GraphMeta":
+        """Accepts a ``graph.csr.Graph``, a ``PartitionedGraph``, or an
+        existing GraphMeta."""
+        if isinstance(graph, cls):
+            return graph
+        return cls(n_vertices=int(graph.n_vertices),
+                   n_edges=int(graph.n_edges),
+                   max_shard_vertices=getattr(graph, "P", None),
+                   for_n_shards=getattr(graph, "n_shards", None))
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanInfeasible(RuntimeError):
+    """No execution mode fits the budget; ``breakdown`` holds the budget and
+    every candidate's per-tier byte model (also formatted into the message,
+    so the failure is actionable from the log line alone)."""
+
+    def __init__(self, message: str, breakdown: dict):
+        super().__init__(message)
+        self.breakdown = breakdown
+
+
+# --------------------------------------------------------------------------
+# plan artifacts
+# --------------------------------------------------------------------------
+
+@dataclass
+class Candidate:
+    """One evaluated (mode, knobs) alternative — kept on the plan so
+    ``explain()`` can say why everything NOT chosen was rejected."""
+
+    name: str
+    mode: str
+    pipeline: bool
+    compress: bool
+    feasible: bool
+    chosen: bool
+    reason: str
+    model: dict[str, int]
+    ram_total: int
+    disk_total: int
+    net_total: int
+    knobs: dict[str, int]
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class ExecutionPlan:
+    """The planner's output: a finalized EngineConfig plus the partition-time
+    knobs, the predicted byte model, and the full audit trail."""
+
+    config: EngineConfig
+    budget: MemoryBudget
+    meta: GraphMeta
+    n_shards: int
+    edge_block: int
+    vertex_pad: int
+    model: dict[str, int]
+    ram_total: int
+    disk_total: int
+    net_total: int
+    alternatives: list[Candidate] = field(default_factory=list)
+
+    @property
+    def mode(self) -> str:
+        return self.config.mode
+
+    @property
+    def pipeline(self) -> bool:
+        return self.config.channel.pipeline
+
+    @property
+    def compress(self) -> bool:
+        return self.config.channel.compress
+
+    def explain(self) -> str:
+        """Human-readable plan audit: the per-tier byte model of the chosen
+        mode and why each alternative was rejected (or not preferred)."""
+        b = self.budget
+        chosen = next(c for c in self.alternatives if c.chosen)
+        lines = [
+            f"ExecutionPlan: {chosen.name} for |V|={self.meta.n_vertices:,} "
+            f"|E|={self.meta.n_edges:,} on n_shards={self.n_shards} "
+            f"(edge_block={self.edge_block})",
+            f"budget: ram/shard={_fmt(b.ram_per_shard)} "
+            f"disk/shard={_fmt(b.disk_per_shard)} "
+            f"net/superstep={_fmt(b.net_per_superstep)}",
+            f"predicted: ram={_fmt(self.ram_total)} "
+            f"disk={_fmt(self.disk_total)} net={_fmt(self.net_total)}/step",
+            "model/shard: "
+            + " ".join(f"{k}={_fmt(v)}" for k, v in self.model.items()),
+        ]
+        if chosen.knobs:
+            lines.append(
+                "knobs: "
+                + " ".join(f"{k}={v}" for k, v in chosen.knobs.items())
+            )
+        lines.append("alternatives:")
+        for c in self.alternatives:
+            if c.chosen:
+                verdict = "CHOSEN"
+            elif c.feasible:
+                verdict = "FEASIBLE"
+            else:
+                verdict = "REJECTED"
+            line = (f"  {c.name:<20} {verdict:<8} ram={_fmt(c.ram_total)} "
+                    f"disk={_fmt(c.disk_total)} net={_fmt(c.net_total)}/step")
+            if c.reason:
+                line += f" — {c.reason}"
+            lines.append(line)
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps(dict(
+            config=self.config.to_json(),
+            budget=self.budget.to_json(),
+            meta=self.meta.to_json(),
+            n_shards=self.n_shards,
+            edge_block=self.edge_block,
+            vertex_pad=self.vertex_pad,
+            model=self.model,
+            ram_total=self.ram_total,
+            disk_total=self.disk_total,
+            net_total=self.net_total,
+            alternatives=[c.to_json() for c in self.alternatives],
+        ))
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        d = json.loads(s)
+        return cls(
+            config=EngineConfig.from_json(d["config"]),
+            budget=MemoryBudget(**d["budget"]),
+            meta=GraphMeta(**d["meta"]),
+            n_shards=d["n_shards"],
+            edge_block=d["edge_block"],
+            vertex_pad=d["vertex_pad"],
+            model=d["model"],
+            ram_total=d["ram_total"],
+            disk_total=d["disk_total"],
+            net_total=d["net_total"],
+            alternatives=[Candidate(**c) for c in d["alternatives"]],
+        )
+
+
+# --------------------------------------------------------------------------
+# the planner
+# --------------------------------------------------------------------------
+
+# knob ladders, most preferred (fastest / default) first; the floor of each
+# ladder is the most frugal configuration the engine still runs correctly
+# (slice_cap auto-bumps to the max in-degree at runtime, the Pregel floor)
+_CHUNK_LADDER = (8, 4, 2, 1)
+_INFLIGHT_LADDER = (4, 2, 1)
+_READ_LADDER = (4096, 1024, 256, 64)
+_SLICE_LADDER = (4096, 1024, 512, 128)
+
+
+def plan(
+    program,
+    graph_meta,
+    budget: MemoryBudget | None = None,
+    *,
+    edge_block: int = 512,
+    vertex_pad: int = 8,
+    depth: int = 2,
+    skew: float = 1.5,
+    recovery: RecoveryConfig | None = None,
+) -> ExecutionPlan:
+    """Choose an execution mode and derive every knob from the budget.
+
+    ``graph_meta`` is a :class:`GraphMeta`, a ``Graph``, or a
+    ``PartitionedGraph``; ``skew`` models the max/mean per-group padding
+    overhead of the hash partition (Lemma 1 bounds it by 2).
+    """
+    meta = GraphMeta.of(graph_meta)
+    budget = (budget or MemoryBudget()).validate()
+    n = budget.n_shards
+    combined = program.combiner is not None
+    vdt = np.dtype(program.value_dtype).itemsize
+    mdt = np.dtype(program.msg_dtype).itemsize
+    float_msgs = np.dtype(program.msg_dtype).kind == "f" and mdt <= 4
+
+    if meta.max_shard_vertices is not None and meta.for_n_shards == n:
+        P = max(_round_up(meta.max_shard_vertices, vertex_pad), vertex_pad)
+    else:
+        P = max(_round_up(-(-meta.n_vertices // n), vertex_pad), vertex_pad)
+    mean_group = meta.n_edges / (n * n)
+    E_cap = max(_round_up(int(mean_group * skew), edge_block), edge_block)
+    geom = dict(n_shards=n, P=P, E_cap=E_cap, edge_block=edge_block,
+                value_itemsize=vdt, msg_itemsize=mdt, combined=combined)
+
+    def in_memory(name: str, mode: str, reason_veto: str = "") -> Candidate:
+        model = estimate_memory(mode=mode, **geom)
+        ram = ram_total(model, mode)
+        net = estimate_net(mode, n_shards=n, P=P, E_cap=E_cap,
+                           msg_itemsize=mdt, combined=combined)
+        disk = 0
+        feasible, reason = True, ""
+        if reason_veto:
+            feasible, reason = False, reason_veto
+        elif budget.ram_per_shard is not None and ram > budget.ram_per_shard:
+            feasible = False
+            reason = (f"ram {_fmt(ram)} > budget "
+                      f"{_fmt(budget.ram_per_shard)} (edge groups resident: "
+                      f"{_fmt(model['streamed'])})")
+        elif (budget.net_per_superstep is not None
+              and net > budget.net_per_superstep):
+            feasible = False
+            reason = (f"net {_fmt(net)}/superstep > budget "
+                      f"{_fmt(budget.net_per_superstep)}")
+        return Candidate(name=name, mode=mode, pipeline=False, compress=False,
+                         feasible=feasible, chosen=False, reason=reason,
+                         model=model, ram_total=ram, disk_total=disk,
+                         net_total=net, knobs={})
+
+    def streamed(pipeline: bool) -> Candidate:
+        name = "streamed+pipeline" if pipeline else "streamed"
+        # disk tier first: engage compression only when the budget demands it
+        compress = False
+        per_msg_spill = MessageRunStore.fixed_bytes_per_message(mdt)
+
+        def disk_for(compress: bool) -> int:
+            d = estimate_edge_disk_bytes(n, E_cap, compress)
+            if not combined:
+                pm = (mdt + int(4 * COMPRESS_RATIO_ESTIMATE) if compress
+                      else per_msg_spill)
+                d += E_cap * pm  # peak OMS spill: one destination's runs
+            elif pipeline:
+                d += P * (4 + mdt + 4)  # peak inbox runs: one dest's groups
+            return d
+
+        disk = disk_for(False)
+        if budget.disk_per_shard is not None and disk > budget.disk_per_shard:
+            compress = True
+            disk = disk_for(True)
+        # knob ladders, first fit wins; ordering shrinks the cheap knobs
+        # first (merge fan-in, then read/slice windows, then the in-flight
+        # budget, then the edge staging chunk)
+        fanin_ladder = sorted({16, max(2, n)}, reverse=True)
+        infl_ladder = _INFLIGHT_LADDER if pipeline else (4,)
+        if combined:
+            combos = itertools.product(
+                _CHUNK_LADDER, infl_ladder, (4096,), (4096,), (16,)
+            )
+        else:
+            combos = itertools.product(
+                _CHUNK_LADDER, infl_ladder, _SLICE_LADDER, _READ_LADDER,
+                fanin_ladder,
+            )
+        chosen_model = chosen_knobs = None
+        ram = 0
+        for cb, infl, sc, rc, fanin in combos:
+            model = estimate_memory(
+                mode="streamed", pipeline=pipeline, compress=compress,
+                chunk_blocks=cb, depth=depth, slice_cap=sc, read_chunk=rc,
+                merge_fanin=fanin, inflight=infl, **geom,
+            )
+            ram = ram_total(model, "streamed")
+            chosen_model = model
+            chosen_knobs = dict(chunk_blocks=cb, depth=depth, inflight=infl,
+                                slice_cap=sc, read_chunk=rc,
+                                merge_fanin=fanin)
+            if budget.ram_per_shard is None or ram <= budget.ram_per_shard:
+                break
+        net = estimate_net("streamed", n_shards=n, P=P, E_cap=E_cap,
+                           msg_itemsize=mdt, combined=combined)
+        feasible, reason = True, ""
+        if budget.ram_per_shard is not None and ram > budget.ram_per_shard:
+            feasible = False
+            reason = (f"ram {_fmt(ram)} > budget "
+                      f"{_fmt(budget.ram_per_shard)} even at floor knobs "
+                      + " ".join(f"{k}={_fmt(v)}"
+                                 for k, v in chosen_model.items()
+                                 if k != "streamed"))
+        elif (budget.disk_per_shard is not None
+              and disk > budget.disk_per_shard):
+            feasible = False
+            reason = (f"disk {_fmt(disk)} > budget "
+                      f"{_fmt(budget.disk_per_shard)} even compressed")
+        elif (budget.net_per_superstep is not None
+              and net > budget.net_per_superstep):
+            # inbox appends are local disk in emulation, but they model
+            # cross-machine traffic in deployment — the budget applies
+            feasible = False
+            reason = (f"net {_fmt(net)}/superstep > budget "
+                      f"{_fmt(budget.net_per_superstep)}")
+        if compress:
+            name += "+compress"
+        return Candidate(name=name, mode="streamed", pipeline=pipeline,
+                         compress=compress, feasible=feasible, chosen=False,
+                         reason=reason, model=chosen_model,
+                         ram_total=ram, disk_total=disk, net_total=net,
+                         knobs=chosen_knobs)
+
+    candidates: list[Candidate] = []
+    if combined:
+        candidates.append(in_memory("recoded", "recoded"))
+        candidates.append(in_memory(
+            "recoded_compact", "recoded_compact",
+            reason_veto="" if float_msgs
+            else "needs float messages (bf16 wire rounds integers)",
+        ))
+        candidates.append(in_memory(
+            "basic", "basic",
+            reason_veto="dominated by recoded for combiner programs "
+                        "(network and buffers ∝ |E| instead of |V|)",
+        ))
+    else:
+        candidates.append(in_memory("basic", "basic"))
+    candidates.append(streamed(pipeline=False))
+    candidates.append(streamed(pipeline=True))
+
+    winner = next((c for c in candidates if c.feasible), None)
+    if winner is None:
+        frugal = candidates[-1]
+        breakdown = dict(budget=budget.to_json(), meta=meta.to_json(),
+                         candidates=[c.to_json() for c in candidates])
+        raise PlanInfeasible(
+            f"no execution mode fits {budget}: the most frugal plan "
+            f"({frugal.name} at floor knobs) still needs "
+            f"{_fmt(frugal.ram_total)} RAM/shard ("
+            + " ".join(f"{k}={_fmt(v)}" for k, v in frugal.model.items()
+                       if k != "streamed")
+            + f") and {_fmt(frugal.disk_total)} disk/shard; raise "
+            f"ram_per_shard, add shards, or relax the disk budget.",
+            breakdown,
+        )
+    winner.chosen = True
+    for c in candidates:
+        if c.feasible and not c.chosen and not c.reason:
+            c.reason = f"feasible, but {winner.name} preferred (listed order)"
+
+    k = winner.knobs
+    cfg = EngineConfig(
+        mode=winner.mode,
+        stream=StreamConfig(chunk_blocks=k.get("chunk_blocks", 8),
+                            depth=k.get("depth", depth)),
+        spill=MessageSpillConfig(slice_cap=k.get("slice_cap", 4096),
+                                 read_chunk=k.get("read_chunk", 4096),
+                                 merge_fanin=k.get("merge_fanin", 16)),
+        channel=ChannelConfig(pipeline=winner.pipeline,
+                              compress=winner.compress,
+                              inflight=k.get("inflight", 4)),
+        recovery=recovery or RecoveryConfig(),
+    ).finalize()
+    return ExecutionPlan(
+        config=cfg, budget=budget, meta=meta, n_shards=n,
+        edge_block=edge_block, vertex_pad=vertex_pad,
+        model=winner.model, ram_total=winner.ram_total,
+        disk_total=winner.disk_total, net_total=winner.net_total,
+        alternatives=candidates,
+    )

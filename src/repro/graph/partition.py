@@ -238,6 +238,27 @@ def partition_graph_streamed(
     return pg, rmap, store
 
 
+def partition_for_plan(g: Graph, plan, spill_dir: str,
+                       recode: RecodeMap | None = None):
+    """Materialize the physical layout an ``core.plan.ExecutionPlan`` chose:
+    hash-partition with the plan's geometry knobs, and — when the plan picked
+    the out-of-core mode — spill the edge groups to ``spill_dir`` (compressed
+    iff the plan says so). Returns ``(pg, rmap, store)`` with ``store`` None
+    for the in-memory modes; the one partitioning entry point
+    ``core.job.GraphDJob`` builds every mode through."""
+    if plan.mode == "streamed":
+        return partition_graph_streamed(
+            g, plan.n_shards, spill_dir, edge_block=plan.edge_block,
+            vertex_pad=plan.vertex_pad, recode=recode,
+            compress=plan.compress,
+        )
+    pg, rmap = partition_graph(
+        g, plan.n_shards, edge_block=plan.edge_block,
+        vertex_pad=plan.vertex_pad, recode=recode,
+    )
+    return pg, rmap, None
+
+
 def abstract_partitioned_graph(
     n_shards: int,
     n_vertices: int,

@@ -103,6 +103,18 @@ class ShardChannels:
     """Outbox→inbox channels over one inbox store, one sender thread, and a
     bounded in-flight budget."""
 
+    @staticmethod
+    def packet_bytes(*, P: int, msg_itemsize: int, combined: bool,
+                     chunk_slots: int = 0) -> int:
+        """Worst-case bytes of ONE in-flight packet — the unit of the §4
+        channel RAM budget (``inflight * packet_bytes``), shared with the
+        engine's memory_model and the resource planner. Combiner packets are
+        one sparse combined group (<= P slots of dp+msg+cnt); raw packets one
+        staged edge chunk (dp+msg+valid per slot)."""
+        if combined:
+            return P * (4 + msg_itemsize + 4)
+        return chunk_slots * (4 + msg_itemsize + 1)
+
     def __init__(self, inbox: MessageRunStore, inflight: int = 4,
                  fault: FaultPoint | None = None):
         if inflight < 1:

@@ -363,15 +363,24 @@ class MessageRunStore:
             self._runs[dest] = keep + [merged]
 
     # -- dead-region reclamation ---------------------------------------------
-    def _per_msg_fixed_bytes(self) -> int:
+    @staticmethod
+    def fixed_bytes_per_message(msg_itemsize: int, with_counts: bool = False,
+                                compress: bool = False) -> int:
         """Bytes per message in the fixed-width channels (msg [+ cnt], and dp
-        when uncompressed)."""
-        b = self.msg_dtype.itemsize
-        if self.with_counts:
+        when uncompressed) — the unit of the OMS-tier byte model, shared with
+        the resource planner (core/plan.py) so predicted and realized window
+        sizes use the same algebra."""
+        b = int(msg_itemsize)
+        if with_counts:
             b += 4
-        if not self.compress:
+        if not compress:
             b += 4
         return b
+
+    def _per_msg_fixed_bytes(self) -> int:
+        return self.fixed_bytes_per_message(
+            self.msg_dtype.itemsize, self.with_counts, self.compress
+        )
 
     def live_bytes(self, dest: int) -> int:
         live = sum(s.length for s in self._runs[dest])

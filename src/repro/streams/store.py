@@ -45,6 +45,25 @@ _FILES = {"sp": np.int32, "dp": np.int32, "w": np.float32}
 _COMPRESSED_CHANNELS = ("sp", "dp")  # w is float: no delta structure
 FORMAT_VERSION = 2  # v1 readable: v2 added compress + row ownership
 
+#: bytes per edge slot across the three channels (int32 sp + int32 dp +
+#: float32 w) — the unit of every edge-tier byte model (device groups, disk
+#: streams, staging pools). Kept next to the format it describes.
+EDGE_SLOT_BYTES = sum(np.dtype(dt).itemsize for dt in _FILES.values())
+
+#: conservative planning estimate of the varint-delta codec's shrink on the
+#: position channels (PR 3 measured ~0.50x on RMAT streams; planners that
+#: promise less than the codec delivers stay feasible).
+COMPRESS_RATIO_ESTIMATE = 0.6
+
+
+def estimate_edge_disk_bytes(n_shards: int, E_cap: int,
+                             compress: bool = False) -> int:
+    """Predicted on-disk bytes of one shard's edge streams (its n
+    per-destination groups) — the planner-side mirror of
+    :meth:`EdgeStreamStore.disk_bytes`."""
+    b = n_shards * E_cap * EDGE_SLOT_BYTES
+    return int(b * COMPRESS_RATIO_ESTIMATE) if compress else b
+
 
 @dataclass(frozen=True)
 class StoreGeometry:

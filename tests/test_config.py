@@ -1,0 +1,183 @@
+"""Typed-config surface: field validation, cross-config invariants, and the
+one-release deprecation shim that maps every legacy ``GraphDEngine`` kwarg
+onto its ``EngineConfig`` field (single DeprecationWarning, hard error on a
+conflicting kwarg+config mix)."""
+
+import warnings
+
+import pytest
+
+from repro.core import (
+    ConfigError, EngineConfig, GraphDEngine, HashMin, PageRank,
+)
+from repro.core.config import (
+    ChannelConfig, LEGACY_KWARGS, MessageSpillConfig, RecoveryConfig,
+    StreamConfig,
+)
+from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
+
+
+@pytest.fixture(scope="module")
+def small():
+    g = rmat_graph(scale=6, edge_factor=6, seed=11)
+    pg, rmap = partition_graph(g, n_shards=3, edge_block=32)
+    return g, pg
+
+
+# ---------------------------------------------------------------------------
+# the deprecation shim: every legacy kwarg -> its config field
+# ---------------------------------------------------------------------------
+
+# non-default probe value per legacy kwarg (+ extra kwargs needed to pass
+# cross-config validation, e.g. pipeline= is a streamed-mode knob)
+_PROBES = {
+    "mode": ("basic", {}),
+    "sparse_cap_frac": (0.5, {}),
+    "adapt_threshold": (0.25, {}),
+    "backend": ("pallas", {}),
+    "kernel_windows": (256, {}),
+    "stream_chunk_blocks": (3, {}),
+    "stream_depth": (4, {}),
+    "msg_slice_cap": (99, {}),
+    "msg_read_chunk": (77, {}),
+    "msg_merge_fanin": (5, {}),
+    "msg_spill_dir": ("/tmp/oms-probe", {}),
+    "pipeline": (True, {"mode": "streamed"}),
+    "compress": (True, {"mode": "streamed"}),
+    "channel_inflight": (7, {"mode": "streamed"}),
+    "channel_fault": (object(), {"mode": "streamed"}),
+}
+
+
+@pytest.mark.parametrize("kwarg", sorted(LEGACY_KWARGS))
+def test_every_legacy_kwarg_maps_to_its_config_field(kwarg):
+    value, extra = _PROBES[kwarg]
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cfg = EngineConfig.resolve(None, {kwarg: value, **extra})
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, "exactly one DeprecationWarning per construction"
+    assert kwarg in str(deps[0].message)
+    sub, attr = LEGACY_KWARGS[kwarg]
+    target = cfg if sub is None else getattr(cfg, sub)
+    assert getattr(target, attr) == value
+
+
+def test_probe_table_covers_every_legacy_kwarg():
+    assert set(_PROBES) == set(LEGACY_KWARGS)
+
+
+def test_new_surface_emits_no_warning(small):
+    _, pg = small
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        GraphDEngine(pg, PageRank(supersteps=2), config=EngineConfig())
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_legacy_engine_kwargs_still_work_and_warn_once(small):
+    _, pg = small
+    with pytest.warns(DeprecationWarning) as caught:
+        eng = GraphDEngine(pg, PageRank(supersteps=2), mode="basic",
+                           adapt_threshold=0.3)
+    assert len([w for w in caught
+                if issubclass(w.category, DeprecationWarning)]) == 1
+    assert eng.mode == "basic"
+    assert eng.config.adapt_threshold == 0.3
+
+
+def test_legacy_positional_mode_still_works(small):
+    _, pg = small
+    with pytest.warns(DeprecationWarning):
+        eng = GraphDEngine(pg, PageRank(supersteps=2), "basic")
+    assert eng.mode == "basic"
+
+
+def test_legacy_and_config_surfaces_build_identical_engines(tmp_path):
+    g = rmat_graph(scale=6, edge_factor=6, seed=11)
+    pgs, _, store = partition_graph_streamed(
+        g, 3, str(tmp_path / "s"), edge_block=32
+    )
+    with pytest.warns(DeprecationWarning):
+        old = GraphDEngine(
+            pgs, HashMin(), mode="streamed", stream_store=store,
+            stream_chunk_blocks=2, msg_read_chunk=128, pipeline=True,
+            channel_inflight=2,
+        )
+    new = GraphDEngine(
+        pgs, HashMin(),
+        config=EngineConfig(
+            mode="streamed",
+            stream=StreamConfig(chunk_blocks=2),
+            spill=MessageSpillConfig(read_chunk=128),
+            channel=ChannelConfig(pipeline=True, inflight=2),
+        ),
+        stream_store=store,
+    )
+    assert old.config == new.config
+    assert old.memory_model() == new.memory_model()
+
+
+def test_conflicting_kwarg_and_config_raises(small):
+    _, pg = small
+    cfg = EngineConfig(mode="basic")
+    with pytest.raises(ConfigError, match="conflicting"):
+        GraphDEngine(pg, PageRank(supersteps=2), config=cfg, mode="basic")
+    with pytest.raises(ConfigError, match="stream.chunk_blocks"):
+        GraphDEngine(pg, PageRank(supersteps=2), config=cfg,
+                     stream_chunk_blocks=4)
+
+
+def test_unknown_kwarg_raises_type_error(small):
+    _, pg = small
+    with pytest.raises(TypeError, match="unknow"):
+        GraphDEngine(pg, PageRank(supersteps=2), strem_chunk_blocks=4)
+
+
+# ---------------------------------------------------------------------------
+# validation ownership: field checks in validate(), cross-config in finalize()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(mode="warp"), "unknown mode"),
+    (dict(backend="cuda"), "unknown backend"),
+    (dict(stream=StreamConfig(chunk_blocks=0)), "chunk_blocks"),
+    (dict(stream=StreamConfig(depth=0)), "depth"),
+    (dict(spill=MessageSpillConfig(slice_cap=0)), "slice_cap"),
+    (dict(spill=MessageSpillConfig(merge_fanin=1)), "merge_fanin"),
+    (dict(channel=ChannelConfig(inflight=0)), "inflight"),
+    (dict(channel=ChannelConfig(pipeline=True)), "streamed-mode knobs"),
+    (dict(channel=ChannelConfig(compress=True)), "streamed-mode knobs"),
+    (dict(mode="streamed", backend="pallas"), "needs mode='recoded'"),
+    (dict(recovery=RecoveryConfig(log_messages=True)), "checkpoint cadence"),
+    (dict(sparse_cap_frac=0.0), "sparse_cap_frac"),
+])
+def test_invalid_configs_raise(bad, match):
+    with pytest.raises(ConfigError, match=match):
+        EngineConfig(**bad).finalize()
+
+
+def test_engine_level_checks_still_fire(small, tmp_path):
+    """Checks needing the program/partition stayed in the engine."""
+    _, pg = small
+    from repro.core import DistinctInLabels
+
+    with pytest.raises(ValueError, match="combiner"):
+        GraphDEngine(pg, DistinctInLabels(n_groups=4),
+                     config=EngineConfig(mode="recoded"))
+    with pytest.raises(ValueError, match="stream_store"):
+        GraphDEngine(pg, PageRank(supersteps=2),
+                     config=EngineConfig(mode="streamed"))
+
+
+def test_config_json_round_trip():
+    cfg = EngineConfig(
+        mode="streamed",
+        stream=StreamConfig(chunk_blocks=2, depth=3),
+        spill=MessageSpillConfig(slice_cap=256, read_chunk=128,
+                                 merge_fanin=4),
+        channel=ChannelConfig(pipeline=True, compress=True, inflight=2),
+        recovery=RecoveryConfig(checkpoint_every=5, log_messages=True),
+    )
+    assert EngineConfig.from_json(cfg.to_json()) == cfg

@@ -1,0 +1,222 @@
+"""GraphDJob session facade: one call owns plan -> partition/spill ->
+engine -> run -> JobResult, plus single-shard recovery and elastic rescale,
+with planned-vs-realized memory accounting that round-trips to JSON."""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig, GraphDEngine, GraphDJob, GraphMeta, HashMin, MemoryBudget,
+    PageRank, estimate_memory, plan,
+)
+from repro.core.plan import ram_total
+from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
+
+N = 3
+EDGE_BLOCK = 32
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(scale=8, edge_factor=8, seed=9)
+
+
+def _streamed_budget(graph, prog=None):
+    """A budget the planner maps to plain streamed mode for this graph:
+    one byte below what keeping the edge groups resident would need."""
+    loose = plan(prog or HashMin(), graph, MemoryBudget(n_shards=N),
+                 edge_block=EDGE_BLOCK)
+    rec = next(c for c in loose.alternatives if c.name == "recoded")
+    return MemoryBudget(ram_per_shard=rec.ram_total - 1, n_shards=N)
+
+
+def test_job_default_budget_runs_in_memory(graph):
+    with GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK) as job:
+        assert job.plan.mode == "recoded"
+        assert job.store is None  # nothing spilled for in-memory plans
+        res = job.run()
+    pg, _ = partition_graph(graph, n_shards=N, edge_block=EDGE_BLOCK)
+    eng = GraphDEngine(pg, HashMin(), config=EngineConfig())
+    (values, _), hist = eng.run()
+    assert res.values == eng.gather_values(values)
+    assert res.n_supersteps == len(hist)
+
+
+def test_job_streamed_budget_spills_under_workdir(graph, tmp_path):
+    wd = str(tmp_path / "job")
+    with GraphDJob(HashMin(), graph, budget=_streamed_budget(graph),
+                   edge_block=EDGE_BLOCK, workdir=wd) as job:
+        assert job.plan.mode == "streamed"
+        assert job.store is not None
+        assert job.store.dir.startswith(wd)  # spilled automatically
+        res = job.run()
+        assert res.realized_ram <= job.plan.budget.ram_per_shard
+    # bit-identical to the in-memory reference (HashMin is order-insensitive)
+    pg, _ = partition_graph(graph, n_shards=N, edge_block=EDGE_BLOCK)
+    eng = GraphDEngine(pg, HashMin(), config=EngineConfig(mode="basic"))
+    (values, _), _ = eng.run()
+    assert res.values == eng.gather_values(values)
+    # user-supplied workdir is preserved on close
+    assert os.path.isdir(wd)
+
+
+def test_job_result_summary_is_json_round_trippable(graph):
+    with GraphDJob(PageRank(supersteps=3), graph,
+                   budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK) as job:
+        res = job.run()
+    s = json.loads(res.to_json())
+    assert s["mode"] == "recoded"
+    assert s["n_supersteps"] == 3
+    assert s["planned"]["ram"] == res.plan.ram_total
+    assert s["realized"]["ram"] == res.realized_ram
+    assert s["planned_over_realized_ram"] > 0
+    assert len(s["history"]) == 3
+    assert s["history"][0]["step"] == 0
+    # the plan itself serializes alongside (the CI artifact pair)
+    json.loads(res.plan.to_json())
+
+
+def test_job_plan_and_budget_are_mutually_exclusive(graph):
+    p = plan(HashMin(), graph, MemoryBudget(n_shards=N))
+    with pytest.raises(ValueError, match="not both"):
+        GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N), plan=p)
+
+
+def test_job_expert_plan_override(graph, tmp_path):
+    """The expert path: hand the job a pre-built (possibly hand-edited)
+    plan; the job materializes exactly that physical layout."""
+    p = plan(HashMin(), graph, _streamed_budget(graph),
+             edge_block=EDGE_BLOCK)
+    p = dataclasses.replace(p, config=dataclasses.replace(
+        p.config, stream=dataclasses.replace(p.config.stream,
+                                             chunk_blocks=2)))
+    with GraphDJob(HashMin(), graph, plan=p,
+                   workdir=str(tmp_path / "j")) as job:
+        assert job.engine._stream_reader.chunk_blocks == 2
+        job.run()
+
+
+def test_job_recovery_single_shard(graph, tmp_path):
+    with GraphDJob(HashMin(), graph, budget=_streamed_budget(graph),
+                   edge_block=EDGE_BLOCK, workdir=str(tmp_path / "j"),
+                   checkpoint_every=2) as job:
+        res = job.run()
+        full = np.asarray(job._state[0])
+        for failed in (0, 2):
+            v, a = job.recover_shard(failed)
+            assert np.array_equal(np.asarray(v), full[failed])
+
+
+def test_job_recovery_works_right_after_rescale(graph, tmp_path):
+    """The rescaled lineage gets a fresh ckpt/log namespace; recovery must
+    work immediately — the rescale seeds a base checkpoint with the
+    migrated state, not just at the next cadence boundary."""
+    with GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK, workdir=str(tmp_path / "j"),
+                   checkpoint_every=3) as job:
+        job.run(max_supersteps=2)
+        res = job.rescale(4).run(max_supersteps=1)  # no cadence step lands
+        v, a = job.recover_shard(1)
+        vmask = np.asarray(job.pg.vmask)[1]
+        ids = np.asarray(job.pg.old_ids)[1][vmask]
+        ref = np.array([res.values[int(i)] for i in ids])
+        assert np.array_equal(np.asarray(v)[vmask], ref)
+
+
+def test_job_recovery_requires_recovery_config(graph):
+    with GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK) as job:
+        job.run()
+        with pytest.raises(RuntimeError, match="checkpoint_every"):
+            job.recover_shard(0)
+
+
+def test_job_rescale_continues_and_matches_uninterrupted(graph, tmp_path):
+    prog = lambda: HashMin()
+    with GraphDJob(prog(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK) as job:
+        job.run(max_supersteps=2)
+        res = job.rescale(5).run()
+        assert job.plan.n_shards == 5
+    # reference: uninterrupted run on the original shard count — HashMin
+    # labels fold the step-0 init, so values keyed by ORIGINAL id must match
+    with GraphDJob(prog(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK) as ref_job:
+        ref = ref_job.run()
+    assert res.values == ref.values
+    assert res.history[-1].step == ref.history[-1].step
+
+
+def test_job_rescale_streamed_respills(graph, tmp_path):
+    """Rescaling an out-of-core job: the old partition is vertex-only (its
+    edges live on disk), so migration must go through original ids and the
+    new lineage must respill its own edge streams under the workdir."""
+    with GraphDJob(HashMin(), graph, budget=_streamed_budget(graph),
+                   edge_block=EDGE_BLOCK,
+                   workdir=str(tmp_path / "j")) as job:
+        assert job.plan.mode == "streamed"
+        job.run(max_supersteps=2)
+        old_store_dir = job.store.dir
+        res = job.rescale(5).run()
+        if job.plan.mode == "streamed":  # re-planned for the same budget
+            assert job.store.dir != old_store_dir
+            assert job.store.geom.n_shards == 5
+    with GraphDJob(HashMin(), graph, budget=_streamed_budget(graph),
+                   edge_block=EDGE_BLOCK,
+                   workdir=str(tmp_path / "ref")) as ref_job:
+        ref = ref_job.run()
+    assert res.values == ref.values
+
+
+def test_job_workdir_identity_guard(graph, tmp_path):
+    """A reused workdir holding another job's checkpoints must be refused,
+    not silently restored as this program's state."""
+    wd = str(tmp_path / "shared")
+    with GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK, workdir=wd,
+                   checkpoint_every=2) as job:
+        job.run(max_supersteps=4)
+    with pytest.raises(ValueError, match="different job"):
+        GraphDJob(PageRank(supersteps=6), graph,
+                  budget=MemoryBudget(n_shards=N),
+                  edge_block=EDGE_BLOCK, workdir=wd, checkpoint_every=2)
+    # the SAME job in the same workdir is a resume, not an error
+    with GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK, workdir=wd,
+                   checkpoint_every=2) as again:
+        again.run(max_supersteps=4)
+
+
+def test_job_combinerless_checkpointing_on_in_memory_plan(graph):
+    """checkpoint_every with a combiner-less program on an in-memory plan:
+    message logging has no representation there (no combined A_s, no OMS
+    runs), so the job wires checkpoints only — and says so when recovery
+    is then asked for."""
+    from repro.core import DistinctInLabels
+
+    with GraphDJob(DistinctInLabels(n_groups=8, rounds=2), graph,
+                   budget=MemoryBudget(n_shards=N), edge_block=EDGE_BLOCK,
+                   checkpoint_every=1) as job:
+        assert job.plan.mode == "basic"
+        assert job.message_log is None  # logging degraded, not crashed
+        assert job.checkpointer is not None
+        job.run()
+        with pytest.raises(RuntimeError, match="checkpoint_every"):
+            job.recover_shard(0)
+
+
+def test_job_tempdir_cleanup(graph):
+    job = GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                    edge_block=EDGE_BLOCK)
+    wd = job.workdir
+    job.run(max_supersteps=1)
+    job.close()
+    assert not os.path.exists(wd)  # job-owned tempdir released
+    with pytest.raises(RuntimeError, match="closed"):
+        job.run()

@@ -190,7 +190,7 @@ class TestMessageRunStore:
 
     def test_rejects_degenerate_slice_cap(self, tmp_path, spilled):
         _, _, pg, _, store = spilled
-        with pytest.raises(ValueError, match="msg_slice_cap"):
+        with pytest.raises(ValueError, match="slice_cap"):
             GraphDEngine(pg, DistinctInLabels(), mode="streamed",
                          stream_store=store, msg_slice_cap=0)
 

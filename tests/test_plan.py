@@ -1,0 +1,246 @@
+"""Resource-aware planner: mode choice flips as the budget shrinks, knobs are
+derived from the budget (not compiled-in), infeasible budgets fail with the
+byte breakdown, plans are explainable and JSON round-trippable, and the
+predictive algebra IS the engine's realized memory_model."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DistinctInLabels, ExecutionPlan, GraphDEngine, GraphMeta, HashMin,
+    MemoryBudget, PageRank, PlanInfeasible, estimate_memory, plan,
+)
+from repro.core.plan import ram_total
+from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
+
+N = 3
+EDGE_BLOCK = 32
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(scale=10, edge_factor=8, seed=5)
+
+
+def _floors(graph, *, combined=True, value_itemsize=4, msg_itemsize=4):
+    """RAM floors of the streamed candidates, computed with the same algebra
+    the planner runs (geometry estimated exactly as plan() estimates it)."""
+    P = -(-graph.n_vertices // N)
+    P = max((P + 7) // 8 * 8, 8)
+    E_cap = max(int(graph.n_edges / (N * N) * 1.5 + EDGE_BLOCK - 1)
+                // EDGE_BLOCK * EDGE_BLOCK, EDGE_BLOCK)
+    common = dict(n_shards=N, P=P, E_cap=E_cap, edge_block=EDGE_BLOCK,
+                  value_itemsize=value_itemsize, msg_itemsize=msg_itemsize,
+                  combined=combined, chunk_blocks=1, slice_cap=128,
+                  read_chunk=64, merge_fanin=2, inflight=1)
+    streamed = ram_total(
+        estimate_memory(mode="streamed", pipeline=False, **common),
+        "streamed")
+    pipelined = ram_total(
+        estimate_memory(mode="streamed", pipeline=True, **common),
+        "streamed")
+    return streamed, pipelined
+
+
+def test_shrinking_budget_flips_recoded_to_streamed_to_pipelined(graph):
+    """The tentpole table: same program, same graph — only ram_per_shard
+    moves, and the chosen mode walks recoded -> streamed ->
+    streamed+pipeline (the pipelined fold keeps ONE accumulator instead of
+    n, so it fits where the plain streamed fold no longer does)."""
+    prog = PageRank(supersteps=3)
+    floor_streamed, floor_pipe = _floors(graph, combined=True)
+    assert floor_pipe < floor_streamed  # the flip window exists
+
+    cases = [
+        (None, "recoded", False),
+        (floor_streamed, "streamed", False),
+        (floor_pipe, "streamed", True),
+    ]
+    for ram, want_mode, want_pipeline in cases:
+        p = plan(prog, graph, MemoryBudget(ram_per_shard=ram, n_shards=N),
+                 edge_block=EDGE_BLOCK)
+        assert p.mode == want_mode, (ram, p.explain())
+        assert p.pipeline == want_pipeline, (ram, p.explain())
+        if ram is not None:
+            assert p.ram_total <= ram
+
+
+def test_combinerless_flips_basic_to_streamed(graph):
+    """Combiner-less programs flip basic -> streamed(OMS). There is no
+    pipelined third step here: a raw-message channel only ADDS in-flight
+    packet RAM (unlike the combiner path, where pipelining collapses the n
+    destination accumulators to one), so the planner must never pick it as
+    the budget-saver."""
+    prog = DistinctInLabels(n_groups=8)
+    floor_streamed, floor_pipe = _floors(graph, combined=False)
+    assert floor_pipe > floor_streamed  # pipeline cannot save RAM here
+    p_loose = plan(prog, graph, MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK)
+    assert p_loose.mode == "basic"  # in-memory merge-sort when RAM allows
+    p_tight = plan(prog, graph,
+                   MemoryBudget(ram_per_shard=floor_streamed, n_shards=N),
+                   edge_block=EDGE_BLOCK)
+    assert p_tight.mode == "streamed" and not p_tight.pipeline
+    with pytest.raises(PlanInfeasible):
+        plan(prog, graph,
+             MemoryBudget(ram_per_shard=floor_streamed // 4, n_shards=N),
+             edge_block=EDGE_BLOCK)
+
+
+def test_planner_sizes_oms_windows_from_budget(graph):
+    """The PR-2 ceiling fix: 559 KB of the measured combiner-less RAM was
+    the compiled-in merge/slice windows. Under a tight budget the planner
+    must shrink msg_read_chunk/msg_slice_cap/msg_merge_fanin instead of
+    giving up — and the resulting msg_staging must fit the budget."""
+    prog = DistinctInLabels(n_groups=8)
+    floor_streamed, _ = _floors(graph, combined=False)
+    defaults = plan(prog, graph, MemoryBudget(n_shards=N),
+                    edge_block=EDGE_BLOCK)
+    tight = plan(prog, graph,
+                 MemoryBudget(ram_per_shard=floor_streamed + 16 * 1024,
+                              n_shards=N),
+                 edge_block=EDGE_BLOCK)
+    assert tight.mode == "streamed"
+    d, t = defaults.config.spill, tight.config.spill
+    assert (t.read_chunk, t.slice_cap) < (d.read_chunk, d.slice_cap)
+    assert tight.model["msg_staging"] < 559 * 1024
+    assert tight.ram_total <= floor_streamed + 16 * 1024
+
+
+def test_overconstrained_budget_raises_with_byte_breakdown(graph):
+    with pytest.raises(PlanInfeasible) as ei:
+        plan(PageRank(supersteps=3), graph,
+             MemoryBudget(ram_per_shard=256, n_shards=N),
+             edge_block=EDGE_BLOCK)
+    msg = str(ei.value)
+    # the breakdown is in the MESSAGE (actionable from a log line alone)
+    for tier in ("resident=", "buffers=", "staging=", "channel="):
+        assert tier in msg
+    assert "most frugal" in msg
+    bd = ei.value.breakdown
+    assert bd["budget"]["ram_per_shard"] == 256
+    assert {c["name"] for c in bd["candidates"]} >= {
+        "recoded", "streamed", "streamed+pipeline"}
+    assert all(not c["feasible"] for c in bd["candidates"])
+
+
+def test_explain_output_for_two_budgets(graph):
+    """The acceptance check: plan.explain() prints the per-tier byte model
+    and why each alternative was rejected, for at least two budgets."""
+    prog = PageRank(supersteps=3)
+    loose = plan(prog, graph, MemoryBudget(n_shards=N),
+                 edge_block=EDGE_BLOCK).explain()
+    assert "ExecutionPlan: recoded" in loose
+    assert "model/shard: resident=" in loose
+    assert "budget: ram/shard=unbounded" in loose
+    assert "recoded              CHOSEN" in loose
+    # dominated alternative carries its reason
+    assert "dominated by recoded" in loose
+
+    floor_streamed, floor_pipe = _floors(graph, combined=True)
+    tight = plan(prog, graph,
+                 MemoryBudget(ram_per_shard=floor_pipe, n_shards=N),
+                 edge_block=EDGE_BLOCK).explain()
+    assert "ExecutionPlan: streamed+pipeline" in tight
+    assert "streamed+pipeline    CHOSEN" in tight
+    # both in-memory and plain-streamed rejections name the blown tier
+    assert "recoded              REJECTED" in tight
+    assert "edge groups resident" in tight
+    assert "streamed             REJECTED" in tight
+    assert "even at floor knobs" in tight
+    assert "knobs:" in tight
+
+
+def test_disk_budget_engages_compression(graph):
+    prog = PageRank(supersteps=3)
+    floor_streamed, _ = _floors(graph, combined=True)
+    base = plan(prog, graph,
+                MemoryBudget(ram_per_shard=floor_streamed, n_shards=N),
+                edge_block=EDGE_BLOCK)
+    assert not base.compress
+    squeezed = plan(
+        prog, graph,
+        MemoryBudget(ram_per_shard=floor_streamed, n_shards=N,
+                     disk_per_shard=int(base.disk_total * 0.8)),
+        edge_block=EDGE_BLOCK)
+    assert squeezed.compress
+    assert squeezed.disk_total < base.disk_total
+    assert "+compress" in squeezed.explain()
+
+
+def test_net_budget_prefers_compact_wire(graph):
+    prog = PageRank(supersteps=3)
+    loose = plan(prog, graph, MemoryBudget(n_shards=N))
+    rec = next(c for c in loose.alternatives if c.name == "recoded")
+    squeezed = plan(prog, graph,
+                    MemoryBudget(n_shards=N,
+                                 net_per_superstep=rec.net_total - 1))
+    assert squeezed.mode == "recoded_compact"
+
+
+def test_net_budget_binds_streamed_candidates_too(graph):
+    """A net budget nobody can meet must raise PlanInfeasible — the
+    streamed candidates' transmissions model cross-machine traffic in
+    deployment, so they may not silently bypass the constraint."""
+    with pytest.raises(PlanInfeasible) as ei:
+        plan(PageRank(supersteps=3), graph,
+             MemoryBudget(n_shards=N, net_per_superstep=100))
+    cands = ei.value.breakdown["candidates"]
+    for c in cands:
+        assert not c["feasible"]
+    assert any("net" in c["reason"] for c in cands
+               if c["name"].startswith("streamed"))
+
+
+def test_plan_json_round_trip(graph):
+    floor_streamed, floor_pipe = _floors(graph, combined=True)
+    p = plan(PageRank(supersteps=3), graph,
+             MemoryBudget(ram_per_shard=floor_pipe, n_shards=N),
+             edge_block=EDGE_BLOCK)
+    s = p.to_json()
+    json.loads(s)  # valid JSON
+    assert ExecutionPlan.from_json(s) == p
+
+
+def test_realized_memory_model_matches_plan(graph, tmp_path):
+    """Planned and realized models are ONE algebra: planning against the
+    realized partition geometry, the engine's memory_model() agrees tier
+    for tier (the disk tier is measured, so it is compared within 2x)."""
+    prog = PageRank(supersteps=2)
+    pgs, _, store = partition_graph_streamed(
+        graph, N, str(tmp_path / "s"), edge_block=EDGE_BLOCK,
+    )
+    # a budget sized to the default-knob streamed model of THIS partition:
+    # in-memory recoded (edge groups resident) cannot fit, streamed just does
+    ram = ram_total(
+        estimate_memory(mode="streamed", n_shards=N, P=pgs.P,
+                        E_cap=pgs.E_cap, edge_block=EDGE_BLOCK,
+                        value_itemsize=4, msg_itemsize=4, combined=True),
+        "streamed")
+    p = plan(prog, GraphMeta.of(pgs),
+             MemoryBudget(ram_per_shard=ram, n_shards=N),
+             edge_block=EDGE_BLOCK)
+    assert p.mode == "streamed"
+    eng = GraphDEngine(pgs, prog, config=p.config, stream_store=store)
+    realized = eng.memory_model()
+    for tier, planned in p.model.items():
+        if tier == "streamed":  # estimated from E/n^2 * skew vs real layout
+            assert planned <= 2 * realized[tier]
+            assert realized[tier] <= 2 * planned
+        else:
+            assert realized[tier] == planned, tier
+    # RAM totals (which exclude the disk tier) agree exactly
+    assert ram_total(realized, "streamed") == p.ram_total
+
+
+def test_graph_meta_of_accepts_graph_and_partition(graph):
+    m1 = GraphMeta.of(graph)
+    pg, _ = partition_graph(graph, n_shards=N, edge_block=EDGE_BLOCK)
+    m2 = GraphMeta.of(pg)
+    assert (m1.n_vertices, m1.n_edges) == (m2.n_vertices, m2.n_edges)
+    assert m1.n_vertices == graph.n_vertices
+    assert m1.max_shard_vertices is None  # a raw Graph has no realized P
+    assert (m2.max_shard_vertices, m2.for_n_shards) == (pg.P, N)
+    assert GraphMeta.of(m1) is m1
