@@ -7,9 +7,11 @@ Measures: (a) hash-partition balance (max shard < 2|V|/n, Lemma 1),
 out-of-core ``streamed`` engine, (c) that the streamed resident footprint is
 independent of |E| while disk grows — pipeline on AND off, (d) stream
 throughput and the compute ∥ I/O overlap of the prefetching reader,
-(e) sender overlap of the pipelined channel (transmit time hidden under
-compute must be > 0), (f) on-disk bytes of compressed vs uncompressed edge
-and message streams. Derived columns carry the bound checks.
+(e) BOTH overlaps of the full-duplex pipelined channel (transmit AND
+receiver digest hidden under compute must each be > 0 — asserted),
+(f) payload-codec bytes on the wire (lossless >= 1.5x smaller — asserted),
+(g) on-disk bytes of compressed vs uncompressed edge and message streams.
+Derived columns carry the bound checks.
 
 ``--tiny`` runs a seconds-scale subset (CI smoke job).
 """
@@ -22,7 +24,10 @@ import tempfile
 
 import numpy as np
 
-from benchmarks.common import emit, rss_bytes, stream_report, write_json
+from benchmarks.common import (
+    OVERLAP_MIN_CPUS, PAYLOAD_LOSSLESS_FLOOR, emit, rss_bytes, stream_report,
+    write_json,
+)
 from repro.core import (
     ChannelConfig, DistinctInLabels, EngineConfig, GraphDEngine, GraphDJob,
     MemoryBudget, MessageSpillConfig, PageRank, StreamConfig, plan,
@@ -34,8 +39,11 @@ from repro.graph import (
 
 
 def _ram(m):
-    return (m["resident"] + m["buffers"] + m["staging"]
-            + m.get("msg_staging", 0) + m.get("channel", 0))
+    """RAM bytes of a streamed model — the planner's own summation, so a
+    future model key cannot be counted there but dropped here."""
+    from repro.core.plan import ram_total
+
+    return ram_total(m, "streamed")
 
 
 def _streamed_cfg(**kw):
@@ -45,7 +53,10 @@ def _streamed_cfg(**kw):
         stream=StreamConfig(chunk_blocks=kw.pop("chunk_blocks", 8)),
         spill=MessageSpillConfig(slice_cap=kw.pop("slice_cap", 4096)),
         channel=ChannelConfig(pipeline=kw.pop("pipeline", False),
-                              compress=kw.pop("compress", False)),
+                              compress=kw.pop("compress", False),
+                              compress_payload=kw.pop("compress_payload",
+                                                      False),
+                              full_duplex=kw.pop("full_duplex", True)),
     )
 
 
@@ -175,31 +186,116 @@ def independence_of_E(scale, factors, edge_block):
 
 
 def pipeline_overlap(g, edge_block, supersteps, chunk_blocks=4):
-    """§4's full-overlap claim, measured: the channel sender's busy time
-    minus the compute thread's stalls on it = transmit time hidden under
-    compute. ``ok`` iff that overlap is positive."""
+    """§4's full-overlap claim, measured in BOTH directions: the sender's
+    busy time minus the compute thread's stalls on it = transmit hidden
+    under compute (U_s ∥ U_c), and the background receiver's digest time
+    minus the collect stalls = digest hidden under compute (U_r ∥ U_c).
+    Both overlaps must be positive — the section asserts it (satellite:
+    overlap accounting was sender-only through PR 4)."""
     with tempfile.TemporaryDirectory(prefix="graphd-pipe-") as d:
         pg, _, store = partition_graph_streamed(g, 8, d,
                                                 edge_block=edge_block)
-        eng = GraphDEngine(pg, PageRank(supersteps=supersteps),
-                           config=_streamed_cfg(chunk_blocks=chunk_blocks,
-                                                pipeline=True),
-                           stream_store=store)
-        (_, _), hist = eng.run()
-        st = eng.channel_stats
-        ov = st.overlap_seconds()
-        emit("memory/pipeline_sender_overlap", ov * 1e6,
+        # PR-4 baseline: the half-duplex (sender-only) pipeline
+        eng_h = GraphDEngine(pg, PageRank(supersteps=supersteps),
+                             config=_streamed_cfg(chunk_blocks=chunk_blocks,
+                                                  pipeline=True,
+                                                  full_duplex=False),
+                             stream_store=store)
+        (_, _), hist_h = eng_h.run()
+        # a loaded scheduler can transiently starve the background threads
+        # (overlap legally measures 0 even though the mechanism ran), so the
+        # timing gate gets a bounded number of attempts before it judges
+        for attempt in range(3):
+            eng = GraphDEngine(pg, PageRank(supersteps=supersteps),
+                               config=_streamed_cfg(
+                                   chunk_blocks=chunk_blocks,
+                                   pipeline=True),
+                               stream_store=store)
+            (_, _), hist = eng.run()
+            st = eng.channel_stats
+            s_ov = st.sender_overlap_seconds()
+            r_ov = st.receiver_overlap_seconds()
+            ok = s_ov > 0 and r_ov > 0
+            if ok:
+                break
+        cpus = os.cpu_count() or 1
+        emit("memory/pipeline_overlap", (s_ov + r_ov) * 1e6,
              f"send_ms={st.send_seconds * 1e3:.1f};"
              f"stall_ms={st.stall_seconds * 1e3:.1f};"
-             f"overlap_ms={ov * 1e3:.1f};packets={st.packets};"
-             f"tx_KiB={st.payload_bytes >> 10};ok={ov > 0}")
+             f"sender_overlap_ms={s_ov * 1e3:.1f};"
+             f"recv_ms={st.recv_seconds * 1e3:.1f};"
+             f"recv_stall_ms={st.recv_stall_seconds * 1e3:.1f};"
+             f"receiver_overlap_ms={r_ov * 1e3:.1f};"
+             f"packets={st.packets};runs={st.recv_runs};"
+             f"tx_KiB={st.wire_bytes >> 10};ok={ok}",
+             sender_overlap_ms=s_ov * 1e3, receiver_overlap_ms=r_ov * 1e3,
+             send_ms=st.send_seconds * 1e3, recv_ms=st.recv_seconds * 1e3,
+             cpus=cpus)
+        # the MECHANISM is deterministic and always asserted: both
+        # background directions did real work
+        assert st.packets > 0 and st.send_seconds > 0, "sender never ran"
+        assert st.recv_runs > 0 and st.recv_seconds > 0, "receiver never ran"
+        # overlap positivity needs a core for the background threads to run
+        # ON while compute computes; on a single-vCPU runner the scheduler
+        # may legally serialize them, so the timing gate applies only where
+        # parallelism exists (same reason the wall-clock ok= is not asserted)
+        if cpus >= OVERLAP_MIN_CPUS:
+            assert ok, (
+                f"full-duplex overlap must be positive both ways: "
+                f"sender {s_ov * 1e3:.2f} ms, receiver {r_ov * 1e3:.2f} ms"
+            )
         m = eng.memory_model()
         emit("memory/pipeline_ram_per_shard", 0.0,
-             f"bytes={_ram(m)};channel={m['channel']}")
+             f"bytes={_ram(m)};channel={m['channel']};"
+             f"receiver_staging={m.get('receiver_staging', 0)}")
         per_step = (np.mean([h.seconds for h in hist[1:]])
                     if len(hist) > 1 else hist[0].seconds)
+        per_step_h = (np.mean([h.seconds for h in hist_h[1:]])
+                      if len(hist_h) > 1 else hist_h[0].seconds)
+        # wall-clock vs the PR-4 half-duplex baseline on the same graph
+        # (reported, not asserted: CI machines make timing assertions flaky)
         emit("memory/pipeline_superstep", per_step * 1e6,
-             stream_report(eng._stream_reader))
+             stream_report(eng._stream_reader)
+             + f";half_duplex_us={per_step_h * 1e6:.1f};"
+             f"speedup={per_step_h / max(per_step, 1e-12):.2f}x;"
+             f"ok={per_step <= per_step_h * 1.25}",
+             full_duplex_us=per_step * 1e6, half_duplex_us=per_step_h * 1e6)
+
+
+def payload_wire_bytes(g, edge_block, supersteps, chunk_blocks=4):
+    """The compress_payload= knob on the wire: bytes the channel actually
+    appended vs the fixed-width bytes the same packets would have cost.
+    The lossless codec must shrink the payload channel >= 1.5x (asserted —
+    the graph and seed are fixed, so the ratio is deterministic); the bf16
+    scheme is reported alongside."""
+    with tempfile.TemporaryDirectory(prefix="graphd-wire-") as d:
+        pg, _, store = partition_graph_streamed(
+            g, 8, d, edge_block=edge_block, compress=True,
+            compress_payload=True,
+        )
+        ratios = {}
+        for scheme in ("lossless", "bf16"):
+            eng = GraphDEngine(
+                pg, PageRank(supersteps=supersteps),
+                config=_streamed_cfg(chunk_blocks=chunk_blocks,
+                                     pipeline=True, compress=True,
+                                     compress_payload=scheme),
+                stream_store=store,
+            )
+            eng.run()
+            st = eng.channel_stats
+            ratios[scheme] = st.wire_ratio()
+            emit(f"memory/payload_wire_{scheme}", 0.0,
+                 f"fixed_KiB={st.payload_bytes >> 10};"
+                 f"wire_KiB={st.wire_bytes >> 10};"
+                 f"ratio={st.wire_ratio():.3f}x;"
+                 f"ok={st.wire_ratio() >= (PAYLOAD_LOSSLESS_FLOOR if scheme == 'lossless' else 2.0)}",
+                 fixed_bytes=st.payload_bytes, wire_bytes=st.wire_bytes,
+                 ratio=st.wire_ratio())
+        assert ratios["lossless"] >= PAYLOAD_LOSSLESS_FLOOR, (
+            f"lossless payload channel only {ratios['lossless']:.3f}x "
+            f"smaller than uncompressed (floor: {PAYLOAD_LOSSLESS_FLOOR}x)"
+        )
 
 
 def compression_bytes_on_disk(g, edge_block, rounds=2):
@@ -296,6 +392,7 @@ def main():
         streamed_model(g, edge_block=64, supersteps=2, chunk_blocks=4)
         streamed_nocombiner_model(g, edge_block=64, rounds=2, chunk_blocks=4)
         pipeline_overlap(g, edge_block=64, supersteps=2, chunk_blocks=4)
+        payload_wire_bytes(g, edge_block=64, supersteps=2, chunk_blocks=4)
         compression_bytes_on_disk(g, edge_block=64)
         planned_vs_measured(g, edge_block=64)
         independence_of_E(scale=8, factors=[4, 16], edge_block=32)
@@ -306,6 +403,7 @@ def main():
         streamed_model(g, edge_block=512, supersteps=3)
         streamed_nocombiner_model(g, edge_block=512, rounds=2)
         pipeline_overlap(g, edge_block=512, supersteps=3)
+        payload_wire_bytes(g, edge_block=512, supersteps=3)
         compression_bytes_on_disk(g, edge_block=512)
         planned_vs_measured(g, edge_block=512)
         independence_of_E(scale=12, factors=[4, 16, 48], edge_block=256)

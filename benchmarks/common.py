@@ -21,12 +21,33 @@ def time_fn(fn, *args, iters=5, warmup=1):
     return float(np.median(times) * 1e6)
 
 
+#: PR-5 acceptance-gate thresholds, shared by bench_memory's inline asserts
+#: and benchmarks/run.py's artifact --check so the two layers cannot drift
+PAYLOAD_LOSSLESS_FLOOR = 1.5  # min wire shrink of the lossless payload codec
+OVERLAP_MIN_CPUS = 2  # overlap-positivity gates need a core to overlap ON
+
 _RECORDS: list[dict] = []
 
 
-def emit(name: str, us: float, derived: str):
+def emit(name: str, us: float, derived: str, **values):
+    """One benchmark record: printed as CSV, kept for the JSON artifacts.
+    ``values`` carries machine-readable numbers (benchmarks/run.py builds
+    the consolidated BENCH_PR5.json sections from them — string parsing of
+    the ``derived`` column is not a stable interface)."""
     print(f"{name},{us:.1f},{derived}")
-    _RECORDS.append(dict(name=name, us=round(us, 1), derived=derived))
+    rec = dict(name=name, us=round(us, 1), derived=derived)
+    if values:
+        rec["values"] = values
+    _RECORDS.append(rec)
+
+
+def records_since(mark: int) -> list[dict]:
+    """Records emitted after ``mark`` (= an earlier len(all_records()))."""
+    return _RECORDS[mark:]
+
+
+def all_records() -> list[dict]:
+    return _RECORDS
 
 
 def write_json(path: str):

@@ -1,25 +1,163 @@
 """Benchmark harness: one module per paper table. Prints CSV
-``name,us_per_call,derived`` (benchmarks/common.emit)."""
+``name,us_per_call,derived`` (benchmarks/common.emit) and consolidates
+everything into one ``BENCH_PR5.json`` artifact — the perf trajectory's
+seed record: per-bench wall-clock, the RAM model, the full-duplex overlap
+milliseconds, and the payload-codec bytes-on-wire.
 
+``--tiny`` runs the seconds-scale subset (the CI smoke job); ``--out``
+writes the consolidated JSON; ``--check`` fails the run when a required
+section is missing or empty, when the receiver overlap is not positive, or
+when the lossless payload channel is under 1.5x — the acceptance gates,
+enforced where the numbers are produced.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
 import sys
 import traceback
 
+from benchmarks import common
+from benchmarks.common import OVERLAP_MIN_CPUS, PAYLOAD_LOSSLESS_FLOOR
 
-def main() -> None:
+#: required BENCH_PR5.json sections; --check fails on a missing/empty one
+REQUIRED_SECTIONS = ("wall_clock", "ram_model", "overlap", "bytes_on_wire")
+
+
+def _module_plan(tiny: bool):
     from benchmarks import (
         bench_hashmin, bench_kernels, bench_memory, bench_messages,
         bench_pagerank, bench_sssp,
     )
 
+    if tiny:
+        # bench_memory carries every PR-5 section and finishes in seconds;
+        # the full-size table benches (scale 13-15 graphs) stay out of the
+        # smoke budget
+        return [("memory", bench_memory, ["--tiny"])]
+    return [
+        ("pagerank", bench_pagerank, []),
+        ("messages", bench_messages, []),
+        ("hashmin", bench_hashmin, []),
+        ("sssp", bench_sssp, []),
+        ("memory", bench_memory, []),
+        ("kernels", bench_kernels, []),
+    ]
+
+
+def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
+    """Shape the per-bench emit() records into the BENCH_PR5 sections."""
+    all_recs = [r for recs in records_by_bench.values() for r in recs]
+
+    def values_of(name: str) -> dict:
+        for r in all_recs:
+            if r["name"] == name and "values" in r:
+                return r["values"]
+        return {}
+
+    wall_clock = [
+        dict(name=r["name"], us=r["us"])
+        for r in all_recs
+        if r["us"] > 0 and ("superstep" in r["name"] or "/m_" in r["name"])
+    ]
+    ram_model = [
+        dict(name=r["name"], derived=r["derived"])
+        for r in all_recs
+        if "ram" in r["name"] or "resident" in r["name"]
+        or "model" in r["name"] or "planned_vs_measured" in r["name"]
+    ]
+    overlap = values_of("memory/pipeline_overlap")
+    wire = values_of("memory/payload_wire_lossless")
+    bytes_on_wire = dict(
+        lossless=wire,
+        bf16=values_of("memory/payload_wire_bf16"),
+    )
+    return dict(
+        meta=dict(tiny=tiny, benches=sorted(records_by_bench)),
+        sections=dict(
+            wall_clock=wall_clock,
+            ram_model=ram_model,
+            overlap=overlap,
+            bytes_on_wire=bytes_on_wire if wire else {},
+        ),
+        records=records_by_bench,
+    )
+
+
+def check(report: dict) -> list[str]:
+    """The smoke-job acceptance gates; returns the list of violations."""
+    problems = []
+    sections = report.get("sections", {})
+    for name in REQUIRED_SECTIONS:
+        if not sections.get(name):
+            problems.append(f"BENCH_PR5 section {name!r} missing or empty")
+    overlap = sections.get("overlap") or {}
+    if overlap.get("recv_ms", 0) <= 0 or overlap.get("send_ms", 0) <= 0:
+        problems.append(
+            "both channel directions must have done work "
+            f"(send_ms={overlap.get('send_ms')!r}, "
+            f"recv_ms={overlap.get('recv_ms')!r})"
+        )
+    if overlap.get("cpus", 1) >= OVERLAP_MIN_CPUS:
+        # overlap positivity is only a meaningful gate where the background
+        # threads had a core to run on (mirrors bench_memory's own assert)
+        if overlap.get("receiver_overlap_ms", 0) <= 0:
+            problems.append(
+                f"receiver overlap must be > 0 ms, got "
+                f"{overlap.get('receiver_overlap_ms')!r}"
+            )
+        if overlap.get("sender_overlap_ms", 0) <= 0:
+            problems.append(
+                f"sender overlap must be > 0 ms, got "
+                f"{overlap.get('sender_overlap_ms')!r}"
+            )
+    wire = (sections.get("bytes_on_wire") or {}).get("lossless") or {}
+    if wire.get("ratio", 0) < PAYLOAD_LOSSLESS_FLOOR:
+        problems.append(
+            f"lossless payload channel must be >= "
+            f"{PAYLOAD_LOSSLESS_FLOOR}x smaller, got "
+            f"{wire.get('ratio')!r}"
+        )
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale subset (CI smoke)")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write the consolidated BENCH_PR5.json here")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless every required section is present and "
+                         "the overlap/wire acceptance gates hold")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     failed = []
-    for mod in [bench_pagerank, bench_messages, bench_hashmin, bench_sssp,
-                bench_memory, bench_kernels]:
+    records_by_bench: dict[str, list[dict]] = {}
+    for name, mod, mod_args in _module_plan(args.tiny):
+        mark = len(common.all_records())
+        argv = sys.argv
         try:
+            sys.argv = [argv[0]] + mod_args  # argparse-driven mains
             mod.main()
         except Exception:
             failed.append(mod.__name__)
             traceback.print_exc()
+        finally:
+            sys.argv = argv
+        records_by_bench[name] = common.records_since(mark)
+
+    report = consolidate(records_by_bench, args.tiny)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out}", file=sys.stderr)
+    if args.check:
+        for problem in check(report):
+            failed.append(problem)
+            print(f"CHECK FAILED: {problem}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -92,13 +92,15 @@ with tempfile.TemporaryDirectory() as work:
         config=EngineConfig(
             mode="streamed",
             stream=StreamConfig(chunk_blocks=4, depth=2),
-            channel=ChannelConfig(pipeline=True),  # §4 sender overlap
+            channel=ChannelConfig(pipeline=True),  # §4 full-duplex overlap
         ),
         stream_store=store,
     )
     (values, active), hist = eng.run()
-    print(f"expert path (raw engine, pipelined streamed): "
+    st = eng.channel_stats
+    print(f"expert path (raw engine, full-duplex streamed): "
           f"{len(hist)} supersteps, "
-          f"sender overlap {eng.channel_stats.overlap_seconds()*1e3:.1f} ms")
+          f"sender overlap {st.sender_overlap_seconds()*1e3:.1f} ms, "
+          f"receiver overlap {st.receiver_overlap_seconds()*1e3:.1f} ms")
 
 print("done.")

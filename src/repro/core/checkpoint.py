@@ -200,16 +200,19 @@ class RunFileMessageLog(MessageLog):
         self._e0 = 0
         self._combined = True
         self._compress = False
+        self._compress_payload = False
         self._open_stores: dict[int, "object"] = {}
 
     def configure(self, n_shards: int, P: int, msg_dtype, e0=0,
-                  combined: bool = True, compress: bool = False):
+                  combined: bool = True, compress: bool = False,
+                  compress_payload=False):
         self._n_shards = int(n_shards)
         self._P = int(P)
         self._msg_dtype = np.dtype(msg_dtype)
         self._e0 = e0
         self._combined = bool(combined)
         self._compress = bool(compress)
+        self._compress_payload = compress_payload or False
 
     def step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step-{step:06d}")
@@ -222,6 +225,7 @@ class RunFileMessageLog(MessageLog):
         store = MessageRunStore(
             self.step_dir(step), self._n_shards, self._P, self._msg_dtype,
             with_counts=self._combined, compress=self._compress,
+            compress_payload=self._compress_payload,
         )
         self._open_stores[step] = store
         return store

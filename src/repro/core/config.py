@@ -50,12 +50,18 @@ class StreamConfig:
 
     chunk_blocks: int = 8  # edge blocks staged per chunk
     depth: int = 2  # prefetch depth (2 = double buffering)
+    # small destination groups (<= one staged chunk) are folded in padded
+    # multi-group jitted dispatches of this many lanes, amortizing the
+    # Python/dispatch overhead on graphs with many small groups; 1 disables
+    group_batch: int = 4
 
     def validate(self) -> None:
         if self.chunk_blocks < 1:
             raise ConfigError("stream.chunk_blocks must be >= 1")
         if self.depth < 1:
             raise ConfigError("stream.depth must be >= 1 (2 = double buffering)")
+        if self.group_batch < 1:
+            raise ConfigError("stream.group_batch must be >= 1 (1 disables)")
 
 
 @dataclass
@@ -84,16 +90,42 @@ class MessageSpillConfig:
 
 @dataclass
 class ChannelConfig:
-    """§4 sender pipeline: background transmit channels + wire compression."""
+    """§4 full-duplex pipeline: background transmit + receiver digest
+    channels, plus wire compression for both the position and the payload
+    columns."""
 
     pipeline: bool = False  # overlap transmit with the next group's fold
     compress: bool = False  # varint-delta the message runs' dp channel
+    # payload codec on the wire: False off; True/"lossless" byte-shuffle +
+    # DEFLATE on the msg (+cnt) channels (bit-exact round-trip); "bf16"
+    # additionally rounds float32 messages to bfloat16 on the wire
+    # (recoded_compact's trick — float-message programs only)
+    compress_payload: Any = False
+    # overlap the receiver digest with the next group's fold (U_r ∥ U_c);
+    # only meaningful with pipeline=True (False = PR-3's sender-only
+    # half-duplex pipeline, kept for A/B benchmarking)
+    full_duplex: bool = True
     inflight: int = 4  # bounded in-flight packets (O(1) RAM budget)
-    fault: Any = None  # streams.channel.FaultPoint (fault drills only)
+    fault: Any = None  # sender-side FaultPoint (fault drills only)
+    recv_fault: Any = None  # receiver-side FaultPoint (fault drills only)
 
     def validate(self) -> None:
+        from repro.streams.codec import normalize_payload_scheme
+
         if self.inflight < 1:
             raise ConfigError("channel.inflight must be >= 1")
+        try:
+            normalize_payload_scheme(self.compress_payload)
+        except ValueError as e:
+            raise ConfigError(f"channel.compress_payload: {e}") from None
+
+    @property
+    def payload_scheme(self) -> str | None:
+        """None when off, else the codec scheme name (the codec's
+        normalization is the single source of truth)."""
+        from repro.streams.codec import normalize_payload_scheme
+
+        return normalize_payload_scheme(self.compress_payload)
 
 
 @dataclass
@@ -179,11 +211,13 @@ class EngineConfig:
             raise ConfigError("kernel_windows must be >= 8")
         ch = self.channel
         if self.mode != "streamed" and (
-            ch.pipeline or ch.compress or ch.fault is not None
+            ch.pipeline or ch.compress or ch.compress_payload
+            or ch.fault is not None or ch.recv_fault is not None
         ):
             raise ConfigError(
-                "pipeline=/compress=/channel_fault= are streamed-mode knobs "
-                "(the in-memory modes already overlap on-device, §5/C3)"
+                "pipeline=/compress=/compress_payload=/channel faults are "
+                "streamed-mode knobs (the in-memory modes already overlap "
+                "on-device, §5/C3)"
             )
         if self.backend == "pallas" and self.mode != "recoded":
             raise ConfigError("backend='pallas' needs mode='recoded'")
@@ -195,11 +229,15 @@ class EngineConfig:
 
     # -- serialization -------------------------------------------------------
     def to_json(self) -> dict:
-        """JSON-able dict. ``channel.fault`` (a live object) is recorded only
-        by presence — fault injection is a test harness, not job state."""
+        """JSON-able dict. The channel fault points (live objects) are
+        recorded only by presence — fault injection is a test harness, not
+        job state."""
         out = dataclasses.asdict(self)
         out["channel"]["fault"] = (
             None if self.channel.fault is None else "<FaultPoint>"
+        )
+        out["channel"]["recv_fault"] = (
+            None if self.channel.recv_fault is None else "<FaultPoint>"
         )
         return out
 
@@ -207,8 +245,9 @@ class EngineConfig:
     def from_json(cls, d: dict) -> "EngineConfig":
         d = dict(d)
         ch = dict(d.get("channel", {}))
-        if ch.get("fault") is not None:
-            ch["fault"] = None  # fault points do not round-trip
+        for key in ("fault", "recv_fault"):
+            if ch.get(key) is not None:
+                ch[key] = None  # fault points do not round-trip
         return cls(
             mode=d.get("mode", "recoded"),
             backend=d.get("backend", "jnp"),

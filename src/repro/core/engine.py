@@ -32,13 +32,16 @@ Execution modes (benchmarked against each other, mirroring Tables 2–8):
   Typically paired with ``graph.partition_graph_streamed`` (spill at
   partition time, vertex-only PartitionedGraph). Host-driven: no mesh /
   Pallas backend; pick it when the graph does not fit device memory.
-  With ``pipeline=True`` the §4 sender pipeline comes on: a background
-  channel (``streams/channel.py``) serializes each combined outgoing group
-  (optionally varint-delta compressed, ``compress=True``) and appends it to
-  the destination's inbox run files while the fold is still digesting the
-  next group — transmit hidden under compute, a bounded in-flight budget,
-  and per-source owner views of the edge store (each emulated machine maps
-  only its own rows).
+  With ``pipeline=True`` the §4 pipeline comes on, full duplex: a
+  background sender (``streams/channel.py``) serializes each combined
+  outgoing group (positions varint-delta compressed with ``compress=True``,
+  payloads through the lossless/bf16 payload codec with
+  ``compress_payload=``) and appends it to the destination's inbox run
+  files, while a background receiver digests the runs already landed — both
+  directions hidden under the fold of the next group, a bounded in-flight
+  budget, and per-source owner views of the edge store (each emulated
+  machine maps only its own rows). ``full_duplex=False`` falls back to the
+  sender-only pipeline.
 
 Sparse adaptation (C2, ``skip()``): per destination group the engine skips
 edge blocks whose source range contains no active vertex, using the
@@ -513,6 +516,24 @@ class GraphDEngine:
             # bf16 wire rounds integers > 256 — min-label algorithms would
             # silently merge distinct labels. Float-message programs only.
             raise ValueError("recoded_compact needs float messages")
+        if (cfg.channel.payload_scheme == "bf16"
+                and program.msg_dtype != jnp.float32):
+            # the same guard as recoded_compact, applied to the wire codec
+            raise ValueError(
+                "compress_payload='bf16' rounds float32 messages on the "
+                "wire; integer/min-label programs need the lossless scheme"
+            )
+        if cfg.channel.payload_scheme == "bf16" and message_log is not None:
+            # logged OMSs are recovery state: recover_shard_streamed
+            # regenerates the failed shard's own groups EXACTLY and digests
+            # them against the logged runs — rounding the log would make
+            # recovered state diverge from the live run, breaking the
+            # bit-match invariant every fault drill asserts
+            raise ValueError(
+                "compress_payload='bf16' is a lossy wire codec and cannot "
+                "back a message log (recovery must replay bit-identically);"
+                " use the lossless scheme with message logging"
+            )
         if backend == "pallas" and getattr(program, "msg_kind", None) is None:
             raise ValueError(
                 "backend='pallas' needs mode='recoded' and a program.msg_kind"
@@ -551,6 +572,7 @@ class GraphDEngine:
                 e0=program.combiner.e0 if program.combiner is not None else 0,
                 combined=program.combiner is not None,
                 compress=compress,
+                compress_payload=cfg.channel.payload_scheme,
             )
         self.pg = pg
         self.program = program
@@ -563,6 +585,8 @@ class GraphDEngine:
         self.stream_store = stream_store
         self.pipeline = bool(pipeline)
         self.compress = bool(compress)
+        self.compress_payload = cfg.channel.payload_scheme  # None | scheme
+        self.full_duplex = bool(cfg.channel.full_duplex)
         axis = self.AXIS
 
         if mode == "streamed":
@@ -575,8 +599,10 @@ class GraphDEngine:
             )
             self.channel_inflight = int(cfg.channel.inflight)
             self._channel_fault = cfg.channel.fault
+            self._recv_fault = cfg.channel.recv_fault
+            self.group_batch = int(cfg.stream.group_batch)
             # cumulative over the current run(); bench_memory reads it for
-            # the sender-overlap section
+            # the pipeline_overlap section (both directions)
             self.channel_stats = ChannelStats()
             self._inbox_dir = os.path.join(stream_store.dir, "inbox")
             self.msg_spill_dir = cfg.spill.spill_dir or os.path.join(
@@ -591,6 +617,9 @@ class GraphDEngine:
             self.msg_merge_fanin = int(cfg.spill.merge_fanin)
             if program.combiner is not None:
                 self._stream_fold = jax.jit(self._make_stream_fold())
+                self._stream_fold_batch = jax.jit(
+                    self._make_stream_fold_batch()
+                )
                 self._stream_apply = jax.jit(self._make_stream_apply())
                 comb = program.combiner
                 # receiver digest of one densified inbox group (pipelined
@@ -759,6 +788,36 @@ class GraphDEngine:
 
         return fold
 
+    def _make_stream_fold_batch(self):
+        """Jitted multi-group fold: ``group_batch`` SMALL groups (each one
+        staged chunk) scatter-combined in one vmapped dispatch — per lane
+        the exact op sequence of :meth:`_make_stream_fold` on a fresh
+        identity accumulator, so batching is pure dispatch amortization and
+        results stay bit-identical (the lanes never mix)."""
+        program, pg = self.program, self.pg
+        comb = program.combiner
+
+        def fold_batch(values, degree, active, src, sp, dp, w, step):
+            # values/degree/active: the full (n, P) stacks; src: (G,) source
+            # shard per lane; sp/dp/w: (G, chunk_slots). Padding lanes carry
+            # sp = -1 everywhere and fold to the identity.
+            def one(src_g, sp_g, dp_g, w_g):
+                msg, dp2, aact = _gen_messages(
+                    program, values[src_g], degree[src_g], sp_g, dp_g, w_g,
+                    active[src_g], step,
+                )
+                A = comb.scatter(
+                    comb.identity((pg.P,), program.msg_dtype), dp2, msg
+                )
+                cnt = jnp.zeros((pg.P,), jnp.int32).at[dp2].add(
+                    aact.astype(jnp.int32)
+                )
+                return A, cnt
+
+            return jax.vmap(one)(src, sp, dp, w)
+
+        return fold_batch
+
     def _make_stream_apply(self):
         """Jitted per-shard digest + apply + vote (shard index is traced, so
         one compilation serves all shards)."""
@@ -854,24 +913,80 @@ class GraphDEngine:
     def _fold_groups(self, values, active, step, schedule, sink):
         """Fold staged edge chunks into per-(src, dst) group accumulators
         (§5's A_s, one group at a time) and hand each COMPLETED group to
-        ``sink(src, dst, A_g, cnt_g)``. Shared by the logged unpipelined
-        superstep (sink: combine locally + save_group) and the pipelined
-        superstep (sink: channel transmit) — the group keying, identity
-        re-init and buffer-recycle contract live in exactly one place, so
-        the two paths' bit-identical-grouping guarantee cannot drift."""
+        ``sink(src, dst, A_g, cnt_g)`` in schedule order. Shared by the
+        logged unpipelined superstep (sink: combine locally + save_group)
+        and the pipelined superstep (sink: channel transmit) — the group
+        keying, identity re-init and buffer-recycle contract live in
+        exactly one place, so the two paths' bit-identical-grouping
+        guarantee cannot drift.
+
+        Small groups (a single staged chunk) are folded ``group_batch`` at
+        a time through one padded vmapped dispatch — per lane the same ops
+        on a fresh identity accumulator, so sinks still see each group's
+        exact unbatched result; only the Python/dispatch overhead is
+        amortized (graphs with many small destinations pay one dispatch
+        per G groups instead of one per group)."""
         program, pg, comb = self.program, self.pg, self.program.combiner
-        cur = None
-        A_g = cnt_g = None
+        G = max(1, self.group_batch)
+        CB = self._stream_reader.chunk_blocks
+        # chunks per (src, dst) group, known from the schedule up front
+        n_chunks = {(i, k): -(-len(ids) // CB) for i, k, ids in schedule}
+        slots = CB * pg.edge_block
+        pad = (np.full((slots,), -1, np.int32), np.zeros((slots,), np.int32),
+               np.zeros((slots,), np.float32))
+        pending: list = []  # copied single-chunk groups awaiting one dispatch
+        state = {"cur": None, "A": None, "cnt": None}
+
+        def close_cur():
+            if state["cur"] is not None:
+                sink(state["cur"][0], state["cur"][1], state["A"],
+                     state["cnt"])
+                state["cur"] = None
+
+        def flush_batch():
+            if not pending:
+                return
+            if len(pending) == 1:
+                i, k, sp, dp, w = pending[0]
+                A_g, cnt_g = self._stream_fold(
+                    comb.identity((pg.P,), program.msg_dtype),
+                    jnp.zeros((pg.P,), jnp.int32),
+                    values[i], pg.degree[i], active[i],
+                    jnp.asarray(sp), jnp.asarray(dp), jnp.asarray(w), step,
+                )
+                sink(i, k, A_g, cnt_g)
+            else:
+                lanes = pending + [(0, -1) + pad] * (G - len(pending))
+                src = jnp.asarray(np.array([p[0] for p in lanes], np.int32))
+                sp = jnp.asarray(np.stack([p[2] for p in lanes]))
+                dp = jnp.asarray(np.stack([p[3] for p in lanes]))
+                w = jnp.asarray(np.stack([p[4] for p in lanes]))
+                A_b, cnt_b = self._stream_fold_batch(
+                    values, pg.degree, active, src, sp, dp, w, step
+                )
+                for g, (i, k, *_rest) in enumerate(pending):
+                    sink(i, k, A_b[g], cnt_b[g])
+            pending.clear()
+
         for chunk in self._stream_reader.stream(schedule):
             i, k = chunk.src_shard, chunk.dst_shard
-            if cur != (i, k):
-                if cur is not None:
-                    sink(cur[0], cur[1], A_g, cnt_g)
-                cur = (i, k)
-                A_g = comb.identity((pg.P,), program.msg_dtype)
-                cnt_g = jnp.zeros((pg.P,), jnp.int32)
-            A_g, cnt_g = self._stream_fold(
-                A_g, cnt_g, values[i], pg.degree[i], active[i],
+            if state["cur"] is not None and state["cur"] != (i, k):
+                close_cur()  # the previous multi-chunk group just completed
+            if G > 1 and n_chunks[(i, k)] == 1:
+                # copy out of the reader's recycled staging buffers; the
+                # batch holds at most G chunks (modeled in the staging tier)
+                pending.append((i, k, np.array(chunk.sp), np.array(chunk.dp),
+                                np.array(chunk.w)))
+                if len(pending) == G:
+                    flush_batch()
+                continue
+            if state["cur"] != (i, k):
+                flush_batch()  # batched groups precede this one in order
+                state["cur"] = (i, k)
+                state["A"] = comb.identity((pg.P,), program.msg_dtype)
+                state["cnt"] = jnp.zeros((pg.P,), jnp.int32)
+            state["A"], state["cnt"] = self._stream_fold(
+                state["A"], state["cnt"], values[i], pg.degree[i], active[i],
                 chunk.sp, chunk.dp, chunk.w, step,
             )
             # block before the reader recycles this chunk's buffer: on CPU
@@ -880,9 +995,9 @@ class GraphDEngine:
             # let the prefetch thread overwrite memory a pending computation
             # still reads. Disk I/O still overlaps: the producer thread
             # reads ahead while we wait on compute.
-            jax.block_until_ready(cnt_g)
-        if cur is not None:
-            sink(cur[0], cur[1], A_g, cnt_g)
+            jax.block_until_ready(state["cnt"])
+        close_cur()
+        flush_batch()
 
     def _superstep_streamed_comb(self, values, active, s, plan):
         """One streamed superstep with a combiner: fold staged edge chunks
@@ -959,6 +1074,7 @@ class GraphDEngine:
             os.path.join(self._inbox_dir, f"step-{s:06d}"),
             self.pg.n_shards, self.pg.P, np.dtype(self.program.msg_dtype),
             with_counts=with_counts, compress=self.compress,
+            compress_payload=self.compress_payload or False,
         )
 
     def _close_inbox(self, s: int, inbox, ok: bool) -> None:
@@ -977,32 +1093,57 @@ class GraphDEngine:
         tot.packets += st.packets
         tot.messages += st.messages
         tot.payload_bytes += st.payload_bytes
+        tot.wire_bytes += st.wire_bytes
         tot.send_seconds += st.send_seconds
         tot.stall_seconds += st.stall_seconds
+        tot.recv_runs += st.recv_runs
+        tot.recv_seconds += st.recv_seconds
+        tot.recv_stall_seconds += st.recv_stall_seconds
 
     def _superstep_streamed_comb_pipelined(self, values, active, s, plan):
         """One pipelined streamed superstep with a combiner — the paper's §4
-        compute ∥ communicate overlap: while the fold is still digesting
-        edge chunks of the NEXT group, each finished combined group
-        A_s(i→k) is serialized (sparse, optionally varint-delta compressed)
-        and appended to destination k's inbox run files by the background
-        sender. The receiver digests an inbox only after its per-destination
-        flush barrier, folding groups in transmit order — bit-identical to
-        the unpipelined grouped fold.
+        compute ∥ communicate overlap, full duplex: while the fold is still
+        digesting edge chunks of the NEXT group, each finished combined
+        group A_s(i→k) is serialized (sparse, optionally compressed) and
+        appended to destination k's inbox run files by the background
+        sender — AND the background receiver densifies and digests every
+        run the sender has landed, in transmit order, so U_r hides under
+        U_c exactly like U_s does. ``receiver.collect(k)`` after the
+        per-destination flush barrier is the only receiver-side sync point.
+        With ``full_duplex=False`` (PR-3's half-duplex pipeline, kept for
+        A/B benchmarking) the receiver digests inline after the barrier.
+        Either way the digest order is the transmit order — bit-identical
+        to the unpipelined grouped fold.
 
         ``plan`` is destination-grouped; resident state stays O(|V|/n):
-        one group accumulator, one receiver accumulator, and at most
-        ``channel_inflight`` sparse packets in flight.
+        one group accumulator, one receiver accumulator, one densified run,
+        and at most ``channel_inflight`` sparse packets in flight.
         """
-        from repro.streams.channel import ShardChannels
+        from repro.streams.channel import ChannelReceiver, ShardChannels
 
         program, pg, comb = self.program, self.pg, self.program.combiner
         n = pg.n_shards
         reader = self._stream_reader
         step = jnp.int32(s)
         inbox = self._open_inbox(s, with_counts=True)
+        receiver = None
+        if self.full_duplex:
+            identity = lambda: (comb.identity((pg.P,), program.msg_dtype),
+                                jnp.zeros((pg.P,), jnp.int32))
+
+            def _recv_digest(A, cnt, A_d, c_d):
+                A, cnt = self._stream_digest(
+                    A, cnt, jnp.asarray(A_d), jnp.asarray(c_d)
+                )
+                # block so recv_seconds measures real digest work (and the
+                # accumulator is materialized before the next run's fold)
+                jax.block_until_ready(cnt)
+                return A, cnt
+
+            receiver = ChannelReceiver(inbox, _recv_digest, identity,
+                                       comb.e0, fault=self._recv_fault)
         channel = ShardChannels(inbox, inflight=self.channel_inflight,
-                                fault=self._channel_fault)
+                                fault=self._channel_fault, receiver=receiver)
         new_v, new_a = [], []
         n_active = n_msgs = 0
         agg = 0.0
@@ -1021,15 +1162,21 @@ class GraphDEngine:
                 blocks += reader.stats.blocks_read
                 kib += reader.stats.bytes_read >> 10
                 # barrier: every group for dest k has landed in its inbox
+                # (and, full duplex, been announced to the receiver)
                 channel.flush()
-                # receiver digest (U_r): fold inbox runs in transmit order
-                A_r = comb.identity((pg.P,), program.msg_dtype)
-                cnt = jnp.zeros((pg.P,), jnp.int32)
-                for seg in inbox.runs(k):
-                    A_d, c_d = inbox.read_combined(k, seg, comb.e0)
-                    A_r, cnt = self._stream_digest(
-                        A_r, cnt, jnp.asarray(A_d), jnp.asarray(c_d)
-                    )
+                if receiver is not None:
+                    # receiver-side barrier: most digests already ran under
+                    # the fold; this only waits out the tail
+                    A_r, cnt = receiver.collect(k)
+                else:
+                    # half-duplex: digest inline, in transmit order
+                    A_r = comb.identity((pg.P,), program.msg_dtype)
+                    cnt = jnp.zeros((pg.P,), jnp.int32)
+                    for seg in inbox.runs(k):
+                        A_d, c_d = inbox.read_combined(k, seg, comb.e0)
+                        A_r, cnt = self._stream_digest(
+                            A_r, cnt, jnp.asarray(A_d), jnp.asarray(c_d)
+                        )
                 nv, na, nact, nm, ag = self._stream_apply(
                     values[k], pg.degree[k], pg.vmask[k], pg.old_ids[k],
                     pg.gids[k], A_r, cnt, active[k], step, jnp.int32(k),
@@ -1040,25 +1187,40 @@ class GraphDEngine:
                 n_msgs += int(nm)
                 agg += float(ag)
             channel.close()  # surface a late sender error before publishing
+            if receiver is not None:
+                receiver.close()
             ok = True
         finally:
             if not ok:
                 channel.abort()
+                if receiver is not None:
+                    receiver.abort()
             self._accum_channel(channel)
             self._close_inbox(s, inbox, ok)
         st = channel.stats
         io_note = (f"{blocks}blk/{kib}KiB "
-                   f"tx={st.packets}pk/{st.payload_bytes >> 10}KiB "
-                   f"ov={st.overlap_seconds() * 1e3:.1f}ms")
+                   f"tx={st.packets}pk/{st.wire_bytes >> 10}KiB "
+                   f"ov={st.sender_overlap_seconds() * 1e3:.1f}"
+                   f"/{st.receiver_overlap_seconds() * 1e3:.1f}ms")
         return (jnp.stack(new_v), jnp.stack(new_a), n_active, n_msgs, agg,
                 io_note)
 
-    def _apply_list_merged(self, mstore, dest, values_k, active_k, step):
+    def _apply_list_merged(self, mstore, dest, values_k, active_k, step,
+                           channel=None):
         """Merge destination ``dest``'s spilled runs and fold destination-
         aligned apply_list slices into that shard's new (values, active)
         rows; returns them with the full per-position message count. Shared
         by the superstep loop and single-shard recovery so the two can never
-        drift in slice semantics."""
+        drift in slice semantics.
+
+        With a live ``channel`` (the full-duplex pipelined path) the merge
+        runs on an accounted receiver thread (``streams.channel
+        .receive_iter``): its merge/decode time lands in the channel's
+        ``recv_seconds`` — receiver digest hidden under apply compute is
+        the OMS path's U_r overlap — and the receiver-side FaultPoint can
+        kill it mid-merge. Either producer yields the same slices in the
+        same order, so results cannot depend on which one ran."""
+        from repro.streams.channel import receive_iter
         from repro.streams.reader import prefetch_iter
 
         program, pg = self.program, self.pg
@@ -1072,11 +1234,15 @@ class GraphDEngine:
         )
         shard = jnp.int32(dest)
         acc_v = acc_a = None
+        slices = mstore.merged_slices(dest, cap, self.msg_read_chunk)
+        if channel is not None and self.full_duplex:
+            it = receive_iter(slices, stats=channel.stats,
+                              fault=self._recv_fault,
+                              depth=self._stream_reader.depth)
+        else:
+            it = prefetch_iter(slices, depth=self._stream_reader.depth)
         # slices are prefetched so merge-read I/O hides behind apply compute
-        for sdp, smsg, covered in prefetch_iter(
-            mstore.merged_slices(dest, cap, self.msg_read_chunk),
-            depth=self._stream_reader.depth,
-        ):
+        for sdp, smsg, covered in it:
             nv, na = self._stream_apply_list(
                 values_k, pg.degree[dest], pg.vmask[dest], pg.old_ids[dest],
                 pg.gids[dest], jnp.asarray(sdp), jnp.asarray(smsg),
@@ -1114,7 +1280,9 @@ class GraphDEngine:
         compaction passes) run on the channel's background sender in strict
         send order — the run table evolves exactly as inline, so results are
         byte-identical — while the compute thread goes on generating the
-        next chunk's messages (§4's U_c ∥ U_s).
+        next chunk's messages (§4's U_c ∥ U_s); with ``full_duplex`` the
+        external merge feeding apply slices runs on the accounted receiver
+        thread too (U_r), so merge-read I/O hides under apply compute.
         """
         from repro.streams.channel import ShardChannels
         from repro.streams.msgstore import MessageRunStore
@@ -1131,6 +1299,7 @@ class GraphDEngine:
             mstore = MessageRunStore(
                 os.path.join(self.msg_spill_dir, f"step-{s:06d}"), n, pg.P,
                 np.dtype(program.msg_dtype), compress=self.compress,
+                compress_payload=self.compress_payload or False,
             )
         channel = (
             ShardChannels(mstore, inflight=self.channel_inflight,
@@ -1181,9 +1350,10 @@ class GraphDEngine:
                 if channel is not None:
                     channel.flush()  # dest k's runs all landed; safe to merge
 
-                # -- merge + apply (shared with recovery)
+                # -- merge + apply (shared with recovery); with a channel
+                # the merge runs on the accounted receiver thread (U_r)
                 acc_v, acc_a, cnt_k = self._apply_list_merged(
-                    mstore, k, values[k], active[k], step
+                    mstore, k, values[k], active[k], step, channel=channel
                 )
                 nact, nm, ag = self._stream_finish(
                     values[k], acc_v, acc_a, cnt_k, pg.vmask[k]
@@ -1211,8 +1381,9 @@ class GraphDEngine:
         io_note = f"{blocks}blk/{kib}KiB"
         if channel is not None:
             st = channel.stats
-            io_note += (f" tx={st.packets}pk/{st.payload_bytes >> 10}KiB "
-                        f"ov={st.overlap_seconds() * 1e3:.1f}ms")
+            io_note += (f" tx={st.packets}pk/{st.wire_bytes >> 10}KiB "
+                        f"ov={st.sender_overlap_seconds() * 1e3:.1f}"
+                        f"/{st.receiver_overlap_seconds() * 1e3:.1f}ms")
         return (jnp.stack(new_v), jnp.stack(new_a), n_active, n_msgs, agg,
                 io_note)
 
@@ -1432,10 +1603,16 @@ class GraphDEngine:
             combined=self.program.combiner is not None,
             pipeline=self.pipeline,
             compress=self.compress,
+            compress_payload=(self.compress_payload or False) if streamed
+            else self.config.channel.compress_payload,
+            full_duplex=self.full_duplex if streamed
+            else self.config.channel.full_duplex,
             chunk_blocks=(self._stream_reader.chunk_blocks if streamed
                           else self.config.stream.chunk_blocks),
             depth=(self._stream_reader.depth if streamed
                    else self.config.stream.depth),
+            group_batch=(self.group_batch if streamed
+                         else self.config.stream.group_batch),
             slice_cap=(self._msg_slice_cap_eff if streamed
                        else self.config.spill.slice_cap),
             read_chunk=self.config.spill.read_chunk,

@@ -124,6 +124,9 @@ class GraphDJob:
             )
         self.program = program
         self.graph = graph
+        # expert plans are materialized verbatim; only budget-derived plans
+        # get their knobs re-derived against the realized geometry
+        self._auto_planned = plan is None
         if plan is None:
             plan = make_plan(program, GraphMeta.of(graph), budget,
                              edge_block=edge_block, vertex_pad=vertex_pad)
@@ -190,6 +193,7 @@ class GraphDJob:
         self.pg, self.rmap, self.store = partition_for_plan(
             self.graph, plan, self._dir("edges", tag)
         )
+        plan = self.plan = self._refine_plan(plan)
         rec = plan.config.recovery
         self.checkpointer = (
             Checkpointer(self._dir("ckpt", tag), every=rec.checkpoint_every,
@@ -215,6 +219,43 @@ class GraphDJob:
             self.pg, self.program, config=plan.config,
             stream_store=self.store, message_log=self.message_log,
         )
+
+    def _refine_plan(self, plan: ExecutionPlan) -> ExecutionPlan:
+        """Re-run the knob ladder against the REALIZED partition geometry.
+
+        The pre-partition plan estimates P as ceil(|V|/n); the hash
+        partition's imbalance can realize a bigger max shard, and a ladder
+        that spent the whole budget on optional knobs (batch lanes, the
+        full-duplex receiver staging) against the estimate would overshoot
+        it in realized bytes. Planning again with ``GraphMeta.of(pg)`` (the
+        exact P rides along) re-derives the knobs the budget actually
+        affords. Only adopted when the physical layout already on disk
+        still matches (same mode/pipeline/codecs — the spill happened under
+        the original plan); an infeasibility against the exact geometry
+        falls back to the original best-effort plan."""
+        from repro.core.plan import PlanInfeasible
+
+        b = plan.budget
+        if not self._auto_planned or plan.mode != "streamed" or (
+            b.ram_per_shard is None and b.disk_per_shard is None
+            and b.net_per_superstep is None
+        ):
+            return plan
+        try:
+            refined = make_plan(
+                self.program, GraphMeta.of(self.pg), b,
+                edge_block=plan.edge_block, vertex_pad=plan.vertex_pad,
+                recovery=plan.config.recovery,
+            )
+        except PlanInfeasible:
+            return plan
+        same_layout = (
+            refined.mode == plan.mode
+            and refined.pipeline == plan.pipeline
+            and refined.compress == plan.compress
+            and bool(refined.compress_payload) == bool(plan.compress_payload)
+        )
+        return refined if same_layout else plan
 
     # -- lifecycle ------------------------------------------------------------
     def run(self, max_supersteps: int = 10_000, *,

@@ -26,9 +26,13 @@ Mode preference (first feasible wins, all alternatives reported):
 * combiner-less:       ``basic`` → ``streamed`` (OMS spill) →
   ``streamed+pipeline``.
 
-``compress`` is engaged per streamed candidate when the disk budget demands
-it. An over-constrained budget raises :class:`PlanInfeasible` carrying the
-most frugal candidate's per-tier byte breakdown.
+``compress`` (positions) and ``compress_payload`` (message payloads) are
+engaged per streamed candidate when the disk or network budget demands
+them — the net ladder flips positions first, then payloads, before giving
+up; the full-duplex receiver staging and the batched-dispatch lanes sit on
+the RAM knob ladder and are shed under pressure. An over-constrained
+budget raises :class:`PlanInfeasible` carrying the most frugal candidate's
+per-tier byte breakdown.
 """
 
 from __future__ import annotations
@@ -74,7 +78,8 @@ def _fmt(b: int | None) -> str:
 
 #: model keys that live in RAM for every mode; ``streamed`` is the big tier
 #: (device memory for in-memory modes, local disk for mode="streamed")
-RAM_KEYS = ("resident", "buffers", "staging", "msg_staging", "channel", "wire")
+RAM_KEYS = ("resident", "buffers", "staging", "msg_staging", "channel",
+            "receiver_staging", "codec", "wire")
 
 
 def estimate_memory(
@@ -89,8 +94,11 @@ def estimate_memory(
     combined: bool,
     pipeline: bool = False,
     compress: bool = False,
+    compress_payload=False,
+    full_duplex: bool = True,
     chunk_blocks: int = 8,
     depth: int = 2,
+    group_batch: int = 1,
     slice_cap: int = 4096,
     read_chunk: int = 4096,
     merge_fanin: int = 16,
@@ -102,11 +110,16 @@ def estimate_memory(
     This is the engine's ``memory_model()`` algebra factored out so the
     planner can run it over *candidate* geometries before anything is
     partitioned. Keys: ``resident`` (state array A), ``buffers`` (combine
-    accumulators), ``staging`` (edge-reader pool), ``msg_staging``
-    (combiner-less merge/slice windows), ``channel`` (§4 in-flight budget),
+    accumulators), ``staging`` (edge-reader pool + batched-dispatch
+    copies), ``msg_staging`` (combiner-less merge/slice windows),
+    ``channel`` (§4 in-flight budget), ``receiver_staging`` (the
+    full-duplex background receiver: its accumulator + densified-run /
+    queued-slice buffers), ``codec`` (payload-codec encode/decode scratch),
     ``wire`` (mode="basic" raw exchange buffers), ``streamed`` (the big
     tier: device edge groups, or on-disk streams for mode="streamed").
     """
+    from repro.streams.codec import PAYLOAD_BLOCK
+
     resident = P * (value_itemsize + 1 + 4 + 1 + 8)  # values, active, degree, vmask, old
     per_slot = msg_itemsize + 4  # message + count, the A_s/A_r unit (§5)
     if mode != "streamed":
@@ -120,7 +133,14 @@ def estimate_memory(
             # raw (dst, payload) all_to_all: E-sized send + receive buffers
             out["wire"] = 2 * n_shards * E_cap * (4 + msg_itemsize)
         return out
-    staging = (depth + 1) * chunk_blocks * edge_block * EDGE_SLOT_BYTES
+    chunk_slots = chunk_blocks * edge_block
+    staging = (depth + 1) * chunk_slots * EDGE_SLOT_BYTES
+    if combined and group_batch > 1:
+        # batched group dispatch holds up to G copied single-chunk groups
+        # on the way in AND the (G, P) accumulator/count stacks on the way
+        # out (vs the ONE group accumulator already counted in ``buffers``)
+        staging += group_batch * chunk_slots * EDGE_SLOT_BYTES
+        staging += (group_batch - 1) * P * (msg_itemsize + 4)
     if combined:
         if pipeline:
             # one group accumulator folding + one receiver accumulator
@@ -140,24 +160,42 @@ def estimate_memory(
         streamed=(
             disk_bytes_per_shard
             if disk_bytes_per_shard is not None
-            else estimate_edge_disk_bytes(n_shards, E_cap, compress)
+            else estimate_edge_disk_bytes(n_shards, E_cap, compress,
+                                          bool(compress_payload))
         ),
     )
     if pipeline:
         out["channel"] = inflight * ShardChannels.packet_bytes(
             P=P, msg_itemsize=msg_itemsize, combined=combined,
-            chunk_slots=chunk_blocks * edge_block,
+            chunk_slots=chunk_slots,
         )
+        if full_duplex:
+            # the background receiver's resident slice of the §4 budget:
+            # combiner path — one densified (A, cnt) run beside the
+            # accumulator already counted in ``buffers``; OMS path — the
+            # receive_iter queue of up to ``depth`` decoded apply slices
+            out["receiver_staging"] = (
+                P * per_slot if combined
+                else depth * slice_cap * (4 + msg_itemsize)
+            )
+    if compress_payload:
+        # payload-codec scratch: one encode + one decode buffer of the
+        # largest unit the engine feeds it (a combined run is <= P slots, a
+        # raw spill chunk <= chunk_slots), capped by the codec's own block
+        # bound. (The varint codec's scratch is byte-windowed and noise.)
+        unit = min(PAYLOAD_BLOCK, P if combined else chunk_slots)
+        out["codec"] = 2 * unit * per_slot
     if not combined:
         # the disk message tier (§3.3): merge cursor windows (fan-in bounded
         # by compaction), one destination-aligned apply slice, and the
-        # spill-sort staging for one staged edge chunk
+        # spill-sort staging for one staged edge chunk (all DECODED widths —
+        # the wire codecs never change resident windows)
         per_msg = MessageRunStore.fixed_bytes_per_message(msg_itemsize)
         fanin = max(merge_fanin, n_shards)
         out["msg_staging"] = (
             fanin * read_chunk * per_msg
             + slice_cap * per_msg
-            + chunk_blocks * edge_block * per_msg
+            + chunk_slots * per_msg
         )
     return out
 
@@ -173,15 +211,26 @@ def ram_total(model: dict[str, int], mode: str) -> int:
 
 
 def estimate_net(mode: str, *, n_shards: int, P: int, E_cap: int,
-                 msg_itemsize: int, combined: bool) -> int:
-    """Bytes one shard puts on the wire per superstep (the Table 2-8 axis)."""
+                 msg_itemsize: int, combined: bool, compress: bool = False,
+                 compress_payload=False) -> int:
+    """Bytes one shard puts on the wire per superstep (the Table 2-8 axis).
+    For the streamed channel the per-message unit is
+    :meth:`ShardChannels.wire_bytes_per_message`, so the ``compress`` /
+    ``compress_payload`` knobs shrink the estimate exactly where they
+    shrink the stream."""
     if mode == "recoded_compact":
         return n_shards * P * 3  # bf16 value + 1-byte has-msg flag
     if mode in ("recoded", "basic_sc"):
         return n_shards * P * (msg_itemsize + 4)  # combined A_s + counts
-    if mode == "basic" or not combined:
+    if mode == "basic":
         return n_shards * E_cap * (4 + msg_itemsize)  # raw (dst, payload)
-    return n_shards * P * (4 + msg_itemsize + 4)  # sparse combined groups
+    per_msg = ShardChannels.wire_bytes_per_message(
+        msg_itemsize=msg_itemsize, combined=combined, compress=compress,
+        compress_payload=compress_payload,
+    )
+    if not combined:
+        return int(n_shards * E_cap * per_msg)  # raw runs, one per chunk
+    return int(n_shards * P * per_msg)  # sparse combined groups
 
 
 # --------------------------------------------------------------------------
@@ -271,6 +320,7 @@ class Candidate:
     disk_total: int
     net_total: int
     knobs: dict[str, int]
+    compress_payload: bool = False
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -304,6 +354,10 @@ class ExecutionPlan:
     @property
     def compress(self) -> bool:
         return self.config.channel.compress
+
+    @property
+    def compress_payload(self):
+        return self.config.channel.compress_payload
 
     def explain(self) -> str:
         """Human-readable plan audit: the per-tier byte model of the chosen
@@ -386,6 +440,7 @@ _CHUNK_LADDER = (8, 4, 2, 1)
 _INFLIGHT_LADDER = (4, 2, 1)
 _READ_LADDER = (4096, 1024, 256, 64)
 _SLICE_LADDER = (4096, 1024, 512, 128)
+_BATCH_LADDER = (4, 2, 1)  # batched group dispatch lanes (RAM: G chunk copies)
 
 
 def plan(
@@ -450,53 +505,87 @@ def plan(
         name = "streamed+pipeline" if pipeline else "streamed"
         # disk tier first: engage compression only when the budget demands it
         compress = False
+        compress_payload = False
         per_msg_spill = MessageRunStore.fixed_bytes_per_message(mdt)
 
-        def disk_for(compress: bool) -> int:
-            d = estimate_edge_disk_bytes(n, E_cap, compress)
+        def disk_for(compress: bool, compress_payload: bool) -> int:
+            d = estimate_edge_disk_bytes(n, E_cap, compress,
+                                         compress_payload)
+            spill_per_msg = ShardChannels.wire_bytes_per_message(
+                msg_itemsize=mdt, combined=combined, compress=compress,
+                compress_payload=compress_payload,
+            ) if (compress or compress_payload) else (
+                per_msg_spill if not combined else (4 + mdt + 4)
+            )
             if not combined:
-                pm = (mdt + int(4 * COMPRESS_RATIO_ESTIMATE) if compress
-                      else per_msg_spill)
-                d += E_cap * pm  # peak OMS spill: one destination's runs
+                d += int(E_cap * spill_per_msg)  # peak OMS: one dest's runs
             elif pipeline:
-                d += P * (4 + mdt + 4)  # peak inbox runs: one dest's groups
+                d += int(P * spill_per_msg)  # peak inbox: one dest's groups
             return d
 
-        disk = disk_for(False)
+        disk = disk_for(False, False)
         if budget.disk_per_shard is not None and disk > budget.disk_per_shard:
             compress = True
-            disk = disk_for(True)
+            disk = disk_for(True, False)
+            if disk > budget.disk_per_shard:
+                compress_payload = True
+                disk = disk_for(True, True)
+
+        def net_for(compress: bool, compress_payload: bool) -> int:
+            return estimate_net(
+                "streamed", n_shards=n, P=P, E_cap=E_cap, msg_itemsize=mdt,
+                combined=combined, compress=compress,
+                compress_payload=compress_payload,
+            )
+
+        # network tier next: a shrinking net budget flips the wire codecs
+        # on (positions first, then the payload channel) before anything is
+        # declared infeasible
+        net = net_for(compress, compress_payload)
+        if budget.net_per_superstep is not None:
+            if net > budget.net_per_superstep and not compress:
+                compress = True
+                net = net_for(compress, compress_payload)
+            if net > budget.net_per_superstep and not compress_payload:
+                compress_payload = True
+                net = net_for(compress, compress_payload)
+            disk = disk_for(compress, compress_payload)
         # knob ladders, first fit wins; ordering shrinks the cheap knobs
         # first (merge fan-in, then read/slice windows, then the in-flight
-        # budget, then the edge staging chunk)
+        # budget and batch width, then the edge staging chunk)
         fanin_ladder = sorted({16, max(2, n)}, reverse=True)
         infl_ladder = _INFLIGHT_LADDER if pipeline else (4,)
+        # full duplex preferred; shedding it drops the receiver-staging
+        # tier, so it sits between the batch ladder (cheapest to give up)
+        # and the window/in-flight ladders
+        duplex_ladder = (True, False) if pipeline else (True,)
         if combined:
             combos = itertools.product(
-                _CHUNK_LADDER, infl_ladder, (4096,), (4096,), (16,)
+                _CHUNK_LADDER, infl_ladder, (4096,), (4096,), (16,),
+                duplex_ladder, _BATCH_LADDER,
             )
         else:
             combos = itertools.product(
                 _CHUNK_LADDER, infl_ladder, _SLICE_LADDER, _READ_LADDER,
-                fanin_ladder,
+                fanin_ladder, duplex_ladder, (1,),
             )
         chosen_model = chosen_knobs = None
         ram = 0
-        for cb, infl, sc, rc, fanin in combos:
+        for cb, infl, sc, rc, fanin, fd, gb in combos:
             model = estimate_memory(
                 mode="streamed", pipeline=pipeline, compress=compress,
-                chunk_blocks=cb, depth=depth, slice_cap=sc, read_chunk=rc,
-                merge_fanin=fanin, inflight=infl, **geom,
+                compress_payload=compress_payload, full_duplex=fd,
+                chunk_blocks=cb, depth=depth, group_batch=gb, slice_cap=sc,
+                read_chunk=rc, merge_fanin=fanin, inflight=infl, **geom,
             )
             ram = ram_total(model, "streamed")
             chosen_model = model
             chosen_knobs = dict(chunk_blocks=cb, depth=depth, inflight=infl,
+                                group_batch=gb, full_duplex=fd,
                                 slice_cap=sc, read_chunk=rc,
                                 merge_fanin=fanin)
             if budget.ram_per_shard is None or ram <= budget.ram_per_shard:
                 break
-        net = estimate_net("streamed", n_shards=n, P=P, E_cap=E_cap,
-                           msg_itemsize=mdt, combined=combined)
         feasible, reason = True, ""
         if budget.ram_per_shard is not None and ram > budget.ram_per_shard:
             feasible = False
@@ -516,14 +605,18 @@ def plan(
             # cross-machine traffic in deployment — the budget applies
             feasible = False
             reason = (f"net {_fmt(net)}/superstep > budget "
-                      f"{_fmt(budget.net_per_superstep)}")
+                      f"{_fmt(budget.net_per_superstep)} even with the "
+                      "position and payload codecs engaged")
         if compress:
             name += "+compress"
+        if compress_payload:
+            name += "+payload"
         return Candidate(name=name, mode="streamed", pipeline=pipeline,
                          compress=compress, feasible=feasible, chosen=False,
                          reason=reason, model=chosen_model,
                          ram_total=ram, disk_total=disk, net_total=net,
-                         knobs=chosen_knobs)
+                         knobs=chosen_knobs,
+                         compress_payload=compress_payload)
 
     candidates: list[Candidate] = []
     if combined:
@@ -567,12 +660,15 @@ def plan(
     cfg = EngineConfig(
         mode=winner.mode,
         stream=StreamConfig(chunk_blocks=k.get("chunk_blocks", 8),
-                            depth=k.get("depth", depth)),
+                            depth=k.get("depth", depth),
+                            group_batch=k.get("group_batch", 1)),
         spill=MessageSpillConfig(slice_cap=k.get("slice_cap", 4096),
                                  read_chunk=k.get("read_chunk", 4096),
                                  merge_fanin=k.get("merge_fanin", 16)),
         channel=ChannelConfig(pipeline=winner.pipeline,
                               compress=winner.compress,
+                              compress_payload=winner.compress_payload,
+                              full_duplex=bool(k.get("full_duplex", True)),
                               inflight=k.get("inflight", 4)),
         recovery=recovery or RecoveryConfig(),
     ).finalize()

@@ -206,15 +206,18 @@ def drop_edges(pg: PartitionedGraph) -> PartitionedGraph:
 
 
 def spill_partition(pg: PartitionedGraph, directory: str,
-                    compress: bool = False):
+                    compress: bool = False, compress_payload: bool = False):
     """Write the edge groups of ``pg`` to an on-disk ``EdgeStreamStore`` and
     return ``(vertex_only_pg, store)`` — the paper's partition-time spill:
     edges are written once, sequentially, in the per-destination group
     layout, and streamed back every superstep. ``compress=True`` varint-delta
-    encodes the position channels (streams/codec.py)."""
+    encodes the position channels; ``compress_payload=True`` payload-encodes
+    the weight channel (both streams/codec.py, both lossless)."""
     from repro.streams.store import EdgeStreamStore  # deferred: streams -> partition
 
-    store = EdgeStreamStore.from_partition(pg, directory, compress=compress)
+    store = EdgeStreamStore.from_partition(
+        pg, directory, compress=compress, compress_payload=compress_payload,
+    )
     return drop_edges(pg), store
 
 
@@ -226,6 +229,7 @@ def partition_graph_streamed(
     vertex_pad: int = 8,
     recode: RecodeMap | None = None,
     compress: bool = False,
+    compress_payload: bool = False,
 ):
     """``partition_graph`` for the out-of-core path: partitions, spills the
     edge streams to ``spill_dir``, and returns ``(pg, rmap, store)`` where
@@ -234,7 +238,8 @@ def partition_graph_streamed(
         g, n_shards, edge_block=edge_block, vertex_pad=vertex_pad,
         recode=recode,
     )
-    pg, store = spill_partition(pg_full, spill_dir, compress=compress)
+    pg, store = spill_partition(pg_full, spill_dir, compress=compress,
+                                compress_payload=compress_payload)
     return pg, rmap, store
 
 
@@ -251,6 +256,7 @@ def partition_for_plan(g: Graph, plan, spill_dir: str,
             g, plan.n_shards, spill_dir, edge_block=plan.edge_block,
             vertex_pad=plan.vertex_pad, recode=recode,
             compress=plan.compress,
+            compress_payload=bool(plan.compress_payload),
         )
     pg, rmap = partition_graph(
         g, plan.n_shards, edge_block=plan.edge_block,

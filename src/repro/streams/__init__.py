@@ -1,9 +1,10 @@
 """Out-of-core streaming (paper §3–§4): the on-disk edge-block store, the
 double-buffered prefetching reader behind the engine's ``streamed`` mode,
 the disk-spilled outgoing-message (OMS) run store with its §3.3.1 external
-merge for combiner-less programs, the outbox→inbox channel layer that
-overlaps transmission with compute (§4), and the varint-delta codec behind
-the ``compress=`` knobs.
+merge for combiner-less programs, the full-duplex outbox→inbox channel
+layer that overlaps transmission AND receiver digest with compute (§4),
+the varint-delta codec behind the ``compress=`` knobs, and the payload
+codec behind ``compress_payload=``.
 """
 
 from repro.streams.store import EdgeStreamStore, StoreGeometry
@@ -13,10 +14,12 @@ from repro.streams.reader import (
 from repro.streams.schedule import plan_stream_schedule
 from repro.streams.msgstore import MessageRunStore, RunSegment
 from repro.streams.channel import (
-    ChannelError, ChannelStats, FaultPoint, ShardChannels,
+    ChannelError, ChannelReceiver, ChannelStats, FaultPoint, ShardChannels,
+    receive_iter,
 )
 from repro.streams.codec import (
-    VarintDeltaDecoder, decode_varint_delta, encode_varint_delta,
+    PayloadDecoder, PayloadEncoder, VarintDeltaDecoder, decode_payload,
+    decode_varint_delta, encode_payload, encode_varint_delta,
 )
 
 __all__ = [
@@ -30,10 +33,16 @@ __all__ = [
     "MessageRunStore",
     "RunSegment",
     "ChannelError",
+    "ChannelReceiver",
     "ChannelStats",
     "FaultPoint",
     "ShardChannels",
+    "receive_iter",
+    "PayloadDecoder",
+    "PayloadEncoder",
     "VarintDeltaDecoder",
+    "decode_payload",
     "decode_varint_delta",
+    "encode_payload",
     "encode_varint_delta",
 ]

@@ -22,6 +22,13 @@ streaming analysis assumes.
   blob, read back through a bounded streaming decoder, so the paper's
   sequential-bandwidth argument gets a smaller stream at the same
   O(read_chunk) residency;
+* with ``compress_payload=`` the VALUE channels shrink too: the ``msg``
+  payload (and, on combined stores, the ``cnt`` channel) are stored as
+  payload-codec blobs — losslessly by default (byte-plane shuffle +
+  DEFLATE; results stay bit-identical), or with bfloat16 wire rounding
+  under the ``"bf16"`` scheme (float32 messages only, the
+  ``recoded_compact`` guard) — again streamed back through bounded
+  decoders;
 * ``iter_merged`` — a k-way heap merge over the sorted runs that reads each
   run through a small fixed-size cursor buffer, so merge-time resident
   memory is O(fan-in · read_chunk), never O(messages);
@@ -59,7 +66,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.streams.codec import (
-    VarintDeltaDecoder, decode_varint_delta, encode_varint_delta,
+    PayloadDecoder, PayloadEncoder, VarintDeltaDecoder, decode_varint_delta,
+    encode_payload, encode_varint_delta, normalize_payload_scheme,
 )
 
 INDEX = "index.json"
@@ -69,10 +77,13 @@ INDEX = "index.json"
 class RunSegment:
     """One sorted run: a contiguous slice of a destination's OMS files.
 
-    ``offset``/``length`` are in messages (the msg/cnt channels are fixed
-    width); ``dp_off``/``dp_nbytes`` are the *byte* extent of the run's
-    varint-delta blob in the dp file when the store is compressed (-1 on
-    uncompressed stores, where the dp extent is implied by offset/length).
+    ``offset``/``length`` are in messages (fixed-width channels are indexed
+    by them directly); ``*_off``/``*_nbytes`` are the *byte* extent of a
+    channel's compressed blob when that channel is encoded (-1 on
+    fixed-width channels, where the extent is implied by offset/length):
+    ``dp_*`` for the varint-delta position blob (``compress=True``),
+    ``msg_*``/``cnt_*`` for the payload-codec blobs
+    (``compress_payload=...``).
     """
 
     tag: int  # producing source shard (-1 = untagged)
@@ -80,6 +91,15 @@ class RunSegment:
     length: int  # messages in this run
     dp_off: int = -1  # byte offset of the compressed dp blob
     dp_nbytes: int = -1  # byte length of the compressed dp blob
+    msg_off: int = -1  # byte offset of the payload-codec msg blob
+    msg_nbytes: int = -1  # byte length of the payload-codec msg blob
+    cnt_off: int = -1  # byte offset of the payload-codec cnt blob
+    cnt_nbytes: int = -1  # byte length of the payload-codec cnt blob
+
+
+#: RunSegment byte-extent fields per blob-encoded channel
+_EXTENTS = {"dp": ("dp_off", "dp_nbytes"), "msg": ("msg_off", "msg_nbytes"),
+            "cnt": ("cnt_off", "cnt_nbytes")}
 
 
 class MessageRunStore:
@@ -87,16 +107,27 @@ class MessageRunStore:
 
     def __init__(self, directory: str, n_shards: int, P: int, msg_dtype,
                  with_counts: bool = False, create: bool = True,
-                 compress: bool = False):
+                 compress: bool = False, compress_payload=False):
         self.dir = directory
         self.n_shards = n_shards
         self.P = P
         self.msg_dtype = np.dtype(msg_dtype)
         self.with_counts = with_counts
         self.compress = bool(compress)
+        # payload codec: msg channel in the requested scheme; the cnt
+        # channel (combine counts must stay exact) always lossless
+        self.payload_scheme = normalize_payload_scheme(compress_payload)
+        if self.payload_scheme == "bf16" and self.msg_dtype != np.float32:
+            raise ValueError(
+                "compress_payload='bf16' rounds float32 payloads on the "
+                f"wire; this store carries {self.msg_dtype} messages"
+            )
         self._runs: list[list[RunSegment]] = [[] for _ in range(n_shards)]
         self._sizes = [0] * n_shards  # messages written per destination
-        self._dp_bytes = [0] * n_shards  # dp file bytes (compressed stores)
+        # per-channel blob file bytes (encoded channels only)
+        self._blob_bytes: dict[str, list[int]] = {
+            ch: [0] * n_shards for ch in self._blob_channels()
+        }
         # per-(dest, position) message counts: O(|V|) host ints, the slice
         # planner's only state (NOT O(messages))
         self._counts = np.zeros((n_shards, P), np.int64)
@@ -121,12 +152,54 @@ class MessageRunStore:
     def _channels(self) -> tuple[str, ...]:
         return ("dp", "msg", "cnt") if self.with_counts else ("dp", "msg")
 
+    def _blob_channels(self) -> tuple[str, ...]:
+        """Channels stored as per-run compressed blobs (byte-indexed)."""
+        out = []
+        if self.compress:
+            out.append("dp")
+        if self.payload_scheme is not None:
+            out.append("msg")
+            if self.with_counts:
+                out.append("cnt")
+        return tuple(out)
+
+    def _is_blob(self, ch: str) -> bool:
+        return ch in self._blob_bytes
+
+    def _scheme(self, ch: str) -> str:
+        return self.payload_scheme if ch == "msg" else "lossless"
+
+    def _decoded_dtype(self, ch: str):
+        return self.msg_dtype if ch == "msg" else np.dtype(np.int32)
+
     def _dtype(self, ch: str):
-        if ch == "msg":
-            return self.msg_dtype
-        if ch == "dp" and self.compress:
+        if self._is_blob(ch):
             return np.dtype(np.uint8)
-        return np.dtype(np.int32)
+        return self._decoded_dtype(ch)
+
+    def _encode(self, ch: str, values: np.ndarray) -> bytes:
+        if ch == "dp":
+            return encode_varint_delta(np.asarray(values, np.int64))
+        return encode_payload(
+            np.ascontiguousarray(values, self._decoded_dtype(ch)),
+            self._scheme(ch),
+        )
+
+    def _blob_slice(self, mm: dict, seg: RunSegment, ch: str) -> np.ndarray:
+        off_f, nb_f = _EXTENTS[ch]
+        off, nb = getattr(seg, off_f), getattr(seg, nb_f)
+        return mm[ch][off:off + nb]
+
+    def _decoder(self, mm: dict, seg: RunSegment, ch: str):
+        """Streaming decoder over one run's blob for ``ch`` (None when the
+        channel is fixed-width and the memmap slice is the stream)."""
+        if not self._is_blob(ch):
+            return None
+        blob = self._blob_slice(mm, seg, ch)
+        if ch == "dp":
+            return VarintDeltaDecoder(blob, seg.length)
+        return PayloadDecoder(blob, self._decoded_dtype(ch), seg.length,
+                              self._scheme(ch))
 
     def _path(self, dest: int, ch: str) -> str:
         return os.path.join(self.dir, f"oms-{dest:03d}.{ch}.bin")
@@ -150,25 +223,34 @@ class MessageRunStore:
             raise ValueError("append_run requires destination-sorted input")
         if self.with_counts and cnt is None:
             raise ValueError("this store carries a count channel; pass cnt=")
-        if self.compress:
-            blob = encode_varint_delta(np.asarray(dp, np.int64))
-            seg = RunSegment(tag=tag, offset=self._sizes[dest],
-                             length=int(dp.size),
-                             dp_off=self._dp_bytes[dest], dp_nbytes=len(blob))
-            self._handle(dest, "dp").write(blob)
-            self._dp_bytes[dest] += len(blob)
-        else:
-            seg = RunSegment(tag=tag, offset=self._sizes[dest],
-                             length=int(dp.size))
-            self._handle(dest, "dp").write(
-                np.ascontiguousarray(dp, np.int32).tobytes())
-        self._handle(dest, "msg").write(
-            np.ascontiguousarray(msg, self.msg_dtype).tobytes())
+        data = {"dp": dp, "msg": msg}
         if self.with_counts:
-            self._handle(dest, "cnt").write(
-                np.ascontiguousarray(cnt, np.int32).tobytes())
+            data["cnt"] = cnt
+        extents: dict[str, int] = {}
+        blob_len: dict[str, int] = {}
+        for ch in self._channels():
+            if self._is_blob(ch):
+                blob = self._encode(ch, data[ch])
+                off_f, nb_f = _EXTENTS[ch]
+                extents[off_f] = self._blob_bytes[ch][dest]
+                extents[nb_f] = len(blob)
+                blob_len[ch] = len(blob)
+                self._handle(dest, ch).write(blob)
+            else:
+                self._handle(dest, ch).write(
+                    np.ascontiguousarray(data[ch],
+                                         self._decoded_dtype(ch)).tobytes())
+        seg = RunSegment(tag=tag, offset=self._sizes[dest],
+                         length=int(dp.size), **extents)
         for ch in self._channels():
             self._wfh[(dest, ch)].flush()
+        # size counters move only AFTER the flush: the full-duplex receiver
+        # maps read extents from these counters on another thread, and a
+        # counter that ran ahead of the bytes on disk would make it mmap
+        # past EOF (the sender's single-thread append order makes
+        # post-flush publication sufficient)
+        for ch, nb in blob_len.items():
+            self._blob_bytes[ch][dest] += nb
         self._sizes[dest] += seg.length
         if dp.size:
             self._ensure_counts(dest)
@@ -245,9 +327,11 @@ class MessageRunStore:
         for (d, ch), fh in list(self._wfh.items()):
             if d == dest:
                 fh.flush()
-        sizes = {ch: self._sizes[dest] for ch in self._channels()}
-        if self.compress:
-            sizes["dp"] = self._dp_bytes[dest]
+        sizes = {
+            ch: (self._blob_bytes[ch][dest] if self._is_blob(ch)
+                 else self._sizes[dest])
+            for ch in self._channels()
+        }
         return {
             ch: (np.empty((0,), self._dtype(ch)) if sizes[ch] == 0 else
                  np.memmap(self._path(dest, ch), dtype=self._dtype(ch),
@@ -255,36 +339,34 @@ class MessageRunStore:
             for ch in self._channels()
         }
 
-    def _dp_blob(self, mm: dict, seg: RunSegment) -> np.ndarray:
-        return mm["dp"][seg.dp_off:seg.dp_off + seg.dp_nbytes]
-
     def read_run(self, dest: int, seg: RunSegment):
         """Materialize one run (tests / log densification — small runs)."""
         mm = self._read_mm(dest)
         sl = slice(seg.offset, seg.offset + seg.length)
-        if self.compress:
-            dp = decode_varint_delta(np.array(self._dp_blob(mm, seg)))
-            dp = dp.astype(np.int32)
-        else:
-            dp = np.array(mm["dp"][sl])
-        rest = tuple(np.array(mm[ch][sl]) for ch in self._channels()[1:])
-        return (dp,) + rest
+        out = []
+        for ch in self._channels():
+            dec = self._decoder(mm, seg, ch)
+            if dec is None:
+                out.append(np.array(mm[ch][sl]))
+            else:
+                vals = dec.take(seg.length)
+                out.append(np.asarray(vals, self._decoded_dtype(ch)))
+        return tuple(out)
 
     def iter_run(self, dest: int, seg: RunSegment, read_chunk: int = 4096):
         """Stream one run in bounded chunks (per-channel tuples) — for
         copying arbitrarily long runs without materializing them."""
         mm = self._read_mm(dest)
-        # the blob stays a memmap view: the decoder reads it in bounded
+        # blobs stay memmap views: the decoders read them in bounded
         # windows, so even a compaction-length run costs O(read_chunk) heap
-        dec = (VarintDeltaDecoder(self._dp_blob(mm, seg), seg.length)
-               if self.compress else None)
+        decs = {ch: self._decoder(mm, seg, ch) for ch in self._channels()}
         end = seg.offset + seg.length
         for off in range(seg.offset, end, max(1, read_chunk)):
             hi = min(off + max(1, read_chunk), end)
-            dp = (dec.take(hi - off).astype(np.int32) if dec is not None
-                  else np.array(mm["dp"][off:hi]))
-            yield (dp,) + tuple(
-                np.array(mm[ch][off:hi]) for ch in self._channels()[1:]
+            yield tuple(
+                (np.asarray(decs[ch].take(hi - off), self._decoded_dtype(ch))
+                 if decs[ch] is not None else np.array(mm[ch][off:hi]))
+                for ch in self._channels()
             )
 
     # -- the external merge (§3.3.1) -----------------------------------------
@@ -302,7 +384,8 @@ class MessageRunStore:
         channels = self._channels()
         cursors = [
             _Cursor(mm, s, read_chunk, channels,
-                    dp_blob=self._dp_blob(mm, s) if self.compress else None)
+                    decoders={ch: self._decoder(mm, s, ch)
+                              for ch in channels})
             for s in segs
         ]
         heap = [(c.head, j) for j, c in enumerate(cursors)]
@@ -332,33 +415,49 @@ class MessageRunStore:
                 return
             batch = mine[:max(2, fanin)]
             offset = self._sizes[dest]
-            dp_off = self._dp_bytes[dest]
+            blob_start = {ch: self._blob_bytes[ch][dest]
+                          for ch in self._blob_channels()}
             length = 0
             prev = None  # chains the varint deltas across merge chunks
+            # payload blocks are self-contained, but the merge yields small
+            # fragments — buffer them to full blocks so compaction keeps
+            # the dense block layout (and ratio) of a one-shot encode
+            encoders = {
+                ch: PayloadEncoder(self._decoded_dtype(ch), self._scheme(ch))
+                for ch in self._blob_channels() if ch != "dp"
+            }
             for part in self.iter_merged(dest, read_chunk, segments=batch):
-                if self.compress:
-                    blob = encode_varint_delta(
-                        np.asarray(part[0], np.int64), prev=prev)
-                    prev = int(part[0][-1])
-                    self._handle(dest, "dp").write(blob)
-                    self._dp_bytes[dest] += len(blob)
-                else:
-                    self._handle(dest, "dp").write(
-                        np.ascontiguousarray(part[0], np.int32).tobytes())
-                for ch, arr in zip(channels[1:], part[1:]):
-                    self._handle(dest, ch).write(
-                        np.ascontiguousarray(arr, self._dtype(ch)).tobytes())
+                for ch, arr in zip(channels, part):
+                    if ch == "dp" and self.compress:
+                        blob = encode_varint_delta(
+                            np.asarray(arr, np.int64), prev=prev)
+                        prev = int(arr[-1])
+                        self._handle(dest, ch).write(blob)
+                        self._blob_bytes[ch][dest] += len(blob)
+                    elif ch in encoders:
+                        blob = encoders[ch].add(arr)
+                        self._handle(dest, ch).write(blob)
+                        self._blob_bytes[ch][dest] += len(blob)
+                    else:
+                        self._handle(dest, ch).write(
+                            np.ascontiguousarray(
+                                arr, self._dtype(ch)).tobytes())
                 length += int(part[0].size)
+            extents: dict[str, int] = {}
+            for ch, enc in encoders.items():
+                blob = enc.flush()
+                self._handle(dest, ch).write(blob)
+                self._blob_bytes[ch][dest] += len(blob)
+            for ch in self._blob_channels():
+                off_f, nb_f = _EXTENTS[ch]
+                extents[off_f] = blob_start[ch]
+                extents[nb_f] = self._blob_bytes[ch][dest] - blob_start[ch]
             for ch in channels:
                 if (dest, ch) in self._wfh:
                     self._wfh[(dest, ch)].flush()
             self._sizes[dest] += length
-            merged = RunSegment(
-                tag=tag, offset=offset, length=length,
-                dp_off=dp_off if self.compress else -1,
-                dp_nbytes=(self._dp_bytes[dest] - dp_off)
-                if self.compress else -1,
-            )
+            merged = RunSegment(tag=tag, offset=offset, length=length,
+                                **extents)
             keep = [s for s in self._runs[dest] if s not in batch]
             self._runs[dest] = keep + [merged]
 
@@ -378,24 +477,31 @@ class MessageRunStore:
         return b
 
     def _per_msg_fixed_bytes(self) -> int:
-        return self.fixed_bytes_per_message(
-            self.msg_dtype.itemsize, self.with_counts, self.compress
-        )
+        """On-disk bytes per message in the FIXED-WIDTH channels of this
+        store (blob-encoded channels are byte-accounted per run instead)."""
+        b = 0
+        for ch in self._channels():
+            if not self._is_blob(ch):
+                b += self._decoded_dtype(ch).itemsize
+        return b
 
     def live_bytes(self, dest: int) -> int:
         live = sum(s.length for s in self._runs[dest])
         b = live * self._per_msg_fixed_bytes()
-        if self.compress:
-            b += sum(max(s.dp_nbytes, 0) for s in self._runs[dest])
+        for ch in self._blob_channels():
+            nb_f = _EXTENTS[ch][1]
+            b += sum(max(getattr(s, nb_f), 0) for s in self._runs[dest])
         return b
 
     def dead_bytes(self, dest: int) -> int:
         """Bytes of superseded (compacted-away) run data still on disk."""
         live = sum(s.length for s in self._runs[dest])
         b = (self._sizes[dest] - live) * self._per_msg_fixed_bytes()
-        if self.compress:
-            live_dp = sum(max(s.dp_nbytes, 0) for s in self._runs[dest])
-            b += self._dp_bytes[dest] - live_dp
+        for ch in self._blob_channels():
+            nb_f = _EXTENTS[ch][1]
+            live_blob = sum(max(getattr(s, nb_f), 0)
+                            for s in self._runs[dest])
+            b += self._blob_bytes[ch][dest] - live_blob
         return b
 
     def vacuum_if_worthwhile(self, dest: int) -> bool:
@@ -424,25 +530,23 @@ class MessageRunStore:
                for ch in channels}
         new_runs = []
         off = 0
-        dp_off = 0
+        blob_off = {ch: 0 for ch in self._blob_channels()}
         for seg in self._runs[dest]:
-            if self.compress:
-                blob = np.ascontiguousarray(self._dp_blob(mm, seg))
-                tmp["dp"].write(blob.tobytes())
-                nbytes = int(blob.size)
-            else:
-                tmp["dp"].write(np.ascontiguousarray(
-                    mm["dp"][seg.offset:seg.offset + seg.length]).tobytes())
-                nbytes = -1
-            for ch in channels[1:]:
-                tmp[ch].write(np.ascontiguousarray(
-                    mm[ch][seg.offset:seg.offset + seg.length]).tobytes())
-            new_runs.append(dataclasses.replace(
-                seg, offset=off,
-                dp_off=dp_off if self.compress else -1, dp_nbytes=nbytes,
-            ))
+            extents: dict[str, int] = {}
+            for ch in channels:
+                if self._is_blob(ch):
+                    blob = np.ascontiguousarray(self._blob_slice(mm, seg, ch))
+                    tmp[ch].write(blob.tobytes())
+                    off_f, nb_f = _EXTENTS[ch]
+                    extents[off_f] = blob_off[ch]
+                    extents[nb_f] = int(blob.size)
+                    blob_off[ch] += int(blob.size)
+                else:
+                    tmp[ch].write(np.ascontiguousarray(
+                        mm[ch][seg.offset:seg.offset + seg.length]
+                    ).tobytes())
+            new_runs.append(dataclasses.replace(seg, offset=off, **extents))
             off += seg.length
-            dp_off += max(nbytes, 0)
         del mm  # drop the read maps over the old inodes before replacing
         for ch in channels:
             tmp[ch].close()
@@ -450,7 +554,8 @@ class MessageRunStore:
                        self._path(dest, ch))
         self._runs[dest] = new_runs
         self._sizes[dest] = off
-        self._dp_bytes[dest] = dp_off
+        for ch, b in blob_off.items():
+            self._blob_bytes[ch][dest] = b
 
     def merged_slices(self, dest: int, capacity: int, read_chunk: int = 4096):
         """Destination-aligned fixed-shape slices of the merged stream.
@@ -510,7 +615,8 @@ class MessageRunStore:
             n_shards=self.n_shards, P=self.P,
             msg_dtype=self.msg_dtype.name, with_counts=self.with_counts,
             compress=self.compress,
-            sizes=self._sizes, dp_bytes=self._dp_bytes,
+            compress_payload=self.payload_scheme,
+            sizes=self._sizes, blob_bytes=self._blob_bytes,
             runs=[[s.__dict__ for s in runs] for runs in self._runs],
         )
         tmp = os.path.join(self.dir, f".{INDEX}.tmp")
@@ -524,9 +630,15 @@ class MessageRunStore:
             m = json.load(f)
         store = cls(directory, m["n_shards"], m["P"],
                     np.dtype(m["msg_dtype"]), with_counts=m["with_counts"],
-                    create=False, compress=m.get("compress", False))
+                    create=False, compress=m.get("compress", False),
+                    compress_payload=m.get("compress_payload") or False)
         store._sizes = list(m["sizes"])
-        store._dp_bytes = list(m.get("dp_bytes", [0] * m["n_shards"]))
+        blob = m.get("blob_bytes")
+        if blob is None and "dp_bytes" in m and store.compress:
+            blob = {"dp": m["dp_bytes"]}  # pre-payload-codec index layout
+        for ch in store._blob_channels():
+            store._blob_bytes[ch] = list((blob or {}).get(
+                ch, [0] * m["n_shards"]))
         store._runs = [
             [RunSegment(**s) for s in runs] for runs in m["runs"]
         ]
@@ -564,7 +676,8 @@ class MessageRunStore:
                 pass
         self._runs[dest] = []
         self._sizes[dest] = 0
-        self._dp_bytes[dest] = 0
+        for ch in self._blob_bytes:
+            self._blob_bytes[ch][dest] = 0
         self._counts[dest] = 0
         self._stale_counts.discard(dest)
 
@@ -581,38 +694,36 @@ class MessageRunStore:
 class _Cursor:
     """Fixed-size read window over one sorted run (the merge's only per-run
     resident state). Tracks every store channel so compaction can rewrite
-    payload AND count data together; on compressed stores the dp window is
-    refilled by a streaming varint-delta decoder instead of a memmap slice,
-    keeping the same O(read_chunk) residency."""
+    payload AND count data together; on compressed stores an encoded
+    channel's window is refilled by its streaming decoder (varint-delta for
+    dp, payload codec for msg/cnt) instead of a memmap slice, keeping the
+    same O(read_chunk) residency."""
 
     def __init__(self, mm: dict, seg: RunSegment, read_chunk: int,
                  channels: tuple[str, ...],
-                 dp_blob: np.ndarray | None = None):
+                 decoders: dict[str, object] | None = None):
         self._mm = mm
         self._channels = channels
         self._pos = seg.offset
         self._end = seg.offset + seg.length
         self._chunk = max(1, read_chunk)
-        self._dec = (VarintDeltaDecoder(dp_blob, seg.length)
-                     if dp_blob is not None else None)
+        self._decs = decoders or {}
         self._bufs: tuple[np.ndarray, ...] = ()
         self._bpos = 0
         self._fill()
 
     def _fill(self) -> None:
         n = min(self._chunk, self._end - self._pos)
-        if self._dec is not None:
-            dp = self._dec.take(n).astype(np.int32)
-            rest = tuple(
-                np.array(self._mm[ch][self._pos:self._pos + n])
-                for ch in self._channels[1:]
-            )
-            self._bufs = (dp,) + rest
-        else:
-            self._bufs = tuple(
-                np.array(self._mm[ch][self._pos:self._pos + n])
-                for ch in self._channels
-            )
+        bufs = []
+        for ch in self._channels:
+            dec = self._decs.get(ch)
+            if dec is not None:
+                vals = dec.take(n)
+                bufs.append(np.asarray(
+                    vals, np.int32 if ch != "msg" else vals.dtype))
+            else:
+                bufs.append(np.array(self._mm[ch][self._pos:self._pos + n]))
+        self._bufs = tuple(bufs)
         self._pos += n
         self._bpos = 0
 

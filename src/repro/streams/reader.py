@@ -59,14 +59,28 @@ class StreamStats:
 _DONE = object()
 
 
-def prefetch_iter(iterable, depth: int = 2):
+def prefetch_iter(iterable, depth: int = 2, *, on_item=None, on_wait=None,
+                  wrap_exc=None, thread_name: str = "stream-prefetch"):
     """Run ``iterable`` in a background thread, ``depth`` items ahead — the
     same bounded-queue producer/consumer machinery :class:`StreamReader` uses
     for edge chunks, reusable for any staged stream (the msgstore external
     merge prefetches its destination-sorted apply slices through this, so
     merge-read I/O hides behind the apply compute exactly like edge reads
     hide behind the fold). Items must own their memory (no recycled buffers:
-    the producer is ``depth`` items ahead of the consumer)."""
+    the producer is ``depth`` items ahead of the consumer).
+
+    Hooks (all optional — ``streams.channel.receive_iter`` is this function
+    with receiver accounting and crash injection plugged in, so the tricky
+    shutdown scaffolding exists exactly once):
+
+    * ``on_item(seconds)`` — called on the PRODUCER thread after each item
+      is produced, with the time producing it took; may raise to kill the
+      producer (deterministic fault injection);
+    * ``on_wait(seconds)`` — called on the consumer thread with the time it
+      spent blocked waiting for each queue entry;
+    * ``wrap_exc(exc) -> Exception`` — wraps a producer-side error before
+      it is re-raised on the consumer (the original rides as __cause__).
+    """
     if depth < 1:
         raise ValueError("depth must be >= 1")
     full: queue.Queue = queue.Queue(maxsize=depth)
@@ -83,22 +97,35 @@ def prefetch_iter(iterable, depth: int = 2):
 
     def _produce():
         try:
-            for item in iterable:
+            it = iter(iterable)
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    item = next(it)
+                except StopIteration:
+                    _put(_DONE)
+                    return
+                if on_item is not None:
+                    on_item(time.perf_counter() - t0)
                 if not _put(item):
                     return
-            _put(_DONE)
         except BaseException as e:  # surface producer errors to the consumer
             _put(e)
 
-    worker = threading.Thread(target=_produce, name="stream-prefetch",
+    worker = threading.Thread(target=_produce, name=thread_name,
                               daemon=True)
     worker.start()
     try:
         while True:
+            t0 = time.perf_counter()
             item = full.get()
+            if on_wait is not None:
+                on_wait(time.perf_counter() - t0)
             if item is _DONE:
                 break
             if isinstance(item, BaseException):
+                if wrap_exc is not None:
+                    raise wrap_exc(item) from item
                 raise item
             yield item
     finally:

@@ -12,8 +12,11 @@ per-destination group layout of §3.3.1, and *streamed* back every superstep.
   access pattern the paper's streaming analysis assumes. With
   ``compress=True`` the two position channels are stored as per-block
   varint-delta blobs (``streams/codec.py``; ``sp`` is sorted within a group,
-  so its deltas are tiny) with an int64 offset table, shrinking the stream
-  the paper's sequential-bandwidth argument pays for every superstep;
+  so its deltas are tiny) with an int64 offset table, and with
+  ``compress_payload=True`` the weight channel is stored as per-block
+  payload-codec blobs (lossless byte-shuffle + DEFLATE) the same way —
+  both shrink the stream the paper's sequential-bandwidth argument pays
+  for every superstep;
 * a JSON ``manifest.json`` with the static geometry, a content signature
   (used by checkpoint recovery to refuse restoring state against the wrong
   edge streams), and a **row-ownership table**: per channel, the byte extent
@@ -37,13 +40,18 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.streams.codec import decode_varint_delta, encode_varint_delta
+from repro.streams.codec import (
+    PAYLOAD_RATIO_ESTIMATE, decode_payload, decode_varint_delta,
+    encode_payload, encode_varint_delta,
+)
 
 MANIFEST = "manifest.json"
 BLOCKS = "blocks.npz"
 _FILES = {"sp": np.int32, "dp": np.int32, "w": np.float32}
-_COMPRESSED_CHANNELS = ("sp", "dp")  # w is float: no delta structure
-FORMAT_VERSION = 2  # v1 readable: v2 added compress + row ownership
+_COMPRESSED_CHANNELS = ("sp", "dp")  # varint-delta (position structure)
+_PAYLOAD_CHANNELS = ("w",)  # payload codec (no delta structure)
+FORMAT_VERSION = 3  # v1/v2 readable: v2 added compress + row ownership,
+#                     v3 added the payload-compressed weight channel
 
 #: bytes per edge slot across the three channels (int32 sp + int32 dp +
 #: float32 w) — the unit of every edge-tier byte model (device groups, disk
@@ -55,14 +63,22 @@ EDGE_SLOT_BYTES = sum(np.dtype(dt).itemsize for dt in _FILES.values())
 #: promise less than the codec delivers stay feasible).
 COMPRESS_RATIO_ESTIMATE = 0.6
 
+#: position-channel (sp+dp) vs weight-channel bytes of one edge slot
+_POS_BYTES = 8
+_W_BYTES = 4
+
 
 def estimate_edge_disk_bytes(n_shards: int, E_cap: int,
-                             compress: bool = False) -> int:
+                             compress: bool = False,
+                             compress_payload: bool = False) -> int:
     """Predicted on-disk bytes of one shard's edge streams (its n
     per-destination groups) — the planner-side mirror of
-    :meth:`EdgeStreamStore.disk_bytes`."""
-    b = n_shards * E_cap * EDGE_SLOT_BYTES
-    return int(b * COMPRESS_RATIO_ESTIMATE) if compress else b
+    :meth:`EdgeStreamStore.disk_bytes`. ``compress`` shrinks the position
+    channels by the varint estimate; ``compress_payload`` the weight
+    channel by the payload-codec estimate."""
+    pos = _POS_BYTES * (COMPRESS_RATIO_ESTIMATE if compress else 1.0)
+    w = _W_BYTES * (PAYLOAD_RATIO_ESTIMATE if compress_payload else 1.0)
+    return int(n_shards * E_cap * (pos + w))
 
 
 @dataclass(frozen=True)
@@ -94,7 +110,7 @@ class EdgeStreamStore:
 
     def __init__(self, directory: str, geom: StoreGeometry,
                  blk_lo: np.ndarray, blk_hi: np.ndarray, signature: str,
-                 *, compress: bool = False,
+                 *, compress: bool = False, compress_payload: bool = False,
                  row_bytes: dict[str, list[int]] | None = None,
                  block_index: dict[str, np.ndarray] | None = None,
                  owner: int | None = None):
@@ -103,6 +119,7 @@ class EdgeStreamStore:
         self.blk_lo = blk_lo  # (n, n, n_blocks) int32, P sentinel when empty
         self.blk_hi = blk_hi  # (n, n, n_blocks) int32, -1 sentinel when empty
         self.compress = bool(compress)
+        self.compress_payload = bool(compress_payload)
         self.owner = owner
         self._signature = signature
         self._row_bytes = row_bytes or self._default_row_bytes(geom)
@@ -116,7 +133,7 @@ class EdgeStreamStore:
             path = os.path.join(directory, f"{name}.bin")
             off = self._row_bytes[name][rows[0]]
             length = self._row_bytes[name][rows[1]] - off
-            if self.compress and name in _COMPRESSED_CHANNELS:
+            if self._is_blob(name):
                 # byte-granular map of the owned rows' blobs only
                 self._mm[name] = np.memmap(path, dtype=np.uint8, mode="r",
                                            offset=off, shape=(length,))
@@ -125,6 +142,12 @@ class EdgeStreamStore:
                     path, dtype=dt, mode="r", offset=off,
                     shape=(rows[1] - rows[0], n, nb, B),
                 )
+
+    def _is_blob(self, name: str) -> bool:
+        """Channels stored as per-block compressed blobs."""
+        return (self.compress and name in _COMPRESSED_CHANNELS) or (
+            self.compress_payload and name in _PAYLOAD_CHANNELS
+        )
 
     @staticmethod
     def _default_row_bytes(geom: StoreGeometry) -> dict[str, list[int]]:
@@ -174,9 +197,13 @@ class EdgeStreamStore:
         n_vertices: int,
         n_edges: int,
         compress: bool = False,
+        compress_payload: bool = False,
     ) -> "EdgeStreamStore":
         """Spill the per-destination edge groups to disk (done once, at
-        partition time — the paper's graph-loading pass)."""
+        partition time — the paper's graph-loading pass). ``compress``
+        varint-delta encodes the position channels; ``compress_payload``
+        payload-encodes the weight channel (losslessly), each as per-block
+        blobs behind an offset table."""
         n = src_pos.shape[0]
         E_cap = src_pos.shape[2]
         assert E_cap % edge_block == 0
@@ -194,13 +221,16 @@ class EdgeStreamStore:
         row_bytes: dict[str, list[int]] = {}
         index_arrays: dict[str, np.ndarray] = {}
         for name, arr in arrays.items():
-            if compress and name in _COMPRESSED_CHANNELS:
+            as_varint = compress and name in _COMPRESSED_CHANNELS
+            as_payload = compress_payload and name in _PAYLOAD_CHANNELS
+            if as_varint or as_payload:
+                enc = (encode_varint_delta if as_varint
+                       else encode_payload)
                 blocks = arr.reshape(n * n * n_blocks, edge_block)
                 idx = np.zeros(len(blocks) + 1, np.int64)
                 with open(os.path.join(directory, f"{name}.bin"), "wb") as f:
                     for j, blk in enumerate(blocks):
-                        idx[j + 1] = idx[j] + f.write(
-                            encode_varint_delta(blk))
+                        idx[j + 1] = idx[j] + f.write(enc(blk))
                 index_arrays[name] = idx
                 row_stride = n * n_blocks  # blocks per source row
                 row_bytes[name] = [
@@ -229,6 +259,7 @@ class EdgeStreamStore:
             version=FORMAT_VERSION, signature=signature,
             files={k: f"{k}.bin" for k in _FILES},
             compress=bool(compress),
+            compress_payload=bool(compress_payload),
             # manifest-driven row ownership: machine i maps only the byte
             # extent [row_bytes[ch][i], row_bytes[ch][i+1]) of each channel
             row_ownership=dict(axis="src_shard", row_bytes=row_bytes),
@@ -239,12 +270,12 @@ class EdgeStreamStore:
             json.dump(manifest, f, indent=1)
         os.replace(tmp, os.path.join(directory, MANIFEST))  # atomic publish
         return cls(directory, geom, blk_lo, blk_hi, signature,
-                   compress=compress, row_bytes=row_bytes,
-                   block_index=index_arrays)
+                   compress=compress, compress_payload=compress_payload,
+                   row_bytes=row_bytes, block_index=index_arrays)
 
     @classmethod
-    def from_partition(cls, pg, directory: str,
-                       compress: bool = False) -> "EdgeStreamStore":
+    def from_partition(cls, pg, directory: str, compress: bool = False,
+                       compress_payload: bool = False) -> "EdgeStreamStore":
         """Spill a (fully materialized) PartitionedGraph's edge groups."""
         return cls.create(
             directory,
@@ -252,34 +283,37 @@ class EdgeStreamStore:
             np.asarray(pg.eweight),
             edge_block=pg.edge_block, P=pg.P,
             n_vertices=pg.n_vertices, n_edges=pg.n_edges,
-            compress=compress,
+            compress=compress, compress_payload=compress_payload,
         )
 
     @classmethod
     def open(cls, directory: str, owner: int | None = None) -> "EdgeStreamStore":
         with open(os.path.join(directory, MANIFEST)) as f:
             m = json.load(f)
-        if m.get("version") not in (1, FORMAT_VERSION):
+        if m.get("version") not in (1, 2, FORMAT_VERSION):
             raise ValueError(f"unsupported stream-store version {m.get('version')}")
         geom = StoreGeometry(**{k: m[k] for k in StoreGeometry.__dataclass_fields__})
         z = np.load(os.path.join(directory, BLOCKS))
         compress = m.get("compress", False)
+        compress_payload = m.get("compress_payload", False)
         ownership = m.get("row_ownership") or {}
         row_bytes = ownership.get("row_bytes")
         block_index = {
-            name: z[f"{name}_idx"] for name in _COMPRESSED_CHANNELS
+            name: z[f"{name}_idx"]
+            for name in _COMPRESSED_CHANNELS + _PAYLOAD_CHANNELS
             if f"{name}_idx" in z.files
         }
         return cls(directory, geom, z["blk_lo"], z["blk_hi"], m["signature"],
-                   compress=compress, row_bytes=row_bytes,
-                   block_index=block_index, owner=owner)
+                   compress=compress, compress_payload=compress_payload,
+                   row_bytes=row_bytes, block_index=block_index, owner=owner)
 
     def owner_view(self, shard: int) -> "EdgeStreamStore":
         """A view of this store that maps ONLY ``shard``'s source row — what
         machine ``shard`` would open in a multi-process deployment."""
         return EdgeStreamStore(
             self.dir, self.geom, self.blk_lo, self.blk_hi, self._signature,
-            compress=self.compress, row_bytes=self._row_bytes,
+            compress=self.compress, compress_payload=self.compress_payload,
+            row_bytes=self._row_bytes,
             block_index=self._block_index, owner=shard,
         )
 
@@ -339,27 +373,38 @@ class EdgeStreamStore:
         out_w[c:] = 0.0
         if not c:
             return 0
+        B = self.geom.edge_block
         if self.compress:
             for j, b in enumerate(ids):
                 out_sp[j] = decode_varint_delta(self._blob("sp", i, k, int(b)))
                 out_dp[j] = decode_varint_delta(self._blob("dp", i, k, int(b)))
-            self._row("w", i)[k].take(ids, axis=0, out=out_w[:c])
         else:
             self._row("sp", i)[k].take(ids, axis=0, out=out_sp[:c])
             self._row("dp", i)[k].take(ids, axis=0, out=out_dp[:c])
+        if self.compress_payload:
+            for j, b in enumerate(ids):
+                out_w[j] = decode_payload(
+                    self._blob("w", i, k, int(b)), np.float32, B)
+        else:
             self._row("w", i)[k].take(ids, axis=0, out=out_w[:c])
         return c
 
     def group_edges(self, i: int, k: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Whole-group read (tests / tooling — not the streaming hot path)."""
+        nb, B = self.geom.n_blocks, self.geom.edge_block
         if self.compress:
-            nb, B = self.geom.n_blocks, self.geom.edge_block
             sp = np.empty((nb, B), np.int32)
             dp = np.empty((nb, B), np.int32)
             for b in range(nb):
                 sp[b] = decode_varint_delta(self._blob("sp", i, k, b))
                 dp[b] = decode_varint_delta(self._blob("dp", i, k, b))
-            return sp, dp, np.array(self._row("w", i)[k])
-        return (np.array(self._row("sp", i)[k]),
-                np.array(self._row("dp", i)[k]),
-                np.array(self._row("w", i)[k]))
+        else:
+            sp = np.array(self._row("sp", i)[k])
+            dp = np.array(self._row("dp", i)[k])
+        if self.compress_payload:
+            w = np.empty((nb, B), np.float32)
+            for b in range(nb):
+                w[b] = decode_payload(self._blob("w", i, k, b), np.float32, B)
+        else:
+            w = np.array(self._row("w", i)[k])
+        return sp, dp, w

@@ -263,3 +263,208 @@ class TestShardChannels:
         assert np.array_equal(a[0], b[0])
         assert np.array_equal(a[1], b[1])
         assert comp.disk_bytes() < plain.disk_bytes()
+
+
+# ---------------------------------------------------------------------------
+# payload codec (PR 5: value columns on the wire)
+# ---------------------------------------------------------------------------
+
+class TestPayloadCodec:
+    def test_lossless_roundtrip_f32_and_i32(self):
+        from repro.streams import decode_payload, encode_payload
+
+        rng = np.random.default_rng(0)
+        for arr in (
+            np.empty((0,), np.float32),
+            rng.random(1, dtype=np.float32),
+            (rng.random(10_000, dtype=np.float32) * 1e-2).astype(np.float32),
+            rng.integers(0, 30, 9001).astype(np.int32),
+            np.array([np.inf, -np.inf, np.nan, 0.0, -0.0], np.float32),
+        ):
+            blob = encode_payload(arr)
+            out = decode_payload(blob, arr.dtype, arr.size)
+            # bit-exact, NaN included
+            assert arr.tobytes() == out.tobytes()
+
+    def test_bf16_scheme_matches_jax_rounding(self):
+        import jax.numpy as jnp
+
+        from repro.streams import decode_payload, encode_payload
+
+        rng = np.random.default_rng(1)
+        x = (rng.standard_normal(4097) * rng.choice(
+            [1e-8, 1.0, 1e8], 4097)).astype(np.float32)
+        # NaN payloads must stay NaN (the rounding bias must not carry the
+        # NaN mantissa into the exponent and yield ±0), infinities and
+        # overflow-to-inf must match the XLA convert too
+        x[:8] = [np.nan, -np.nan, np.inf, -np.inf, 0.0, -0.0, 3.4e38,
+                 -3.4e38]
+        got = decode_payload(encode_payload(x, "bf16"), np.float32, x.size,
+                             "bf16")
+        want = np.asarray(
+            jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+        assert np.array_equal(got, want, equal_nan=True)
+        assert np.isnan(got[:2]).all()
+
+    def test_chunked_encoder_equals_one_shot(self):
+        from repro.streams import PayloadEncoder, encode_payload
+
+        rng = np.random.default_rng(2)
+        x = rng.random(11_111, dtype=np.float32)
+        enc = PayloadEncoder(np.float32)
+        parts, off = [], 0
+        while off < x.size:
+            n = int(rng.integers(1, 700))
+            parts.append(enc.add(x[off:off + n]))
+            off += n
+        parts.append(enc.flush())
+        assert b"".join(parts) == encode_payload(x)
+
+    def test_streaming_decoder_bounded_takes(self):
+        from repro.streams import PayloadDecoder, encode_payload
+
+        rng = np.random.default_rng(3)
+        x = rng.integers(-5, 5, 10_000).astype(np.int32)
+        dec = PayloadDecoder(encode_payload(x), np.int32, x.size)
+        got = []
+        while dec.remaining:
+            got.append(dec.take(int(rng.integers(1, 999))))
+        assert np.array_equal(np.concatenate(got), x)
+
+    def test_truncated_blob_raises(self):
+        from repro.streams import decode_payload, encode_payload
+
+        blob = encode_payload(np.arange(100, dtype=np.int32))
+        with pytest.raises(ValueError):
+            decode_payload(blob[: len(blob) // 2], np.int32, 100)
+
+    def test_bf16_requires_float32(self):
+        from repro.streams import encode_payload
+
+        with pytest.raises(ValueError):
+            encode_payload(np.arange(4, dtype=np.int32), "bf16")
+
+
+class TestPayloadCompressedChannel:
+    def test_payload_inbox_equals_plain_and_is_smaller(self, tmp_path):
+        plain = _mk_store(tmp_path, name="plain")
+        comp = MessageRunStore(str(tmp_path / "payload"), 3, 64, np.float32,
+                               compress=True, compress_payload=True)
+        for store in (plain, comp):
+            chan = ShardChannels(store, inflight=2)
+            rng = np.random.default_rng(7)
+            for src in range(3):
+                for _ in range(4):
+                    dp = np.sort(rng.integers(0, 64, 500)).astype(np.int32)
+                    chan.send(1, dp, (rng.random(500) * 1e-2).astype(
+                        np.float32), tag=src)
+                chan.compact(1, src, fanin=2, read_chunk=64)
+            chan.close()
+            store.save_index()
+        a = [np.concatenate(x) for x in zip(*plain.iter_merged(1, 32))]
+        b = [np.concatenate(x) for x in zip(*comp.iter_merged(1, 32))]
+        assert np.array_equal(a[0], b[0])
+        assert np.array_equal(a[1], b[1])  # lossless: payload bit-identical
+        assert comp.disk_bytes() < plain.disk_bytes()
+        # ... and the index round-trips the payload layout
+        re = MessageRunStore.open(str(tmp_path / "payload"))
+        c = [np.concatenate(x) for x in zip(*re.iter_merged(1, 32))]
+        assert np.array_equal(a[1], c[1])
+
+    def test_wire_bytes_accounting(self, tmp_path):
+        comp = MessageRunStore(str(tmp_path / "p"), 2, 64, np.float32,
+                               with_counts=True, compress=True,
+                               compress_payload=True)
+        chan = ShardChannels(comp, inflight=2)
+        rng = np.random.default_rng(5)
+        A = (rng.random(64) * 1e-2).astype(np.float32)
+        cnt = rng.integers(0, 3, 64).astype(np.int32)
+        chan.send_combined(0, A, cnt, tag=1)
+        chan.close()
+        st = chan.stats
+        assert st.wire_bytes > 0
+        assert st.wire_bytes < st.payload_bytes  # the codecs shrank the wire
+        assert st.wire_ratio() > 1.0
+
+
+# ---------------------------------------------------------------------------
+# the background receiver (PR 5: full duplex)
+# ---------------------------------------------------------------------------
+
+class TestChannelReceiver:
+    def _receiver(self, store, fault=None):
+        from repro.streams import ChannelReceiver
+
+        order = []
+
+        def digest(A, c, A_d, c_d):
+            order.append(int(c_d[np.nonzero(c_d)[0][0]])
+                         if np.any(c_d) else -1)
+            return A + A_d, c + c_d
+
+        identity = lambda: (np.zeros(store.P, np.float32),
+                            np.zeros(store.P, np.int32))
+        return ChannelReceiver(store, digest, identity, 0.0,
+                               fault=fault), order
+
+    def test_digest_order_is_transmit_order(self, tmp_path):
+        store = MessageRunStore(str(tmp_path / "i"), 2, 16, np.float32,
+                                with_counts=True)
+        recv, order = self._receiver(store)
+        chan = ShardChannels(store, inflight=2, receiver=recv)
+        for j in range(1, 6):  # tag each run by its cnt value
+            A = np.full(16, float(j), np.float32)
+            cnt = np.full(16, j, np.int32)
+            chan.send_combined(0, A, cnt, tag=j % 2)
+        chan.flush()
+        A_r, cnt = recv.collect(0)
+        assert order == [1, 2, 3, 4, 5]  # append order == digest order
+        assert np.all(cnt == sum(range(1, 6)))
+        # an untouched destination collects the identity
+        A_e, c_e = recv.collect(1)
+        assert not np.any(c_e)
+        chan.close()
+        recv.close()
+
+    def test_receiver_fault_surfaces_on_collect(self, tmp_path):
+        store = MessageRunStore(str(tmp_path / "i"), 2, 16, np.float32,
+                                with_counts=True)
+        recv, _ = self._receiver(store, fault=FaultPoint(after_packets=2))
+        chan = ShardChannels(store, inflight=4, receiver=recv)
+        for j in range(4):
+            chan.send_combined(0, np.ones(16, np.float32),
+                               np.ones(16, np.int32), tag=j)
+        chan.flush()  # sender side is healthy
+        with pytest.raises(ChannelError):
+            recv.collect(0)
+        chan.close()
+        recv.abort()  # crash-path stop must not raise
+
+
+class TestReceiveIter:
+    def test_passthrough_and_stats(self):
+        from repro.streams import ChannelStats, receive_iter
+
+        stats = ChannelStats()
+        items = list(receive_iter(iter(range(50)), stats=stats, depth=2))
+        assert items == list(range(50))
+        assert stats.recv_runs == 50
+        assert stats.recv_seconds >= 0
+
+    def test_fault_kills_producer_and_surfaces(self):
+        from repro.streams import receive_iter
+
+        fault = FaultPoint(after_packets=5)
+        with pytest.raises(ChannelError):
+            list(receive_iter(iter(range(50)), fault=fault))
+        assert fault.fired
+
+    def test_producer_error_wrapped(self):
+        from repro.streams import receive_iter
+
+        def gen():
+            yield 1
+            raise RuntimeError("disk on fire")
+
+        with pytest.raises(ChannelError):
+            list(receive_iter(gen()))

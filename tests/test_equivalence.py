@@ -1,8 +1,8 @@
 """Cross-mode equivalence matrix: EVERY algorithm in ``core/algorithms.py``
 runs under ``basic`` / ``streamed`` (combiner path and combiner-less OMS
-path) / pipelined-streamed (plain and varint-delta compressed), and the
-results must agree *bit for bit* — same halt step, same active bitmaps, same
-final values.
+path) / pipelined-streamed (half-duplex, full-duplex, varint-delta
+compressed, and payload-compressed), and the results must agree *bit for
+bit* — same halt step, same active bitmaps, same final values.
 
 One documented carve-out: float-SUM programs (PageRank). The pipelined
 sender combines each outgoing group A_s(i→k) before transmitting (§4/§5) —
@@ -54,20 +54,39 @@ ALGORITHMS = [
     ("secondmin", lambda g, rmap: SecondMinLabel(), True),
 ]
 
-# every streamed variant the engine offers; basic is the reference
+# every streamed variant the engine offers; basic is the reference.
+# "pipelined" is PR-3's sender-only half-duplex pipeline; "full-duplex"
+# adds the background receiver digest; "payload-compressed" additionally
+# runs the (lossless) payload codec on every wire and disk stream — all
+# of which must be invisible in the results.
 STREAMED_VARIANTS = [
     ("streamed", dict()),
-    ("pipelined", dict(pipeline=True)),
+    ("pipelined", dict(pipeline=True, full_duplex=False)),
+    ("full-duplex", dict(pipeline=True)),
     ("pipelined-compressed", dict(pipeline=True, compress=True)),
+    ("payload-compressed", dict(pipeline=True, compress=True,
+                                compress_payload=True)),
 ]
 
 
-def _streamed_config(pipeline=False, compress=False):
+def _streamed_config(pipeline=False, compress=False, compress_payload=False,
+                     full_duplex=True):
     return EngineConfig(
         mode="streamed",
         stream=StreamConfig(chunk_blocks=2),
-        channel=ChannelConfig(pipeline=pipeline, compress=compress),
+        channel=ChannelConfig(pipeline=pipeline, compress=compress,
+                              compress_payload=compress_payload,
+                              full_duplex=full_duplex),
     )
+
+
+def _store_for(kwargs, stores):
+    store, store_c, store_cp = stores
+    if kwargs.get("compress_payload"):
+        return store_cp
+    if kwargs.get("compress"):
+        return store_c
+    return store
 
 
 @pytest.fixture(scope="module")
@@ -85,8 +104,16 @@ def matrix_graph():
             g, N_SHARDS, os.path.join(d, "compressed"),
             edge_block=EDGE_BLOCK, recode=rmap, compress=True,
         )
+        # ... and a fully-compressed one (position AND weight channels):
+        # the payload-compressed variant decodes every stream end to end
+        _, _, store_cp = partition_graph_streamed(
+            g, N_SHARDS, os.path.join(d, "payload"),
+            edge_block=EDGE_BLOCK, recode=rmap, compress=True,
+            compress_payload=True,
+        )
         assert store_c.disk_bytes() < store.disk_bytes()
-        yield g, rmap, pg, pgs, store, store_c
+        assert store_cp.disk_bytes() < store_c.disk_bytes()
+        yield g, rmap, pg, pgs, (store, store_c, store_cp)
 
 
 def _run(eng):
@@ -98,12 +125,12 @@ def _run(eng):
 @pytest.mark.parametrize("name,factory,exact",
                          ALGORITHMS, ids=[a[0] for a in ALGORITHMS])
 def test_matrix_all_modes_match_basic(matrix_graph, name, factory, exact):
-    g, rmap, pg, pgs, store, store_c = matrix_graph
+    g, rmap, pg, pgs, stores = matrix_graph
     v_ref, a_ref, steps_ref, act_ref, msgs_ref = _run(
         GraphDEngine(pg, factory(g, rmap), config=EngineConfig(mode="basic"))
     )
     for variant, kwargs in STREAMED_VARIANTS:
-        st = store_c if kwargs.get("compress") else store
+        st = _store_for(kwargs, stores)
         v, a, steps, act, msgs = _run(
             GraphDEngine(pgs, factory(g, rmap),
                          config=_streamed_config(**kwargs), stream_store=st)
@@ -127,16 +154,19 @@ def test_job_facade_matches_handwired_streamed_pipeline(matrix_graph,
     manual partition_graph_streamed + EdgeStreamStore + GraphDEngine
     pipeline setup, float-SUM included (same grouping, same chunking, same
     transmit order => no reassociation freedom between the two)."""
-    g, rmap, pg, pgs, store, store_c = matrix_graph
+    g, rmap, pg, pgs, (store, store_c, store_cp) = matrix_graph
     # a budget only the §4 pipeline fits: the planner's floor for the
-    # pipelined fold (ONE group + ONE receiver accumulator), computed with
-    # the same algebra the planner runs, on the realized geometry
+    # pipelined fold (ONE group + ONE receiver accumulator; at this floor
+    # the ladder has shed the batch lanes and the full-duplex receiver
+    # staging), computed with the same algebra the planner runs, on the
+    # realized geometry
     P_est = max((-(-g.n_vertices // N_SHARDS) + 7) // 8 * 8, 8)
     common = dict(n_shards=N_SHARDS, P=P_est, E_cap=pgs.E_cap,
                   edge_block=EDGE_BLOCK, value_itemsize=4, msg_itemsize=4,
-                  combined=True, chunk_blocks=1, inflight=1)
+                  combined=True, chunk_blocks=1, inflight=1, group_batch=1)
     floor_pipe = ram_total(
-        estimate_memory(mode="streamed", pipeline=True, **common),
+        estimate_memory(mode="streamed", pipeline=True, full_duplex=False,
+                        **common),
         "streamed")
     floor_plain = ram_total(
         estimate_memory(mode="streamed", pipeline=False, **common),
@@ -170,20 +200,21 @@ def test_job_facade_matches_handwired_streamed_pipeline(matrix_graph,
 
 def test_matrix_streamed_variants_agree_exactly(matrix_graph):
     """The streamed variants must agree bit-for-bit with EACH OTHER even for
-    float-SUM programs when their grouping matches: pipelining and
-    compression are transport changes, and transport must never touch
-    values. (The pipelined sender combines per group like the log-attached
-    fold does, so those two families are compared, not the direct fold.)"""
-    g, rmap, pg, pgs, store, store_c = matrix_graph
+    float-SUM programs when their grouping matches: pipelining (either
+    duplex), compression (positions or payloads) are transport changes, and
+    transport must never touch values. (The pipelined sender combines per
+    group like the log-attached fold does, so those families are compared,
+    not the direct fold.)"""
+    g, rmap, pg, pgs, stores = matrix_graph
     prog = lambda: PageRank(supersteps=5)
-    v_pipe, a_pipe, *_ = _run(
-        GraphDEngine(pgs, prog(), config=_streamed_config(pipeline=True),
-                     stream_store=store)
-    )
-    v_cmp, a_cmp, *_ = _run(
-        GraphDEngine(pgs, prog(),
-                     config=_streamed_config(pipeline=True, compress=True),
-                     stream_store=store_c)
-    )
-    assert np.array_equal(v_pipe, v_cmp)
-    assert np.array_equal(a_pipe, a_cmp)
+    results = {}
+    for variant, kwargs in STREAMED_VARIANTS[1:]:  # the grouped variants
+        v, a, *_ = _run(
+            GraphDEngine(pgs, prog(), config=_streamed_config(**kwargs),
+                         stream_store=_store_for(kwargs, stores))
+        )
+        results[variant] = (v, a)
+    v_ref, a_ref = results["pipelined"]
+    for variant, (v, a) in results.items():
+        assert np.array_equal(v, v_ref), variant
+        assert np.array_equal(a, a_ref), variant

@@ -342,6 +342,90 @@ class TestStreamedCrashInjection:
         assert np.array_equal(np.asarray(v2), np.asarray(v_ref))
         assert np.array_equal(np.asarray(a2), np.asarray(a_ref))
 
+    def test_receiver_crash_surfaces_midstep_then_rerun_matches(
+        self, streamed_job, tmp_path
+    ):
+        """Full-duplex drill: the RECEIVER thread dies mid-digest (after 40
+        digested runs = run 8 of 16 of superstep 2, right after the step-2
+        checkpoint landed). The error must surface on the compute thread,
+        the torn inbox must stay unpublished, a rerun must bit-match an
+        uninterrupted run, and single-shard fast recovery over the healthy
+        rerun's logs must bit-match too (satellite: mid-digest kill →
+        rerun + recover_shard_streamed bit-match)."""
+        from repro.core import ChannelConfig, EngineConfig
+
+        _, pgs, _, store = streamed_job
+        mk = lambda: PageRank(supersteps=6)
+        cfg = lambda **ch: EngineConfig(
+            mode="streamed", channel=ChannelConfig(pipeline=True, **ch)
+        )
+        (v_ref, a_ref), _ = GraphDEngine(
+            pgs, mk(), config=cfg(), stream_store=store
+        ).run()
+
+        ck = Checkpointer(str(tmp_path / "ck"), every=2)
+        log = RunFileMessageLog(str(tmp_path / "logs"))
+        recv_fault = FaultPoint(after_packets=40,
+                                message="injected receiver fault")
+        eng = GraphDEngine(pgs, mk(), config=cfg(recv_fault=recv_fault),
+                           stream_store=store, message_log=log)
+        with pytest.raises(ChannelError):
+            eng.run(checkpointer=ck)
+        assert recv_fault.fired
+        assert ck.latest() == 2
+        # the torn superstep-2 inbox must NOT have published an index
+        assert not os.path.exists(
+            os.path.join(str(tmp_path / "logs"), "step-000002", "index.json")
+        )
+
+        log2 = RunFileMessageLog(str(tmp_path / "logs"))
+        eng2 = GraphDEngine(pgs, mk(), config=cfg(), stream_store=store,
+                            message_log=log2)
+        (v2, a2), hist = eng2.run(checkpointer=ck)
+        assert hist[0].step == 2 and hist[0].restored_from == 2
+        assert np.array_equal(np.asarray(v2), np.asarray(v_ref))
+        assert np.array_equal(np.asarray(a2), np.asarray(a_ref))
+        # the channel-written logs of the rerun replay bit-identically
+        vj, aj = recover_shard_streamed(
+            pgs, mk(), failed=1, ckpt=ck, log=log2, store=store,
+            target_step=6,
+        )
+        assert np.array_equal(np.asarray(vj), np.asarray(v_ref)[1])
+        assert np.array_equal(np.asarray(aj), np.asarray(a_ref)[1])
+
+    def test_receiver_crash_combinerless_rerun_matches(self, streamed_job,
+                                                       tmp_path):
+        """Same drill on the OMS path: the receiver thread producing merged
+        apply slices dies mid-merge; the superstep fails loudly and a rerun
+        over the truncated step store bit-matches an uninterrupted run."""
+        from repro.core import ChannelConfig, EngineConfig
+
+        _, pgs, _, store = streamed_job
+        mk = lambda: DistinctInLabels(n_groups=8, rounds=3)
+        cfg = lambda **ch: EngineConfig(
+            mode="streamed", channel=ChannelConfig(pipeline=True, **ch)
+        )
+        (v_ref, a_ref), _ = GraphDEngine(
+            pgs, mk(), config=cfg(), stream_store=store
+        ).run()
+        ck = Checkpointer(str(tmp_path / "ck"), every=1)
+        log = RunFileMessageLog(str(tmp_path / "logs"))
+        eng = GraphDEngine(
+            pgs, mk(),
+            config=cfg(recv_fault=FaultPoint(
+                after_packets=6, message="injected receiver fault")),
+            stream_store=store, message_log=log,
+        )
+        with pytest.raises(ChannelError):
+            eng.run(checkpointer=ck)
+        eng2 = GraphDEngine(
+            pgs, mk(), config=cfg(), stream_store=store,
+            message_log=RunFileMessageLog(str(tmp_path / "logs")),
+        )
+        (v2, a2), _ = eng2.run(checkpointer=ck)
+        assert np.array_equal(np.asarray(v2), np.asarray(v_ref))
+        assert np.array_equal(np.asarray(a2), np.asarray(a_ref))
+
     def test_crash_without_log_leaves_no_scratch_leak(self, streamed_job,
                                                       tmp_path):
         """A sender crash with NO message log leaves the scratch inbox of

@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    DistinctInLabels, GraphDEngine, PageRank, SecondMinLabel,
+    ChannelConfig, DistinctInLabels, EngineConfig, GraphDEngine, PageRank,
+    SecondMinLabel,
 )
 from repro.core.checkpoint import (
     Checkpointer, RunFileMessageLog, recover_shard_streamed,
@@ -582,3 +583,100 @@ class TestCompressedRuns:
             assert np.array_equal(np.asarray(vj), np.asarray(v_ref)[2])
             assert np.array_equal(np.asarray(aj), np.asarray(a_ref)[2])
         assert sizes["c"] < sizes["p"]
+
+
+class TestPayloadCompressedRuns:
+    """compress_payload= end to end on the OMS tier (PR 5)."""
+
+    def test_payload_streamed_run_bitmatches(self, spilled, tmp_path):
+        _, pg_full, pg, _, store = spilled
+        prog = lambda: DistinctInLabels(n_groups=8, rounds=2)
+        (v_ref, _), _ = GraphDEngine(pg_full, prog(), mode="basic").run()
+        eng = GraphDEngine(
+            pg, prog(),
+            config=EngineConfig(
+                mode="streamed",
+                channel=ChannelConfig(compress=True, compress_payload=True),
+            ),
+            stream_store=store,
+        )
+        (v, _), _ = eng.run()
+        assert np.array_equal(np.asarray(v), np.asarray(v_ref))
+
+    def test_payload_log_recovers_and_is_smaller(self, tmp_path):
+        g = rmat_graph(scale=7, edge_factor=6, seed=9)
+        pg, _, store = partition_graph_streamed(
+            g, 4, str(tmp_path / "sp"), edge_block=32
+        )
+        sizes = {}
+        for compress_payload in (False, True):
+            tag = "cp" if compress_payload else "p"
+            ck = Checkpointer(str(tmp_path / f"ck-{tag}"), every=10)
+            log = RunFileMessageLog(str(tmp_path / f"log-{tag}"))
+            eng = GraphDEngine(
+                pg, DistinctInLabels(n_groups=8, rounds=2),
+                config=EngineConfig(
+                    mode="streamed",
+                    channel=ChannelConfig(
+                        compress_payload=compress_payload),
+                ),
+                stream_store=store, message_log=log,
+            )
+            ck.save(0, *eng.init())
+            (v_ref, a_ref), _ = eng.run(checkpointer=ck)
+            sizes[tag] = sum(
+                log._store_for(s).disk_bytes() for s in (0, 1)
+            )
+            vj, aj = recover_shard_streamed(
+                pg, DistinctInLabels(n_groups=8, rounds=2), failed=2,
+                ckpt=ck, log=log, store=store, target_step=2,
+            )
+            assert np.array_equal(np.asarray(vj), np.asarray(v_ref)[2])
+            assert np.array_equal(np.asarray(aj), np.asarray(a_ref)[2])
+        assert sizes["cp"] < sizes["p"]
+
+    def test_bf16_store_rejects_integer_messages(self, tmp_path):
+        with pytest.raises(ValueError):
+            MessageRunStore(str(tmp_path / "s"), 2, 16, np.int32,
+                            compress_payload="bf16")
+
+    def test_bf16_rejects_message_log(self, tmp_path):
+        """bf16 is a lossy WIRE codec; a message log backed by it would
+        make recover_shard_streamed (which regenerates the failed shard's
+        own groups exactly) diverge from the live run — refused up front."""
+        g = rmat_graph(scale=6, edge_factor=4, seed=1)
+        pg, _, store = partition_graph_streamed(
+            g, 2, str(tmp_path / "sp"), edge_block=32
+        )
+        with pytest.raises(ValueError, match="lossy wire codec"):
+            GraphDEngine(
+                pg, PageRank(supersteps=2),
+                config=EngineConfig(
+                    mode="streamed",
+                    channel=ChannelConfig(compress_payload="bf16"),
+                ),
+                stream_store=store,
+                message_log=RunFileMessageLog(str(tmp_path / "logs")),
+            )
+
+    def test_payload_vacuum_reclaims_and_preserves(self, tmp_path):
+        """Compaction + vacuum over payload-compressed runs must yield the
+        EXACT merge stream of an uncompressed store fed identically — the
+        codec (and the dead-region rewrite) must be invisible."""
+        rng = np.random.default_rng(3)
+        st = MessageRunStore(str(tmp_path / "v"), 2, 64, np.float32,
+                             compress_payload=True)
+        ref = MessageRunStore(str(tmp_path / "ref"), 2, 64, np.float32)
+        for _ in range(12):
+            dp = np.sort(rng.integers(0, 64, 700)).astype(np.int32)
+            msg = rng.random(700, dtype=np.float32)
+            st.append_run(1, dp, msg, tag=0)
+            ref.append_run(1, dp, msg, tag=0)
+        for s in (st, ref):
+            s.compact_tag(1, 0, fanin=3, read_chunk=97)
+        assert st.dead_bytes(1) < st.live_bytes(1)  # vacuumed en route
+        merged = [np.concatenate(x) for x in zip(*st.iter_merged(1, 53))]
+        want = [np.concatenate(x) for x in zip(*ref.iter_merged(1, 53))]
+        assert np.array_equal(merged[0], want[0])
+        assert np.array_equal(merged[1], want[1])
+        assert st.disk_bytes() < ref.disk_bytes()

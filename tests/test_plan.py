@@ -34,12 +34,15 @@ def _floors(graph, *, combined=True, value_itemsize=4, msg_itemsize=4):
     common = dict(n_shards=N, P=P, E_cap=E_cap, edge_block=EDGE_BLOCK,
                   value_itemsize=value_itemsize, msg_itemsize=msg_itemsize,
                   combined=combined, chunk_blocks=1, slice_cap=128,
-                  read_chunk=64, merge_fanin=2, inflight=1)
+                  read_chunk=64, merge_fanin=2, inflight=1, group_batch=1)
     streamed = ram_total(
         estimate_memory(mode="streamed", pipeline=False, **common),
         "streamed")
+    # the ladder floor: batch lanes and the full-duplex receiver staging
+    # are shed before the pipeline is declared infeasible
     pipelined = ram_total(
-        estimate_memory(mode="streamed", pipeline=True, **common),
+        estimate_memory(mode="streamed", pipeline=True, full_duplex=False,
+                        **common),
         "streamed")
     return streamed, pipelined
 
@@ -244,3 +247,76 @@ def test_graph_meta_of_accepts_graph_and_partition(graph):
     assert m1.max_shard_vertices is None  # a raw Graph has no realized P
     assert (m2.max_shard_vertices, m2.for_n_shards) == (pg.P, N)
     assert GraphMeta.of(m1) is m1
+
+
+def test_net_budget_flips_payload_compression(graph):
+    """Satellite: a shrinking net_per_superstep budget must engage the
+    position codec, then compress_payload, BEFORE declaring PlanInfeasible
+    — the wire codecs are the planner's net-budget ladder."""
+    prog = PageRank(supersteps=3)
+    floor_streamed, _ = _floors(graph, combined=True)
+    ram = floor_streamed + 8192  # forces streamed; slack for codec scratch
+    base = plan(prog, graph, MemoryBudget(ram_per_shard=ram, n_shards=N),
+                edge_block=EDGE_BLOCK)
+    assert base.mode == "streamed"
+    assert not base.compress and not base.compress_payload
+
+    step1 = plan(prog, graph,
+                 MemoryBudget(ram_per_shard=ram, n_shards=N,
+                              net_per_superstep=base.net_total - 1),
+                 edge_block=EDGE_BLOCK)
+    assert step1.mode == "streamed" and step1.compress
+    assert not step1.compress_payload  # positions alone satisfied this one
+    assert step1.net_total < base.net_total
+
+    step2 = plan(prog, graph,
+                 MemoryBudget(ram_per_shard=ram, n_shards=N,
+                              net_per_superstep=step1.net_total - 1),
+                 edge_block=EDGE_BLOCK)
+    assert step2.mode == "streamed"
+    assert step2.compress and step2.compress_payload
+    assert step2.net_total < step1.net_total
+    assert "+payload" in step2.explain()
+    assert "codec" in step2.model  # the payload-codec scratch tier rides
+
+    with pytest.raises(PlanInfeasible) as ei:
+        plan(prog, graph,
+             MemoryBudget(ram_per_shard=ram, n_shards=N,
+                          net_per_superstep=step2.net_total - 1),
+             edge_block=EDGE_BLOCK)
+    cands = ei.value.breakdown["candidates"]
+    streamed_cands = [c for c in cands if c["mode"] == "streamed"]
+    assert streamed_cands and all(
+        c["compress"] and c["compress_payload"] for c in streamed_cands
+    )  # both codecs were engaged before giving up
+    assert any("payload codec" in c["reason"] for c in streamed_cands)
+
+
+def test_receiver_staging_tier_in_explain_and_breakdown(graph):
+    """Satellite: the full-duplex receiver's RAM tier is part of the model,
+    printed by plan.explain(), and carried in the JSON byte breakdown."""
+    prog = PageRank(supersteps=3)
+    n = 8  # enough shards that the pipelined fold beats n+1 accumulators
+    P = max((-(-graph.n_vertices // n) + 7) // 8 * 8, 8)
+    E_cap = max(int(graph.n_edges / (n * n) * 1.5 + EDGE_BLOCK - 1)
+                // EDGE_BLOCK * EDGE_BLOCK, EDGE_BLOCK)
+    common = dict(n_shards=n, P=P, E_cap=E_cap, edge_block=EDGE_BLOCK,
+                  value_itemsize=4, msg_itemsize=4, combined=True,
+                  chunk_blocks=1, inflight=1, group_batch=1)
+    pipe_fd = ram_total(
+        estimate_memory(mode="streamed", pipeline=True, full_duplex=True,
+                        **common), "streamed")
+    plain_floor = ram_total(
+        estimate_memory(mode="streamed", pipeline=False, **common),
+        "streamed")
+    assert pipe_fd < plain_floor  # full duplex fits where plain cannot
+
+    p = plan(prog, graph, MemoryBudget(ram_per_shard=pipe_fd, n_shards=n),
+             edge_block=EDGE_BLOCK)
+    assert p.mode == "streamed" and p.pipeline
+    assert p.config.channel.full_duplex
+    assert "receiver_staging" in p.model and p.model["receiver_staging"] > 0
+    assert "receiver_staging=" in p.explain()
+    chosen = next(json.loads(p.to_json())["alternatives"][i]
+                  for i, c in enumerate(p.alternatives) if c.chosen)
+    assert "receiver_staging" in chosen["model"]
