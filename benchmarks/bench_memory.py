@@ -10,7 +10,10 @@ throughput and the compute ∥ I/O overlap of the prefetching reader,
 (e) BOTH overlaps of the full-duplex pipelined channel (transmit AND
 receiver digest hidden under compute must each be > 0 — asserted),
 (f) payload-codec bytes on the wire (lossless >= 1.5x smaller — asserted),
-(g) on-disk bytes of compressed vs uncompressed edge and message streams.
+(g) on-disk bytes of compressed vs uncompressed edge and message streams,
+(h) the ``launch="processes"`` per-PROCESS RAM model staying flat as the
+process count grows (asserted), with a real 3-process run's child ru_maxrss
+recorded alongside.
 Derived columns carry the bound checks.
 
 ``--tiny`` runs a seconds-scale subset (CI smoke job).
@@ -331,6 +334,51 @@ def compression_bytes_on_disk(g, edge_block, rounds=2):
              f"ok={log_bytes['c'] < log_bytes['p']}")
 
 
+def process_launch_model(g, edge_block, supersteps=2):
+    """``launch="processes"``: the planner's per-PROCESS RAM must be flat
+    (non-increasing) as the process count grows — each worker holds the
+    O(|V|/n) vertex state plus constant stream/channel windows, so adding
+    processes never raises any single process's footprint (the paper's
+    scale-out story, now with real OS processes). The model numbers are
+    asserted; a real 3-process run over the shared-filesystem transport
+    is driven alongside and the children's peak ru_maxrss recorded for the
+    report only (jit + allocator noise make child-RSS assertions flaky)."""
+    import resource
+    import time as _time
+
+    ns, rams = [], []
+    for n in (2, 3, 4):
+        p = plan(PageRank(supersteps=supersteps), g,
+                 MemoryBudget(n_shards=n), edge_block=edge_block,
+                 launch="processes")
+        assert p.launch == "processes" and p.mode == "streamed" and p.pipeline
+        ns.append(n)
+        rams.append(p.ram_total)
+        emit(f"memory/procs_ram_n{n}", 0.0,
+             f"per_process_ram={p.ram_total}")
+    flat = all(b <= a for a, b in zip(rams, rams[1:]))
+
+    with tempfile.TemporaryDirectory(prefix="graphd-procs-") as d:
+        job = GraphDJob(PageRank(supersteps=supersteps), g,
+                        budget=MemoryBudget(n_shards=3),
+                        edge_block=edge_block, launch="processes", workdir=d)
+        t0 = _time.perf_counter()
+        res = job.run()
+        wall = _time.perf_counter() - t0
+        job.close()
+    child_rss = resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss * 1024
+    emit("memory/process_launch", wall / max(res.n_supersteps, 1) * 1e6,
+         f"ns={ns};per_process_ram={rams};flat={flat};"
+         f"supersteps={res.n_supersteps};wall_s={wall:.2f};"
+         f"child_maxrss={child_rss}",
+         ns=ns, per_process_ram=rams, flat=flat,
+         supersteps=res.n_supersteps, child_maxrss=child_rss)
+    assert flat, (
+        f"per-process RAM model must not grow with the process count: "
+        f"{dict(zip(ns, rams))}"
+    )
+
+
 def planned_vs_measured(g, edge_block):
     """The planner's prediction vs what actually ran, per program class.
 
@@ -395,6 +443,7 @@ def main():
         payload_wire_bytes(g, edge_block=64, supersteps=2, chunk_blocks=4)
         compression_bytes_on_disk(g, edge_block=64)
         planned_vs_measured(g, edge_block=64)
+        process_launch_model(g, edge_block=64, supersteps=2)
         independence_of_E(scale=8, factors=[4, 16], edge_block=32)
     else:
         g = rmat_graph(scale=14, edge_factor=8, seed=3, sparse_ids=True)
@@ -406,6 +455,7 @@ def main():
         payload_wire_bytes(g, edge_block=512, supersteps=3)
         compression_bytes_on_disk(g, edge_block=512)
         planned_vs_measured(g, edge_block=512)
+        process_launch_model(g, edge_block=512, supersteps=2)
         independence_of_E(scale=12, factors=[4, 16, 48], edge_block=256)
     if args.json:
         write_json(args.json)

@@ -6,9 +6,10 @@ milliseconds, and the payload-codec bytes-on-wire.
 
 ``--tiny`` runs the seconds-scale subset (the CI smoke job); ``--out``
 writes the consolidated JSON; ``--check`` fails the run when a required
-section is missing or empty, when the receiver overlap is not positive, or
-when the lossless payload channel is under 1.5x — the acceptance gates,
-enforced where the numbers are produced.
+section is missing or empty, when the receiver overlap is not positive,
+when the lossless payload channel is under 1.5x, or when the
+``launch="processes"`` per-process RAM model grows with the process count —
+the acceptance gates, enforced where the numbers are produced.
 """
 
 from __future__ import annotations
@@ -22,7 +23,8 @@ from benchmarks import common
 from benchmarks.common import OVERLAP_MIN_CPUS, PAYLOAD_LOSSLESS_FLOOR
 
 #: required BENCH_PR5.json sections; --check fails on a missing/empty one
-REQUIRED_SECTIONS = ("wall_clock", "ram_model", "overlap", "bytes_on_wire")
+REQUIRED_SECTIONS = ("wall_clock", "ram_model", "overlap", "bytes_on_wire",
+                     "process_launch")
 
 
 def _module_plan(tiny: bool):
@@ -68,6 +70,7 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
         or "model" in r["name"] or "planned_vs_measured" in r["name"]
     ]
     overlap = values_of("memory/pipeline_overlap")
+    process_launch = values_of("memory/process_launch")
     wire = values_of("memory/payload_wire_lossless")
     bytes_on_wire = dict(
         lossless=wire,
@@ -80,6 +83,7 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
             ram_model=ram_model,
             overlap=overlap,
             bytes_on_wire=bytes_on_wire if wire else {},
+            process_launch=process_launch,
         ),
         records=records_by_bench,
     )
@@ -112,6 +116,18 @@ def check(report: dict) -> list[str]:
                 f"sender overlap must be > 0 ms, got "
                 f"{overlap.get('sender_overlap_ms')!r}"
             )
+    procs = sections.get("process_launch") or {}
+    rams = procs.get("per_process_ram") or []
+    if len(rams) < 2:
+        problems.append(
+            "process_launch must model >= 2 process counts, got "
+            f"{procs.get('ns')!r}"
+        )
+    elif any(b > a for a, b in zip(rams, rams[1:])):
+        problems.append(
+            "per-process RAM must not grow with the process count: "
+            f"ns={procs.get('ns')!r} ram={rams!r}"
+        )
     wire = (sections.get("bytes_on_wire") or {}).get("lossless") or {}
     if wire.get("ratio", 0) < PAYLOAD_LOSSLESS_FLOOR:
         problems.append(

@@ -1,22 +1,42 @@
-"""GraphD core: the paper's contribution as a composable JAX module."""
+"""GraphD core: the paper's contribution as a composable JAX module.
 
-from repro.core.api import (
-    SUM, MIN, MAX, IMIN, IMAX, OR, Combiner, ShardContext, VertexProgram,
-)
-from repro.core.config import (
-    ChannelConfig, ConfigError, EngineConfig, MessageSpillConfig,
-    RecoveryConfig, StreamConfig,
-)
-from repro.core.engine import GraphDEngine, StepStats, SuperstepRecord, superstep_spmd
-from repro.core.plan import (
-    ExecutionPlan, GraphMeta, MemoryBudget, PlanInfeasible, estimate_memory,
-    plan,
-)
-from repro.core.job import GraphDJob, JobResult
-from repro.core.algorithms import (
-    BFS, SSSP, DegreeSum, DistinctInLabels, HashMin, LabelSpread, PageRank,
-    SecondMinLabel,
-)
+The public names are re-exported LAZILY (PEP 562): importing a light
+submodule — ``repro.core.coordinator`` in particular — must not pay for
+the engine's jax import. Worker processes of the multi-process launch
+import the coordinator and start their liveness heartbeat *before* any
+heavy import; an eager package ``__init__`` defeated that (three workers
+cold-importing jax on a loaded single-core machine blew the heartbeat
+grace window and tripped a false "worker dead" detection).
+"""
+
+#: public name -> submodule that defines it (resolved on first attribute
+#: access; ``from repro.core import X`` goes through __getattr__ too)
+_EXPORTS = {
+    name: mod
+    for mod, names in {
+        "api": ("SUM", "MIN", "MAX", "IMIN", "IMAX", "OR",
+                "Combiner", "ShardContext", "VertexProgram"),
+        "config": ("ChannelConfig", "ConfigError", "EngineConfig",
+                   "MessageSpillConfig", "RecoveryConfig", "StreamConfig"),
+        "engine": ("GraphDEngine", "StepStats", "SuperstepRecord",
+                   "superstep_spmd"),
+        "plan": ("ExecutionPlan", "GraphMeta", "MemoryBudget",
+                 "PlanInfeasible", "estimate_memory", "plan"),
+        "job": ("GraphDJob", "JobResult"),
+        "algorithms": ("BFS", "SSSP", "DegreeSum", "DistinctInLabels",
+                       "HashMin", "LabelSpread", "PageRank",
+                       "SecondMinLabel"),
+    }.items()
+    for name in names
+}
+
+# ``plan`` the FUNCTION collides with ``plan`` the submodule: whenever the
+# submodule is (transitively) imported, the import machinery binds the
+# module object as a package attribute, which would shadow the lazy export
+# and never let __getattr__ fire. Bind the function eagerly instead — the
+# submodule is jax-free, so this keeps worker startup light — and later
+# submodule imports find it in sys.modules and leave this binding alone.
+from repro.core.plan import plan  # noqa: E402
 
 __all__ = [
     "SUM", "MIN", "MAX", "IMIN", "IMAX", "OR",
@@ -30,3 +50,18 @@ __all__ = [
     "PageRank", "HashMin", "SSSP", "BFS", "DegreeSum", "LabelSpread",
     "DistinctInLabels", "SecondMinLabel",
 ]
+
+
+def __getattr__(name):
+    import importlib
+
+    mod = _EXPORTS.get(name)
+    if mod is not None:
+        value = getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+        globals()[name] = value  # cache: __getattr__ runs once per name
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -17,17 +17,14 @@ before use. Checks that need the *program* or the *partition* (combiner
 requirements, store geometry) stay in the engine — a config cannot know them.
 
 The legacy ``GraphDEngine(pg, prog, mode=..., stream_chunk_blocks=..., ...)``
-kwargs keep working for one release through :meth:`EngineConfig.resolve`,
-which maps them onto config fields and emits a single ``DeprecationWarning``
-naming every legacy kwarg used. Passing a ``config=`` *and* legacy kwargs is
-a hard error — silently merging the two surfaces would make "which knob won"
-ambiguous.
+flat-kwarg surface is gone: its one-release deprecation window (PR 4) is
+over, and ``GraphDEngine`` now raises :class:`ConfigError` for any flat
+kwarg or positional mode string. Build an :class:`EngineConfig`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -156,26 +153,6 @@ class RecoveryConfig:
             )
 
 
-#: legacy GraphDEngine kwarg -> (sub-config attr | None, field name)
-LEGACY_KWARGS: dict[str, tuple[str | None, str]] = {
-    "mode": (None, "mode"),
-    "sparse_cap_frac": (None, "sparse_cap_frac"),
-    "adapt_threshold": (None, "adapt_threshold"),
-    "backend": (None, "backend"),
-    "kernel_windows": (None, "kernel_windows"),
-    "stream_chunk_blocks": ("stream", "chunk_blocks"),
-    "stream_depth": ("stream", "depth"),
-    "msg_slice_cap": ("spill", "slice_cap"),
-    "msg_read_chunk": ("spill", "read_chunk"),
-    "msg_merge_fanin": ("spill", "merge_fanin"),
-    "msg_spill_dir": ("spill", "spill_dir"),
-    "pipeline": ("channel", "pipeline"),
-    "compress": ("channel", "compress"),
-    "channel_inflight": ("channel", "inflight"),
-    "channel_fault": ("channel", "fault"),
-}
-
-
 @dataclass
 class EngineConfig:
     """Everything the engine needs to know that is not the program, the
@@ -259,66 +236,3 @@ class EngineConfig:
             channel=ChannelConfig(**ch),
             recovery=RecoveryConfig(**d.get("recovery", {})),
         )
-
-    # -- the deprecation shim ------------------------------------------------
-    @classmethod
-    def resolve(cls, config: "EngineConfig | str | None",
-                legacy: dict[str, Any]) -> "EngineConfig":
-        """Turn a ``GraphDEngine`` call's ``(config, **legacy)`` into one
-        finalized EngineConfig.
-
-        * ``config`` an EngineConfig and no legacy kwargs — the new surface;
-        * ``config`` None and legacy kwargs — the old surface: map every
-          kwarg onto its config field and emit ONE ``DeprecationWarning``
-          naming them all;
-        * ``config`` a plain string — the old positional ``mode`` argument,
-          treated as the legacy kwarg it was;
-        * both — a hard :class:`ConfigError`: two sources of truth for the
-          same knob cannot be merged unambiguously.
-        """
-        if isinstance(config, str):  # GraphDEngine(pg, prog, "basic")
-            legacy = dict(legacy)
-            if "mode" in legacy:
-                raise ConfigError(
-                    "mode given both positionally and as a keyword"
-                )
-            legacy["mode"] = config
-            config = None
-        unknown = set(legacy) - set(LEGACY_KWARGS)
-        if unknown:
-            raise TypeError(
-                f"unknown GraphDEngine argument(s): {sorted(unknown)}"
-            )
-        if config is not None:
-            if legacy:
-                raise ConfigError(
-                    f"conflicting arguments: config= was given together with "
-                    f"legacy kwarg(s) {sorted(legacy)} — set "
-                    f"{', '.join(_field_path(k) for k in sorted(legacy))} "
-                    f"on the EngineConfig instead"
-                )
-            if not isinstance(config, cls):
-                raise TypeError(
-                    f"config must be an EngineConfig, got {type(config).__name__}"
-                )
-            return config.finalize()
-        cfg = cls()
-        if legacy:
-            warnings.warn(
-                "passing GraphDEngine knobs as keyword arguments is "
-                f"deprecated ({', '.join(sorted(legacy))}); build an "
-                "EngineConfig instead: "
-                + ", ".join(f"{_field_path(k)}={legacy[k]!r}"
-                            for k in sorted(legacy)),
-                DeprecationWarning,
-                stacklevel=3,
-            )
-            for k, v in legacy.items():
-                sub, attr = LEGACY_KWARGS[k]
-                setattr(cfg if sub is None else getattr(cfg, sub), attr, v)
-        return cfg.finalize()
-
-
-def _field_path(legacy_name: str) -> str:
-    sub, attr = LEGACY_KWARGS[legacy_name]
-    return attr if sub is None else f"{sub}.{attr}"

@@ -73,7 +73,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.api import Combiner, ShardContext, VertexProgram
-from repro.core.config import MODES, EngineConfig
+from repro.core.config import MODES, ConfigError, EngineConfig
 from repro.graph.partition import PartitionedGraph
 
 
@@ -455,6 +455,196 @@ def init_spmd(program: VertexProgram, pg: PartitionedGraph, *, axis: str):
 
 
 # --------------------------------------------------------------------------
+# streamed-mode kernels, shared by the in-process engine and worker processes
+# --------------------------------------------------------------------------
+
+class StreamKernels:
+    """The jitted per-shard streamed-mode kernels, built from the program
+    plus the partition SCALARS only (n_shards, n_vertices, P) — every
+    per-shard array (values, degree, vmask, ...) is a call argument, never
+    closed over. Both :class:`GraphDEngine` and the one-process-per-shard
+    worker (``repro.launch.procs``) build their kernels here, so the two
+    execution paths run literally the same compiled math and cannot drift.
+
+    Combiner programs get ``fold``/``fold_batch``/``apply``/``digest``;
+    combiner-less programs get ``msgs``/``apply_list``/``finish``. ``init``
+    is always present (the per-row replica of :func:`init_spmd`).
+    """
+
+    def __init__(self, program: VertexProgram, n_shards: int,
+                 n_vertices: int, P: int):
+        self.program = program
+        self.n_shards = int(n_shards)
+        self.n_vertices = int(n_vertices)
+        self.P = int(P)
+        self.combined = program.combiner is not None
+        self.init = jax.jit(self._make_init())
+        if self.combined:
+            comb = program.combiner
+            self.fold = jax.jit(self._make_fold())
+            self.fold_batch = jax.jit(self._make_fold_batch())
+            self.apply = jax.jit(self._make_apply())
+            # receiver digest of one densified inbox group (pipelined
+            # path): identical per-position sequence to the unpipelined
+            # grouped fold, so pipelining cannot change results
+            self.digest = jax.jit(
+                lambda A, c, A2, c2: (comb.combine(A, A2), c + c2)
+            )
+        else:
+            self.msgs = jax.jit(self._make_msgs())
+            self.apply_list = jax.jit(self._make_apply_list())
+            self.finish = jax.jit(self._make_finish())
+
+    def _ctx(self, shard, degree, vmask, old_ids, gids) -> ShardContext:
+        return ShardContext(
+            shard=shard, n_shards=self.n_shards, n_vertices=self.n_vertices,
+            P=self.P, degree=degree, vmask=vmask, old_ids=old_ids, gids=gids,
+        )
+
+    def _make_init(self):
+        """Jitted per-shard init: one row of :func:`init_spmd` (the worker
+        process holds only its own row, so ``shard`` is an argument instead
+        of ``lax.axis_index``)."""
+        program = self.program
+
+        def init_row(shard, degree, vmask, old_ids, gids):
+            ctx = self._ctx(shard, degree, vmask, old_ids, gids)
+            values, active = program.init(ctx)
+            return values.astype(program.value_dtype), active & vmask
+
+        return init_row
+
+    def _make_fold(self):
+        """Jitted chunk combine: fold one staged edge chunk into the
+        destination accumulator (the in-memory A_s combine of §5, applied to
+        an O(1)-sized staged slice instead of the whole resident group)."""
+        program = self.program
+        comb = program.combiner
+
+        def fold(A, cnt, values, degree, active, sp, dp, w, step):
+            msg, dp2, aact = _gen_messages(
+                program, values, degree, sp, dp, w, active, step
+            )
+            A = comb.scatter(A, dp2, msg)
+            cnt = cnt.at[dp2].add(aact.astype(jnp.int32))
+            return A, cnt
+
+        return fold
+
+    def _make_fold_batch(self):
+        """Jitted multi-group fold: ``group_batch`` SMALL groups (each one
+        staged chunk) scatter-combined in one vmapped dispatch — per lane
+        the exact op sequence of :meth:`_make_fold` on a fresh identity
+        accumulator, so batching is pure dispatch amortization and results
+        stay bit-identical (the lanes never mix)."""
+        program, P_dest = self.program, self.P
+        comb = program.combiner
+
+        def fold_batch(values, degree, active, src, sp, dp, w, step):
+            # values/degree/active: the full (n, P) stacks; src: (G,) source
+            # shard per lane; sp/dp/w: (G, chunk_slots). Padding lanes carry
+            # sp = -1 everywhere and fold to the identity.
+            def one(src_g, sp_g, dp_g, w_g):
+                msg, dp2, aact = _gen_messages(
+                    program, values[src_g], degree[src_g], sp_g, dp_g, w_g,
+                    active[src_g], step,
+                )
+                A = comb.scatter(
+                    comb.identity((P_dest,), program.msg_dtype), dp2, msg
+                )
+                cnt = jnp.zeros((P_dest,), jnp.int32).at[dp2].add(
+                    aact.astype(jnp.int32)
+                )
+                return A, cnt
+
+            return jax.vmap(one)(src, sp, dp, w)
+
+        return fold_batch
+
+    def _make_apply(self):
+        """Jitted per-shard digest + apply + vote (shard index is traced, so
+        one compilation serves all shards)."""
+        program = self.program
+
+        def apply_shard(values, degree, vmask, old_ids, gids, A_r, cnt,
+                        active, step, shard):
+            ctx = self._ctx(shard, degree, vmask, old_ids, gids)
+            has_msg = (cnt > 0) & vmask
+            new_values, new_active = program.apply(
+                values, degree, A_r, has_msg, active, step, ctx
+            )
+            new_active = new_active & vmask
+            agg = program.aggregate(values, new_values, has_msg)
+            agg = (
+                jnp.sum(agg.astype(jnp.float32))
+                if agg is not None
+                else jnp.float32(0)
+            )
+            return (
+                new_values.astype(program.value_dtype),
+                new_active,
+                jnp.sum(new_active.astype(jnp.int32)),
+                jnp.sum(cnt),
+                agg,
+            )
+
+        return apply_shard
+
+    def _make_msgs(self):
+        """Jitted raw-message generation for one staged edge chunk (the
+        combiner-less scatter half): returns ``(payload, dst_pos, valid)``
+        for the host to sort by destination and spill into an OMS run."""
+        program = self.program
+
+        def gen(values, degree, active, sp, dp, w, step):
+            msg, dp2, aact = _gen_messages(
+                program, values, degree, sp, dp, w, active, step
+            )
+            return msg, dp2, aact
+
+        return gen
+
+    def _make_apply_list(self):
+        """Jitted apply over ONE destination-aligned slice of the merged
+        message stream. ``cnt`` is the full per-position message count, so
+        ``has_msg`` matches mode="basic" exactly; only the destinations whose
+        runs live in this slice are kept by the caller."""
+        program = self.program
+
+        def apply_slice(values, degree, vmask, old_ids, gids, sdp, smsg,
+                        cnt, active, step, shard):
+            ctx = self._ctx(shard, degree, vmask, old_ids, gids)
+            has_msg = (cnt > 0) & vmask
+            new_values, new_active = program.apply_list(
+                values, degree, sdp, smsg, has_msg, active, step, ctx
+            )
+            return new_values.astype(program.value_dtype), new_active & vmask
+
+        return apply_slice
+
+    def _make_finish(self):
+        """Jitted per-shard superstep tail for the combiner-less path
+        (active count, message count, aggregator)."""
+        program = self.program
+
+        def fin(values, new_values, new_active, cnt, vmask):
+            has_msg = (cnt > 0) & vmask
+            agg = program.aggregate(values, new_values, has_msg)
+            agg = (
+                jnp.sum(agg.astype(jnp.float32))
+                if agg is not None
+                else jnp.float32(0)
+            )
+            return (
+                jnp.sum(new_active.astype(jnp.int32)),
+                jnp.sum(cnt),
+                agg,
+            )
+
+        return fin
+
+
+# --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
 
@@ -483,15 +673,29 @@ class GraphDEngine:
         self,
         pg: PartitionedGraph,
         program: VertexProgram,
-        config: EngineConfig | str | None = None,
+        config: EngineConfig | None = None,
         *,
         mesh: Mesh | None = None,
         message_log=None,  # core.checkpoint.MessageLog for fast recovery
         stream_store=None,  # streams.EdgeStreamStore, required for "streamed"
-        **legacy,  # deprecated flat kwargs (mode=, pipeline=, ...) — one
-        #            release of shim via EngineConfig.resolve
+        **flat,  # rejected: the PR-4 flat-kwarg shim's window is over
     ):
-        cfg = EngineConfig.resolve(config, legacy)
+        if flat:
+            raise ConfigError(
+                "GraphDEngine no longer accepts flat keyword arguments "
+                f"({', '.join(sorted(flat))}); build an EngineConfig — e.g. "
+                "config=EngineConfig(mode='streamed', "
+                "channel=ChannelConfig(pipeline=True))"
+            )
+        if config is None:
+            config = EngineConfig()
+        if not isinstance(config, EngineConfig):
+            raise ConfigError(
+                "config must be an EngineConfig (the positional mode string "
+                f"was removed with the flat-kwarg shim), got "
+                f"{type(config).__name__}"
+            )
+        cfg = config.finalize()
         self.config = cfg
         mode = cfg.mode
         backend = cfg.backend
@@ -604,6 +808,9 @@ class GraphDEngine:
             # cumulative over the current run(); bench_memory reads it for
             # the pipeline_overlap section (both directions)
             self.channel_stats = ChannelStats()
+            # zombie channel threads recorded by crash-path aborts; surfaced
+            # at the next run() instead of masking the original exception
+            self.thread_leaks: list[Exception] = []
             self._inbox_dir = os.path.join(stream_store.dir, "inbox")
             self.msg_spill_dir = cfg.spill.spill_dir or os.path.join(
                 stream_store.dir, "oms"
@@ -615,25 +822,20 @@ class GraphDEngine:
             self._msg_slice_cap_eff = int(cfg.spill.slice_cap)
             self.msg_read_chunk = int(cfg.spill.read_chunk)
             self.msg_merge_fanin = int(cfg.spill.merge_fanin)
+            # one kernel bundle serves this engine and (via launch/procs)
+            # any per-shard worker process — same compiled math by
+            # construction
+            kern = StreamKernels(program, pg.n_shards, pg.n_vertices, pg.P)
+            self._kernels = kern
             if program.combiner is not None:
-                self._stream_fold = jax.jit(self._make_stream_fold())
-                self._stream_fold_batch = jax.jit(
-                    self._make_stream_fold_batch()
-                )
-                self._stream_apply = jax.jit(self._make_stream_apply())
-                comb = program.combiner
-                # receiver digest of one densified inbox group (pipelined
-                # path): identical per-position sequence to the unpipelined
-                # grouped fold, so pipelining cannot change results
-                self._stream_digest = jax.jit(
-                    lambda A, c, A2, c2: (comb.combine(A, A2), c + c2)
-                )
+                self._stream_fold = kern.fold
+                self._stream_fold_batch = kern.fold_batch
+                self._stream_apply = kern.apply
+                self._stream_digest = kern.digest
             else:
-                self._stream_msgs = jax.jit(self._make_stream_msgs())
-                self._stream_apply_list = jax.jit(
-                    self._make_stream_apply_list()
-                )
-                self._stream_finish = jax.jit(self._make_stream_finish())
+                self._stream_msgs = kern.msgs
+                self._stream_apply_list = kern.apply_list
+                self._stream_finish = kern.finish
             self._step_dense = self._step_sparse = self._step_logged = None
             self._init = jax.jit(self._wrap(
                 lambda pg_: init_spmd(program, pg_, axis=axis), n_in=1,
@@ -771,145 +973,6 @@ class GraphDEngine:
         )
 
     # -- streamed mode (out-of-core, paper §3 / Theorem 1) --------------------
-    def _make_stream_fold(self):
-        """Jitted chunk combine: fold one staged edge chunk into the
-        destination accumulator (the in-memory A_s combine of §5, applied to
-        an O(1)-sized staged slice instead of the whole resident group)."""
-        program = self.program
-        comb = program.combiner
-
-        def fold(A, cnt, values, degree, active, sp, dp, w, step):
-            msg, dp2, aact = _gen_messages(
-                program, values, degree, sp, dp, w, active, step
-            )
-            A = comb.scatter(A, dp2, msg)
-            cnt = cnt.at[dp2].add(aact.astype(jnp.int32))
-            return A, cnt
-
-        return fold
-
-    def _make_stream_fold_batch(self):
-        """Jitted multi-group fold: ``group_batch`` SMALL groups (each one
-        staged chunk) scatter-combined in one vmapped dispatch — per lane
-        the exact op sequence of :meth:`_make_stream_fold` on a fresh
-        identity accumulator, so batching is pure dispatch amortization and
-        results stay bit-identical (the lanes never mix)."""
-        program, pg = self.program, self.pg
-        comb = program.combiner
-
-        def fold_batch(values, degree, active, src, sp, dp, w, step):
-            # values/degree/active: the full (n, P) stacks; src: (G,) source
-            # shard per lane; sp/dp/w: (G, chunk_slots). Padding lanes carry
-            # sp = -1 everywhere and fold to the identity.
-            def one(src_g, sp_g, dp_g, w_g):
-                msg, dp2, aact = _gen_messages(
-                    program, values[src_g], degree[src_g], sp_g, dp_g, w_g,
-                    active[src_g], step,
-                )
-                A = comb.scatter(
-                    comb.identity((pg.P,), program.msg_dtype), dp2, msg
-                )
-                cnt = jnp.zeros((pg.P,), jnp.int32).at[dp2].add(
-                    aact.astype(jnp.int32)
-                )
-                return A, cnt
-
-            return jax.vmap(one)(src, sp, dp, w)
-
-        return fold_batch
-
-    def _make_stream_apply(self):
-        """Jitted per-shard digest + apply + vote (shard index is traced, so
-        one compilation serves all shards)."""
-        program = self.program
-        pg = self.pg
-
-        def apply_shard(values, degree, vmask, old_ids, gids, A_r, cnt,
-                        active, step, shard):
-            ctx = ShardContext(
-                shard=shard, n_shards=pg.n_shards, n_vertices=pg.n_vertices,
-                P=pg.P, degree=degree, vmask=vmask, old_ids=old_ids,
-                gids=gids,
-            )
-            has_msg = (cnt > 0) & vmask
-            new_values, new_active = program.apply(
-                values, degree, A_r, has_msg, active, step, ctx
-            )
-            new_active = new_active & vmask
-            agg = program.aggregate(values, new_values, has_msg)
-            agg = (
-                jnp.sum(agg.astype(jnp.float32))
-                if agg is not None
-                else jnp.float32(0)
-            )
-            return (
-                new_values.astype(program.value_dtype),
-                new_active,
-                jnp.sum(new_active.astype(jnp.int32)),
-                jnp.sum(cnt),
-                agg,
-            )
-
-        return apply_shard
-
-    def _make_stream_msgs(self):
-        """Jitted raw-message generation for one staged edge chunk (the
-        combiner-less scatter half): returns ``(payload, dst_pos, valid)``
-        for the host to sort by destination and spill into an OMS run."""
-        program = self.program
-
-        def gen(values, degree, active, sp, dp, w, step):
-            msg, dp2, aact = _gen_messages(
-                program, values, degree, sp, dp, w, active, step
-            )
-            return msg, dp2, aact
-
-        return gen
-
-    def _make_stream_apply_list(self):
-        """Jitted apply over ONE destination-aligned slice of the merged
-        message stream. ``cnt`` is the full per-position message count, so
-        ``has_msg`` matches mode="basic" exactly; only the destinations whose
-        runs live in this slice are kept by the caller."""
-        program = self.program
-        pg = self.pg
-
-        def apply_slice(values, degree, vmask, old_ids, gids, sdp, smsg,
-                        cnt, active, step, shard):
-            ctx = ShardContext(
-                shard=shard, n_shards=pg.n_shards, n_vertices=pg.n_vertices,
-                P=pg.P, degree=degree, vmask=vmask, old_ids=old_ids,
-                gids=gids,
-            )
-            has_msg = (cnt > 0) & vmask
-            new_values, new_active = program.apply_list(
-                values, degree, sdp, smsg, has_msg, active, step, ctx
-            )
-            return new_values.astype(program.value_dtype), new_active & vmask
-
-        return apply_slice
-
-    def _make_stream_finish(self):
-        """Jitted per-shard superstep tail for the combiner-less path
-        (active count, message count, aggregator)."""
-        program = self.program
-
-        def fin(values, new_values, new_active, cnt, vmask):
-            has_msg = (cnt > 0) & vmask
-            agg = program.aggregate(values, new_values, has_msg)
-            agg = (
-                jnp.sum(agg.astype(jnp.float32))
-                if agg is not None
-                else jnp.float32(0)
-            )
-            return (
-                jnp.sum(new_active.astype(jnp.int32)),
-                jnp.sum(cnt),
-                agg,
-            )
-
-        return fin
-
     def _fold_groups(self, values, active, step, schedule, sink):
         """Fold staged edge chunks into per-(src, dst) group accumulators
         (§5's A_s, one group at a time) and hand each COMPLETED group to
@@ -1088,6 +1151,21 @@ class GraphDEngine:
         elif ok:
             inbox.delete()
 
+    def _abort_channels(self, channel, receiver) -> None:
+        """Crash-path teardown of both pipeline directions. A zombie thread
+        detected by abort() is RECORDED here, not raised — the superstep's
+        own exception is already propagating and must stay visible; the
+        recorded leak is surfaced by the next run() instead."""
+        from repro.streams.channel import ChannelError
+
+        for part in (channel, receiver):
+            if part is None:
+                continue
+            try:
+                part.abort()
+            except ChannelError as e:
+                self.thread_leaks.append(e)
+
     def _accum_channel(self, channel) -> None:
         st, tot = channel.stats, self.channel_stats
         tot.packets += st.packets
@@ -1192,9 +1270,7 @@ class GraphDEngine:
             ok = True
         finally:
             if not ok:
-                channel.abort()
-                if receiver is not None:
-                    receiver.abort()
+                self._abort_channels(channel, receiver)
             self._accum_channel(channel)
             self._close_inbox(s, inbox, ok)
         st = channel.stats
@@ -1371,7 +1447,7 @@ class GraphDEngine:
         finally:
             if channel is not None:
                 if not ok:
-                    channel.abort()
+                    self._abort_channels(channel, None)
                 self._accum_channel(channel)
             if log is not None:
                 if ok:
@@ -1398,7 +1474,17 @@ class GraphDEngine:
         store = self.stream_store
         import shutil
 
-        from repro.streams.channel import ChannelStats
+        from repro.streams.channel import ChannelError, ChannelStats
+
+        if self.thread_leaks:
+            # a previous failed superstep left a channel thread alive; it
+            # may still hold this store's inbox run files open — rerunning
+            # over them would race the zombie's appends
+            raise ChannelError(
+                f"{len(self.thread_leaks)} channel thread(s) leaked by an "
+                "earlier failed superstep; build a fresh engine/store "
+                "instead of rerunning over their open inbox files"
+            ) from self.thread_leaks[0]
 
         # scratch inboxes / OMS spills live under the store; a crashed
         # superstep leaves its step dir behind — sweep at run start (like

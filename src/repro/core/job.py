@@ -116,20 +116,37 @@ class GraphDJob:
         checkpoint_every: int | None = None,
         edge_block: int = 512,
         vertex_pad: int = 8,
+        launch: str = "threads",
+        launch_opts: dict | None = None,
     ):
         if plan is not None and budget is not None:
             raise ValueError(
                 "pass budget= (to plan) or plan= (pre-planned), not both — "
                 "an ExecutionPlan already embeds the budget it was made for"
             )
+        if launch not in ("threads", "processes"):
+            raise ValueError(
+                f"launch must be 'threads' or 'processes', got {launch!r}"
+            )
         self.program = program
         self.graph = graph
+        self.launch = launch
+        # launch_opts tunes the deployment, not the plan: today that is the
+        # coordinator's liveness clock (heartbeat_interval / _timeout)
+        self.launch_opts = dict(launch_opts or {})
         # expert plans are materialized verbatim; only budget-derived plans
         # get their knobs re-derived against the realized geometry
         self._auto_planned = plan is None
         if plan is None:
             plan = make_plan(program, GraphMeta.of(graph), budget,
-                             edge_block=edge_block, vertex_pad=vertex_pad)
+                             edge_block=edge_block, vertex_pad=vertex_pad,
+                             launch=launch)
+        elif launch == "processes" and plan.mode != "streamed":
+            raise ValueError(
+                "launch='processes' needs a mode='streamed' plan (workers "
+                f"stream their owner view from disk); got mode={plan.mode!r}"
+                " — re-plan with plan(..., launch='processes')"
+            )
         if checkpoint_every is not None:
             # message logging (=> single-shard fast recovery) needs either a
             # combined A_s log or the streamed OMS run files; a combiner-less
@@ -153,7 +170,17 @@ class GraphDJob:
         self._state = None  # (values, active) after a run / rescale
         self._next_step = 0
         self._closed = False
-        self._build(tag="")
+        try:
+            self._build(tag="")
+        except BaseException:
+            # a failure between partition-spill and engine wiring must not
+            # strand the workdir the job itself created: mark the job closed
+            # and drop the temp dir (an explicit user workdir is kept, with
+            # whatever partial spill is in it, for post-mortem)
+            self._closed = True
+            if self._tmp:
+                shutil.rmtree(self.workdir, ignore_errors=True)
+            raise
 
     def _guard_workdir_identity(self) -> None:
         """A reused workdir may hold another job's checkpoints; silently
@@ -189,6 +216,7 @@ class GraphDJob:
         """Partition (spilling if planned) and wire store/log/ckpt/engine
         under ``workdir``; ``tag`` namespaces the layout after a rescale (the
         shard count changed, so checkpoints/logs/streams are a new lineage)."""
+        self._tag = tag
         plan = self.plan
         self.pg, self.rmap, self.store = partition_for_plan(
             self.graph, plan, self._dir("edges", tag)
@@ -245,7 +273,7 @@ class GraphDJob:
             refined = make_plan(
                 self.program, GraphMeta.of(self.pg), b,
                 edge_block=plan.edge_block, vertex_pad=plan.vertex_pad,
-                recovery=plan.config.recovery,
+                recovery=plan.config.recovery, launch=self.launch,
             )
         except PlanInfeasible:
             return plan
@@ -273,11 +301,23 @@ class GraphDJob:
             meta = (self.store.signature()
                     if self.store is not None else None)
             self.checkpointer.save(0, *self.engine.init(), meta=meta)
-        (values, active), history = self.engine.run(
-            max_supersteps=max_supersteps, state=self._state,
-            start_step=self._next_step, verbose=verbose,
-            checkpointer=self.checkpointer, on_step=on_step,
-        )
+        try:
+            if self.launch == "processes":
+                from repro.launch.procs import run_processes
+
+                (values, active), history = run_processes(
+                    self, max_supersteps, verbose=verbose, on_step=on_step,
+                )
+            else:
+                (values, active), history = self.engine.run(
+                    max_supersteps=max_supersteps, state=self._state,
+                    start_step=self._next_step, verbose=verbose,
+                    checkpointer=self.checkpointer, on_step=on_step,
+                )
+        finally:
+            # success or failure, leave no half-written superstep scratch
+            # (inbox runs, OMS spills, outbox/announce records) behind
+            self._sweep_scratch()
         self._state = (values, active)
         if history:
             self._next_step = history[-1].step + 1
@@ -305,9 +345,28 @@ class GraphDJob:
             )
         target = self._next_step if target_step is None else target_step
         if self.plan.mode == "streamed":
+            log = self.message_log
+            if self.launch == "processes":
+                # each worker process logs into its own lineage
+                # (logs/shard-w) — one run-file index per writer. The failed
+                # shard's log holds every run addressed to it (its own
+                # included: the transport routes w→w through the outbox
+                # too), so replay reads just that lineage
+                comb = self.program.combiner
+                ch = self.plan.config.channel
+                log = RunFileMessageLog(
+                    os.path.join(self._dir("logs", self._tag),
+                                 f"shard-{failed}"))
+                log.configure(
+                    self.pg.n_shards, self.pg.P,
+                    np.dtype(self.program.msg_dtype),
+                    e0=comb.e0 if comb is not None else 0,
+                    combined=comb is not None, compress=ch.compress,
+                    compress_payload=ch.compress_payload,
+                )
             return recover_shard_streamed(
                 self.pg, self.program, failed, self.checkpointer,
-                self.message_log, self.store, target,
+                log, self.store, target,
             )
         return recover_shard(self.pg, self.program, failed,
                              self.checkpointer, self.message_log, target)
@@ -334,6 +393,7 @@ class GraphDJob:
             edge_block=self.plan.edge_block,
             vertex_pad=self.plan.vertex_pad,
             recovery=self.plan.config.recovery,
+            launch=self.launch,
         )
         self.budget = self.plan.budget
         self._build(tag=f"-n{n_shards}")
@@ -356,6 +416,31 @@ class GraphDJob:
         return self
 
     # -- teardown -------------------------------------------------------------
+    def _sweep_scratch(self) -> None:
+        """Drop per-superstep scratch (NOT checkpoints, logs, or streams):
+        the engine's inbox/OMS step dirs and the multi-process transport's
+        outbox/announce/per-worker-inbox dirs. Run on both the success and
+        the failure path so a crash mid-superstep cannot strand half-written
+        run files in a user-owned workdir."""
+        eng = getattr(self, "engine", None)
+        for d in (getattr(eng, "_inbox_dir", None),
+                  getattr(eng, "msg_spill_dir", None)):
+            if d and os.path.isdir(d):
+                for name in os.listdir(d):
+                    if name.startswith(("step-", "recover-")):
+                        shutil.rmtree(os.path.join(d, name),
+                                      ignore_errors=True)
+        procs_dir = self._dir("procs", getattr(self, "_tag", ""))
+        if os.path.isdir(procs_dir):
+            shutil.rmtree(os.path.join(procs_dir, "outbox"),
+                          ignore_errors=True)
+            shutil.rmtree(os.path.join(procs_dir, "announce"),
+                          ignore_errors=True)
+            for name in os.listdir(procs_dir):
+                if name.startswith("shard-"):
+                    shutil.rmtree(os.path.join(procs_dir, name, "inbox"),
+                                  ignore_errors=True)
+
     def close(self, delete: bool | None = None) -> None:
         """Release the workdir. ``delete`` defaults to True only when the
         job created a temporary one; an explicit user workdir is kept."""
@@ -364,6 +449,8 @@ class GraphDJob:
         self._closed = True
         if delete if delete is not None else self._tmp:
             shutil.rmtree(self.workdir, ignore_errors=True)
+        else:
+            self._sweep_scratch()
 
     def _check_open(self) -> None:
         if self._closed:

@@ -33,6 +33,16 @@ up; the full-duplex receiver staging and the batched-dispatch lanes sit on
 the RAM knob ladder and are shed under pressure. An over-constrained
 budget raises :class:`PlanInfeasible` carrying the most frugal candidate's
 per-tier byte breakdown.
+
+``launch="processes"`` plans for the true multi-process deployment
+(``repro.launch.procs``): every "per-shard" figure in the model then reads
+as per-PROCESS — ``ram_total`` is what ONE worker process keeps resident
+(its owner view of the edge streams is on disk, its state rows are O(P)),
+and ``net_total`` is what one process's NIC carries per superstep over the
+shared-filesystem transport. Only the full-duplex streamed pipeline runs
+across processes (the transport IS the inbox-run-file channel), so the
+in-memory modes and the unpipelined streamed fold are vetoed rather than
+silently rewritten.
 """
 
 from __future__ import annotations
@@ -342,6 +352,10 @@ class ExecutionPlan:
     disk_total: int
     net_total: int
     alternatives: list[Candidate] = field(default_factory=list)
+    #: "threads" (single-process emulation) or "processes" (one worker
+    #: process per shard over the shared-filesystem transport); with
+    #: "processes" the per-shard model IS the per-process RAM/NIC budget
+    launch: str = "threads"
 
     @property
     def mode(self) -> str:
@@ -409,6 +423,7 @@ class ExecutionPlan:
             disk_total=self.disk_total,
             net_total=self.net_total,
             alternatives=[c.to_json() for c in self.alternatives],
+            launch=self.launch,
         ))
 
     @classmethod
@@ -426,6 +441,7 @@ class ExecutionPlan:
             disk_total=d["disk_total"],
             net_total=d["net_total"],
             alternatives=[Candidate(**c) for c in d["alternatives"]],
+            launch=d.get("launch", "threads"),
         )
 
 
@@ -453,13 +469,23 @@ def plan(
     depth: int = 2,
     skew: float = 1.5,
     recovery: RecoveryConfig | None = None,
+    launch: str = "threads",
 ) -> ExecutionPlan:
     """Choose an execution mode and derive every knob from the budget.
 
     ``graph_meta`` is a :class:`GraphMeta`, a ``Graph``, or a
     ``PartitionedGraph``; ``skew`` models the max/mean per-group padding
     overhead of the hash partition (Lemma 1 bounds it by 2).
+    ``launch="processes"`` restricts the candidate set to what the
+    multi-process deployment can actually execute — on-disk edge streams
+    (each worker maps only its owner view) and the full-duplex pipelined
+    channel (the shared-filesystem transport speaks the inbox-run-file
+    format) — and frames the model as per-process RAM / per-NIC bytes.
     """
+    if launch not in ("threads", "processes"):
+        raise ValueError(
+            f"launch must be 'threads' or 'processes', got {launch!r}"
+        )
     meta = GraphMeta.of(graph_meta)
     budget = (budget or MemoryBudget()).validate()
     n = budget.n_shards
@@ -478,6 +504,12 @@ def plan(
                 value_itemsize=vdt, msg_itemsize=mdt, combined=combined)
 
     def in_memory(name: str, mode: str, reason_veto: str = "") -> Candidate:
+        if launch == "processes" and not reason_veto:
+            reason_veto = (
+                "launch='processes' needs mode='streamed': workers exchange "
+                "messages through on-disk inbox run files and map only "
+                "their owner view of the edge streams"
+            )
         model = estimate_memory(mode=mode, **geom)
         ram = ram_total(model, mode)
         net = estimate_net(mode, n_shards=n, P=P, E_cap=E_cap,
@@ -557,8 +589,13 @@ def plan(
         infl_ladder = _INFLIGHT_LADDER if pipeline else (4,)
         # full duplex preferred; shedding it drops the receiver-staging
         # tier, so it sits between the batch ladder (cheapest to give up)
-        # and the window/in-flight ladders
-        duplex_ladder = (True, False) if pipeline else (True,)
+        # and the window/in-flight ladders. The multi-process transport IS
+        # the full-duplex channel (workers digest peer runs as they land),
+        # so launch='processes' pins the knob instead of laddering it
+        if launch == "processes":
+            duplex_ladder = (True,)
+        else:
+            duplex_ladder = (True, False) if pipeline else (True,)
         if combined:
             combos = itertools.product(
                 _CHUNK_LADDER, infl_ladder, (4096,), (4096,), (16,),
@@ -587,7 +624,13 @@ def plan(
             if budget.ram_per_shard is None or ram <= budget.ram_per_shard:
                 break
         feasible, reason = True, ""
-        if budget.ram_per_shard is not None and ram > budget.ram_per_shard:
+        if launch == "processes" and not pipeline:
+            feasible = False
+            reason = ("launch='processes' runs the pipelined full-duplex "
+                      "channel only (the shared-filesystem transport is the "
+                      "inbox-run-file channel; the unpipelined fold keeps "
+                      "all n accumulators in one address space)")
+        elif budget.ram_per_shard is not None and ram > budget.ram_per_shard:
             feasible = False
             reason = (f"ram {_fmt(ram)} > budget "
                       f"{_fmt(budget.ram_per_shard)} even at floor knobs "
@@ -677,5 +720,5 @@ def plan(
         edge_block=edge_block, vertex_pad=vertex_pad,
         model=winner.model, ram_total=winner.ram_total,
         disk_total=winner.disk_total, net_total=winner.net_total,
-        alternatives=candidates,
+        alternatives=candidates, launch=launch,
     )

@@ -1,0 +1,857 @@
+"""True multi-process deployment: one worker process per shard.
+
+``run_processes(job)`` turns a planned streamed :class:`~repro.core.job
+.GraphDJob` into n real OS processes. Each worker opens ONLY its owner view
+of the edge store (``EdgeStreamStore.open(dir, owner=w)`` maps just shard
+w's byte extent), holds only its own vertex rows, and talks to its peers
+exclusively through the shared filesystem:
+
+* **outbox** — per (step, source) :class:`MessageRunStore` in the exact
+  inbox-run-file wire format of ``streams.channel`` (combined groups are
+  ``append_combined`` sparse runs, combiner-less spills are per-chunk
+  ``append_raw`` runs), published by an atomically-renamed announce marker;
+* **inbox** — each worker copies the runs addressed to it, ascending source
+  (= the threaded sender's transmit order), into a local store and digests
+  them through the real :class:`~repro.streams.channel.ChannelReceiver`
+  with the SAME jitted :class:`~repro.core.engine.StreamKernels` the
+  threaded engine runs — so a 3-process run is bit-identical to the
+  single-process full-duplex streamed run;
+* **coordinator** — the job process drives ``core.coordinator
+  .FileCoordinator`` barriers: per-superstep arrive/commit records,
+  shard-ascending aggregator + halt-vote reduction, and heartbeat liveness.
+  A worker that dies mid-superstep (kill -9 included) stops beating; the
+  coordinator respawns just that shard with ``--recover-to``, which replays
+  forward from the latest checkpoint over the worker's own message log
+  (paper §3.4 / [19] single-shard fast recovery) and rejoins the barrier.
+
+Worker processes are started as ``python -m repro.launch.procs worker
+<spec_dir> <shard>``. This module keeps its import-time dependencies to the
+standard library + the coordinator so a worker can start its heartbeat
+BEFORE paying the jax import.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import re
+import shutil
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.core.coordinator import (
+    FileCoordinator, RunAborted, WorkerFailed, atomic_write_json,
+)
+
+SPEC = "spec.json"
+PROGRAM = "program.pkl"
+_STEP_DIR = re.compile(r"^step-(\d+)$")
+
+# respawn budget per run: recovery is for crashes, not crash loops
+MAX_RECOVERIES = 3
+# extra seconds a freshly spawned worker gets before heartbeat staleness
+# counts against it (interpreter start + first beat)
+SPAWN_GRACE = 5.0
+
+
+# --------------------------------------------------------------------------
+# shared-filesystem layout (one helper per path, used by both sides)
+# --------------------------------------------------------------------------
+
+def _shard_dir(procs_dir: str, w: int) -> str:
+    return os.path.join(procs_dir, f"shard-{w}")
+
+
+def _outbox_dir(procs_dir: str, step: int, src: int) -> str:
+    return os.path.join(procs_dir, "outbox", f"step-{step:06d}",
+                        f"src-{src}")
+
+
+def _announce_path(procs_dir: str, step: int, src: int) -> str:
+    return os.path.join(procs_dir, "announce", f"step-{step:06d}",
+                        f"src-{src}.json")
+
+
+def _result_path(procs_dir: str, w: int) -> str:
+    return os.path.join(procs_dir, "result", f"shard-{w}.npz")
+
+
+def _save_npz_atomic(path: str, **arrays) -> None:
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+
+
+# --------------------------------------------------------------------------
+# launcher (runs in the job process)
+# --------------------------------------------------------------------------
+
+def _src_root() -> str:
+    """The import root to hand worker processes (the directory holding the
+    ``repro`` package)."""
+    import repro.core as core
+
+    return os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(core.__file__))
+    ))
+
+
+def _write_spec(job, procs_dir: str, coord_dir: str, *, start_step: int,
+                target: int, bootstrap: str, ckpt_step: int | None,
+                heartbeat_interval: float, heartbeat_timeout: float) -> None:
+    pg, cfg = job.pg, job.plan.config
+    rec = cfg.recovery
+    spec = dict(
+        n_shards=int(pg.n_shards),
+        P=int(pg.P),
+        n_vertices=int(pg.n_vertices),
+        value_dtype=str(np.dtype(job.program.value_dtype)),
+        msg_dtype=str(np.dtype(job.program.msg_dtype)),
+        store_dir=job.store.dir,
+        logs_dir=(job.message_log.dir if rec.log_messages else None),
+        ckpt_dir=(job.checkpointer.dir if job.checkpointer else None),
+        procs_dir=procs_dir,
+        coord_dir=coord_dir,
+        config=cfg.to_json(),
+        checkpoint_every=int(rec.checkpoint_every),
+        log_messages=bool(rec.log_messages),
+        start_step=int(start_step),
+        target=int(target),
+        num_supersteps=job.program.num_supersteps,
+        bootstrap=bootstrap,
+        ckpt_step=ckpt_step,
+        heartbeat_interval=heartbeat_interval,
+        heartbeat_timeout=heartbeat_timeout,
+    )
+    atomic_write_json(os.path.join(procs_dir, SPEC), spec)
+    with open(os.path.join(procs_dir, PROGRAM), "wb") as f:
+        pickle.dump(job.program, f)
+    # per-shard partition rows: a worker maps O(P) state, never the stacks
+    for w in range(pg.n_shards):
+        d = _shard_dir(procs_dir, w)
+        os.makedirs(d, exist_ok=True)
+        _save_npz_atomic(
+            os.path.join(d, "rows.npz"),
+            degree=np.asarray(pg.degree[w]),
+            vmask=np.asarray(pg.vmask[w]),
+            old_ids=np.asarray(pg.old_ids[w]),
+            gids=np.asarray(pg.gids[w]),
+        )
+
+
+def _finalize_checkpoint(ckpt, step: int, n_shards: int, P: int, dtype: str,
+                         meta) -> None:
+    """Coordinator half of the distributed checkpoint: every worker has
+    already dumped its ``shard-w.npz`` into the ``.tmp`` dir; write the
+    manifest (the Checkpointer wire format, so ``restore``/``restore_shard``
+    read it unchanged) and publish with the atomic rename."""
+    tmp = os.path.join(ckpt.dir, f".tmp-step-{step:06d}")
+    final = os.path.join(ckpt.dir, f"step-{step:06d}")
+    for w in range(n_shards):
+        if not os.path.exists(os.path.join(tmp, f"shard-{w}.npz")):
+            raise RuntimeError(
+                f"checkpoint step {step}: worker {w} voted ckpt but its "
+                "shard file is missing"
+            )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(dict(step=step, n_shards=n_shards, P=P, dtype=dtype,
+                       meta=meta), f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    ckpt._gc()
+
+
+def run_processes(job, max_supersteps: int = 10_000, *,
+                  verbose: bool = False, on_step=None):
+    """Run ``job`` with one worker process per shard; returns
+    ``((values, active), history)`` exactly like ``GraphDEngine.run``.
+    ``on_step`` is called as ``on_step(record, None)`` — the coordinator
+    never holds the distributed state, only the barrier records."""
+    from repro.core.engine import SuperstepRecord
+
+    program, pg, store = job.program, job.pg, job.store
+    cfg = job.plan.config
+    n = pg.n_shards
+    opts = dict(job.launch_opts or {})
+    heartbeat_interval = float(opts.get("heartbeat_interval", 0.25))
+    heartbeat_timeout = float(opts.get("heartbeat_timeout", 10.0))
+    # crash drill (tests / CI): {"shard": w, "step": s} SIGKILLs worker w
+    # mid-superstep s — after it announced its outbox, before it arrives
+    kill_spec = opts.get("kill")
+    can_recover = (job.checkpointer is not None
+                   and cfg.recovery.log_messages)
+
+    procs_dir = job._dir("procs", job._tag)
+    coord_dir = os.path.join(procs_dir, "coord")
+    # a fresh launch owns the transport namespace: stale barrier records or
+    # half-written outboxes from a previous (crashed) launch would open
+    # this run's barriers early
+    for sub in ("coord", "outbox", "announce", "result"):
+        shutil.rmtree(os.path.join(procs_dir, sub), ignore_errors=True)
+    os.makedirs(procs_dir, exist_ok=True)
+
+    target = min(
+        program.num_supersteps
+        if program.num_supersteps is not None
+        else max_supersteps,
+        max_supersteps,
+    )
+    state = job._state
+    start_step = job._next_step
+    restored_from = None
+    ckpt_step = None
+    if state is not None:
+        bootstrap = "state"
+        vals = np.asarray(state[0])
+        act = np.asarray(state[1])
+        for w in range(n):
+            d = _shard_dir(procs_dir, w)
+            os.makedirs(d, exist_ok=True)
+            _save_npz_atomic(os.path.join(d, "boot.npz"),
+                             values=vals[w], active=act[w])
+    elif job.checkpointer is not None and job.checkpointer.latest() is not None:
+        ckpt_step = job.checkpointer.latest()
+        d = os.path.join(job.checkpointer.dir, f"step-{ckpt_step:06d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            got = json.load(f).get("meta")
+        expected = store.signature()
+        if got is not None and got != expected:
+            raise ValueError(
+                f"checkpoint step-{ckpt_step:06d} was written against "
+                f"different edge streams: manifest meta {got} != expected "
+                f"{expected}"
+            )
+        bootstrap = "checkpoint"
+        start_step = ckpt_step
+        restored_from = ckpt_step
+    else:
+        bootstrap = "init"
+
+    if start_step >= target:
+        # nothing to run: resolve the state in-process, exactly like the
+        # engine's empty loop would
+        if state is None:
+            if job.checkpointer is not None and ckpt_step is not None:
+                v, a, _ = job.checkpointer.restore(
+                    expected_meta=store.signature())
+                state = (v, a)
+            else:
+                state = job.engine.init()
+        return state, []
+
+    coord = FileCoordinator(coord_dir, n,
+                            heartbeat_interval=heartbeat_interval,
+                            heartbeat_timeout=heartbeat_timeout)
+    _write_spec(job, procs_dir, coord_dir, start_step=start_step,
+                target=target, bootstrap=bootstrap, ckpt_step=ckpt_step,
+                heartbeat_interval=heartbeat_interval,
+                heartbeat_timeout=heartbeat_timeout)
+
+    src_root = _src_root()
+    procs: list[subprocess.Popen | None] = [None] * n
+    grace = [0.0] * n
+    recoveries = 0
+    job._last_run_recoveries = 0  # audit: how many respawns this run took
+
+    def _spawn(w: int, recover_to: int | None = None) -> None:
+        d = _shard_dir(procs_dir, w)
+        os.makedirs(d, exist_ok=True)
+        cmd = [sys.executable, "-m", "repro.launch.procs", "worker",
+               procs_dir, str(w)]
+        if recover_to is not None:
+            cmd += ["--recover-to", str(recover_to)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        with open(os.path.join(d, "worker.log"), "ab") as logf:
+            procs[w] = subprocess.Popen(cmd, stdout=logf,
+                                        stderr=subprocess.STDOUT, env=env)
+        # the parent's copy of the log fd is closed by the with-block; the
+        # child holds its own
+        grace[w] = time.time() + heartbeat_timeout + SPAWN_GRACE
+
+    def _killall() -> None:
+        for p in procs:
+            if p is not None and p.poll() is None:
+                p.kill()
+        for p in procs:
+            if p is not None:
+                try:
+                    p.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    pass
+
+    def _fail(w: int, reason: str) -> None:
+        coord.abort(reason)
+        _killall()
+        raise WorkerFailed(w, reason)
+
+    def _recover(w: int, recover_to: int, why: str) -> None:
+        nonlocal recoveries
+        if not can_recover:
+            _fail(w, f"worker {w} {why} and the job has no checkpoint + "
+                     "message-log recovery wiring (checkpoint_every=)")
+        if recoveries >= MAX_RECOVERIES:
+            _fail(w, f"worker {w} {why} after {recoveries} recoveries — "
+                     "crash loop, giving up")
+        recoveries += 1
+        job._last_run_recoveries = recoveries
+        p = procs[w]
+        if p is not None and p.poll() is None:
+            p.kill()
+            p.wait()
+        if verbose:
+            print(f"  [procs] worker {w} {why}; respawning with "
+                  f"--recover-to {recover_to}")
+        _spawn(w, recover_to=recover_to)
+
+    def _liveness(step_or_none):
+        """One poll tick: a worker that exited, or whose heartbeat went
+        stale past its grace window, is recovered (or the run aborts)."""
+        def check(got):
+            now = time.time()
+            for w in range(n):
+                if w in got:
+                    continue
+                p = procs[w]
+                exited = p is not None and p.poll() is not None
+                silent = now > grace[w] and coord.stale(w)
+                if exited:
+                    _recover(w, step_or_none,
+                             f"exited with code {p.returncode} "
+                             f"mid-superstep {step_or_none}")
+                elif silent:
+                    _recover(w, step_or_none,
+                             "went heartbeat-silent "
+                             f"(> {heartbeat_timeout:.1f}s) "
+                             f"mid-superstep {step_or_none}")
+        return check
+
+    history: list[SuperstepRecord] = []
+    every = job.checkpointer.every if job.checkpointer is not None else 0
+    ok = False
+    try:
+        for w in range(n):
+            _spawn(w)
+        nonempty = max(store.nonempty_blocks(), 1)
+        for s in range(start_step, target):
+            t0 = time.perf_counter()
+            if kill_spec is not None and int(kill_spec["step"]) == s:
+                kw = int(kill_spec["shard"])
+                kill_spec = None
+                # kill -9 mid-superstep: the victim has published its
+                # outbox (so peers are not re-sent to) but has not applied
+                # or arrived — the recovery path must replay this step
+                coord.wait_file(_announce_path(procs_dir, s, kw), kw)
+                p = procs[kw]
+                if p is not None and p.poll() is None:
+                    p.kill()
+            arrivals = coord.wait_arrivals(s, on_wait=_liveness(s))
+            totals = coord.reduce_arrivals(arrivals)
+            ckpt_landed = False
+            if every and (s + 1) % every == 0:
+                _finalize_checkpoint(
+                    job.checkpointer, s + 1, n, pg.P,
+                    str(np.dtype(program.value_dtype)),
+                    store.signature(),
+                )
+                ckpt_landed = True
+            halt = (
+                (program.num_supersteps is None and totals["n_active"] == 0)
+                or s + 1 >= target
+            )
+            coord.publish_commit(s, totals, halt=halt,
+                                 ckpt_landed=ckpt_landed)
+            dt = time.perf_counter() - t0
+            rec = SuperstepRecord(
+                step=s, n_active=totals["n_active"],
+                n_msgs=totals["n_msgs"], agg=totals["agg"],
+                density=totals["active_blocks"] / nonempty,
+                mode="streamed", seconds=dt,
+                restored_from=restored_from if s == start_step else None,
+            )
+            history.append(rec)
+            if verbose:
+                print(
+                    f"  superstep {s:4d}: active={rec.n_active:>9d} "
+                    f"msgs={rec.n_msgs:>10d} agg={rec.agg:.6g} "
+                    f"density={rec.density:.4f} "
+                    f"[streamed procs x{n}] {dt*1e3:.1f} ms"
+                )
+            if on_step is not None:
+                on_step(rec, None)
+            if halt:
+                break
+        last_step = history[-1].step if history else start_step - 1
+        # results: every worker publishes its final rows and exits 0; a
+        # worker that dies between its last commit and the result write is
+        # recovered like any other (replays to last_step + 1, sees the halt
+        # commit, writes the result)
+        deadline_check = _liveness(last_step + 1)
+        while True:
+            missing = [w for w in range(n)
+                       if not os.path.exists(_result_path(procs_dir, w))]
+            if not missing:
+                break
+            deadline_check(set(range(n)) - set(missing))
+            time.sleep(FileCoordinator.POLL)
+        vals, acts = [], []
+        for w in range(n):
+            z = np.load(_result_path(procs_dir, w))
+            vals.append(z["values"])
+            acts.append(z["active"])
+        for p in procs:
+            if p is not None:
+                try:
+                    p.wait(timeout=30)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+        ok = True
+    finally:
+        if not ok:
+            if coord.aborted() is None:
+                coord.abort("launcher failed")
+            _killall()
+    import jax.numpy as jnp
+
+    return (jnp.asarray(np.stack(vals)), jnp.asarray(np.stack(acts))), history
+
+
+# --------------------------------------------------------------------------
+# worker (runs in its own process; everything below main() may import jax)
+# --------------------------------------------------------------------------
+
+def _latest_checkpoint_step(ckpt_dir: str, at_most: int) -> int | None:
+    """Latest published checkpoint step <= ``at_most`` — read directly from
+    the directory: workers never construct a Checkpointer (its constructor
+    sweeps ``.tmp-step-*`` dirs that peers may be writing into)."""
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_DIR.match(name)
+        if m and os.path.isdir(os.path.join(ckpt_dir, name)):
+            s = int(m.group(1))
+            if s <= at_most:
+                steps.append(s)
+    return max(steps) if steps else None
+
+
+class _Worker:
+    """One shard's superstep loop over the shared-filesystem transport."""
+
+    def __init__(self, spec: dict, program, shard: int,
+                 coord: FileCoordinator):
+        import jax.numpy as jnp
+
+        from repro.core.checkpoint import RunFileMessageLog
+        from repro.core.config import EngineConfig
+        from repro.core.engine import StreamKernels
+        from repro.streams.reader import StreamReader
+        from repro.streams.store import EdgeStreamStore
+
+        self.spec = spec
+        self.program = program
+        self.w = shard
+        self.coord = coord
+        self.n = int(spec["n_shards"])
+        self.P = int(spec["P"])
+        self.cfg = EngineConfig.from_json(spec["config"])
+        self.msg_dtype = np.dtype(spec["msg_dtype"])
+        self.comb = program.combiner
+        self.procs_dir = spec["procs_dir"]
+        # the owner view: this process maps ONLY shard w's store row
+        self.store = EdgeStreamStore.open(spec["store_dir"], owner=shard)
+        self.reader = StreamReader(self.store, self.cfg.stream.chunk_blocks,
+                                   self.cfg.stream.depth)
+        self.kern = StreamKernels(program, self.n, int(spec["n_vertices"]),
+                                  self.P)
+        z = np.load(os.path.join(_shard_dir(self.procs_dir, shard),
+                                 "rows.npz"))
+        self.degree = jnp.asarray(z["degree"])
+        self.vmask = jnp.asarray(z["vmask"])
+        self.old_ids = jnp.asarray(z["old_ids"])
+        self.gids = jnp.asarray(z["gids"])
+        self.log = None
+        if spec["log_messages"]:
+            # per-worker log lineage: one run-file index per store dir, so
+            # n writers need n directories (logs/shard-w/step-NNNNNN)
+            self.log = RunFileMessageLog(
+                os.path.join(spec["logs_dir"], f"shard-{shard}"))
+            self.log.configure(
+                self.n, self.P, self.msg_dtype,
+                e0=self.comb.e0 if self.comb is not None else 0,
+                combined=self.comb is not None,
+                compress=self.cfg.channel.compress,
+                compress_payload=self.cfg.channel.compress_payload,
+            )
+        # slice-cap growth persists across supersteps, like the engine's
+        self._slice_cap_eff = self.cfg.spill.slice_cap
+
+    # -- state bootstrap -------------------------------------------------------
+    def bootstrap(self):
+        import jax.numpy as jnp
+
+        spec, w = self.spec, self.w
+        boot = os.path.join(_shard_dir(self.procs_dir, w), "boot.npz")
+        if spec["bootstrap"] == "state" and os.path.exists(boot):
+            z = np.load(boot)
+            return jnp.asarray(z["values"]), jnp.asarray(z["active"])
+        if spec["bootstrap"] == "checkpoint":
+            return self.restore_shard(int(spec["ckpt_step"]))
+        return self.kern.init(jnp.int32(w), self.degree, self.vmask,
+                              self.old_ids, self.gids)
+
+    def restore_shard(self, step: int):
+        import jax.numpy as jnp
+
+        d = os.path.join(self.spec["ckpt_dir"], f"step-{step:06d}")
+        z = np.load(os.path.join(d, f"shard-{self.w}.npz"))
+        return jnp.asarray(z["values"]), jnp.asarray(z["active"])
+
+    # -- send phase ------------------------------------------------------------
+    def _own_schedule(self, active_w) -> list:
+        prefix = np.concatenate(
+            [[0], np.cumsum(np.asarray(active_w).astype(np.int64))]
+        )
+        out = []
+        for k in range(self.n):
+            ids = self.store.active_blocks(self.w, k, prefix)
+            if ids.size:
+                out.append((self.w, k, ids))
+        return out
+
+    def _send(self, s: int, values_w, active_w) -> None:
+        """Fold/spill shard w's outgoing groups for step ``s`` into the
+        outbox store and publish the announce marker. Idempotent: a marker
+        already on disk means a pre-crash incarnation finished the send
+        (markers land only after ``save_index``), so recovery skips it —
+        peers may already have consumed those runs."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.streams.msgstore import MessageRunStore
+
+        marker = _announce_path(self.procs_dir, s, self.w)
+        if os.path.exists(marker):
+            return
+        step = jnp.int32(s)
+        obox = MessageRunStore(
+            _outbox_dir(self.procs_dir, s, self.w), self.n, self.P,
+            self.msg_dtype, with_counts=self.comb is not None,
+            compress=self.cfg.channel.compress,
+            compress_payload=self.cfg.channel.compress_payload,
+        )
+        for (_, k, ids) in self._own_schedule(active_w):
+            if self.comb is not None:
+                A = self.comb.identity((self.P,), self.program.msg_dtype)
+                cnt = jnp.zeros((self.P,), jnp.int32)
+                for chunk in self.reader.stream([(self.w, k, ids)]):
+                    A, cnt = self.kern.fold(
+                        A, cnt, values_w, self.degree, active_w,
+                        jnp.asarray(chunk.sp), jnp.asarray(chunk.dp),
+                        jnp.asarray(chunk.w), step,
+                    )
+                    # the staging buffers are recycled by the prefetcher:
+                    # the fold must be materialized before the next chunk
+                    jax.block_until_ready(cnt)
+                # the shared append_combined wire format (streams/msgstore)
+                obox.append_combined(k, np.asarray(A), np.asarray(cnt),
+                                     tag=self.w)
+            else:
+                for chunk in self.reader.stream([(self.w, k, ids)]):
+                    msg, dp, valid = self.kern.msgs(
+                        values_w, self.degree, active_w,
+                        chunk.sp, chunk.dp, chunk.w, step,
+                    )
+                    # np.asarray blocks AND copies out of the recycled
+                    # staging buffers, exactly like the engine's spill
+                    obox.append_raw(k, np.asarray(dp), np.asarray(msg),
+                                    np.asarray(valid), tag=self.w)
+        obox.save_index()
+        obox.close()
+        os.makedirs(os.path.dirname(marker), exist_ok=True)
+        atomic_write_json(marker, dict(src=self.w, step=s))
+
+    # -- receive phase ---------------------------------------------------------
+    def _open_inbox(self, s: int):
+        from repro.streams.msgstore import MessageRunStore
+
+        if self.log is not None:
+            return self.log.open_step(s)
+        return MessageRunStore(
+            os.path.join(_shard_dir(self.procs_dir, self.w), "inbox",
+                         f"step-{s:06d}"),
+            self.n, self.P, self.msg_dtype,
+            with_counts=self.comb is not None,
+            compress=self.cfg.channel.compress,
+            compress_payload=self.cfg.channel.compress_payload,
+        )
+
+    def _pull_runs(self, s: int, src: int, inbox, receiver=None) -> None:
+        """Copy source ``src``'s runs for this shard out of its announced
+        outbox into the local inbox, preserving run boundaries and tags.
+        Bounded memory: a combined run is <= P positions, an uncompacted
+        raw run is <= one staged chunk's messages."""
+        from repro.streams.msgstore import MessageRunStore
+
+        self.coord.wait_file(
+            _announce_path(self.procs_dir, s, src), self.w)
+        src_store = MessageRunStore.open(_outbox_dir(self.procs_dir, s, src))
+        try:
+            for seg in src_store.runs(self.w):
+                parts = src_store.read_run(self.w, seg)
+                lseg = inbox.append_run(
+                    self.w, parts[0], parts[1],
+                    cnt=parts[2] if self.comb is not None else None,
+                    tag=seg.tag,
+                )
+                if receiver is not None:
+                    receiver.enqueue_digest(self.w, lseg)
+        finally:
+            src_store.close()
+
+    def _receive_combined(self, s: int, values_w, active_w, inbox):
+        """Digest ascending source through the real ChannelReceiver — the
+        per-position digest sequence equals the threaded full-duplex path's
+        (transmit order == source-ascending), so results are bit-identical."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.streams.channel import ChannelReceiver
+
+        comb, P = self.comb, self.P
+        identity = lambda: (comb.identity((P,), self.program.msg_dtype),
+                            jnp.zeros((P,), jnp.int32))
+
+        def _digest(A, cnt, A_d, c_d):
+            A, cnt = self.kern.digest(A, cnt, jnp.asarray(A_d),
+                                      jnp.asarray(c_d))
+            jax.block_until_ready(cnt)
+            return A, cnt
+
+        receiver = ChannelReceiver(inbox, _digest, identity, comb.e0)
+        try:
+            for j in range(self.n):
+                self._pull_runs(s, j, inbox, receiver=receiver)
+            A_r, cnt = receiver.collect(self.w)
+        finally:
+            receiver.close()
+        return self.kern.apply(
+            values_w, self.degree, self.vmask, self.old_ids, self.gids,
+            A_r, cnt, active_w, jnp.int32(s), jnp.int32(self.w),
+        )
+
+    def _receive_nocomb(self, s: int, values_w, active_w, inbox):
+        """Combiner-less receive: copy + per-source compaction reproduces
+        the threaded engine's run-table evolution exactly, then the merged
+        destination-aligned apply (its local mirror of
+        ``_apply_list_merged``) folds the slices."""
+        import jax.numpy as jnp
+
+        for j in range(self.n):
+            self._pull_runs(s, j, inbox)
+            inbox.compact_tag(self.w, j, self.cfg.spill.merge_fanin,
+                              self.cfg.spill.read_chunk)
+        acc_v, acc_a, cnt_k = self._apply_list_merged(
+            inbox, values_w, active_w, jnp.int32(s))
+        nact, nm, ag = self.kern.finish(values_w, acc_v, acc_a, cnt_k,
+                                        self.vmask)
+        return acc_v, acc_a, nact, nm, ag
+
+    def _apply_list_merged(self, mstore, values_w, active_w, step):
+        """Worker-local mirror of ``GraphDEngine._apply_list_merged`` (same
+        slice-cap growth, covered-overwrite accumulation, and padding-only
+        fallback; the slice decomposition is results-neutral)."""
+        import jax.numpy as jnp
+
+        w = self.w
+        counts = mstore.dest_counts(w)
+        max_run = int(counts.max()) if counts.size else 0
+        while self._slice_cap_eff < max_run:
+            self._slice_cap_eff *= 2
+        cap = self._slice_cap_eff
+        cnt_k = jnp.asarray(
+            np.minimum(counts, np.iinfo(np.int32).max).astype(np.int32)
+        )
+        shard = jnp.int32(w)
+        acc_v = acc_a = None
+        for sdp, smsg, covered in mstore.merged_slices(
+                w, cap, self.cfg.spill.read_chunk):
+            nv, na = self.kern.apply_list(
+                values_w, self.degree, self.vmask, self.old_ids, self.gids,
+                jnp.asarray(sdp), jnp.asarray(smsg), cnt_k, active_w, step,
+                shard,
+            )
+            if acc_v is None:
+                acc_v, acc_a = nv, na
+            else:
+                cov = jnp.asarray(covered)
+                acc_v = jnp.where(cov, nv, acc_v)
+                acc_a = jnp.where(cov, na, acc_a)
+        if acc_v is None:  # no messages at all: one padding-only call
+            acc_v, acc_a = self.kern.apply_list(
+                values_w, self.degree, self.vmask, self.old_ids, self.gids,
+                jnp.asarray(np.full((cap,), self.P, np.int32)),
+                jnp.asarray(np.zeros((cap,), self.msg_dtype)),
+                cnt_k, active_w, step, shard,
+            )
+        return acc_v, acc_a, cnt_k
+
+    # -- recovery replay -------------------------------------------------------
+    def replay(self, t: int, values_w, active_w):
+        """Re-derive the step-``t`` state transition from this worker's own
+        message log (which holds EVERY run addressed to it, its own group
+        included — the live receive copies them all), digesting in append
+        order = the live digest order, so replay is bit-identical."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.streams.msgstore import MessageRunStore
+
+        step = jnp.int32(t)
+        store_t = MessageRunStore.open(self.log.step_dir(t))
+        try:
+            if self.comb is not None:
+                comb = self.comb
+                A_r = comb.identity((self.P,), self.program.msg_dtype)
+                cnt = jnp.zeros((self.P,), jnp.int32)
+                for seg in store_t.runs(self.w):
+                    A_d, c_d = store_t.read_combined(self.w, seg, comb.e0)
+                    A_r, cnt = self.kern.digest(A_r, cnt, jnp.asarray(A_d),
+                                                jnp.asarray(c_d))
+                    jax.block_until_ready(cnt)
+                nv, na, *_ = self.kern.apply(
+                    values_w, self.degree, self.vmask, self.old_ids,
+                    self.gids, A_r, cnt, active_w, step, jnp.int32(self.w),
+                )
+                return nv, na
+            acc_v, acc_a, _ = self._apply_list_merged(
+                store_t, values_w, active_w, step)
+            return acc_v, acc_a
+        finally:
+            store_t.close()
+
+    # -- the superstep loop ----------------------------------------------------
+    def run(self, recover_to: int | None = None) -> None:
+        spec, coord, w = self.spec, self.coord, self.w
+        start = int(spec["start_step"])
+        target = int(spec["target"])
+        every = int(spec["checkpoint_every"])
+        if recover_to is not None:
+            C = _latest_checkpoint_step(spec["ckpt_dir"], recover_to)
+            if C is None:
+                raise RuntimeError(
+                    f"--recover-to {recover_to}: no checkpoint to replay "
+                    f"from in {spec['ckpt_dir']}"
+                )
+            values_w, active_w = self.restore_shard(C)
+            for t in range(C, recover_to):
+                values_w, active_w = self.replay(t, values_w, active_w)
+            start = recover_to
+            if start > int(spec["start_step"]):
+                cm = coord.commit(start - 1)
+                if cm is not None and cm.get("halt"):
+                    # the job already halted; just republish the final rows
+                    self._write_result(values_w, active_w)
+                    return
+        else:
+            values_w, active_w = self.bootstrap()
+
+        for s in range(start, target):
+            self._send(s, values_w, active_w)
+            inbox = self._open_inbox(s)
+            try:
+                if self.comb is not None:
+                    nv, na, nact, nm, ag = self._receive_combined(
+                        s, values_w, active_w, inbox)
+                else:
+                    nv, na, nact, nm, ag = self._receive_nocomb(
+                        s, values_w, active_w, inbox)
+            finally:
+                if self.log is not None:
+                    self.log.close_step(s)
+                else:
+                    inbox.close()
+                    inbox.delete()
+            values_w, active_w = nv, na
+            # next-frontier active blocks for this shard's source row (the
+            # coordinator divides the sum by the store's nonempty blocks to
+            # get the engine's density signal)
+            nblocks = sum(
+                len(ids) for (_, _, ids) in self._own_schedule(active_w)
+            )
+            ckpt = False
+            if every and (s + 1) % every == 0 and spec["ckpt_dir"]:
+                tmp = os.path.join(spec["ckpt_dir"],
+                                   f".tmp-step-{s + 1:06d}")
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, f"shard-{w}.npz"),
+                         values=np.asarray(values_w),
+                         active=np.asarray(active_w))
+                ckpt = True
+            coord.arrive(s, w, dict(
+                n_active=int(nact), n_msgs=int(nm), agg=float(ag),
+                active_blocks=int(nblocks), ckpt=ckpt,
+            ))
+            cm = coord.wait_commit(s, w)
+            if self.log is not None and cm.get("ckpt_landed"):
+                self.log.gc_before(s + 1)
+            # every peer has consumed this step's outbox (they arrived
+            # before the commit could exist) — reclaim it
+            shutil.rmtree(_outbox_dir(self.procs_dir, s, w),
+                          ignore_errors=True)
+            if cm.get("halt"):
+                break
+        self._write_result(values_w, active_w)
+
+    def _write_result(self, values_w, active_w) -> None:
+        path = _result_path(self.procs_dir, self.w)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        _save_npz_atomic(path, values=np.asarray(values_w),
+                         active=np.asarray(active_w))
+
+
+def worker_main(spec_dir: str, shard: int,
+                recover_to: int | None = None) -> int:
+    with open(os.path.join(spec_dir, SPEC)) as f:
+        spec = json.load(f)
+    coord = FileCoordinator(
+        spec["coord_dir"], int(spec["n_shards"]),
+        heartbeat_interval=float(spec["heartbeat_interval"]),
+        heartbeat_timeout=float(spec["heartbeat_timeout"]),
+    )
+    # beat BEFORE the heavy imports below (pickle pulls in repro.core and
+    # jax): liveness must not depend on import latency
+    coord.start_heartbeat(shard)
+    try:
+        with open(os.path.join(spec_dir, PROGRAM), "rb") as f:
+            program = pickle.load(f)
+        _Worker(spec, program, shard, coord).run(recover_to=recover_to)
+        return 0
+    except RunAborted as e:
+        print(f"worker {shard}: {e}", file=sys.stderr)
+        return 3
+    except Exception:
+        import traceback
+
+        traceback.print_exc()
+        return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.procs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    wk = sub.add_parser("worker", help="run one shard's worker process")
+    wk.add_argument("spec_dir")
+    wk.add_argument("shard", type=int)
+    wk.add_argument("--recover-to", type=int, default=None)
+    args = ap.parse_args(argv)
+    return worker_main(args.spec_dir, args.shard, args.recover_to)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

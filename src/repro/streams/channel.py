@@ -465,10 +465,17 @@ class ChannelReceiver:
 
     def abort(self) -> None:
         """Crash-path stop WITHOUT surfacing the receiver's error (the
-        superstep already failed; a second raise would mask the original)."""
+        superstep already failed; a second raise would mask the original).
+        A receiver that will not stop — hung mid-digest — stays loud like
+        the sender's: a zombie thread keeps the inbox run files open and
+        would race any rerun that truncates them."""
         if self._worker.is_alive():
             self._q.put((_CLOSE,))
             self._worker.join(timeout=10.0)
+            if self._worker.is_alive():
+                raise ChannelError(
+                    "channel receiver did not stop within 10s (aborting)"
+                )
 
     # -- internals ------------------------------------------------------------
     def _raise(self) -> None:

@@ -19,6 +19,7 @@ and partial chunks are padded with compute-neutral slots (``src = -1``).
 from __future__ import annotations
 
 import queue
+import sys
 import threading
 import time
 from dataclasses import dataclass, field
@@ -136,6 +137,13 @@ def prefetch_iter(iterable, depth: int = 2, *, on_item=None, on_wait=None,
             except queue.Empty:
                 break
         worker.join(timeout=5.0)
+        if worker.is_alive() and sys.exc_info()[1] is None:
+            # a silent join-timeout here leaked the producer thread (and
+            # whatever it holds open); stay quiet only when an exception is
+            # already propagating — raising then would mask it
+            raise RuntimeError(
+                "prefetch producer thread did not stop within 5s"
+            )
 
 
 class StreamReader:
@@ -274,3 +282,9 @@ class StreamReader:
             # unblock a producer waiting on a free buffer, then drain
             free.put(0)
             worker.join(timeout=5.0)
+            if worker.is_alive() and sys.exc_info()[1] is None:
+                # same leak guard as prefetch_iter: a staging thread that
+                # outlives its pass keeps store FDs (and mmap views) open
+                raise RuntimeError(
+                    "edge-stream staging thread did not stop within 5s"
+                )

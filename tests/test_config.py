@@ -1,7 +1,6 @@
 """Typed-config surface: field validation, cross-config invariants, and the
-one-release deprecation shim that maps every legacy ``GraphDEngine`` kwarg
-onto its ``EngineConfig`` field (single DeprecationWarning, hard error on a
-conflicting kwarg+config mix)."""
+regression guard that the PR-4 flat-kwarg deprecation shim is really gone
+(flat kwargs and the positional mode string now raise ``ConfigError``)."""
 
 import warnings
 
@@ -11,10 +10,9 @@ from repro.core import (
     ConfigError, EngineConfig, GraphDEngine, HashMin, PageRank,
 )
 from repro.core.config import (
-    ChannelConfig, LEGACY_KWARGS, MessageSpillConfig, RecoveryConfig,
-    StreamConfig,
+    ChannelConfig, MessageSpillConfig, RecoveryConfig, StreamConfig,
 )
-from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
+from repro.graph import partition_graph, rmat_graph
 
 
 @pytest.fixture(scope="module")
@@ -25,46 +23,24 @@ def small():
 
 
 # ---------------------------------------------------------------------------
-# the deprecation shim: every legacy kwarg -> its config field
+# the shim is gone: flat kwargs are a hard error, not a warning
 # ---------------------------------------------------------------------------
 
-# non-default probe value per legacy kwarg (+ extra kwargs needed to pass
-# cross-config validation, e.g. pipeline= is a streamed-mode knob)
-_PROBES = {
-    "mode": ("basic", {}),
-    "sparse_cap_frac": (0.5, {}),
-    "adapt_threshold": (0.25, {}),
-    "backend": ("pallas", {}),
-    "kernel_windows": (256, {}),
-    "stream_chunk_blocks": (3, {}),
-    "stream_depth": (4, {}),
-    "msg_slice_cap": (99, {}),
-    "msg_read_chunk": (77, {}),
-    "msg_merge_fanin": (5, {}),
-    "msg_spill_dir": ("/tmp/oms-probe", {}),
-    "pipeline": (True, {"mode": "streamed"}),
-    "compress": (True, {"mode": "streamed"}),
-    "channel_inflight": (7, {"mode": "streamed"}),
-    "channel_fault": (object(), {"mode": "streamed"}),
-}
-
-
-@pytest.mark.parametrize("kwarg", sorted(LEGACY_KWARGS))
-def test_every_legacy_kwarg_maps_to_its_config_field(kwarg):
-    value, extra = _PROBES[kwarg]
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        cfg = EngineConfig.resolve(None, {kwarg: value, **extra})
-    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(deps) == 1, "exactly one DeprecationWarning per construction"
-    assert kwarg in str(deps[0].message)
-    sub, attr = LEGACY_KWARGS[kwarg]
-    target = cfg if sub is None else getattr(cfg, sub)
-    assert getattr(target, attr) == value
-
-
-def test_probe_table_covers_every_legacy_kwarg():
-    assert set(_PROBES) == set(LEGACY_KWARGS)
+def test_flat_kwargs_raise_config_error(small):
+    """The one-release deprecation window (PR 4) is over: every legacy flat
+    kwarg — and the positional mode string — is now a ConfigError naming
+    the typed surface."""
+    _, pg = small
+    with pytest.raises(ConfigError, match="EngineConfig"):
+        GraphDEngine(pg, PageRank(supersteps=2), mode="basic")
+    with pytest.raises(ConfigError, match="pipeline"):
+        GraphDEngine(pg, PageRank(supersteps=2), pipeline=True,
+                     stream_chunk_blocks=4)
+    with pytest.raises(ConfigError, match="EngineConfig"):
+        GraphDEngine(pg, PageRank(supersteps=2), "basic")
+    # typos die loudly too (they used to be TypeError from the shim's table)
+    with pytest.raises(ConfigError, match="strem_chunk_blocks"):
+        GraphDEngine(pg, PageRank(supersteps=2), strem_chunk_blocks=4)
 
 
 def test_new_surface_emits_no_warning(small):
@@ -74,65 +50,6 @@ def test_new_surface_emits_no_warning(small):
         GraphDEngine(pg, PageRank(supersteps=2), config=EngineConfig())
     assert not [w for w in caught
                 if issubclass(w.category, DeprecationWarning)]
-
-
-def test_legacy_engine_kwargs_still_work_and_warn_once(small):
-    _, pg = small
-    with pytest.warns(DeprecationWarning) as caught:
-        eng = GraphDEngine(pg, PageRank(supersteps=2), mode="basic",
-                           adapt_threshold=0.3)
-    assert len([w for w in caught
-                if issubclass(w.category, DeprecationWarning)]) == 1
-    assert eng.mode == "basic"
-    assert eng.config.adapt_threshold == 0.3
-
-
-def test_legacy_positional_mode_still_works(small):
-    _, pg = small
-    with pytest.warns(DeprecationWarning):
-        eng = GraphDEngine(pg, PageRank(supersteps=2), "basic")
-    assert eng.mode == "basic"
-
-
-def test_legacy_and_config_surfaces_build_identical_engines(tmp_path):
-    g = rmat_graph(scale=6, edge_factor=6, seed=11)
-    pgs, _, store = partition_graph_streamed(
-        g, 3, str(tmp_path / "s"), edge_block=32
-    )
-    with pytest.warns(DeprecationWarning):
-        old = GraphDEngine(
-            pgs, HashMin(), mode="streamed", stream_store=store,
-            stream_chunk_blocks=2, msg_read_chunk=128, pipeline=True,
-            channel_inflight=2,
-        )
-    new = GraphDEngine(
-        pgs, HashMin(),
-        config=EngineConfig(
-            mode="streamed",
-            stream=StreamConfig(chunk_blocks=2),
-            spill=MessageSpillConfig(read_chunk=128),
-            channel=ChannelConfig(pipeline=True, inflight=2),
-        ),
-        stream_store=store,
-    )
-    assert old.config == new.config
-    assert old.memory_model() == new.memory_model()
-
-
-def test_conflicting_kwarg_and_config_raises(small):
-    _, pg = small
-    cfg = EngineConfig(mode="basic")
-    with pytest.raises(ConfigError, match="conflicting"):
-        GraphDEngine(pg, PageRank(supersteps=2), config=cfg, mode="basic")
-    with pytest.raises(ConfigError, match="stream.chunk_blocks"):
-        GraphDEngine(pg, PageRank(supersteps=2), config=cfg,
-                     stream_chunk_blocks=4)
-
-
-def test_unknown_kwarg_raises_type_error(small):
-    _, pg = small
-    with pytest.raises(TypeError, match="unknow"):
-        GraphDEngine(pg, PageRank(supersteps=2), strem_chunk_blocks=4)
 
 
 # ---------------------------------------------------------------------------

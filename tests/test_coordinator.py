@@ -1,0 +1,206 @@
+"""File-based coordinator (core/coordinator.py): barrier semantics with
+stragglers, heartbeat-timeout detection of a SIGKILLed worker process,
+shard-ascending aggregator reduction equivalence, and the abort poison
+pill. Everything here is stdlib-speed — no jax, no engine."""
+
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core.coordinator import (
+    FileCoordinator, RunAborted, atomic_write_json, read_json,
+)
+
+
+@pytest.fixture
+def coord(tmp_path):
+    return FileCoordinator(str(tmp_path / "coord"), 3,
+                           heartbeat_interval=0.05, heartbeat_timeout=0.5)
+
+
+class TestBarrier:
+    def test_wait_arrivals_with_straggler(self, coord):
+        """The barrier stays open until the LAST worker arrives — two fast
+        workers plus one straggler that lands 10 poll ticks later."""
+        stats = dict(n_active=1, n_msgs=2, agg=0.5, active_blocks=1)
+        coord.arrive(0, 0, stats)
+        coord.arrive(0, 2, stats)
+
+        def straggler():
+            time.sleep(10 * FileCoordinator.POLL)
+            coord.arrive(0, 1, dict(stats, n_active=7))
+
+        ticks = []
+        t = threading.Thread(target=straggler)
+        t.start()
+        got = coord.wait_arrivals(0, on_wait=lambda g: ticks.append(len(g)))
+        t.join()
+        assert set(got) == {0, 1, 2}
+        assert got[1]["n_active"] == 7
+        # the on_wait hook really ran while the straggler was missing
+        assert ticks and all(n == 2 for n in ticks)
+
+    def test_commit_round_trip_and_worker_wait(self, coord):
+        totals = dict(n_active=3, n_msgs=9, agg=1.25, active_blocks=4)
+        published = coord.publish_commit(2, totals, halt=False,
+                                        ckpt_landed=True)
+        got = coord.wait_commit(2, shard=1)
+        assert got == published
+        assert got["halt"] is False and got["ckpt_landed"] is True
+        assert got["n_active"] == 3 and got["agg"] == 1.25
+        assert coord.commit(3) is None  # non-blocking probe
+
+    def test_wait_file_sees_marker(self, coord, tmp_path):
+        marker = str(tmp_path / "announce.json")
+
+        def publish():
+            time.sleep(5 * FileCoordinator.POLL)
+            atomic_write_json(marker, dict(ok=True))
+
+        t = threading.Thread(target=publish)
+        t.start()
+        coord.wait_file(marker, shard=0)  # returns instead of hanging
+        t.join()
+        assert read_json(marker) == dict(ok=True)
+
+    def test_gc_steps(self, coord):
+        for s in range(4):
+            coord.arrive(s, 0, dict(n_active=0, n_msgs=0, agg=0.0))
+        coord.gc_steps(before=3)
+        assert coord.arrivals(2) == {}
+        assert 0 in coord.arrivals(3)
+
+
+class TestReduction:
+    def test_reduce_matches_threaded_accumulation(self):
+        """The coordinator's reduction must be the threaded driver's loop —
+        same order (shard-ascending), same types (int/int/Python-float
+        left fold) — so the committed totals are bit-identical."""
+        per_shard = [
+            dict(n_active=5, n_msgs=17, agg=0.1, active_blocks=2),
+            dict(n_active=0, n_msgs=3, agg=1e-17, active_blocks=0),
+            dict(n_active=2, n_msgs=8, agg=0.3, active_blocks=1),
+        ]
+        # arrival order scrambled: reduction must sort by shard, not mtime
+        arrivals = {2: per_shard[2], 0: per_shard[0], 1: per_shard[1]}
+        got = FileCoordinator.reduce_arrivals(arrivals)
+
+        n_active = n_msgs = 0
+        agg = 0.0
+        for rec in per_shard:  # the engine's per-destination accumulation
+            n_active += int(rec["n_active"])
+            n_msgs += int(rec["n_msgs"])
+            agg += float(rec["agg"])
+        assert got["n_active"] == n_active
+        assert got["n_msgs"] == n_msgs
+        assert got["agg"] == agg  # bitwise: same fold order and types
+        assert got["active_blocks"] == 3
+
+    def test_float_fold_order_is_shard_ascending(self):
+        """Float addition does not commute bitwise; pin the fold order."""
+        a, b, c = 0.1, 0.2, 0.3
+        arrivals = {w: dict(n_active=0, n_msgs=0, agg=v)
+                    for w, v in enumerate((a, b, c))}
+        assert FileCoordinator.reduce_arrivals(arrivals)["agg"] == (a + b) + c
+
+
+class TestLiveness:
+    def test_heartbeat_daemon_keeps_fresh(self, coord):
+        t = coord.start_heartbeat(0)
+        try:
+            time.sleep(0.2)
+            assert coord.heartbeat_age(0) < 0.5
+            assert not coord.stale(0)
+        finally:
+            t.stop.set()
+
+    def test_missing_heartbeat_is_stale(self, coord):
+        assert coord.heartbeat_age(2) == float("inf")
+        assert coord.stale(2)
+
+    def test_sigkilled_worker_process_goes_stale(self, coord, tmp_path):
+        """The real detection path: a separate OS process heartbeats
+        through the shared directory; kill -9 stops the beats and the
+        coordinator's staleness probe flips within the timeout."""
+        src_root = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        p = subprocess.Popen(
+            [sys.executable, "-c",
+             "import sys, time\n"
+             "from repro.core.coordinator import FileCoordinator\n"
+             f"c = FileCoordinator({coord.dir!r}, 3, "
+             "heartbeat_interval=0.05)\n"
+             "c.start_heartbeat(1)\n"
+             "time.sleep(60)\n"],
+            env=env,
+        )
+        try:
+            deadline = time.time() + 10
+            while coord.heartbeat_age(1) == float("inf"):
+                assert time.time() < deadline, "worker never beat"
+                time.sleep(0.02)
+            assert not coord.stale(1)
+            p.kill()  # SIGKILL: no atexit, no cleanup — beats just stop
+            p.wait()
+            deadline = time.time() + 10
+            while not coord.stale(1):
+                assert time.time() < deadline, "kill -9 never detected"
+                time.sleep(0.02)
+            assert coord.heartbeat_age(1) > coord.heartbeat_timeout
+        finally:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+
+
+class TestAbort:
+    def test_abort_unblocks_commit_wait(self, coord):
+        def poison():
+            time.sleep(5 * FileCoordinator.POLL)
+            coord.abort("drill")
+
+        t = threading.Thread(target=poison)
+        t.start()
+        with pytest.raises(RunAborted, match="drill"):
+            coord.wait_commit(0, shard=1)  # no commit will ever land
+        t.join()
+        assert coord.aborted() == "drill"
+
+    def test_abort_unblocks_marker_wait(self, coord, tmp_path):
+        coord.abort("stop")
+        with pytest.raises(RunAborted, match="stop"):
+            coord.wait_file(str(tmp_path / "never.json"), shard=0)
+
+    def test_read_json_partial_file_is_unpublished(self, tmp_path):
+        p = str(tmp_path / "rec.json")
+        with open(p, "w") as f:
+            f.write('{"truncated": ')
+        assert read_json(p) is None
+        assert read_json(str(tmp_path / "absent.json")) is None
+
+def test_worker_import_path_is_jax_free():
+    """Workers start their heartbeat BEFORE any heavy import; that only
+    holds if importing the coordinator (and the package __init__s it
+    triggers) never pulls in jax. Regression: an eager repro.core
+    __init__ once loaded the whole engine here, and three workers
+    cold-importing jax on a loaded single-core machine outlived the
+    heartbeat grace window — a false 'worker dead' detection."""
+    src_root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    subprocess.run(
+        [sys.executable, "-c",
+         "import sys\n"
+         "import repro.launch.procs\n"
+         "import repro.core.coordinator\n"
+         "assert 'jax' not in sys.modules, "
+         "'worker startup imports must stay light'\n"],
+        check=True, env=env,
+    )

@@ -30,15 +30,23 @@ def test_shard_map_equals_vmap_all_modes():
     out = _run("""
         import jax, numpy as np
         from repro.graph import rmat_graph, partition_graph
-        from repro.core import GraphDEngine, PageRank
+        from repro.core import EngineConfig, GraphDEngine, PageRank
         g = rmat_graph(scale=8, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=8, edge_block=64)
         mesh = jax.make_mesh((8,), ('machines',))
         for mode in ['recoded', 'basic', 'basic_sc']:
-            (v_sm, _), _ = GraphDEngine(pg, PageRank(supersteps=5),
-                                        mode=mode, mesh=mesh).run()
-            (v_vm, _), _ = GraphDEngine(pg, PageRank(supersteps=5),
-                                        mode=mode, mesh=None).run()
+            (v_sm, _), _ = GraphDEngine(
+                               pg,
+                               PageRank(supersteps=5),
+                               config=EngineConfig(mode=mode),
+                               mesh=mesh,
+                           ).run()
+            (v_vm, _), _ = GraphDEngine(
+                               pg,
+                               PageRank(supersteps=5),
+                               config=EngineConfig(mode=mode),
+                               mesh=None,
+                           ).run()
             err = np.abs(np.asarray(v_sm) - np.asarray(v_vm)).max()
             assert err < 1e-7, (mode, err)
         print('OK')
@@ -50,15 +58,24 @@ def test_shard_map_sparse_sssp():
     out = _run("""
         import jax, numpy as np, collections
         from repro.graph import rmat_graph, partition_graph
-        from repro.core import GraphDEngine, SSSP
+        from repro.core import EngineConfig, GraphDEngine, SSSP
         g = rmat_graph(scale=8, edge_factor=8, seed=3)
         pg, rmap = partition_graph(g, n_shards=8, edge_block=64)
         mesh = jax.make_mesh((8,), ('machines',))
         src = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
-        es = GraphDEngine(pg, SSSP(src), mesh=mesh, adapt_threshold=0.6,
-                          sparse_cap_frac=0.6)
+        es = GraphDEngine(
+                 pg,
+                 SSSP(src),
+                 config=EngineConfig(adapt_threshold=0.6, sparse_cap_frac=0.6),
+                 mesh=mesh,
+             )
         (vs, _), hs = es.run()
-        ev = GraphDEngine(pg, SSSP(src), mesh=None, adapt_threshold=-1)
+        ev = GraphDEngine(
+                 pg,
+                 SSSP(src),
+                 config=EngineConfig(adapt_threshold=-1),
+                 mesh=None,
+             )
         (vv, _), _ = ev.run()
         assert np.array_equal(np.asarray(vs), np.asarray(vv))
         modes = collections.Counter(h.mode for h in hs)
@@ -71,15 +88,21 @@ def test_shard_map_pallas_backend():
     out = _run("""
         import jax, numpy as np
         from repro.graph import rmat_graph, partition_graph
-        from repro.core import GraphDEngine, PageRank
+        from repro.core import EngineConfig, GraphDEngine, PageRank
         g = rmat_graph(scale=8, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=4, edge_block=64, vertex_pad=32)
         mesh = jax.make_mesh((4,), ('machines',))
-        (vp, _), _ = GraphDEngine(pg, PageRank(supersteps=4),
-                                  backend='pallas', kernel_windows=32,
-                                  mesh=mesh).run()
-        (vj, _), _ = GraphDEngine(pg, PageRank(supersteps=4),
-                                  backend='jnp').run()
+        (vp, _), _ = GraphDEngine(
+                         pg,
+                         PageRank(supersteps=4),
+                         config=EngineConfig(backend='pallas', kernel_windows=32),
+                         mesh=mesh,
+                     ).run()
+        (vj, _), _ = GraphDEngine(
+                         pg,
+                         PageRank(supersteps=4),
+                         config=EngineConfig(backend='jnp'),
+                     ).run()
         err = np.abs(np.asarray(vp) - np.asarray(vj)).max()
         assert err < 1e-6, err
         print('OK')
@@ -91,7 +114,7 @@ def test_logged_mode_shard_map_and_recovery():
     out = _run("""
         import jax, numpy as np, tempfile, os
         from repro.graph import rmat_graph, partition_graph
-        from repro.core import GraphDEngine, PageRank
+        from repro.core import EngineConfig, GraphDEngine, PageRank
         from repro.core.checkpoint import Checkpointer, MessageLog, recover_shard
         g = rmat_graph(scale=7, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=4, edge_block=64)

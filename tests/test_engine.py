@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    BFS, SSSP, DegreeSum, GraphDEngine, HashMin, LabelSpread, PageRank,
+    BFS, SSSP, DegreeSum, EngineConfig, GraphDEngine, HashMin, LabelSpread,
+    PageRank,
 )
 from repro.graph import chain_graph, erdos_renyi_graph, partition_graph, rmat_graph
 
@@ -85,9 +86,16 @@ class TestModesAndBackends:
     def test_mode_equivalence(self, mode):
         g = rmat_graph(scale=7, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=4, edge_block=64)
-        (v_ref, _), _ = GraphDEngine(pg, PageRank(supersteps=5),
-                                     mode="recoded").run()
-        (v, _), _ = GraphDEngine(pg, PageRank(supersteps=5), mode=mode).run()
+        (v_ref, _), _ = GraphDEngine(
+                            pg,
+                            PageRank(supersteps=5),
+                            config=EngineConfig(mode="recoded"),
+                        ).run()
+        (v, _), _ = GraphDEngine(
+                        pg,
+                        PageRank(supersteps=5),
+                        config=EngineConfig(mode=mode),
+                    ).run()
         assert np.abs(np.asarray(v) - np.asarray(v_ref)).max() < 1e-6
 
     @pytest.mark.parametrize(
@@ -99,9 +107,16 @@ class TestModesAndBackends:
     def test_pallas_backend(self, prog_f):
         g = rmat_graph(scale=7, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=4, edge_block=64, vertex_pad=32)
-        (vj, _), _ = GraphDEngine(pg, prog_f(), backend="jnp").run()
-        (vp, _), _ = GraphDEngine(pg, prog_f(), backend="pallas",
-                                  kernel_windows=32).run()
+        (vj, _), _ = GraphDEngine(
+                         pg,
+                         prog_f(),
+                         config=EngineConfig(backend="jnp"),
+                     ).run()
+        (vp, _), _ = GraphDEngine(
+                         pg,
+                         prog_f(),
+                         config=EngineConfig(backend="pallas", kernel_windows=32),
+                     ).run()
         err = np.abs(
             np.asarray(vj).astype(np.float64)
             - np.asarray(vp).astype(np.float64)
@@ -112,9 +127,16 @@ class TestModesAndBackends:
         g = rmat_graph(scale=7, edge_factor=4, seed=13)  # leaves unreachables
         pg, rmap = partition_graph(g, n_shards=4, edge_block=64, vertex_pad=32)
         src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
-        (vj, _), _ = GraphDEngine(pg, SSSP(src_new), backend="jnp").run()
-        (vp, _), _ = GraphDEngine(pg, SSSP(src_new), backend="pallas",
-                                  kernel_windows=32).run()
+        (vj, _), _ = GraphDEngine(
+                         pg,
+                         SSSP(src_new),
+                         config=EngineConfig(backend="jnp"),
+                     ).run()
+        (vp, _), _ = GraphDEngine(
+                         pg,
+                         SSSP(src_new),
+                         config=EngineConfig(backend="pallas", kernel_windows=32),
+                     ).run()
         vj_, vp_ = np.asarray(vj), np.asarray(vp)
         # unreached: jnp=inf, pallas=large-finite sentinel; reached: equal
         assert ((vj_ == vp_) | (np.isinf(vj_) & (vp_ >= 1e29))).all()
@@ -128,7 +150,11 @@ class TestMessageListPath:
 
         g = rmat_graph(scale=7, edge_factor=6, seed=9)
         pg, rmap = partition_graph(g, n_shards=4, edge_block=32)
-        eng = GraphDEngine(pg, DistinctInLabels(n_groups=5), mode="basic")
+        eng = GraphDEngine(
+                  pg,
+                  DistinctInLabels(n_groups=5),
+                  config=EngineConfig(mode="basic"),
+              )
         (vals, _), hist = eng.run()
         got = eng.gather_values(vals)
         src_new, dst_new = rmap.to_new(g.src), rmap.to_new(g.dst)
@@ -146,7 +172,11 @@ class TestMessageListPath:
         g = rmat_graph(scale=6, edge_factor=4, seed=1)
         pg, _ = partition_graph(g, n_shards=2, edge_block=32)
         with pytest.raises(ValueError, match="combiner"):
-            GraphDEngine(pg, DistinctInLabels(), mode="recoded")
+            GraphDEngine(
+                pg,
+                DistinctInLabels(),
+                config=EngineConfig(mode="recoded"),
+            )
 
 
 class TestTopologyMutation:
@@ -194,10 +224,16 @@ class TestCompactWire:
     def test_pagerank_tolerance(self):
         g = rmat_graph(scale=8, edge_factor=8, seed=3)
         pg, _ = partition_graph(g, n_shards=4, edge_block=64)
-        (v1, _), _ = GraphDEngine(pg, PageRank(supersteps=10),
-                                  mode="recoded").run()
-        (v2, _), _ = GraphDEngine(pg, PageRank(supersteps=10),
-                                  mode="recoded_compact").run()
+        (v1, _), _ = GraphDEngine(
+                         pg,
+                         PageRank(supersteps=10),
+                         config=EngineConfig(mode="recoded"),
+                     ).run()
+        (v2, _), _ = GraphDEngine(
+                         pg,
+                         PageRank(supersteps=10),
+                         config=EngineConfig(mode="recoded_compact"),
+                     ).run()
         a, b = np.asarray(v1), np.asarray(v2)
         rel = np.abs(a - b) / np.maximum(np.abs(a), 1e-9)
         assert rel.max() < 2e-2  # one bf16 rounding per message
@@ -206,7 +242,11 @@ class TestCompactWire:
         g = rmat_graph(scale=6, edge_factor=4, seed=1)
         pg, _ = partition_graph(g, n_shards=2, edge_block=32)
         with pytest.raises(ValueError, match="float messages"):
-            GraphDEngine(pg, HashMin(), mode="recoded_compact")
+            GraphDEngine(
+                pg,
+                HashMin(),
+                config=EngineConfig(mode="recoded_compact"),
+            )
 
 
 class TestFlatHeadAttention:
@@ -270,8 +310,11 @@ class TestSSSPAndBFS:
         g = chain_graph(256)
         pg, rmap = partition_graph(g, n_shards=4, edge_block=16)
         src_new = int(rmap.to_new(np.array([0]))[0])
-        eng = GraphDEngine(pg, SSSP(src_new), adapt_threshold=0.5,
-                           sparse_cap_frac=0.5)
+        eng = GraphDEngine(
+                  pg,
+                  SSSP(src_new),
+                  config=EngineConfig(adapt_threshold=0.5, sparse_cap_frac=0.5),
+              )
         (vals, _), hist = eng.run(max_supersteps=300)
         modes = collections.Counter(h.mode for h in hist)
         assert modes["sparse"] > modes["dense"]
@@ -282,10 +325,16 @@ class TestSSSPAndBFS:
         g = rmat_graph(scale=8, edge_factor=4, seed=21)
         pg, rmap = partition_graph(g, n_shards=4, edge_block=32)
         src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
-        (vd, _), _ = GraphDEngine(pg, SSSP(src_new),
-                                  adapt_threshold=-1).run()
-        (vs, _), hs = GraphDEngine(pg, SSSP(src_new), adapt_threshold=0.9,
-                                   sparse_cap_frac=0.9).run()
+        (vd, _), _ = GraphDEngine(
+                         pg,
+                         SSSP(src_new),
+                         config=EngineConfig(adapt_threshold=-1),
+                     ).run()
+        (vs, _), hs = GraphDEngine(
+                          pg,
+                          SSSP(src_new),
+                          config=EngineConfig(adapt_threshold=0.9, sparse_cap_frac=0.9),
+                      ).run()
         assert np.array_equal(np.asarray(vd), np.asarray(vs))
         assert any(h.mode == "sparse" for h in hs)
 

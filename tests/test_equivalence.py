@@ -19,6 +19,7 @@ every block/chunk/slice edge case is crossed; the default keeps local runs
 quick.
 """
 
+import copy
 import os
 import tempfile
 
@@ -33,7 +34,9 @@ from repro.core.algorithms import (
     BFS, DegreeSum, DistinctInLabels, HashMin, LabelSpread, PageRank,
     SecondMinLabel, SSSP,
 )
-from repro.core.plan import estimate_memory, ram_total
+from repro.core.plan import (
+    GraphMeta, estimate_memory, plan as make_plan, ram_total,
+)
 from repro.graph import partition_graph, partition_graph_streamed, rmat_graph
 
 EDGE_BLOCK = int(os.environ.get("GRAPHD_TEST_EDGE_BLOCK", "32"))
@@ -196,6 +199,39 @@ def test_job_facade_matches_handwired_streamed_pipeline(matrix_graph,
     assert [r.n_msgs for r in res.history] == [r.n_msgs for r in hist]
     assert not ch.compress  # disk was unconstrained; nothing forced it
     job.close()
+
+
+@pytest.mark.parametrize("name,factory,exact",
+                         ALGORITHMS, ids=[a[0] for a in ALGORITHMS])
+def test_matrix_processes_launch_matches_full_duplex(matrix_graph, tmp_path,
+                                                     name, factory, exact):
+    """The ``processes`` column of the matrix: the same algorithm run as
+    THREE REAL OS PROCESSES over the shared-filesystem transport
+    (``launch="processes"``) must be bit-identical to the single-process
+    full-duplex streamed run of the SAME plan — values, active/message
+    trajectories, aggregator, and density, float programs included (the
+    per-group fold and source-ascending digest order are identical on both
+    sides, so there is no reassociation freedom at all, not even the
+    PageRank ulp carve-out)."""
+    g, rmap, *_ = matrix_graph
+    p = make_plan(factory(g, rmap), GraphMeta.of(g),
+                  MemoryBudget(n_shards=N_SHARDS), edge_block=EDGE_BLOCK,
+                  launch="processes")
+    assert p.mode == "streamed" and p.pipeline
+    assert p.config.channel.full_duplex and p.launch == "processes"
+    jt = GraphDJob(factory(g, rmap), g, plan=copy.deepcopy(p),
+                   workdir=str(tmp_path / "threads"))
+    rt = jt.run(max_supersteps=60)
+    jp = GraphDJob(factory(g, rmap), g, plan=copy.deepcopy(p),
+                   workdir=str(tmp_path / "procs"), launch="processes")
+    rp = jp.run(max_supersteps=60)
+    assert rp.n_supersteps == rt.n_supersteps
+    for field in ("n_active", "n_msgs", "agg", "density"):
+        assert [getattr(r, field) for r in rp.history] == \
+               [getattr(r, field) for r in rt.history], (name, field)
+    assert rt.values == rp.values  # bit-identical, floats included
+    jt.close()
+    jp.close()
 
 
 def test_matrix_streamed_variants_agree_exactly(matrix_graph):

@@ -7,7 +7,10 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import DistinctInLabels, GraphDEngine, HashMin, PageRank, SSSP
+from repro.core import (
+    ChannelConfig, DistinctInLabels, EngineConfig, GraphDEngine, HashMin,
+    PageRank, SSSP,
+)
 from repro.core.checkpoint import (
     Checkpointer, MessageLog, RunFileMessageLog, recover_shard,
     recover_shard_streamed,
@@ -267,14 +270,21 @@ class TestStreamedCrashInjection:
         _, pgs, _, store = streamed_job
         mk = lambda: PageRank(supersteps=6)
         (v_ref, a_ref), _ = GraphDEngine(
-            pgs, mk(), mode="streamed", stream_store=store, pipeline=True
-        ).run()
+                                pgs,
+                                mk(),
+                                config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True)),
+                                stream_store=store,
+                            ).run()
 
         ck = Checkpointer(str(tmp_path / "ck"), every=2)
         log = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pgs, mk(), mode="streamed", stream_store=store,
-                           pipeline=True, message_log=log,
-                           channel_fault=fault_point)
+        eng = GraphDEngine(
+                  pgs,
+                  mk(),
+                  config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True, fault=fault_point)),
+                  stream_store=store,
+                  message_log=log,
+              )
         with pytest.raises(ChannelError):
             eng.run(checkpointer=ck)
         assert fault_point.fired
@@ -288,9 +298,12 @@ class TestStreamedCrashInjection:
         # restart: resumes from the checkpoint, re-runs the torn superstep
         # from scratch (open_step truncates), finishes bit-identically
         eng2 = GraphDEngine(
-            pgs, mk(), mode="streamed", stream_store=store, pipeline=True,
-            message_log=RunFileMessageLog(str(tmp_path / "logs")),
-        )
+                   pgs,
+                   mk(),
+                   config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True)),
+                   stream_store=store,
+                   message_log=RunFileMessageLog(str(tmp_path / "logs")),
+               )
         (v2, a2), hist = eng2.run(checkpointer=ck)
         assert hist[0].step == 2 and hist[0].restored_from == 2
         assert np.array_equal(np.asarray(v2), np.asarray(v_ref))
@@ -306,8 +319,13 @@ class TestStreamedCrashInjection:
         mk = lambda: PageRank(supersteps=6)
         ck = Checkpointer(str(tmp_path / "ck"), every=3)
         log = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pgs, mk(), mode="streamed", stream_store=store,
-                           pipeline=True, message_log=log)
+        eng = GraphDEngine(
+                  pgs,
+                  mk(),
+                  config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True)),
+                  stream_store=store,
+                  message_log=log,
+              )
         ck.save(0, *eng.init())
         (v_ref, a_ref), _ = eng.run(checkpointer=ck)
         vj, aj = recover_shard_streamed(
@@ -325,19 +343,29 @@ class TestStreamedCrashInjection:
         _, pgs, _, store = streamed_job
         mk = lambda: DistinctInLabels(n_groups=8, rounds=3)
         (v_ref, a_ref), _ = GraphDEngine(
-            pgs, mk(), mode="streamed", stream_store=store, pipeline=True
-        ).run()
+                                pgs,
+                                mk(),
+                                config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True)),
+                                stream_store=store,
+                            ).run()
         ck = Checkpointer(str(tmp_path / "ck"), every=1)
         log = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pgs, mk(), mode="streamed", stream_store=store,
-                           pipeline=True, message_log=log,
-                           channel_fault=FaultPoint(after_packets=20))
+        eng = GraphDEngine(
+                  pgs,
+                  mk(),
+                  config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True, fault=FaultPoint(after_packets=20))),
+                  stream_store=store,
+                  message_log=log,
+              )
         with pytest.raises(ChannelError):
             eng.run(checkpointer=ck)
         eng2 = GraphDEngine(
-            pgs, mk(), mode="streamed", stream_store=store, pipeline=True,
-            message_log=RunFileMessageLog(str(tmp_path / "logs")),
-        )
+                   pgs,
+                   mk(),
+                   config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True)),
+                   stream_store=store,
+                   message_log=RunFileMessageLog(str(tmp_path / "logs")),
+               )
         (v2, a2), _ = eng2.run(checkpointer=ck)
         assert np.array_equal(np.asarray(v2), np.asarray(v_ref))
         assert np.array_equal(np.asarray(a2), np.asarray(a_ref))
@@ -432,15 +460,93 @@ class TestStreamedCrashInjection:
         the torn step behind; the next run on the same store must sweep it
         (like Checkpointer sweeps .tmp-step-*) and finish clean."""
         _, pgs, _, store = streamed_job
-        eng = GraphDEngine(pgs, PageRank(supersteps=4), mode="streamed",
-                           stream_store=store, pipeline=True,
-                           channel_fault=FaultPoint(after_packets=20))
+        eng = GraphDEngine(
+                  pgs,
+                  PageRank(supersteps=4),
+                  config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True, fault=FaultPoint(after_packets=20))),
+                  stream_store=store,
+              )
         with pytest.raises(ChannelError):
             eng.run()
         inbox = os.path.join(store.dir, "inbox")
         leftovers = [n for n in os.listdir(inbox)
                      if n.startswith("step-")]
         assert leftovers  # the torn step really was left on disk
-        GraphDEngine(pgs, PageRank(supersteps=4), mode="streamed",
-                     stream_store=store, pipeline=True).run()
+        GraphDEngine(
+            pgs,
+            PageRank(supersteps=4),
+            config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True)),
+            stream_store=store,
+        ).run()
         assert [n for n in os.listdir(inbox) if n.startswith("step-")] == []
+
+
+# -- whole-process crash drills (launch="processes") -------------------------
+
+@pytest.fixture(scope="module")
+def procs_graph():
+    return rmat_graph(scale=6, edge_factor=6, seed=5, weights="uniform")
+
+
+class TestProcessCrashDrill:
+    """kill -9 a worker PROCESS mid-superstep: the coordinator detects the
+    death, respawns just that shard with ``--recover-to``, the respawn
+    replays forward from the latest checkpoint over its own message log,
+    and the finished run is bit-identical to an undisturbed one."""
+
+    def _plan(self, prog, g):
+        from repro.core import MemoryBudget
+        from repro.core.plan import GraphMeta, plan as make_plan
+
+        return make_plan(prog, GraphMeta.of(g), MemoryBudget(n_shards=3),
+                         launch="processes")
+
+    def test_kill9_recovers_bit_identical(self, procs_graph, tmp_path):
+        import copy
+
+        from repro.core import GraphDJob
+
+        g = procs_graph
+        p = self._plan(HashMin(), g)
+        ref = GraphDJob(HashMin(), g, plan=copy.deepcopy(p),
+                        workdir=str(tmp_path / "ref"), checkpoint_every=2)
+        r_ref = ref.run()
+        drilled = GraphDJob(
+            HashMin(), g, plan=copy.deepcopy(p),
+            workdir=str(tmp_path / "drill"), checkpoint_every=2,
+            launch="processes",
+            # SIGKILL shard 1 mid-superstep 2: after its outbox for the
+            # step is announced, before it applies/arrives
+            launch_opts={"kill": {"shard": 1, "step": 2},
+                         "heartbeat_timeout": 5.0},
+        )
+        r_drill = drilled.run()
+        assert r_drill.n_supersteps == r_ref.n_supersteps
+        assert [r.n_active for r in r_drill.history] == \
+               [r.n_active for r in r_ref.history]
+        assert [r.n_msgs for r in r_drill.history] == \
+               [r.n_msgs for r in r_ref.history]
+        assert r_drill.values == r_ref.values  # bit-identical after recovery
+        # the drill really fired: exactly one respawn
+        assert drilled._last_run_recoveries == 1
+        ref.close()
+        drilled.close()
+
+    def test_kill9_without_recovery_wiring_fails_loud(self, procs_graph,
+                                                      tmp_path):
+        import copy
+
+        from repro.core import GraphDJob
+        from repro.core.coordinator import WorkerFailed
+
+        g = procs_graph
+        p = self._plan(HashMin(), g)
+        job = GraphDJob(
+            HashMin(), g, plan=copy.deepcopy(p),
+            workdir=str(tmp_path / "bare"), launch="processes",
+            launch_opts={"kill": {"shard": 2, "step": 1},
+                         "heartbeat_timeout": 5.0},
+        )
+        with pytest.raises(WorkerFailed, match="checkpoint"):
+            job.run()
+        job.close()

@@ -220,3 +220,137 @@ def test_job_tempdir_cleanup(graph):
     assert not os.path.exists(wd)  # job-owned tempdir released
     with pytest.raises(RuntimeError, match="closed"):
         job.run()
+
+
+# -- workdir/scratch lifecycle on exception paths ---------------------------
+
+def test_job_build_failure_does_not_strand_tempdir(graph, monkeypatch):
+    """A failure between partition-spill and engine wiring must not leak the
+    job-owned tempdir (half-written edge spills included)."""
+    import repro.core.job as jobmod
+
+    def boom(graph, plan, directory):
+        boom.edges_dir = directory
+        os.makedirs(directory, exist_ok=True)  # simulate a partial spill
+        with open(os.path.join(directory, "partial.bin"), "wb") as f:
+            f.write(b"\0" * 64)
+        raise RuntimeError("disk full mid-spill")
+
+    monkeypatch.setattr(jobmod, "partition_for_plan", boom)
+    with pytest.raises(RuntimeError, match="disk full"):
+        GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                  edge_block=EDGE_BLOCK)
+    workdir = os.path.dirname(boom.edges_dir)
+    assert not os.path.exists(workdir)  # tempdir swept, not stranded
+
+
+def test_job_build_failure_keeps_user_workdir_but_closes_job(
+        graph, tmp_path, monkeypatch):
+    """With an explicit user workdir the partial spill is kept for
+    post-mortem, but the job object is unusable (closed)."""
+    import repro.core.job as jobmod
+
+    real = jobmod.partition_for_plan
+
+    def boom(graph, plan, directory):
+        raise RuntimeError("spill interrupted")
+
+    monkeypatch.setattr(jobmod, "partition_for_plan", boom)
+    wd = str(tmp_path / "kept")
+    with pytest.raises(RuntimeError, match="spill interrupted"):
+        GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                  edge_block=EDGE_BLOCK, workdir=wd)
+    assert os.path.exists(wd)  # user dir survives for inspection
+    monkeypatch.setattr(jobmod, "partition_for_plan", real)
+    # and the workdir is reusable by a fresh job afterwards
+    with GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                   edge_block=EDGE_BLOCK, workdir=wd) as job:
+        job.run(max_supersteps=1)
+
+
+def test_job_sweeps_scratch_after_failed_superstep(graph, tmp_path):
+    """A sender crash mid-superstep leaves a torn inbox step dir; run()'s
+    failure path must sweep it so a user workdir never accumulates
+    half-written run files."""
+    from repro.core import ChannelConfig, StreamConfig
+    from repro.streams import ChannelError, FaultPoint
+
+    base = plan(HashMin(), graph, _streamed_budget(graph),
+                edge_block=EDGE_BLOCK)
+    assert base.mode == "streamed"
+    cfg = dataclasses.replace(
+        base.config,
+        channel=ChannelConfig(pipeline=True,
+                              fault=FaultPoint(after_packets=2)),
+    )
+    broken = dataclasses.replace(base, config=cfg)
+    job = GraphDJob(HashMin(), graph, plan=broken,
+                    workdir=str(tmp_path / "torn"))
+    with pytest.raises(ChannelError):
+        job.run()
+    inbox = os.path.join(job.store.dir, "inbox")
+    assert not os.path.isdir(inbox) or not [
+        n for n in os.listdir(inbox) if n.startswith("step-")
+    ]
+    job.close()
+
+
+# -- launch="processes" ------------------------------------------------------
+
+def test_job_launch_knob_validation(graph):
+    with pytest.raises(ValueError, match="launch"):
+        GraphDJob(HashMin(), graph, budget=MemoryBudget(n_shards=N),
+                  launch="cluster")
+    # an in-memory plan cannot be deployed as processes
+    p = plan(HashMin(), graph, MemoryBudget(n_shards=N),
+             edge_block=EDGE_BLOCK)
+    assert p.mode != "streamed"
+    with pytest.raises(ValueError, match="streamed"):
+        GraphDJob(HashMin(), graph, plan=p, launch="processes")
+
+
+def test_job_processes_planner_vetoes_and_launch_field(graph):
+    p = plan(HashMin(), graph, MemoryBudget(n_shards=N),
+             edge_block=EDGE_BLOCK, launch="processes")
+    assert p.launch == "processes"
+    assert p.mode == "streamed" and p.pipeline
+    assert p.config.channel.full_duplex
+    # every non-deployable candidate is vetoed with a reason, not hidden
+    rejected = {c.name: c for c in p.alternatives if not c.feasible}
+    assert "recoded" in rejected
+    assert "streamed" in rejected  # the unpipelined fold
+    assert "processes" in rejected["recoded"].reason
+    # the launch knob survives the plan's JSON round trip
+    from repro.core.plan import ExecutionPlan
+    assert ExecutionPlan.from_json(p.to_json()).launch == "processes"
+
+
+def test_job_processes_run_resume_and_memory_budget(graph, tmp_path):
+    """A paused processes job resumes from live state; the realized
+    per-process RAM honors the budget the planner promised it under."""
+    import copy
+
+    loose = plan(HashMin(), graph, MemoryBudget(n_shards=N),
+                 edge_block=EDGE_BLOCK, launch="processes")
+    budget = MemoryBudget(ram_per_shard=loose.ram_total, n_shards=N)
+    ref = GraphDJob(HashMin(), graph, plan=copy.deepcopy(loose),
+                    workdir=str(tmp_path / "ref"))
+    r_ref = ref.run()
+
+    job = GraphDJob(HashMin(), graph, budget=budget,
+                    edge_block=EDGE_BLOCK, launch="processes",
+                    workdir=str(tmp_path / "procs"))
+    assert job.plan.launch == "processes"
+    first = job.run(max_supersteps=2)
+    assert first.n_supersteps == 2
+    second = job.run()  # resumes from the live state at step 2
+    assert second.history[0].step == 2
+    assert second.values == r_ref.values  # bit-identical across the pause
+    # the per-process memory model stays inside the planner's budget
+    assert second.realized_ram <= budget.ram_per_shard
+    # transport scratch was swept; durable artifacts (spec, results) remain
+    procs_dir = job._dir("procs", "")
+    assert not os.path.exists(os.path.join(procs_dir, "outbox"))
+    assert not os.path.exists(os.path.join(procs_dir, "announce"))
+    ref.close()
+    job.close()

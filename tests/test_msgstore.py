@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    ChannelConfig, DistinctInLabels, EngineConfig, GraphDEngine, PageRank,
-    SecondMinLabel,
+    ChannelConfig, DistinctInLabels, EngineConfig, GraphDEngine,
+    MessageSpillConfig, PageRank, SecondMinLabel, StreamConfig,
 )
 from repro.core.checkpoint import (
     Checkpointer, RunFileMessageLog, recover_shard_streamed,
@@ -192,8 +192,12 @@ class TestMessageRunStore:
     def test_rejects_degenerate_slice_cap(self, tmp_path, spilled):
         _, _, pg, _, store = spilled
         with pytest.raises(ValueError, match="slice_cap"):
-            GraphDEngine(pg, DistinctInLabels(), mode="streamed",
-                         stream_store=store, msg_slice_cap=0)
+            GraphDEngine(
+                pg,
+                DistinctInLabels(),
+                config=EngineConfig(mode="streamed", spill=MessageSpillConfig(slice_cap=0)),
+                stream_store=store,
+            )
 
     def test_clear_dest_frees_disk(self, tmp_path):
         store = self._store(tmp_path)
@@ -210,20 +214,32 @@ class TestMessageRunStore:
 # ---------------------------------------------------------------------------
 
 class TestStreamedNoCombiner:
-    def _pair(self, spilled, prog_factory, **eng_kw):
+    def _pair(self, spilled, prog_factory, slice_cap=4096, read_chunk=4096):
         _, pg_full, pg, _, store = spilled
-        eb = GraphDEngine(pg_full, prog_factory(), mode="basic")
+        eb = GraphDEngine(
+                 pg_full,
+                 prog_factory(),
+                 config=EngineConfig(mode="basic"),
+             )
         (vb, _), hb = eb.run()
-        es = GraphDEngine(pg, prog_factory(), mode="streamed",
-                          stream_store=store, stream_chunk_blocks=2,
-                          **eng_kw)
+        es = GraphDEngine(
+                 pg,
+                 prog_factory(),
+                 config=EngineConfig(
+                     mode="streamed",
+                     stream=StreamConfig(chunk_blocks=2),
+                     spill=MessageSpillConfig(slice_cap=slice_cap,
+                                              read_chunk=read_chunk),
+                 ),
+                 stream_store=store,
+             )
         (vs, _), hs = es.run()
         return eb.gather_values(vb), es.gather_values(vs), hb, hs
 
     def test_distinct_labels_multistep_bitmatch(self, spilled):
         got_b, got_s, hb, hs = self._pair(
             spilled, lambda: DistinctInLabels(n_groups=5, rounds=3),
-            msg_slice_cap=256, msg_read_chunk=64,
+            slice_cap=256, read_chunk=64,
         )
         assert got_b == got_s  # integer values: bit-for-bit
         assert [h.n_msgs for h in hb] == [h.n_msgs for h in hs]
@@ -231,7 +247,7 @@ class TestStreamedNoCombiner:
 
     def test_second_min_label_bitmatch(self, spilled):
         got_b, got_s, _, _ = self._pair(
-            spilled, SecondMinLabel, msg_slice_cap=128, msg_read_chunk=32,
+            spilled, SecondMinLabel, slice_cap=128, read_chunk=32,
         )
         assert got_b == got_s
 
@@ -241,11 +257,14 @@ class TestStreamedNoCombiner:
         still be exact."""
         g, pg_full, pg, _, store = spilled
         prog = lambda: DistinctInLabels(n_groups=5)
-        eb = GraphDEngine(pg_full, prog(), mode="basic")
+        eb = GraphDEngine(pg_full, prog(), config=EngineConfig(mode="basic"))
         (vb, _), _ = eb.run()
-        es = GraphDEngine(pg, prog(), mode="streamed", stream_store=store,
-                          msg_slice_cap=1, msg_read_chunk=8,
-                          msg_merge_fanin=2)
+        es = GraphDEngine(
+                 pg,
+                 prog(),
+                 config=EngineConfig(mode="streamed", spill=MessageSpillConfig(slice_cap=1, read_chunk=8, merge_fanin=2)),
+                 stream_store=store,
+             )
         (vs, _), _ = es.run()
         assert eb.gather_values(vb) == es.gather_values(vs)
         # the cap auto-bumped (in powers of two) to the max in-degree —
@@ -256,8 +275,12 @@ class TestStreamedNoCombiner:
 
     def test_spill_dir_cleaned_after_run(self, spilled):
         _, _, pg, _, store = spilled
-        es = GraphDEngine(pg, DistinctInLabels(n_groups=5, rounds=2),
-                          mode="streamed", stream_store=store)
+        es = GraphDEngine(
+                 pg,
+                 DistinctInLabels(n_groups=5, rounds=2),
+                 config=EngineConfig(mode="streamed"),
+                 stream_store=store,
+             )
         es.run()
         spill = es.msg_spill_dir
         assert (not os.path.exists(spill)) or os.listdir(spill) == []
@@ -272,10 +295,11 @@ class TestStreamedNoCombiner:
                 g, 4, str(tmp_path / f"sp{tag}"), edge_block=32
             )
             return g, GraphDEngine(
-                pg, DistinctInLabels(n_groups=8), mode="streamed",
-                stream_store=store, stream_chunk_blocks=2,
-                msg_slice_cap=8192,
-            )
+                          pg,
+                          DistinctInLabels(n_groups=8),
+                          config=EngineConfig(mode="streamed", stream=StreamConfig(chunk_blocks=2), spill=MessageSpillConfig(slice_cap=8192)),
+                          stream_store=store,
+                      )
 
         g1, e1 = engine(4, "a")
         g2, e2 = engine(48, "b")
@@ -301,12 +325,20 @@ class TestRunFileMessageLog:
         )
         prog = lambda: PageRank(supersteps=8)
         (v_ref, a_ref), _ = GraphDEngine(
-            pg, prog(), mode="streamed", stream_store=store
-        ).run()
+                                pg,
+                                prog(),
+                                config=EngineConfig(mode="streamed"),
+                                stream_store=store,
+                            ).run()
         ck = Checkpointer(str(tmp_path / "ck"), every=3)
         ml = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pg, prog(), mode="streamed", stream_store=store,
-                           message_log=ml)
+        eng = GraphDEngine(
+                  pg,
+                  prog(),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+                  message_log=ml,
+              )
         ck.save(0, *eng.init())
         eng.run(checkpointer=ck)  # then "kill" shard 2
         vj, aj = recover_shard_streamed(
@@ -323,12 +355,20 @@ class TestRunFileMessageLog:
         )
         prog = lambda: DistinctInLabels(n_groups=7, rounds=4)
         (v_ref, _), _ = GraphDEngine(
-            pg, prog(), mode="streamed", stream_store=store
-        ).run()
+                            pg,
+                            prog(),
+                            config=EngineConfig(mode="streamed"),
+                            stream_store=store,
+                        ).run()
         ck = Checkpointer(str(tmp_path / "ck"), every=2)
         ml = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pg, prog(), mode="streamed", stream_store=store,
-                           message_log=ml)
+        eng = GraphDEngine(
+                  pg,
+                  prog(),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+                  message_log=ml,
+              )
         ck.save(0, *eng.init())
         eng.run(checkpointer=ck)
         vj, _ = recover_shard_streamed(
@@ -346,8 +386,13 @@ class TestRunFileMessageLog:
         )
         ck = Checkpointer(str(tmp_path / "ck"), every=3)
         ml = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pg, PageRank(supersteps=8), mode="streamed",
-                           stream_store=store, message_log=ml)
+        eng = GraphDEngine(
+                  pg,
+                  PageRank(supersteps=8),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+                  message_log=ml,
+              )
         eng.run(checkpointer=ck)
         # checkpoints landed at steps 3 and 6 => only logs >= 6 survive
         assert sorted(os.listdir(str(tmp_path / "logs"))) == [
@@ -387,12 +432,20 @@ class TestRunFileMessageLog:
             g, 2, str(tmp_path / "s"), edge_block=32
         )
         (v_ref, _), _ = GraphDEngine(
-            pg, OneShotSum(), mode="streamed", stream_store=store
-        ).run()
+                            pg,
+                            OneShotSum(),
+                            config=EngineConfig(mode="streamed"),
+                            stream_store=store,
+                        ).run()
         ck = Checkpointer(str(tmp_path / "ck"), every=10)  # never fires
         ml = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pg, OneShotSum(), mode="streamed",
-                           stream_store=store, message_log=ml)
+        eng = GraphDEngine(
+                  pg,
+                  OneShotSum(),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+                  message_log=ml,
+              )
         ck.save(0, *eng.init())
         eng.run(checkpointer=ck)
         vj, _ = recover_shard_streamed(
@@ -445,8 +498,13 @@ class TestRunFileMessageLog:
             g, 2, str(tmp_path / "s"), edge_block=32
         )
         ml = RunFileMessageLog(str(tmp_path / "logs"))
-        eng = GraphDEngine(pg, PageRank(supersteps=3), mode="streamed",
-                           stream_store=store, message_log=ml)
+        eng = GraphDEngine(
+                  pg,
+                  PageRank(supersteps=3),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+                  message_log=ml,
+              )
         eng.run()
         assert sorted(os.listdir(str(tmp_path / "logs"))) == [
             f"step-{s:06d}" for s in range(3)
@@ -533,10 +591,13 @@ class TestDeadRegionReclamation:
         from repro.core.checkpoint import RunFileMessageLog
 
         log = RunFileMessageLog(str(tmp_path / "log"))
-        eng = GraphDEngine(pg, DistinctInLabels(n_groups=8, rounds=1),
-                           mode="streamed", stream_store=store,
-                           message_log=log, msg_merge_fanin=2,
-                           msg_read_chunk=64)
+        eng = GraphDEngine(
+                  pg,
+                  DistinctInLabels(n_groups=8, rounds=1),
+                  config=EngineConfig(mode="streamed", spill=MessageSpillConfig(merge_fanin=2, read_chunk=64)),
+                  stream_store=store,
+                  message_log=log,
+              )
         eng.run()
         mstore = log._store_for(0)
         for k in range(pg.n_shards):
@@ -552,9 +613,17 @@ class TestCompressedRuns:
     def test_compressed_streamed_run_bitmatches(self, spilled, tmp_path):
         _, pg_full, pg, _, store = spilled
         prog = lambda: DistinctInLabels(n_groups=8, rounds=2)
-        (v_ref, _), _ = GraphDEngine(pg_full, prog(), mode="basic").run()
-        eng = GraphDEngine(pg, prog(), mode="streamed", stream_store=store,
-                           compress=True)
+        (v_ref, _), _ = GraphDEngine(
+                            pg_full,
+                            prog(),
+                            config=EngineConfig(mode="basic"),
+                        ).run()
+        eng = GraphDEngine(
+                  pg,
+                  prog(),
+                  config=EngineConfig(mode="streamed", channel=ChannelConfig(compress=True)),
+                  stream_store=store,
+              )
         (v, _), _ = eng.run()
         assert np.array_equal(np.asarray(v), np.asarray(v_ref))
 
@@ -568,9 +637,13 @@ class TestCompressedRuns:
             tag = "c" if compress else "p"
             ck = Checkpointer(str(tmp_path / f"ck-{tag}"), every=10)
             log = RunFileMessageLog(str(tmp_path / f"log-{tag}"))
-            eng = GraphDEngine(pg, DistinctInLabels(n_groups=8, rounds=2),
-                               mode="streamed", stream_store=store,
-                               message_log=log, compress=compress)
+            eng = GraphDEngine(
+                      pg,
+                      DistinctInLabels(n_groups=8, rounds=2),
+                      config=EngineConfig(mode="streamed", channel=ChannelConfig(compress=compress)),
+                      stream_store=store,
+                      message_log=log,
+                  )
             ck.save(0, *eng.init())
             (v_ref, a_ref), _ = eng.run(checkpointer=ck)
             sizes[tag] = sum(
@@ -591,7 +664,11 @@ class TestPayloadCompressedRuns:
     def test_payload_streamed_run_bitmatches(self, spilled, tmp_path):
         _, pg_full, pg, _, store = spilled
         prog = lambda: DistinctInLabels(n_groups=8, rounds=2)
-        (v_ref, _), _ = GraphDEngine(pg_full, prog(), mode="basic").run()
+        (v_ref, _), _ = GraphDEngine(
+                            pg_full,
+                            prog(),
+                            config=EngineConfig(mode="basic"),
+                        ).run()
         eng = GraphDEngine(
             pg, prog(),
             config=EngineConfig(

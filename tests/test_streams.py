@@ -8,7 +8,10 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import GraphDEngine, HashMin, PageRank, SSSP
+from repro.core import (
+    ChannelConfig, EngineConfig, GraphDEngine, HashMin, PageRank, SSSP,
+    StreamConfig,
+)
 from repro.core.checkpoint import Checkpointer
 from repro.graph import (
     chain_graph, partition_graph, partition_graph_streamed, rmat_graph,
@@ -148,11 +151,19 @@ class TestCrossModeEquivalence:
         )
         outs = {}
         for mode in self.MODES:
-            eng = GraphDEngine(pg, prog_factory(rmap), mode=mode)
+            eng = GraphDEngine(
+                      pg,
+                      prog_factory(rmap),
+                      config=EngineConfig(mode=mode),
+                  )
             (vals, _), _ = eng.run()
             outs[mode] = eng.gather_values(vals)
-        eng = GraphDEngine(pgs, prog_factory(rmap), mode="streamed",
-                           stream_store=store)
+        eng = GraphDEngine(
+                  pgs,
+                  prog_factory(rmap),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+              )
         (vals, _), _ = eng.run()
         outs["streamed"] = eng.gather_values(vals)
         return outs
@@ -198,9 +209,17 @@ class TestMemoryGuarantee:
         pgs, _, store = partition_graph_streamed(
             g, 4, str(tmp_path / f"sp{tag}"), edge_block=32
         )
-        mem = GraphDEngine(pg, PageRank(supersteps=2), mode="recoded")
-        out = GraphDEngine(pgs, PageRank(supersteps=2), mode="streamed",
-                           stream_store=store, stream_chunk_blocks=2)
+        mem = GraphDEngine(
+                  pg,
+                  PageRank(supersteps=2),
+                  config=EngineConfig(mode="recoded"),
+              )
+        out = GraphDEngine(
+                  pgs,
+                  PageRank(supersteps=2),
+                  config=EngineConfig(mode="streamed", stream=StreamConfig(chunk_blocks=2)),
+                  stream_store=store,
+              )
         return g, mem, out
 
     @staticmethod
@@ -254,8 +273,12 @@ class TestStreamedExecution:
             g, 4, str(tmp_path / "chain"), edge_block=8
         )
         src_new = int(rmap.to_new(np.array([0]))[0])
-        eng = GraphDEngine(pgs, SSSP(src_new), mode="streamed",
-                           stream_store=store, stream_chunk_blocks=2)
+        eng = GraphDEngine(
+                  pgs,
+                  SSSP(src_new),
+                  config=EngineConfig(mode="streamed", stream=StreamConfig(chunk_blocks=2)),
+                  stream_store=store,
+              )
         blocks_per_step = []
         (vals, _), hist = eng.run(
             max_supersteps=300,
@@ -276,22 +299,37 @@ class TestStreamedExecution:
             g, 2, str(tmp_path / "q"), edge_block=8
         )
         src_new = int(rmap.to_new(np.array([31]))[0])  # sink: no out-edges
-        eng = GraphDEngine(pgs, SSSP(src_new), mode="streamed",
-                           stream_store=store)
+        eng = GraphDEngine(
+                  pgs,
+                  SSSP(src_new),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+              )
         (_, _), hist = eng.run()
         assert len(hist) == 1  # immediately quiescent
 
     def test_checkpoint_restart_matches(self, spilled, tmp_path):
         _, _, pg, _, store = spilled
         (v_ref, _), _ = GraphDEngine(
-            pg, PageRank(supersteps=8), mode="streamed", stream_store=store
-        ).run()
+                            pg,
+                            PageRank(supersteps=8),
+                            config=EngineConfig(mode="streamed"),
+                            stream_store=store,
+                        ).run()
         ck = Checkpointer(str(tmp_path / "ck"), every=3)
-        eng = GraphDEngine(pg, PageRank(supersteps=8), mode="streamed",
-                           stream_store=store)
+        eng = GraphDEngine(
+                  pg,
+                  PageRank(supersteps=8),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+              )
         eng.run(max_supersteps=5, checkpointer=ck)  # "crash" after step 5
-        eng2 = GraphDEngine(pg, PageRank(supersteps=8), mode="streamed",
-                            stream_store=store)
+        eng2 = GraphDEngine(
+                   pg,
+                   PageRank(supersteps=8),
+                   config=EngineConfig(mode="streamed"),
+                   stream_store=store,
+               )
         (v2, _), hist = eng2.run(checkpointer=ck)  # resumes from step 3
         assert hist[0].step == 3
         assert np.allclose(np.asarray(v2), np.asarray(v_ref))
@@ -301,8 +339,12 @@ class TestStreamedExecution:
         restore against another (manifest-aware recovery)."""
         g, _, pg, _, store = spilled
         ck = Checkpointer(str(tmp_path / "ck2"), every=2)
-        GraphDEngine(pg, PageRank(supersteps=4), mode="streamed",
-                     stream_store=store).run(checkpointer=ck)
+        GraphDEngine(
+            pg,
+            PageRank(supersteps=4),
+            config=EngineConfig(mode="streamed"),
+            stream_store=store,
+        ).run(checkpointer=ck)
         g2 = rmat_graph(scale=7, edge_factor=4, seed=99)
         pg2, _, store2 = partition_graph_streamed(
             g2, 4, str(tmp_path / "other"), edge_block=64
@@ -315,17 +357,24 @@ class TestStreamedExecution:
         a wrong fixpoint (no edges -> no messages); must raise instead."""
         _, _, pg, _, _ = spilled
         with pytest.raises(ValueError, match="vertex-only"):
-            GraphDEngine(pg, PageRank(), mode="recoded")
+            GraphDEngine(pg, PageRank(), config=EngineConfig(mode="recoded"))
 
     def test_density_semantics_match_in_memory(self, spilled):
         """rec.density means 'fraction of blocks active NEXT superstep' in
         every mode — histories must line up step for step."""
         g, pg_full, pg, rmap, store = spilled
         src_new = int(rmap.to_new(np.array([int(g.vertex_ids[0])]))[0])
-        (_, _), h_mem = GraphDEngine(pg_full, SSSP(src_new), mode="recoded",
-                                     adapt_threshold=-1).run()
-        eng = GraphDEngine(pg, SSSP(src_new), mode="streamed",
-                           stream_store=store)
+        (_, _), h_mem = GraphDEngine(
+                            pg_full,
+                            SSSP(src_new),
+                            config=EngineConfig(mode="recoded", adapt_threshold=-1),
+                        ).run()
+        eng = GraphDEngine(
+                  pg,
+                  SSSP(src_new),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+              )
         (_, _), h_st = eng.run()
         assert len(h_mem) == len(h_st)
         for a, b in zip(h_mem, h_st):
@@ -335,8 +384,12 @@ class TestStreamedExecution:
         g, _, _, _, store = spilled
         pg_other, _ = partition_graph(g, n_shards=2, edge_block=64)
         with pytest.raises(ValueError, match="geometry"):
-            GraphDEngine(pg_other, PageRank(), mode="streamed",
-                         stream_store=store)
+            GraphDEngine(
+                pg_other,
+                PageRank(),
+                config=EngineConfig(mode="streamed"),
+                stream_store=store,
+            )
 
     def test_requires_store_and_rejects_plain_log(self, spilled, tmp_path):
         from repro.core.algorithms import DistinctInLabels
@@ -344,23 +397,36 @@ class TestStreamedExecution:
 
         _, _, pg, _, store = spilled
         with pytest.raises(ValueError, match="stream_store"):
-            GraphDEngine(pg, PageRank(), mode="streamed")
+            GraphDEngine(pg, PageRank(), config=EngineConfig(mode="streamed"))
         # combiner-less programs are first-class in streamed mode now (the
         # OMS disk tier, tests/test_msgstore.py); what IS rejected is a
         # dense MessageLog, which would materialize O(n²·P) buffers
-        GraphDEngine(pg, DistinctInLabels(), mode="streamed",
-                     stream_store=store)
+        GraphDEngine(
+            pg,
+            DistinctInLabels(),
+            config=EngineConfig(mode="streamed"),
+            stream_store=store,
+        )
         with pytest.raises(ValueError, match="RunFileMessageLog"):
-            GraphDEngine(pg, PageRank(), mode="streamed", stream_store=store,
-                         message_log=MessageLog(str(tmp_path / "ml")))
+            GraphDEngine(
+                pg,
+                PageRank(),
+                config=EngineConfig(mode="streamed"),
+                stream_store=store,
+                message_log=MessageLog(str(tmp_path / "ml")),
+            )
 
     def test_spill_partition_matches_streamed_ctor(self, tmp_path):
         """spill_partition on an existing pg == partition_graph_streamed."""
         g = rmat_graph(scale=6, edge_factor=6, seed=2)
         pg_full, _ = partition_graph(g, n_shards=3, edge_block=32)
         pg_v, store = spill_partition(pg_full, str(tmp_path / "sp"))
-        eng = GraphDEngine(pg_v, PageRank(supersteps=4), mode="streamed",
-                           stream_store=store)
+        eng = GraphDEngine(
+                  pg_v,
+                  PageRank(supersteps=4),
+                  config=EngineConfig(mode="streamed"),
+                  stream_store=store,
+              )
         (v, _), _ = eng.run()
         (v_ref, _), _ = GraphDEngine(pg_full, PageRank(supersteps=4)).run()
         assert np.abs(np.asarray(v) - np.asarray(v_ref)).max() < 1e-6
@@ -405,8 +471,12 @@ class TestRowOwnership:
 
     def test_pipelined_engine_reads_through_owner_views(self, spilled):
         _, _, pg, _, store = spilled
-        eng = GraphDEngine(pg, PageRank(supersteps=2), mode="streamed",
-                           stream_store=store, pipeline=True)
+        eng = GraphDEngine(
+                  pg,
+                  PageRank(supersteps=2),
+                  config=EngineConfig(mode="streamed", channel=ChannelConfig(pipeline=True)),
+                  stream_store=store,
+              )
         eng.run()
         views = eng._stream_reader._views
         assert views is not None and views  # per-source views were used
@@ -462,9 +532,17 @@ class TestCompressedEdgeStore:
             g, 4, str(tmp_path / "c"), edge_block=64, recode=rmap,
             compress=True,
         )
-        (v_ref, _), _ = GraphDEngine(pg_full, HashMin(), mode="basic").run()
-        (v, _), _ = GraphDEngine(pgs, HashMin(), mode="streamed",
-                                 stream_store=store).run()
+        (v_ref, _), _ = GraphDEngine(
+                            pg_full,
+                            HashMin(),
+                            config=EngineConfig(mode="basic"),
+                        ).run()
+        (v, _), _ = GraphDEngine(
+                        pgs,
+                        HashMin(),
+                        config=EngineConfig(mode="streamed"),
+                        stream_store=store,
+                    ).run()
         assert np.array_equal(np.asarray(v), np.asarray(v_ref))
 
 
@@ -479,9 +557,12 @@ class TestPipelinedMemoryModel:
             pgs, _, store = partition_graph_streamed(
                 g, 4, str(tmp_path / f"sp{tag}"), edge_block=32
             )
-            eng = GraphDEngine(pgs, PageRank(supersteps=2), mode="streamed",
-                               stream_store=store, stream_chunk_blocks=2,
-                               pipeline=True)
+            eng = GraphDEngine(
+                      pgs,
+                      PageRank(supersteps=2),
+                      config=EngineConfig(mode="streamed", stream=StreamConfig(chunk_blocks=2), channel=ChannelConfig(pipeline=True)),
+                      stream_store=store,
+                  )
             m = eng.memory_model()
             assert m["channel"] == eng.channel_inflight * pgs.P * (4 + 4 + 4)
             rams.append(m["resident"] + m["buffers"] + m["staging"]
@@ -535,7 +616,15 @@ class TestPayloadCompressedEdgeStore:
             g, 4, str(tmp_path / "cp"), edge_block=64, recode=rmap,
             compress=True, compress_payload=True,
         )
-        (v_ref, _), _ = GraphDEngine(pg_full, SSSP(0), mode="basic").run()
-        (v, _), _ = GraphDEngine(pgs, SSSP(0), mode="streamed",
-                                 stream_store=store).run()
+        (v_ref, _), _ = GraphDEngine(
+                            pg_full,
+                            SSSP(0),
+                            config=EngineConfig(mode="basic"),
+                        ).run()
+        (v, _), _ = GraphDEngine(
+                        pgs,
+                        SSSP(0),
+                        config=EngineConfig(mode="streamed"),
+                        stream_store=store,
+                    ).run()
         assert np.array_equal(np.asarray(v), np.asarray(v_ref))
