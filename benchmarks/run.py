@@ -7,8 +7,10 @@ milliseconds, and the payload-codec bytes-on-wire.
 ``--tiny`` runs the seconds-scale subset (the CI smoke job); ``--out``
 writes the consolidated JSON; ``--check`` fails the run when a required
 section is missing or empty, when the receiver overlap is not positive,
-when the lossless payload channel is under 1.5x, or when the
-``launch="processes"`` per-process RAM model grows with the process count —
+when the lossless payload channel is under 1.5x, when the
+``launch="processes"`` per-process RAM model grows with the process count,
+or when the semi-external hot cache fails to cut disk block reads below
+pure streaming while staying inside the planner's ``hot_cache`` model —
 the acceptance gates, enforced where the numbers are produced.
 """
 
@@ -24,7 +26,7 @@ from benchmarks.common import OVERLAP_MIN_CPUS, PAYLOAD_LOSSLESS_FLOOR
 
 #: required BENCH_PR5.json sections; --check fails on a missing/empty one
 REQUIRED_SECTIONS = ("wall_clock", "ram_model", "overlap", "bytes_on_wire",
-                     "process_launch")
+                     "process_launch", "semi_external")
 
 
 def _module_plan(tiny: bool):
@@ -71,6 +73,7 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
     ]
     overlap = values_of("memory/pipeline_overlap")
     process_launch = values_of("memory/process_launch")
+    semi_external = values_of("memory/semi_external")
     wire = values_of("memory/payload_wire_lossless")
     bytes_on_wire = dict(
         lossless=wire,
@@ -84,6 +87,7 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
             overlap=overlap,
             bytes_on_wire=bytes_on_wire if wire else {},
             process_launch=process_launch,
+            semi_external=semi_external,
         ),
         records=records_by_bench,
     )
@@ -128,6 +132,27 @@ def check(report: dict) -> list[str]:
             "per-process RAM must not grow with the process count: "
             f"ns={procs.get('ns')!r} ram={rams!r}"
         )
+    semi = sections.get("semi_external") or {}
+    if semi:
+        if semi.get("semi_blocks", 0) >= semi.get("streamed_blocks", 0):
+            problems.append(
+                "semi-external must read strictly fewer edge blocks than "
+                f"pure streaming: semi={semi.get('semi_blocks')!r} "
+                f"streamed={semi.get('streamed_blocks')!r}"
+            )
+        if semi.get("late_semi", 0) >= semi.get("late_streamed", 0):
+            problems.append(
+                "semi-external must beat pure streaming on the sparse late "
+                f"rounds: late_semi={semi.get('late_semi')!r} "
+                f"late_streamed={semi.get('late_streamed')!r}"
+            )
+        cache_cap = semi.get("n_shards", 0) * semi.get("hot_cache_model", 0)
+        if not 0 < semi.get("cached_bytes", 0) <= cache_cap:
+            problems.append(
+                "resident cache bytes must be positive and within the "
+                f"planner's hot_cache model: "
+                f"cached={semi.get('cached_bytes')!r} cap={cache_cap!r}"
+            )
     wire = (sections.get("bytes_on_wire") or {}).get("lossless") or {}
     if wire.get("ratio", 0) < PAYLOAD_LOSSLESS_FLOOR:
         problems.append(

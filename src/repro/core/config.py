@@ -51,6 +51,13 @@ class StreamConfig:
     # multi-group jitted dispatches of this many lanes, amortizing the
     # Python/dispatch overhead on graphs with many small groups; 1 disables
     group_batch: int = 4
+    # adaptive semi-external tier (streams/residency.py): per-shard byte
+    # budget for pinning hot edge blocks in RAM; 0 = pure streaming. The
+    # planner sizes this from the MemoryBudget's leftover RAM (the
+    # ``hot_cache`` tier of estimate_memory()); results are bit-identical
+    # at any budget — the cache changes where a block is read FROM, never
+    # what is computed
+    cache_bytes: int = 0
 
     def validate(self) -> None:
         if self.chunk_blocks < 1:
@@ -59,6 +66,8 @@ class StreamConfig:
             raise ConfigError("stream.depth must be >= 1 (2 = double buffering)")
         if self.group_batch < 1:
             raise ConfigError("stream.group_batch must be >= 1 (1 disables)")
+        if self.cache_bytes < 0:
+            raise ConfigError("stream.cache_bytes must be >= 0 (0 disables)")
 
 
 @dataclass
@@ -96,7 +105,11 @@ class ChannelConfig:
     # payload codec on the wire: False off; True/"lossless" byte-shuffle +
     # DEFLATE on the msg (+cnt) channels (bit-exact round-trip); "bf16"
     # additionally rounds float32 messages to bfloat16 on the wire
-    # (recoded_compact's trick — float-message programs only)
+    # (recoded_compact's trick — float-message programs only); "auto" spills
+    # the first superstep raw, measures the lossless codec on a sample of
+    # those runs, and picks lossless vs raw PER CHANNEL for the rest of the
+    # run (streams/codec.PayloadAutoPicker; the choice is recorded in
+    # ChannelStats.payload_choice)
     compress_payload: Any = False
     # overlap the receiver digest with the next group's fold (U_r ∥ U_c);
     # only meaningful with pipeline=True (False = PR-3's sender-only
@@ -112,17 +125,19 @@ class ChannelConfig:
         if self.inflight < 1:
             raise ConfigError("channel.inflight must be >= 1")
         try:
-            normalize_payload_scheme(self.compress_payload)
+            normalize_payload_scheme(self.compress_payload, allow_auto=True)
         except ValueError as e:
             raise ConfigError(f"channel.compress_payload: {e}") from None
 
     @property
     def payload_scheme(self) -> str | None:
-        """None when off, else the codec scheme name (the codec's
+        """None when off, else the codec scheme name — or "auto", which the
+        engine resolves from a first-superstep sample (the codec's
         normalization is the single source of truth)."""
         from repro.streams.codec import normalize_payload_scheme
 
-        return normalize_payload_scheme(self.compress_payload)
+        return normalize_payload_scheme(self.compress_payload,
+                                        allow_auto=True)
 
 
 @dataclass
@@ -195,6 +210,12 @@ class EngineConfig:
                 "pipeline=/compress=/compress_payload=/channel faults are "
                 "streamed-mode knobs (the in-memory modes already overlap "
                 "on-device, §5/C3)"
+            )
+        if self.mode != "streamed" and self.stream.cache_bytes:
+            raise ConfigError(
+                "stream.cache_bytes is a streamed-mode knob: the hot-block "
+                "cache is the semi-external tier between RAM and the edge "
+                "stream; the in-memory modes are fully resident already"
             )
         if self.backend == "pallas" and self.mode != "recoded":
             raise ConfigError("backend='pallas' needs mode='recoded'")

@@ -206,14 +206,18 @@ class FileCoordinator:
         n_active = n_msgs = 0
         agg = 0.0
         blocks = 0
+        residency = dict(blocks_read=0, cache_hits=0, cache_evictions=0,
+                         blocks_skipped=0)
         for w in sorted(arrivals):
             rec = arrivals[w]
             n_active += int(rec["n_active"])
             n_msgs += int(rec["n_msgs"])
             agg += float(rec["agg"])
             blocks += int(rec.get("active_blocks", 0))
+            for key in residency:
+                residency[key] += int(rec.get(key, 0))
         return dict(n_active=n_active, n_msgs=n_msgs, agg=agg,
-                    active_blocks=blocks)
+                    active_blocks=blocks, **residency)
 
     def publish_commit(self, step: int, totals: dict, *, halt: bool,
                        ckpt_landed: bool) -> dict:

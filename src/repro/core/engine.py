@@ -659,6 +659,14 @@ class SuperstepRecord:
     seconds: float
     # step a checkpoint auto-restore resumed from (first record only)
     restored_from: int | None = None
+    # residency observability (streamed mode; defaults elsewhere): edge
+    # blocks actually read off disk this superstep, blocks served from the
+    # hot cache, cache evictions, and blocks the §3.2 skip() test kept off
+    # the schedule entirely (selective scheduling)
+    blocks_read: int = 0
+    cache_hits: int = 0
+    cache_evictions: int = 0
+    blocks_skipped: int = 0
 
 
 class GraphDEngine:
@@ -738,6 +746,16 @@ class GraphDEngine:
                 "back a message log (recovery must replay bit-identically);"
                 " use the lossless scheme with message logging"
             )
+        if cfg.channel.payload_scheme == "auto" and message_log is not None:
+            # a run-file log fixes its wire format once at configure();
+            # the auto-pick resolves it only after the first superstep's
+            # sample, and a recovery replay could not re-derive the same
+            # mid-run switch point
+            raise ValueError(
+                "compress_payload='auto' resolves the codec from a "
+                "first-superstep sample; a message log needs a fixed wire "
+                "format — pass 'lossless' (or False) explicitly"
+            )
         if backend == "pallas" and getattr(program, "msg_kind", None) is None:
             raise ValueError(
                 "backend='pallas' needs mode='recoded' and a program.msg_kind"
@@ -789,17 +807,38 @@ class GraphDEngine:
         self.stream_store = stream_store
         self.pipeline = bool(pipeline)
         self.compress = bool(compress)
-        self.compress_payload = cfg.channel.payload_scheme  # None | scheme
+        scheme = cfg.channel.payload_scheme  # None | scheme | "auto"
+        # "auto": spill the first superstep raw while a PayloadAutoPicker
+        # trial-encodes a sample of its runs; the end-of-superstep decision
+        # (see _run_streamed) fixes compress_payload/_payload_channels for
+        # every later per-step store and records itself in
+        # channel_stats.payload_choice
+        self._payload_auto = scheme == "auto"
+        self._payload_picker = None
+        self._payload_channels: tuple | None = None
+        self.compress_payload = None if self._payload_auto else scheme
         self.full_duplex = bool(cfg.channel.full_duplex)
         axis = self.AXIS
 
         if mode == "streamed":
             from repro.streams.channel import ChannelStats
             from repro.streams.reader import StreamReader
+            from repro.streams.residency import BlockResidency
 
+            # every streamed superstep path reads through the residency
+            # tier: cache_bytes=0 degenerates to pure streaming (counted
+            # pass-through), a positive budget pins hot blocks. ONE
+            # residency serves all n emulated shards, so its capacity is
+            # the per-shard budget times n — launch="processes" workers
+            # each build their own with just the per-shard share instead
+            self._residency = BlockResidency(
+                stream_store,
+                int(cfg.stream.cache_bytes) * pg.n_shards,
+            )
             self._stream_reader = StreamReader(
                 stream_store, chunk_blocks=cfg.stream.chunk_blocks,
                 depth=cfg.stream.depth, owner_views=self.pipeline,
+                residency=self._residency,
             )
             self.channel_inflight = int(cfg.channel.inflight)
             self._channel_fault = cfg.channel.fault
@@ -1133,12 +1172,40 @@ class GraphDEngine:
 
         if self.message_log is not None:
             return self.message_log.open_step(s)
-        return MessageRunStore(
+        store = MessageRunStore(
             os.path.join(self._inbox_dir, f"step-{s:06d}"),
             self.pg.n_shards, self.pg.P, np.dtype(self.program.msg_dtype),
             with_counts=with_counts, compress=self.compress,
             compress_payload=self.compress_payload or False,
+            payload_channels=self._payload_channels,
         )
+        self._attach_payload_sampler(store)
+        return store
+
+    def _attach_payload_sampler(self, store) -> None:
+        """Under ``compress_payload="auto"`` (and until the decision), let
+        the picker see every value column this step's store spills."""
+        if self._payload_auto:
+            if self._payload_picker is None:
+                from repro.streams.codec import PayloadAutoPicker
+
+                self._payload_picker = PayloadAutoPicker()
+            store.payload_sampler = self._payload_picker
+
+    def _decide_payload_codec(self) -> None:
+        """End-of-superstep half of the auto-pick: once the sample exists,
+        fix the per-channel wire format for every later per-step store and
+        record the verdict (measured ratios included) in the run's
+        channel stats."""
+        picker = self._payload_picker
+        if not self._payload_auto or picker is None or not picker.sampled:
+            return
+        picked = picker.choose()
+        self.compress_payload = "lossless" if picked else None
+        self._payload_channels = picked or None
+        self.channel_stats.payload_choice = picker.summary()
+        self._payload_auto = False  # decided: stop sampling
+        self._payload_picker = None
 
     def _close_inbox(self, s: int, inbox, ok: bool) -> None:
         """Publish/delete the inbox at superstep end. On failure (``ok``
@@ -1376,7 +1443,9 @@ class GraphDEngine:
                 os.path.join(self.msg_spill_dir, f"step-{s:06d}"), n, pg.P,
                 np.dtype(program.msg_dtype), compress=self.compress,
                 compress_payload=self.compress_payload or False,
+                payload_channels=self._payload_channels,
             )
+            self._attach_payload_sampler(mstore)
         channel = (
             ShardChannels(mstore, inflight=self.channel_inflight,
                           fault=self._channel_fault)
@@ -1522,6 +1591,8 @@ class GraphDEngine:
         plan, _, _ = plan_stream_schedule(
             store, np.asarray(active), by_dest=True
         )
+        residency = self._residency
+        nonempty_total = store.nonempty_blocks()
         for s in range(start_step, target):
             t0 = time.perf_counter()
             if comb is None:
@@ -1530,9 +1601,19 @@ class GraphDEngine:
                 superstep = self._superstep_streamed_comb_pipelined
             else:
                 superstep = self._superstep_streamed_comb
+            # selective scheduling: everything skip() left off this step's
+            # plan is disk I/O that never happens — tally it before the
+            # step so the record's counters describe THIS superstep
+            scheduled = sum(
+                len(ids) for per_dest in plan for _, _, ids in per_dest
+            )
+            residency.note_skipped(nonempty_total - scheduled)
+            hits0, miss0, evict0, _ = residency.counters()
             values, active, n_active, n_msgs, agg, io_note = superstep(
                 values, active, s, plan
             )
+            hits1, miss1, evict1, _ = residency.counters()
+            self._decide_payload_codec()  # no-op unless "auto" undecided
             plan, density, max_grp = plan_stream_schedule(
                 store, np.asarray(active), by_dest=True
             )
@@ -1541,6 +1622,9 @@ class GraphDEngine:
                 step=s, n_active=n_active, n_msgs=n_msgs, agg=agg,
                 density=density, mode="streamed", seconds=dt,
                 restored_from=restored_from if s == start_step else None,
+                blocks_read=miss1 - miss0, cache_hits=hits1 - hits0,
+                cache_evictions=evict1 - evict0,
+                blocks_skipped=nonempty_total - scheduled,
             )
             history.append(rec)
             if verbose:
@@ -1704,6 +1788,7 @@ class GraphDEngine:
             read_chunk=self.config.spill.read_chunk,
             merge_fanin=self.config.spill.merge_fanin,
             inflight=self.config.channel.inflight,
+            cache_bytes=self.config.stream.cache_bytes,
             disk_bytes_per_shard=(
                 self.stream_store.disk_bytes() // pg.n_shards
                 if streamed else None

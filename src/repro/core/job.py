@@ -87,6 +87,16 @@ class JobResult:
             planned=dict(ram=self.planned_ram, model=self.plan.model),
             realized=dict(ram=self.realized_ram, model=self.realized_model),
             planned_over_realized_ram=ratio,
+            # semi-external residency behavior, observable without a
+            # profiler: disk reads vs hot-cache hits vs skip()-elided blocks
+            residency=dict(
+                cache_bytes=self.plan.config.stream.cache_bytes,
+                blocks_read=sum(r.blocks_read for r in self.history),
+                cache_hits=sum(r.cache_hits for r in self.history),
+                cache_evictions=sum(r.cache_evictions
+                                    for r in self.history),
+                blocks_skipped=sum(r.blocks_skipped for r in self.history),
+            ),
             history=[dataclasses.asdict(r) for r in self.history],
         )
 

@@ -87,9 +87,11 @@ def _fmt(b: int | None) -> str:
 # --------------------------------------------------------------------------
 
 #: model keys that live in RAM for every mode; ``streamed`` is the big tier
-#: (device memory for in-memory modes, local disk for mode="streamed")
+#: (device memory for in-memory modes, local disk for mode="streamed").
+#: ``hot_cache`` is the adaptive semi-external tier: hot edge blocks pinned
+#: in RAM by streams/residency.py, sized from the budget's leftover
 RAM_KEYS = ("resident", "buffers", "staging", "msg_staging", "channel",
-            "receiver_staging", "codec", "wire")
+            "receiver_staging", "codec", "wire", "hot_cache")
 
 
 def estimate_memory(
@@ -113,6 +115,7 @@ def estimate_memory(
     read_chunk: int = 4096,
     merge_fanin: int = 16,
     inflight: int = 4,
+    cache_bytes: int = 0,
     disk_bytes_per_shard: int | None = None,
 ) -> dict[str, int]:
     """Per-shard bytes by tier for one (mode, geometry, knobs) point.
@@ -174,6 +177,11 @@ def estimate_memory(
                                           bool(compress_payload))
         ),
     )
+    if cache_bytes:
+        # the semi-external hot-block tier: decoded edge blocks pinned in
+        # RAM by BlockResidency, a hard byte budget (admission is refused
+        # beyond it) — so the model term IS the bound, not an estimate
+        out["hot_cache"] = int(cache_bytes)
     if pipeline:
         out["channel"] = inflight * ShardChannels.packet_bytes(
             P=P, msg_itemsize=msg_itemsize, combined=combined,
@@ -650,6 +658,28 @@ def plan(
             reason = (f"net {_fmt(net)}/superstep > budget "
                       f"{_fmt(budget.net_per_superstep)} even with the "
                       "position and payload codecs engaged")
+        if feasible and budget.ram_per_shard is not None:
+            # per-shard tier assignment: the RAM the floor knobs left unused
+            # becomes this shard's hot_cache tier (streams/residency.py) —
+            # capped at the decoded edge stream, past which the whole graph
+            # fits and more cache is waste. Re-run the algebra so the tier
+            # is modeled exactly where the engine will realize it.
+            spare = int(budget.ram_per_shard) - ram
+            cache = max(0, min(spare, n * E_cap * EDGE_SLOT_BYTES))
+            if cache:
+                ck = chosen_knobs
+                chosen_model = estimate_memory(
+                    mode="streamed", pipeline=pipeline, compress=compress,
+                    compress_payload=compress_payload,
+                    full_duplex=ck["full_duplex"],
+                    chunk_blocks=ck["chunk_blocks"], depth=depth,
+                    group_batch=ck["group_batch"],
+                    slice_cap=ck["slice_cap"], read_chunk=ck["read_chunk"],
+                    merge_fanin=ck["merge_fanin"], inflight=ck["inflight"],
+                    cache_bytes=cache, **geom,
+                )
+                ram = ram_total(chosen_model, "streamed")
+                chosen_knobs = dict(chosen_knobs, cache_bytes=cache)
         if compress:
             name += "+compress"
         if compress_payload:
@@ -704,7 +734,8 @@ def plan(
         mode=winner.mode,
         stream=StreamConfig(chunk_blocks=k.get("chunk_blocks", 8),
                             depth=k.get("depth", depth),
-                            group_batch=k.get("group_batch", 1)),
+                            group_batch=k.get("group_batch", 1),
+                            cache_bytes=k.get("cache_bytes", 0)),
         spill=MessageSpillConfig(slice_cap=k.get("slice_cap", 4096),
                                  read_chunk=k.get("read_chunk", 4096),
                                  merge_fanin=k.get("merge_fanin", 16)),

@@ -177,6 +177,14 @@ def run_processes(job, max_supersteps: int = 10_000, *,
 
     program, pg, store = job.program, job.pg, job.store
     cfg = job.plan.config
+    if cfg.channel.payload_scheme == "auto":
+        # the auto-pick's first-superstep sample is engine-local state; n
+        # worker processes would each decide independently and diverge
+        raise ValueError(
+            "compress_payload='auto' is a single-process engine feature; "
+            "launch='processes' workers need a fixed wire format — pass "
+            "'lossless' (or False) explicitly"
+        )
     n = pg.n_shards
     opts = dict(job.launch_opts or {})
     heartbeat_interval = float(opts.get("heartbeat_interval", 0.25))
@@ -374,6 +382,10 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                 density=totals["active_blocks"] / nonempty,
                 mode="streamed", seconds=dt,
                 restored_from=restored_from if s == start_step else None,
+                blocks_read=totals.get("blocks_read", 0),
+                cache_hits=totals.get("cache_hits", 0),
+                cache_evictions=totals.get("cache_evictions", 0),
+                blocks_skipped=totals.get("blocks_skipped", 0),
             )
             history.append(rec)
             if verbose:
@@ -451,6 +463,7 @@ class _Worker:
         from repro.core.config import EngineConfig
         from repro.core.engine import StreamKernels
         from repro.streams.reader import StreamReader
+        from repro.streams.residency import BlockResidency
         from repro.streams.store import EdgeStreamStore
 
         self.spec = spec
@@ -465,8 +478,19 @@ class _Worker:
         self.procs_dir = spec["procs_dir"]
         # the owner view: this process maps ONLY shard w's store row
         self.store = EdgeStreamStore.open(spec["store_dir"], owner=shard)
+        # stream.cache_bytes is the PER-SHARD hot-cache budget: each worker
+        # process owns exactly one shard, so the per-process division of the
+        # planner's budget is simply cache_bytes — no further split needed
+        # (the single-process engine scales by n_shards instead).
+        self.residency = BlockResidency(self.store,
+                                        self.cfg.stream.cache_bytes)
+        # shard w's share of the store's nonempty blocks — the baseline the
+        # per-step skip() tally is measured against (blk_hi is manifest
+        # metadata, present even on an owner view)
+        self.own_nonempty = int((self.store.blk_hi[shard] >= 0).sum())
         self.reader = StreamReader(self.store, self.cfg.stream.chunk_blocks,
-                                   self.cfg.stream.depth)
+                                   self.cfg.stream.depth,
+                                   residency=self.residency)
         self.kern = StreamKernels(program, self.n, int(spec["n_vertices"]),
                                   self.P)
         z = np.load(os.path.join(_shard_dir(self.procs_dir, shard),
@@ -538,6 +562,15 @@ class _Worker:
         marker = _announce_path(self.procs_dir, s, self.w)
         if os.path.exists(marker):
             return
+        schedule = self._own_schedule(active_w)
+        # §3.2 selective scheduling: every owned block skip() left off this
+        # step's plan is disk I/O that never happens — tally it here (and
+        # not on the marker short-circuit, so a recovery respawn does not
+        # double-count) for the arrival record's residency counters
+        self.residency.note_skipped(
+            self.own_nonempty
+            - sum(len(ids) for (_, _, ids) in schedule)
+        )
         step = jnp.int32(s)
         obox = MessageRunStore(
             _outbox_dir(self.procs_dir, s, self.w), self.n, self.P,
@@ -545,7 +578,7 @@ class _Worker:
             compress=self.cfg.channel.compress,
             compress_payload=self.cfg.channel.compress_payload,
         )
-        for (_, k, ids) in self._own_schedule(active_w):
+        for (_, k, ids) in schedule:
             if self.comb is not None:
                 A = self.comb.identity((self.P,), self.program.msg_dtype)
                 cnt = jnp.zeros((self.P,), jnp.int32)
@@ -762,6 +795,10 @@ class _Worker:
             values_w, active_w = self.bootstrap()
 
         for s in range(start, target):
+            # all edge-block reads happen inside _send's folds, through the
+            # residency layer — the counter deltas around the step are this
+            # shard's contribution to the coordinator's SuperstepRecord
+            h0, m0, e0, k0 = self.residency.counters()
             self._send(s, values_w, active_w)
             inbox = self._open_inbox(s)
             try:
@@ -793,9 +830,12 @@ class _Worker:
                          values=np.asarray(values_w),
                          active=np.asarray(active_w))
                 ckpt = True
+            h1, m1, e1, k1 = self.residency.counters()
             coord.arrive(s, w, dict(
                 n_active=int(nact), n_msgs=int(nm), agg=float(ag),
                 active_blocks=int(nblocks), ckpt=ckpt,
+                blocks_read=m1 - m0, cache_hits=h1 - h0,
+                cache_evictions=e1 - e0, blocks_skipped=k1 - k0,
             ))
             cm = coord.wait_commit(s, w)
             if self.log is not None and cm.get("ckpt_landed"):

@@ -98,6 +98,10 @@ class ChannelStats:
     recv_runs: int = 0  # inbox runs digested by the background receiver
     recv_seconds: float = 0.0  # receiver busy (densify + digest / merge)
     recv_stall_seconds: float = 0.0  # compute thread blocked on the receiver
+    # compress_payload="auto" verdict, e.g. "cnt=lossless(0.31) msg=raw(0.97)"
+    # — per-channel scheme picked from the first-superstep sample's measured
+    # codec ratios ("" until decided / when the knob is not "auto")
+    payload_choice: str = ""
 
     def sender_overlap_seconds(self) -> float:
         """Transmit time hidden under compute: the sender was busy for

@@ -67,21 +67,88 @@ PAYLOAD_RATIO_ESTIMATE = 0.7
 PAYLOAD_SCHEMES = ("lossless", "bf16")
 
 
-def normalize_payload_scheme(compress_payload) -> str | None:
+def normalize_payload_scheme(compress_payload, allow_auto: bool = False
+                             ) -> str | None:
     """THE ``compress_payload`` knob normalization — ``False`` -> None,
     ``True`` -> "lossless", a scheme name passes through. Every consumer
     (``ChannelConfig``, ``MessageRunStore``) delegates here so the accepted
-    value set cannot drift from the codec's scheme table."""
+    value set cannot drift from the codec's scheme table.
+
+    ``"auto"`` (config surface only, hence opt-in via ``allow_auto``) defers
+    the choice to a first-superstep sample: the engine spills the first
+    superstep raw, measures the lossless codec on those runs via
+    :class:`PayloadAutoPicker`, and picks lossless vs raw per value channel.
+    Stores never see "auto" — they get the resolved scheme."""
     if not compress_payload:
         return None
     if compress_payload is True:
         return "lossless"
+    if compress_payload == "auto" and allow_auto:
+        return "auto"
     if compress_payload not in PAYLOAD_SCHEMES:
         raise ValueError(
-            f"unknown compress_payload={compress_payload!r}; use a bool or "
-            f"one of {PAYLOAD_SCHEMES}"
+            f"unknown compress_payload={compress_payload!r}; use a bool"
+            f"{', auto' if allow_auto else ''} or one of {PAYLOAD_SCHEMES}"
         )
     return compress_payload
+
+
+class PayloadAutoPicker:
+    """First-superstep payload-codec sampling (``compress_payload="auto"``).
+
+    The engine attaches one of these to the first superstep's message store
+    (``MessageRunStore.payload_sampler``); ``offer`` sees every value column
+    the store spills — possibly from the channel sender thread; the counter
+    updates are GIL-atomic and there is a single writer — and trial-encodes
+    the first ``max_samples`` runs per channel with the LOSSLESS codec. At
+    superstep end the engine asks :meth:`choose` which channels measured a
+    ratio better than ``threshold`` and fixes the wire format for every
+    later superstep; raw spilling meanwhile means the sample costs no codec
+    work on the critical path beyond the trial encodes themselves.
+    """
+
+    def __init__(self, max_samples: int = 8, threshold: float = 0.9):
+        self.max_samples = int(max_samples)
+        self.threshold = float(threshold)
+        self._raw: dict[str, int] = {}  # channel -> sampled decoded bytes
+        self._enc: dict[str, int] = {}  # channel -> lossless-encoded bytes
+        self._n: dict[str, int] = {}  # channel -> runs sampled
+
+    def offer(self, channel: str, values: np.ndarray) -> None:
+        n = self._n.get(channel, 0)
+        if n >= self.max_samples or values.size == 0:
+            return
+        arr = np.ascontiguousarray(values)
+        self._n[channel] = n + 1
+        self._raw[channel] = self._raw.get(channel, 0) + arr.nbytes
+        self._enc[channel] = (self._enc.get(channel, 0)
+                              + len(encode_payload(arr, "lossless")))
+
+    @property
+    def sampled(self) -> bool:
+        return bool(self._n)
+
+    def ratios(self) -> dict[str, float]:
+        """Measured encoded/raw byte ratio per sampled channel (< 1 means
+        the codec shrinks that channel's wire bytes)."""
+        return {ch: self._enc[ch] / self._raw[ch]
+                for ch in self._n if self._raw.get(ch)}
+
+    def choose(self) -> tuple[str, ...]:
+        """Channels whose measured ratio beats the threshold — the store's
+        ``payload_channels`` for every subsequent superstep."""
+        return tuple(sorted(ch for ch, r in self.ratios().items()
+                            if r < self.threshold))
+
+    def summary(self) -> str:
+        """Human-readable record of the decision, e.g.
+        ``"cnt=lossless(0.31) msg=raw(0.97)"`` — stored in
+        ``ChannelStats.payload_choice``."""
+        picked = set(self.choose())
+        return " ".join(
+            f"{ch}={'lossless' if ch in picked else 'raw'}({r:.2f})"
+            for ch, r in sorted(self.ratios().items())
+        )
 
 _BLOCK_HEADER = struct.Struct("<II")  # (compressed nbytes, n values)
 

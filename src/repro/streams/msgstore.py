@@ -107,7 +107,8 @@ class MessageRunStore:
 
     def __init__(self, directory: str, n_shards: int, P: int, msg_dtype,
                  with_counts: bool = False, create: bool = True,
-                 compress: bool = False, compress_payload=False):
+                 compress: bool = False, compress_payload=False,
+                 payload_channels=None):
         self.dir = directory
         self.n_shards = n_shards
         self.P = P
@@ -117,6 +118,19 @@ class MessageRunStore:
         # payload codec: msg channel in the requested scheme; the cnt
         # channel (combine counts must stay exact) always lossless
         self.payload_scheme = normalize_payload_scheme(compress_payload)
+        # which value channels the codec covers: None = all of them; the
+        # payload auto-pick narrows this to the channels whose measured
+        # ratio paid off (a channel outside the set stays fixed-width)
+        if payload_channels is not None:
+            bad = set(payload_channels) - {"msg", "cnt"}
+            if bad:
+                raise ValueError(
+                    f"payload_channels must be among ('msg', 'cnt'): {bad}")
+            payload_channels = tuple(sorted(payload_channels))
+        self.payload_channels = payload_channels
+        # optional codec.PayloadAutoPicker: sees every value column this
+        # store appends (set by the engine on the sampling superstep only)
+        self.payload_sampler = None
         if self.payload_scheme == "bf16" and self.msg_dtype != np.float32:
             raise ValueError(
                 "compress_payload='bf16' rounds float32 payloads on the "
@@ -158,8 +172,12 @@ class MessageRunStore:
         if self.compress:
             out.append("dp")
         if self.payload_scheme is not None:
-            out.append("msg")
-            if self.with_counts:
+            covered = (self.payload_channels
+                       if self.payload_channels is not None
+                       else ("msg", "cnt"))
+            if "msg" in covered:
+                out.append("msg")
+            if self.with_counts and "cnt" in covered:
                 out.append("cnt")
         return tuple(out)
 
@@ -226,6 +244,10 @@ class MessageRunStore:
         data = {"dp": dp, "msg": msg}
         if self.with_counts:
             data["cnt"] = cnt
+        if self.payload_sampler is not None:
+            for ch in self._channels():
+                if ch != "dp":
+                    self.payload_sampler.offer(ch, data[ch])
         extents: dict[str, int] = {}
         blob_len: dict[str, int] = {}
         for ch in self._channels():
@@ -616,6 +638,7 @@ class MessageRunStore:
             msg_dtype=self.msg_dtype.name, with_counts=self.with_counts,
             compress=self.compress,
             compress_payload=self.payload_scheme,
+            payload_channels=self.payload_channels,
             sizes=self._sizes, blob_bytes=self._blob_bytes,
             runs=[[s.__dict__ for s in runs] for runs in self._runs],
         )
@@ -631,7 +654,8 @@ class MessageRunStore:
         store = cls(directory, m["n_shards"], m["P"],
                     np.dtype(m["msg_dtype"]), with_counts=m["with_counts"],
                     create=False, compress=m.get("compress", False),
-                    compress_payload=m.get("compress_payload") or False)
+                    compress_payload=m.get("compress_payload") or False,
+                    payload_channels=m.get("payload_channels"))
         store._sizes = list(m["sizes"])
         blob = m.get("blob_bytes")
         if blob is None and "dp_bytes" in m and store.compress:

@@ -150,12 +150,17 @@ class StreamReader:
     """Background-thread prefetcher over an :class:`EdgeStreamStore`."""
 
     def __init__(self, store: EdgeStreamStore, chunk_blocks: int = 8,
-                 depth: int = 2, owner_views: bool = False):
+                 depth: int = 2, owner_views: bool = False, residency=None):
         if depth < 1:
             raise ValueError("depth must be >= 1 (2 = double buffering)")
         self.store = store
         self.chunk_blocks = chunk_blocks
         self.depth = depth
+        # optional BlockResidency (streams/residency.py): the producer asks
+        # it for every chunk, so hot blocks are served from the bounded RAM
+        # cache and only the cold tail costs disk I/O — the stats below then
+        # count REAL reads, not staged blocks
+        self.residency = residency
         self.stats = StreamStats()
         self._worker: threading.Thread | None = None
         self._stop = threading.Event()
@@ -236,13 +241,20 @@ class StreamReader:
                             return
                         sp, dp, w = pool[bid]
                         t0 = time.perf_counter()
-                        c = self._reader_for(i).read_blocks(
-                            i, k, ids[off:off + CB], sp, dp, w
-                        )
+                        if self.residency is not None:
+                            c, disk = self.residency.read_blocks(
+                                self._reader_for(i), i, k,
+                                ids[off:off + CB], sp, dp, w
+                            )
+                        else:
+                            c = self._reader_for(i).read_blocks(
+                                i, k, ids[off:off + CB], sp, dp, w
+                            )
+                            disk = c
                         stats.read_seconds += time.perf_counter() - t0
                         stats.chunks += 1
-                        stats.blocks_read += c
-                        stats.bytes_read += c * B * 12  # i32+i32+f32 per edge
+                        stats.blocks_read += disk
+                        stats.bytes_read += disk * B * 12  # i32+i32+f32/edge
                         stats.edges_staged += int((sp[:c] >= 0).sum())
                         if not _put(StagedChunk(
                             src_shard=i, dst_shard=k,

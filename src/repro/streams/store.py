@@ -345,6 +345,12 @@ class EdgeStreamStore:
             for name in _FILES
         )
 
+    def block_bytes(self) -> int:
+        """DECODED bytes of one staged edge block across the three channels
+        — the admission/accounting unit of the hot-block residency cache
+        (streams/residency.py), independent of on-disk compression."""
+        return self.geom.edge_block * EDGE_SLOT_BYTES
+
     # -- skip() (§3.2) -------------------------------------------------------
     def active_blocks(self, i: int, k: int, prefix: np.ndarray) -> np.ndarray:
         """Block ids of group (i, k) whose source range [lo, hi] contains an

@@ -69,7 +69,17 @@ STREAMED_VARIANTS = [
     ("pipelined-compressed", dict(pipeline=True, compress=True)),
     ("payload-compressed", dict(pipeline=True, compress=True,
                                 compress_payload=True)),
+    # the codec auto-pick: first superstep raw + sampled, then the measured
+    # per-channel choice — the switch point must be invisible in results
+    ("payload-auto", dict(pipeline=True, compress=True,
+                          compress_payload="auto")),
 ]
+
+# semi-external cache budgets (bytes per shard, scaled to block_bytes at
+# run time): 0 = pure streaming, a few blocks = eviction churn, and a
+# "fits entirely" point where every block is served from RAM after its
+# first read. Results must be bit-identical at EVERY point.
+SEMI_EXTERNAL_BUDGET_BLOCKS = (0, 2, None)  # None -> whole graph / n_shards
 
 
 def _streamed_config(pipeline=False, compress=False, compress_payload=False,
@@ -147,6 +157,126 @@ def test_matrix_all_modes_match_basic(matrix_graph, name, factory, exact):
         else:
             # reassociated IEEE sums: ulp-scale slack, nothing more
             np.testing.assert_allclose(v, v_ref, rtol=3e-6, atol=0)
+
+
+@pytest.mark.parametrize("name,factory,exact",
+                         ALGORITHMS, ids=[a[0] for a in ALGORITHMS])
+def test_matrix_semi_external_matches_streamed(matrix_graph, name, factory,
+                                               exact):
+    """The semi-external column of the matrix: a hot-block cache budget
+    changes only WHERE an edge block is read from (RAM copy vs memmap), so
+    the results must be bit-identical to pure ``mode="streamed"`` at EVERY
+    budget — 0, an eviction-churning few blocks, and "the whole graph fits"
+    — for all 8 algorithms, float-SUM programs included (the fold consumes
+    the same staged rows either way: no reassociation freedom at all)."""
+    g, rmap, pg, pgs, stores = matrix_graph
+    store = stores[0]
+    v_ref, a_ref, steps_ref, act_ref, msgs_ref = _run(
+        GraphDEngine(pgs, factory(g, rmap), config=_streamed_config(),
+                     stream_store=store)
+    )
+    block_bytes = store.block_bytes()
+    nonempty = store.nonempty_blocks()
+    for blocks in SEMI_EXTERNAL_BUDGET_BLOCKS:
+        if blocks is None:  # the engine caps capacity at cache * n_shards
+            cache = -(-nonempty * block_bytes // N_SHARDS)
+        else:
+            cache = blocks * block_bytes
+        eng = GraphDEngine(
+            pgs, factory(g, rmap),
+            config=EngineConfig(
+                mode="streamed",
+                stream=StreamConfig(chunk_blocks=2, cache_bytes=cache),
+            ),
+            stream_store=store,
+        )
+        (values, active), hist = eng.run(max_supersteps=60)
+        v, a = np.asarray(values), np.asarray(active)
+        assert len(hist) == steps_ref, (name, cache, "halt step")
+        assert [r.n_active for r in hist] == act_ref, (name, cache, "active")
+        assert [r.n_msgs for r in hist] == msgs_ref, (name, cache, "msgs")
+        assert np.array_equal(a, a_ref), (name, cache, "active bitmap")
+        assert np.array_equal(v, v_ref), (name, cache, "values")
+        if blocks == 0:
+            # budget 0 degenerates to counted pure streaming
+            assert sum(r.cache_hits for r in hist) == 0, (name, "budget 0")
+        if blocks is None:
+            # fits entirely: each block pays disk at most once, ever
+            assert sum(r.blocks_read for r in hist) <= nonempty, (
+                name, "fits-entirely budget re-read a block from disk")
+
+
+def test_semi_external_sssp_skips_inactive_shards(tmp_path):
+    """The selective-scheduling drill (§3.2 skip() + residency counters):
+    SSSP on a chain crosses the shards one frontier vertex at a time, so in
+    late rounds whole source shards have no active vertices — and those
+    shards' edge blocks must see ZERO reads (not cache hits: no I/O at
+    all), while the records tally them as skipped."""
+    from repro.graph import chain_graph
+
+    n_vertices = 48
+    g = chain_graph(n_vertices)
+    pgs, rmap, store = partition_graph_streamed(
+        g, N_SHARDS, str(tmp_path / "chain"), edge_block=4
+    )
+    src = int(rmap.to_new(np.array([0]))[0])
+    eng = GraphDEngine(
+        pgs, SSSP(src), config=_streamed_config(), stream_store=store
+    )
+    # spy on the ONE disk funnel, counting block reads per SOURCE shard
+    # (plain streamed config => no owner views: every read hits `store`)
+    reads = [0] * N_SHARDS
+    orig = store.read_blocks
+
+    def spy(i, k, ids, *out):
+        reads[i] += len(ids)
+        return orig(i, k, ids, *out)
+
+    store.read_blocks = spy
+    trace = []  # (reads snapshot, shard-has-active-sources, record)
+
+    def on_step(rec, state):
+        _, active = state
+        trace.append((list(reads),
+                      np.asarray(active).any(axis=1).copy(), rec))
+
+    try:
+        eng.run(max_supersteps=200, on_step=on_step)
+    finally:
+        del store.read_blocks  # restore the class method
+    # step s+1 folds the frontier that step s left: a shard inactive at the
+    # end of s must contribute zero disk reads during s+1
+    drilled = 0
+    for (reads0, alive, _), (reads1, _, rec) in zip(trace, trace[1:]):
+        for w in range(N_SHARDS):
+            if not alive[w]:
+                assert reads1[w] == reads0[w], (
+                    f"superstep {rec.step}: shard {w} had no active "
+                    f"sources yet its blocks were read")
+                drilled += 1
+        if not alive.all():
+            assert rec.blocks_skipped > 0, rec.step
+    # the drill must actually have exercised late rounds with dead shards
+    assert drilled > 0, "chain drill never produced an inactive shard"
+
+
+def test_payload_auto_records_choice(matrix_graph):
+    """``compress_payload="auto"``: the decision is taken from the first
+    superstep's sample and recorded (with measured ratios) in
+    ``ChannelStats.payload_choice``; the engine's later per-step stores run
+    the picked per-channel format."""
+    g, rmap, pg, pgs, stores = matrix_graph
+    eng = GraphDEngine(
+        pgs, PageRank(supersteps=5),
+        config=_streamed_config(pipeline=True, compress_payload="auto"),
+        stream_store=stores[0],
+    )
+    _run(eng)
+    assert not eng._payload_auto  # decided after the first superstep
+    choice = eng.channel_stats.payload_choice
+    assert "msg=" in choice and "(" in choice, choice
+    # PageRank combined groups carry a cnt channel; it was sampled too
+    assert "cnt=" in choice, choice
 
 
 def test_job_facade_matches_handwired_streamed_pipeline(matrix_graph,
