@@ -9,9 +9,11 @@ writes the consolidated JSON; ``--check`` fails the run when a required
 section is missing or empty, when the receiver overlap is not positive,
 when the lossless payload channel is under 1.5x, when the
 ``launch="processes"`` per-process RAM model grows with the process count,
-or when the semi-external hot cache fails to cut disk block reads below
-pure streaming while staying inside the planner's ``hot_cache`` model —
-the acceptance gates, enforced where the numbers are produced.
+when the semi-external hot cache fails to cut disk block reads below
+pure streaming while staying inside the planner's ``hot_cache`` model,
+or when the socket transport's measured link throughput does not beat the
+file-exchange baseline (or its run left shared-filesystem exchange dirs
+behind) — the acceptance gates, enforced where the numbers are produced.
 """
 
 from __future__ import annotations
@@ -26,7 +28,7 @@ from benchmarks.common import OVERLAP_MIN_CPUS, PAYLOAD_LOSSLESS_FLOOR
 
 #: required BENCH_PR5.json sections; --check fails on a missing/empty one
 REQUIRED_SECTIONS = ("wall_clock", "ram_model", "overlap", "bytes_on_wire",
-                     "process_launch", "semi_external")
+                     "process_launch", "semi_external", "net")
 
 
 def _module_plan(tiny: bool):
@@ -74,6 +76,7 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
     overlap = values_of("memory/pipeline_overlap")
     process_launch = values_of("memory/process_launch")
     semi_external = values_of("memory/semi_external")
+    net = values_of("memory/net")
     wire = values_of("memory/payload_wire_lossless")
     bytes_on_wire = dict(
         lossless=wire,
@@ -88,6 +91,7 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
             bytes_on_wire=bytes_on_wire if wire else {},
             process_launch=process_launch,
             semi_external=semi_external,
+            net=net,
         ),
         records=records_by_bench,
     )
@@ -153,6 +157,37 @@ def check(report: dict) -> list[str]:
                 f"planner's hot_cache model: "
                 f"cached={semi.get('cached_bytes')!r} cap={cache_cap!r}"
             )
+    net = sections.get("net") or {}
+    if net:
+        if net.get("link_bytes_per_s", 0) <= net.get("file_bytes_per_s", 0):
+            problems.append(
+                "measured socket link throughput must beat the "
+                "file-exchange baseline: "
+                f"link={net.get('link_bytes_per_s')!r} B/s "
+                f"file={net.get('file_bytes_per_s')!r} B/s"
+            )
+        if not net.get("no_fs_exchange"):
+            problems.append(
+                "socket-transport run must not write shared-filesystem "
+                "exchange dirs (announce markers found)"
+            )
+        if net.get("wire_bytes", 0) <= 0 or net.get("frames", 0) <= 0:
+            problems.append(
+                "socket transport moved no frames: "
+                f"wire_bytes={net.get('wire_bytes')!r} "
+                f"frames={net.get('frames')!r}"
+            )
+        if net.get("cpus", 1) >= OVERLAP_MIN_CPUS:
+            if net.get("sender_overlap_ms", 0) <= 0:
+                problems.append(
+                    "socket-run sender overlap must be > 0 ms, got "
+                    f"{net.get('sender_overlap_ms')!r}"
+                )
+            if net.get("receiver_overlap_ms", 0) <= 0:
+                problems.append(
+                    "socket-run receiver overlap must be > 0 ms, got "
+                    f"{net.get('receiver_overlap_ms')!r}"
+                )
     wire = (sections.get("bytes_on_wire") or {}).get("lossless") or {}
     if wire.get("ratio", 0) < PAYLOAD_LOSSLESS_FLOOR:
         problems.append(

@@ -217,6 +217,19 @@ class EngineConfig:
                 "cache is the semi-external tier between RAM and the edge "
                 "stream; the in-memory modes are fully resident already"
             )
+        if ch.payload_scheme == "auto" and self.recovery.log_messages:
+            # a run-file message log fixes its wire format at configure();
+            # the auto-pick resolves the codec only after the first
+            # superstep's sample, and a recovery replay could not re-derive
+            # the same mid-run switch point. Catch the conflict here — at
+            # plan/job construction — instead of deep inside engine wiring.
+            raise ConfigError(
+                "channel.compress_payload='auto' conflicts with "
+                "recovery.log_messages=True: the auto-pick resolves the "
+                "wire codec from a first-superstep sample, but a message "
+                "log needs a fixed wire format for bit-identical replay — "
+                "pass 'lossless' (or False) explicitly"
+            )
         if self.backend == "pallas" and self.mode != "recoded":
             raise ConfigError("backend='pallas' needs mode='recoded'")
         if self.mode == "streamed" and self.backend != "jnp":

@@ -78,7 +78,9 @@ class FileCoordinator:
     everything from the records.
     """
 
-    POLL = 0.005  # barrier poll interval (seconds)
+    POLL = 0.005  # first barrier poll interval (seconds)
+    POLL_MAX = 0.1  # backoff cap: blocked waiters settle at <= 10 stats/s
+    POLL_GROWTH = 2.0
 
     def __init__(self, directory: str, n_shards: int, *,
                  heartbeat_interval: float = 0.25,
@@ -87,7 +89,21 @@ class FileCoordinator:
         self.n = int(n_shards)
         self.heartbeat_interval = float(heartbeat_interval)
         self.heartbeat_timeout = float(heartbeat_timeout)
+        self._beat_seq = 0  # this process's own beat counter
+        # shard -> (last JSON progress key, monotonic time it was first seen)
+        self._hb_seen: dict[int, tuple] = {}
         os.makedirs(os.path.join(directory, "heartbeat"), exist_ok=True)
+
+    def _poll_delays(self):
+        """Exponential backoff for barrier waits: starts at POLL so a
+        nearly-open barrier stays fast, caps at POLL_MAX so n blocked
+        workers cost O(n/POLL_MAX) stat syscalls/s instead of starving
+        co-located folds. One generator per wait — backoff never leaks
+        across barriers."""
+        d = self.POLL
+        while True:
+            yield d
+            d = min(d * self.POLL_GROWTH, self.POLL_MAX)
 
     # -- paths ----------------------------------------------------------------
     def step_dir(self, step: int) -> str:
@@ -120,8 +136,16 @@ class FileCoordinator:
 
     # -- heartbeats ------------------------------------------------------------
     def beat(self, shard: int) -> None:
+        """One heartbeat record. ``seq`` is the liveness signal: staleness
+        is judged from sequence PROGRESS (plus the watcher's own monotonic
+        clock), never from file mtime — shared filesystems round mtime to
+        whole seconds and writer/watcher wall clocks skew, either of which
+        false-trips worker-dead detection. ``t`` (writer wall time) stays in
+        the record for post-mortem reading only."""
+        self._beat_seq += 1
         atomic_write_json(self.heartbeat_path(shard),
-                          dict(shard=shard, t=time.time()))
+                          dict(shard=shard, seq=self._beat_seq,
+                               t=time.time()))
 
     def start_heartbeat(self, shard: int) -> threading.Thread:
         """Daemon heartbeat writer; dies with the process — which is the
@@ -140,11 +164,25 @@ class FileCoordinator:
         return t
 
     def heartbeat_age(self, shard: int) -> float:
-        """Seconds since the shard's last beat (inf before the first)."""
-        try:
-            return time.time() - os.path.getmtime(self.heartbeat_path(shard))
-        except OSError:
+        """Seconds (on THIS process's monotonic clock) since the shard's
+        heartbeat record last made progress — inf before the first record.
+
+        Progress means the ``(seq, t)`` content of the JSON changed; the
+        file's mtime is deliberately ignored (coarse-granularity shared
+        filesystems and clock skew made the mtime-based age false-trip).
+        The first observation of any record counts as fresh: the watcher
+        cannot know how long it sat there, and the spawn grace window is
+        what covers startup latency."""
+        rec = read_json(self.heartbeat_path(shard))
+        if rec is None:
             return float("inf")
+        key = (rec.get("seq"), rec.get("t"))
+        seen = self._hb_seen.get(shard)
+        now = time.monotonic()
+        if seen is None or seen[0] != key:
+            self._hb_seen[shard] = (key, now)
+            return 0.0
+        return now - seen[1]
 
     def stale(self, shard: int) -> bool:
         return self.heartbeat_age(shard) > self.heartbeat_timeout
@@ -157,12 +195,13 @@ class FileCoordinator:
 
     def wait_commit(self, step: int, shard: int) -> dict:
         path = self.commit_path(step)
+        delays = self._poll_delays()
         while True:
             rec = read_json(path)
             if rec is not None:
                 return rec
             self.check_abort()
-            time.sleep(self.POLL)
+            time.sleep(next(delays))
 
     def commit(self, step: int) -> dict | None:
         """The commit record for ``step`` if published (non-blocking)."""
@@ -172,9 +211,10 @@ class FileCoordinator:
         """Worker-side wait for any published record (e.g. a peer's outbox
         announce marker); polls the poison pill so a dead coordinator run
         cannot strand the worker."""
+        delays = self._poll_delays()
         while not os.path.exists(path):
             self.check_abort()
-            time.sleep(self.POLL)
+            time.sleep(next(delays))
 
     # -- coordinator side --------------------------------------------------------
     def arrivals(self, step: int) -> dict[int, dict]:
@@ -189,13 +229,14 @@ class FileCoordinator:
         """Block until all n workers arrived at ``step``. ``on_wait()`` runs
         every poll tick — the launcher hooks liveness monitoring (process
         exit + heartbeat staleness → recovery or abort) there."""
+        delays = self._poll_delays()
         while True:
             got = self.arrivals(step)
             if len(got) == self.n:
                 return got
             if on_wait is not None:
                 on_wait(got)
-            time.sleep(self.POLL)
+            time.sleep(next(delays))
 
     @staticmethod
     def reduce_arrivals(arrivals: dict[int, dict]) -> dict:
@@ -208,6 +249,11 @@ class FileCoordinator:
         blocks = 0
         residency = dict(blocks_read=0, cache_hits=0, cache_evictions=0,
                          blocks_skipped=0)
+        # socket-transport channel accounting (seconds busy/stalled per
+        # direction + bytes framed); zero under the file transport
+        net = dict(net_send_s=0.0, net_stall_s=0.0, net_recv_s=0.0,
+                   net_recv_stall_s=0.0, net_wire_bytes=0.0,
+                   net_frames=0.0)
         for w in sorted(arrivals):
             rec = arrivals[w]
             n_active += int(rec["n_active"])
@@ -216,8 +262,10 @@ class FileCoordinator:
             blocks += int(rec.get("active_blocks", 0))
             for key in residency:
                 residency[key] += int(rec.get(key, 0))
+            for key in net:
+                net[key] += float(rec.get(key, 0.0))
         return dict(n_active=n_active, n_msgs=n_msgs, agg=agg,
-                    active_blocks=blocks, **residency)
+                    active_blocks=blocks, **residency, **net)
 
     def publish_commit(self, step: int, totals: dict, *, halt: bool,
                        ckpt_landed: bool) -> dict:

@@ -141,8 +141,9 @@ class GraphDJob:
         self.program = program
         self.graph = graph
         self.launch = launch
-        # launch_opts tunes the deployment, not the plan: today that is the
-        # coordinator's liveness clock (heartbeat_interval / _timeout)
+        # launch_opts tunes the deployment, not the plan: the message
+        # transport ("files" | "sockets") and the coordinator's liveness
+        # clock (heartbeat_interval / _timeout)
         self.launch_opts = dict(launch_opts or {})
         # expert plans are materialized verbatim; only budget-derived plans
         # get their knobs re-derived against the realized geometry
@@ -157,6 +158,18 @@ class GraphDJob:
                 f"stream their owner view from disk); got mode={plan.mode!r}"
                 " — re-plan with plan(..., launch='processes')"
             )
+        if (launch == "processes"
+                and plan.config.channel.payload_scheme == "auto"):
+            # the auto-pick's first-superstep sample is engine-local state:
+            # n worker processes would each decide independently and their
+            # wire formats could diverge. Downgrade to the fixed lossless
+            # codec (keeping compression!) instead of rejecting the plan —
+            # the planner-layer resolution of the conflict that
+            # EngineConfig.finalize()/run_processes raise ConfigError for.
+            plan = dataclasses.replace(plan, config=dataclasses.replace(
+                plan.config, channel=dataclasses.replace(
+                    plan.config.channel, compress_payload="lossless"),
+            ))
         if checkpoint_every is not None:
             # message logging (=> single-shard fast recovery) needs either a
             # combined A_s log or the streamed OMS run files; a combiner-less
@@ -448,8 +461,9 @@ class GraphDJob:
                           ignore_errors=True)
             for name in os.listdir(procs_dir):
                 if name.startswith("shard-"):
-                    shutil.rmtree(os.path.join(procs_dir, name, "inbox"),
-                                  ignore_errors=True)
+                    for sub in ("inbox", "outbox"):
+                        shutil.rmtree(os.path.join(procs_dir, name, sub),
+                                      ignore_errors=True)
 
     def close(self, delete: bool | None = None) -> None:
         """Release the workdir. ``delete`` defaults to True only when the

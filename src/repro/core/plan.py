@@ -251,6 +251,25 @@ def estimate_net(mode: str, *, n_shards: int, P: int, E_cap: int,
     return int(n_shards * P * per_msg)  # sparse combined groups
 
 
+def estimate_net_seconds(net_bytes: int, link_bytes_per_s: float) -> float:
+    """Seconds one shard spends transmitting per superstep at a MEASURED
+    per-link throughput — the time axis the byte model alone cannot give.
+    Pair with :func:`measured_link_throughput` (or any bytes/s figure)."""
+    if link_bytes_per_s <= 0:
+        raise ValueError("link_bytes_per_s must be positive")
+    return net_bytes / float(link_bytes_per_s)
+
+
+def measured_link_throughput(n_bytes: int = 8 << 20) -> float:
+    """Probe the actual link (loopback TCP through the socket transport's
+    frame path, framing + CRC included) instead of proxying network cost
+    with disk bandwidth. Lazy import: the planner stays importable without
+    the launch layer."""
+    from repro.launch.net import probe_link_throughput
+
+    return probe_link_throughput(n_bytes)
+
+
 # --------------------------------------------------------------------------
 # budget / metadata inputs
 # --------------------------------------------------------------------------
@@ -339,6 +358,9 @@ class Candidate:
     net_total: int
     knobs: dict[str, int]
     compress_payload: bool = False
+    # net_total priced at a measured per-link throughput (seconds/superstep);
+    # 0.0 when the plan was made without a link probe
+    net_seconds: float = 0.0
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -413,6 +435,8 @@ class ExecutionPlan:
                 verdict = "REJECTED"
             line = (f"  {c.name:<20} {verdict:<8} ram={_fmt(c.ram_total)} "
                     f"disk={_fmt(c.disk_total)} net={_fmt(c.net_total)}/step")
+            if c.net_seconds:
+                line += f" ({c.net_seconds * 1e3:.2f} ms at measured link)"
             if c.reason:
                 line += f" — {c.reason}"
             lines.append(line)
@@ -478,12 +502,17 @@ def plan(
     skew: float = 1.5,
     recovery: RecoveryConfig | None = None,
     launch: str = "threads",
+    link_bytes_per_s: float | None = None,
 ) -> ExecutionPlan:
     """Choose an execution mode and derive every knob from the budget.
 
     ``graph_meta`` is a :class:`GraphMeta`, a ``Graph``, or a
     ``PartitionedGraph``; ``skew`` models the max/mean per-group padding
     overhead of the hash partition (Lemma 1 bounds it by 2).
+    ``link_bytes_per_s`` prices every candidate's ``net_total`` in seconds
+    (``Candidate.net_seconds``) at a measured per-link throughput — pass
+    :func:`measured_link_throughput` for a real probe of the socket
+    transport's frame path instead of a disk-bandwidth proxy.
     ``launch="processes"`` restricts the candidate set to what the
     multi-process deployment can actually execute — on-disk edge streams
     (each worker maps only its owner view) and the full-duplex pipelined
@@ -708,6 +737,11 @@ def plan(
         candidates.append(in_memory("basic", "basic"))
     candidates.append(streamed(pipeline=False))
     candidates.append(streamed(pipeline=True))
+
+    if link_bytes_per_s is not None:
+        for c in candidates:
+            c.net_seconds = estimate_net_seconds(c.net_total,
+                                                 link_bytes_per_s)
 
     winner = next((c for c in candidates if c.feasible), None)
     if winner is None:

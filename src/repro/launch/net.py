@@ -1,0 +1,1062 @@
+"""TCP socket transport for the multi-process launch (paper §4's network).
+
+The file transport (PR 6) exchanges messages through shared-filesystem run
+files, so "network" cost is really disk cost. This layer ships the SAME run
+wire format — per-destination runs in the sender's canonical spill/combine
+transform, received in ascending source order — over persistent per-peer
+TCP connections, and multiplexes the coordinator protocol (barrier
+arrivals, commits, heartbeats, abort) onto one coordinator connection per
+worker instead of polled files. Equivalence is structural: every run still
+round-trips through a :class:`MessageRunStore` on both ends (sender-side
+per-step outbox = the replay log, receiver-side inbox = the digest source),
+so the 8-algorithm matrix stays bit-identical to the file transport and the
+threaded driver — float programs included.
+
+Framing: ``>IBII`` header (magic, kind, payload length, CRC32 of payload),
+then the payload. A short read or EOF mid-frame raises :class:`TornFrame`;
+a CRC/magic mismatch raises :class:`FrameError`. Receivers treat both as
+"this connection is dead": the torn frame is discarded and the reader waits
+for the sender to reconnect — no partial run ever reaches an inbox.
+
+Reconnect-with-resume: each sender keeps the step's outgoing runs in a
+local outbox store (``shard-w/outbox/step-S``, deleted only after the
+step's commit). A (re)connecting sender opens with ``HELLO{src, step}``;
+the receiver replies ``RESUME{step, have, ended}`` where ``have`` counts
+the runs it already appended from that source. The sender replays
+``runs[have:]`` from its outbox — run index IS the sequence number, so
+duplicates (``seq < have``) are discarded and the append order the digest
+depends on is preserved across any number of connection drops, sender
+respawns, or receiver respawns.
+
+Deadlock-freedom of the ascending-source reader: worker w's reader drains
+source 0 first while w's own sends proceed on the background transmit
+thread, so source 0's transmissions always complete; induction on the
+source index does the rest. TCP backpressure (bounded kernel buffers)
+bounds the memory of not-yet-read sources.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import select
+import signal
+import socket
+import struct
+import threading
+import time
+import zlib
+
+import numpy as np
+
+from repro.core.coordinator import FileCoordinator, RunAborted
+from repro.streams.codec import (
+    decode_payload,
+    decode_varint_delta,
+    encode_payload,
+    encode_varint_delta,
+)
+
+# -- framing -------------------------------------------------------------------
+
+MAGIC = 0x47445052  # "GDPR"(aph-D): run-frame magic
+_HEADER = struct.Struct(">IBII")  # magic, kind, payload nbytes, payload crc32
+MAX_FRAME = 1 << 30  # sanity cap: a length beyond this is stream garbage
+
+# data plane (worker <-> worker)
+K_HELLO = 1  # sender handshake: {src, step}
+K_RESUME = 2  # receiver reply: {step, have, ended}
+K_RUN = 3  # one message run (json subheader + channel blobs)
+K_END = 4  # sender finished the step toward this destination: {step, n_runs}
+# coordinator plane (worker <-> launcher)
+K_CHELLO = 10  # worker registration: {shard, addr}
+K_PEERS = 11  # launcher reply: {addrs, last_commit, abort}
+K_PEER_UPDATE = 12  # a shard respawned at a new address: {shard, addr}
+K_BEAT = 13  # heartbeat: {shard, seq}
+K_ARRIVE = 14  # barrier arrival: the full per-shard stats record
+K_COMMIT = 15  # commit broadcast: the commit record
+K_ABORT = 16  # poison pill broadcast: {reason}
+
+
+class TornFrame(ConnectionError):
+    """EOF or short read mid-frame: the peer died with a frame in flight.
+    The partial bytes are discarded — never fed to an inbox."""
+
+
+class FrameError(ConnectionError):
+    """Magic or CRC mismatch: the stream is corrupt past recovery; the
+    connection is dropped and the resume handshake re-delivers."""
+
+
+def _recv_exact(conn: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = conn.recv(n - len(buf))
+        if not chunk:
+            raise TornFrame(f"connection closed after {len(buf)}/{n} bytes")
+        buf += chunk
+    return bytes(buf)
+
+
+def send_frame(conn: socket.socket, kind: int, payload: bytes) -> int:
+    """One length-prefixed CRC'd frame; returns bytes put on the wire."""
+    hdr = _HEADER.pack(MAGIC, kind, len(payload), zlib.crc32(payload))
+    conn.sendall(hdr + payload)
+    return _HEADER.size + len(payload)
+
+
+def recv_frame(conn: socket.socket) -> tuple[int, bytes]:
+    """The inverse: blocks for one complete frame, verifies magic + CRC."""
+    magic, kind, length, crc = _HEADER.unpack(_recv_exact(conn, _HEADER.size))
+    if magic != MAGIC or length > MAX_FRAME:
+        raise FrameError(f"bad frame header (magic={magic:#x} len={length})")
+    payload = _recv_exact(conn, length)
+    if zlib.crc32(payload) != crc:
+        raise FrameError("frame CRC mismatch")
+    return kind, payload
+
+
+def _send_json(conn: socket.socket, kind: int, obj) -> int:
+    return send_frame(conn, kind, json.dumps(obj).encode())
+
+
+# -- run frame codec -----------------------------------------------------------
+
+_RUN_HLEN = struct.Struct(">I")
+
+
+def encode_run(*, step: int, seq: int, tag: int, dp: np.ndarray,
+               msg: np.ndarray, cnt: np.ndarray | None,
+               compress: bool = False, scheme: str | None = None) -> bytes:
+    """One run -> one RUN frame payload.
+
+    The channel blobs reuse the store codecs (varint-delta on the sorted
+    destination column, the payload codec on the value column) so the wire
+    carries the same compressed representation as the disk exchange it
+    replaces. ``cnt`` (combine counts) stays raw — exactness is its job.
+    """
+    dp = np.ascontiguousarray(dp, np.int32)
+    n = int(dp.size)
+    dp_b = encode_varint_delta(dp) if (compress and n) else dp.tobytes()
+    marr = np.ascontiguousarray(msg)
+    msg_b = encode_payload(marr, scheme) if (scheme and n) else marr.tobytes()
+    cnt_b = b""
+    if cnt is not None:
+        cnt_b = np.ascontiguousarray(cnt, np.int32).tobytes()
+    hdr = json.dumps(dict(
+        step=int(step), seq=int(seq), tag=int(tag), n=n,
+        dp_nb=len(dp_b), msg_nb=len(msg_b), cnt_nb=len(cnt_b),
+        dp_enc=bool(compress and n),
+        scheme=scheme if (scheme and n) else None,
+        msg_dtype=marr.dtype.name, cnt=cnt is not None,
+    )).encode()
+    return b"".join((_RUN_HLEN.pack(len(hdr)), hdr, dp_b, msg_b, cnt_b))
+
+
+def decode_run(payload: bytes):
+    """Inverse of :func:`encode_run` -> ``(hdr, dp, msg, cnt)``."""
+    (hlen,) = _RUN_HLEN.unpack_from(payload)
+    hdr = json.loads(payload[_RUN_HLEN.size:_RUN_HLEN.size + hlen])
+    off = _RUN_HLEN.size + hlen
+    n = hdr["n"]
+    dp_b = payload[off:off + hdr["dp_nb"]]
+    off += hdr["dp_nb"]
+    msg_b = payload[off:off + hdr["msg_nb"]]
+    off += hdr["msg_nb"]
+    cnt_b = payload[off:off + hdr["cnt_nb"]]
+    if hdr["dp_enc"]:
+        dp = np.asarray(decode_varint_delta(dp_b), np.int32)
+    else:
+        dp = np.frombuffer(dp_b, np.int32)
+    dtype = np.dtype(hdr["msg_dtype"])
+    if hdr["scheme"]:
+        msg = np.asarray(decode_payload(msg_b, dtype, n, hdr["scheme"]))
+    else:
+        msg = np.frombuffer(msg_b, dtype)
+    cnt = np.frombuffer(cnt_b, np.int32) if hdr["cnt"] else None
+    return hdr, dp, msg, cnt
+
+
+# -- data plane: receiver ------------------------------------------------------
+
+class PeerServer:
+    """One per worker: accepts the n persistent inbound connections (one
+    per source, self included via loopback) and hands complete runs to the
+    step's reader in ascending source order.
+
+    The accept thread performs the HELLO/RESUME handshake and swaps the
+    per-source connection slot; :meth:`read_source` owns all data-frame
+    reading, so runs from source j are appended exactly in sequence order —
+    the append order the combiner-less merge's cursor tie-break depends on.
+    """
+
+    def __init__(self, n_shards: int, start_step: int,
+                 host: str = "127.0.0.1"):
+        self.n = int(n_shards)
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, 0))
+        self._sock.listen(self.n + 8)
+        self.addr = self._sock.getsockname()
+        self._cv = threading.Condition()
+        self._conns: list[socket.socket | None] = [None] * self.n
+        self._step = int(start_step)
+        self._have = [0] * self.n  # runs appended per source, this step
+        self._ended = [False] * self.n
+        self._closed = False
+
+    def start(self) -> None:
+        t = threading.Thread(target=self._accept_loop, name="peer-accept",
+                             daemon=True)
+        t.start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # listener closed
+            try:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                kind, payload = recv_frame(conn)
+                if kind != K_HELLO:
+                    raise FrameError(f"expected HELLO, got kind={kind}")
+                src = int(json.loads(payload)["src"])
+                with self._cv:
+                    reply = dict(step=self._step, have=self._have[src],
+                                 ended=self._ended[src])
+                    old, self._conns[src] = self._conns[src], conn
+                    self._cv.notify_all()
+                _send_json(conn, K_RESUME, reply)
+                if old is not None:
+                    try:
+                        old.close()
+                    except OSError:
+                        pass
+            except (ConnectionError, OSError, KeyError, ValueError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
+    def begin_step(self, step: int) -> None:
+        with self._cv:
+            self._step = int(step)
+            self._have = [0] * self.n
+            self._ended = [False] * self.n
+
+    def read_source(self, step: int, src: int, on_run, check_abort) -> int:
+        """Drain source ``src`` for ``step``: calls ``on_run(hdr, dp, msg,
+        cnt)`` per fresh run, returns the run count once END arrives.
+
+        Stale frames (an earlier step, replayed after a commit the sender
+        had not seen) and duplicates (``seq < have``, replayed by the
+        resume handshake) are discarded; a torn/corrupt connection is
+        dropped and the loop waits for the sender to reconnect."""
+        while True:
+            with self._cv:
+                conn = self._conns[src]
+            if conn is None:
+                check_abort()
+                with self._cv:
+                    if self._conns[src] is None:
+                        self._cv.wait(0.1)
+                continue
+            try:
+                ready, _, _ = select.select([conn], [], [], 0.25)
+                if not ready:
+                    check_abort()
+                    continue
+                kind, payload = recv_frame(conn)
+            except (ConnectionError, OSError):
+                self._drop(src, conn)
+                check_abort()
+                continue
+            if kind == K_RUN:
+                hdr, dp, msg, cnt = decode_run(payload)
+                if hdr["step"] < step:
+                    continue  # pre-reconnect leftovers of a committed step
+                if hdr["step"] > step:
+                    raise RuntimeError(
+                        f"source {src} ran ahead: frame step {hdr['step']} "
+                        f"while reading step {step}")
+                if hdr["seq"] < self._have[src]:
+                    continue  # resume-handshake replay duplicate
+                if hdr["seq"] > self._have[src]:
+                    raise RuntimeError(
+                        f"sequence gap from source {src}: got {hdr['seq']}, "
+                        f"expected {self._have[src]}")
+                on_run(hdr, dp, msg, cnt)
+                with self._cv:
+                    self._have[src] += 1
+            elif kind == K_END:
+                if json.loads(payload)["step"] < step:
+                    continue
+                with self._cv:
+                    self._ended[src] = True
+                return self._have[src]
+            else:
+                raise RuntimeError(f"unexpected data frame kind={kind}")
+
+    def _drop(self, src: int, conn: socket.socket) -> None:
+        with self._cv:
+            if self._conns[src] is conn:
+                self._conns[src] = None
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        for conn in self._conns:
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
+
+# -- data plane: sender --------------------------------------------------------
+
+class _Stop(Exception):
+    """Internal: the sender was closed mid-wait."""
+
+
+class PeerSender:
+    """One per worker: a single transmit thread drains a FIFO op queue so
+    runs leave in exactly the fold's emission order, overlapping the fold
+    (§4's U_s ∥ U_c) the same way the threaded channel's sender does.
+
+    Every run is appended to the step's local outbox store FIRST (the
+    canonical spill/combine transform — same bytes as the file exchange)
+    and the framed wire bytes are read back from it, so what is replayable
+    is exactly what was sent. ``inflight`` bounds the queue the way the
+    channel's sender does: the compute thread blocks (stall-accounted)
+    when the network falls behind.
+    """
+
+    RECONNECT_POLL = 0.1
+    RECONNECT_POLL_MAX = 1.0
+    SEND_TIMEOUT = 60.0
+
+    def __init__(self, me: int, n_shards: int, make_store, *,
+                 inflight: int = 4, stats=None, check_abort=None,
+                 kill_net: dict | None = None):
+        self.me = int(me)
+        self.n = int(n_shards)
+        self._make_store = make_store  # step -> fresh MessageRunStore
+        self._stats = stats
+        self._check_abort = check_abort or (lambda: None)
+        self._kill = kill_net
+        self._kill_frames = 0
+        self._addrs: list[tuple | None] = [None] * self.n
+        self._conns: list[socket.socket | None] = [None] * self.n
+        self._q: queue.Queue = queue.Queue()
+        self._slots = threading.BoundedSemaphore(max(1, int(inflight)))
+        self._sent = [0] * self.n  # runs appended (== next seq) per dest
+        self._end_sent = [False] * self.n
+        self._step: int | None = None
+        self._store = None
+        self._stores: dict[int, object] = {}  # kept until the step commits
+        self._exc: BaseException | None = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, name="peer-send",
+                                        daemon=True)
+
+    # -- compute-thread surface ----------------------------------------------
+    def set_addrs(self, addrs) -> None:
+        self._addrs = [tuple(a) for a in addrs]
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def update_addr(self, shard: int, addr) -> None:
+        """PEER_UPDATE arrived: shard respawned at a new address. The
+        transmit thread reconnects and the RESUME handshake replays the
+        outbox backlog."""
+        self._addrs[int(shard)] = tuple(addr)
+        self._q.put(("resync", int(shard)))
+
+    def begin_step(self, step: int) -> None:
+        """Synchronous: returns once the transmit thread swapped in the
+        step's fresh outbox store (all prior-step ops drained first)."""
+        ev = threading.Event()
+        self._q.put(("begin", int(step), ev))
+        self._wait(ev)
+
+    def send_combined(self, dest: int, A, cnt, tag: int) -> None:
+        self._acquire_slot()
+        self._q.put(("comb", int(dest), A, cnt, int(tag)))
+
+    def send_raw(self, dest: int, dp, msg, valid, tag: int) -> None:
+        self._acquire_slot()
+        self._q.put(("raw", int(dest), dp, msg, valid, int(tag)))
+
+    def end_step(self) -> None:
+        """Queue the END fan-out: ensures every destination's backlog is
+        fully delivered (reconnecting + replaying as needed) before END."""
+        ev = threading.Event()
+        self._q.put(("end", ev))
+        self._wait(ev)
+
+    def finish_step(self, step: int) -> None:
+        """The step committed: every receiver has everything, the outbox
+        log is dead weight — delete it."""
+        self._q.put(("drop", int(step)))
+
+    def check_failed(self) -> None:
+        if self._exc is not None:
+            raise RuntimeError("socket sender failed") from self._exc
+
+    def close(self) -> None:
+        self._closed = True
+        self._q.put(("quit",))
+
+    # -- plumbing --------------------------------------------------------------
+    def _acquire_slot(self) -> None:
+        self.check_failed()
+        t0 = time.perf_counter()
+        while not self._slots.acquire(timeout=0.5):
+            self.check_failed()
+            self._check_abort()
+        if self._stats is not None:
+            self._stats.stall_seconds += time.perf_counter() - t0
+
+    def _wait(self, ev: threading.Event) -> None:
+        while not ev.wait(0.5):
+            self.check_failed()
+            self._check_abort()
+
+    # -- transmit thread -------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            op = self._q.get()
+            if op[0] == "quit":
+                self._teardown()
+                return
+            try:
+                t0 = time.perf_counter()
+                busy = self._dispatch(op)
+                if busy and self._stats is not None:
+                    self._stats.send_seconds += time.perf_counter() - t0
+            except (_Stop, RunAborted):
+                self._teardown()
+                return
+            except BaseException as e:  # surfaced via check_failed()
+                self._exc = e
+                self._teardown()
+                return
+
+    def _dispatch(self, op) -> bool:
+        kind = op[0]
+        if kind == "begin":
+            _, step, ev = op
+            self._step = step
+            self._store = self._make_store(step)
+            self._stores[step] = self._store
+            self._sent = [0] * self.n
+            self._end_sent = [False] * self.n
+            self._kill_frames = 0
+            ev.set()
+            return False
+        if kind == "comb":
+            _, dest, A, cnt, tag = op
+            seg = self._store.append_combined(dest, A, cnt, tag=tag)
+            self._transmit_seg(dest, seg)
+            self._slots.release()
+            return True
+        if kind == "raw":
+            _, dest, dp, msg, valid, tag = op
+            seg = self._store.append_raw(dest, dp, msg, valid, tag=tag)
+            if seg is not None:  # all-invalid chunks never become runs
+                self._transmit_seg(dest, seg)
+            self._slots.release()
+            return True
+        if kind == "end":
+            _, ev = op
+            self._store.save_index()  # outbox becomes a valid replay log
+            for dest in range(self.n):
+                self._ensure_conn(dest)
+                self._send_end(dest)
+            ev.set()
+            return True
+        if kind == "resync":
+            _, dest = op
+            conn = self._conns[dest]
+            self._conns[dest] = None
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            if self._step is not None:
+                self._ensure_conn(dest)
+                if self._end_sent[dest]:
+                    self._send_end(dest, resend=True)
+            return True
+        if kind == "drop":
+            store = self._stores.pop(op[1], None)
+            if store is not None:
+                store.delete()
+            return False
+        raise RuntimeError(f"unknown sender op {kind!r}")
+
+    def _teardown(self) -> None:
+        for conn in self._conns:
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        for store in self._stores.values():
+            try:
+                store.close()
+            except OSError:
+                pass
+
+    def _transmit_seg(self, dest: int, seg) -> None:
+        """Frame one just-appended run and send it; run index == seq."""
+        seq = self._sent[dest]
+        self._sent[dest] += 1
+        if self._conns[dest] is None:
+            self._ensure_conn(dest)
+            return  # the handshake replay just delivered runs[have:], incl. this one
+        self._send_run(dest, seq, seg)
+
+    def _send_run(self, dest: int, seq: int, seg) -> None:
+        conn = self._conns[dest]
+        if conn is None:
+            return  # dead conn: the run waits in the outbox for resync
+        parts = self._store.read_run(dest, seg)
+        cnt = parts[2] if self._store.with_counts else None
+        payload = encode_run(step=self._step, seq=seq, tag=seg.tag,
+                             dp=parts[0], msg=parts[1], cnt=cnt,
+                             compress=self._store.compress,
+                             scheme=self._store.payload_scheme)
+        self._maybe_kill(conn, payload)
+        try:
+            wire = send_frame(conn, K_RUN, payload)
+        except OSError:
+            self._kill_conn(dest, conn)
+            return
+        if self._stats is not None:
+            self._stats.wire_bytes += wire
+            self._stats.packets += 1
+            self._stats.payload_bytes += sum(
+                p.nbytes for p in parts if p is not None)
+
+    def _send_end(self, dest: int, resend: bool = False) -> None:
+        conn = self._conns[dest]
+        if conn is None and not resend:
+            # END must land: a receiver blocked on this source would hang
+            self._ensure_conn(dest)
+            conn = self._conns[dest]
+        if conn is None:
+            return
+        try:
+            wire = _send_json(conn, K_END,
+                              dict(step=self._step, n_runs=self._sent[dest]))
+            if self._stats is not None and not resend:
+                self._stats.wire_bytes += wire
+                self._stats.packets += 1
+        except OSError:
+            self._kill_conn(dest, conn)
+            if not resend:
+                self._ensure_conn(dest)
+                self._send_end(dest)
+                return
+        self._end_sent[dest] = True
+
+    def _kill_conn(self, dest: int, conn: socket.socket) -> None:
+        if self._conns[dest] is conn:
+            self._conns[dest] = None
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+    def _ensure_conn(self, dest: int) -> None:
+        """Connect + HELLO/RESUME handshake + backlog replay. Retries with
+        backoff until the destination is reachable (a respawning worker) or
+        the run aborts — the outbox store makes the wait safe."""
+        if self._conns[dest] is not None:
+            return
+        delay = self.RECONNECT_POLL
+        while True:
+            if self._closed:
+                raise _Stop()
+            self._check_abort()
+            addr = self._addrs[dest]
+            try:
+                conn = socket.create_connection(addr, timeout=5.0)
+            except OSError:
+                time.sleep(delay)
+                delay = min(delay * 2, self.RECONNECT_POLL_MAX)
+                continue
+            try:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                conn.settimeout(self.SEND_TIMEOUT)
+                _send_json(conn, K_HELLO, dict(src=self.me, step=self._step))
+                kind, payload = recv_frame(conn)
+                if kind != K_RESUME:
+                    raise FrameError(f"expected RESUME, got kind={kind}")
+                reply = json.loads(payload)
+            except (ConnectionError, OSError, ValueError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                time.sleep(delay)
+                delay = min(delay * 2, self.RECONNECT_POLL_MAX)
+                continue
+            break
+        self._conns[dest] = conn
+        if reply["step"] == self._step:
+            have = int(reply["have"])
+        elif reply["step"] > self._step:
+            # receiver already past our step (it saw the commit; we have
+            # not yet) — it needs nothing more from this step
+            have = self._sent[dest]
+        else:
+            # receiver behind (respawned, or between steps): it holds
+            # nothing of our current step yet
+            have = 0
+        for seq, seg in enumerate(self._store.runs(dest)[have:self._sent[dest]],
+                                  start=have):
+            self._send_run(dest, seq, seg)
+
+    def _maybe_kill(self, conn: socket.socket, payload: bytes) -> None:
+        """Fault-injection hook (tests only): after ``after_frames`` RUN
+        frames of the target step, write the header plus HALF the payload
+        and die by SIGKILL — a frame torn mid-transmission."""
+        k = self._kill
+        if k is None or int(k.get("step", -1)) != self._step:
+            return
+        self._kill_frames += 1
+        if self._kill_frames <= int(k.get("after_frames", 0)):
+            return
+        hdr = _HEADER.pack(MAGIC, K_RUN, len(payload), zlib.crc32(payload))
+        try:
+            conn.sendall(hdr + payload[:max(1, len(payload) // 2)])
+        except OSError:
+            pass
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+# -- coordinator plane ---------------------------------------------------------
+
+class CoordServer:
+    """The launcher's side of the coordinator plane: one listener, one
+    persistent connection per worker, the FileCoordinator surface
+    (wait_arrivals / reduce_arrivals / publish_commit / abort / stale)
+    backed by in-memory state fed by per-connection reader threads —
+    commits and aborts are PUSHED to workers, so their barrier waits are
+    event-driven instead of polled files."""
+
+    def __init__(self, n_shards: int, *, heartbeat_timeout: float = 10.0,
+                 host: str = "127.0.0.1"):
+        self.n = int(n_shards)
+        self.heartbeat_timeout = float(heartbeat_timeout)
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, 0))
+        self._sock.listen(self.n + 8)
+        self.addr = self._sock.getsockname()
+        self._cv = threading.Condition()
+        self._conns: dict[int, socket.socket] = {}
+        self._send_lock = threading.Lock()
+        self._addrs: dict[int, tuple] = {}  # shard -> data-plane addr
+        self._seen: set[int] = set()
+        self._beats: dict[int, tuple] = {}  # shard -> (seq, monotonic recv)
+        self._arrivals: dict[int, dict[int, dict]] = {}
+        self._commits: dict[int, dict] = {}
+        self._last_commit: dict | None = None
+        self._abort: str | None = None
+        self._closed = False
+
+    def start(self) -> None:
+        t = threading.Thread(target=self._accept_loop, name="coord-accept",
+                             daemon=True)
+        t.start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="coord-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        shard = None
+        try:
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            kind, payload = recv_frame(conn)
+            if kind != K_CHELLO:
+                raise FrameError(f"expected CHELLO, got kind={kind}")
+            msg = json.loads(payload)
+            shard = int(msg["shard"])
+            addr = tuple(msg["addr"])
+            with self._cv:
+                respawn = shard in self._seen
+                self._seen.add(shard)
+                self._addrs[shard] = addr
+                old = self._conns.get(shard)
+                self._conns[shard] = conn
+                self._cv.notify_all()
+            if old is not None:
+                try:
+                    old.close()
+                except OSError:
+                    pass
+            if respawn:
+                self._broadcast(K_PEER_UPDATE,
+                                dict(shard=shard, addr=list(addr)),
+                                exclude=shard)
+            with self._cv:  # first launch: PEERS only once everyone is in
+                while len(self._addrs) < self.n and self._abort is None:
+                    self._cv.wait(0.1)
+                reply = dict(
+                    addrs=[list(self._addrs[j]) for j in range(self.n)]
+                    if len(self._addrs) == self.n else None,
+                    last_commit=self._last_commit, abort=self._abort)
+            with self._send_lock:
+                _send_json(conn, K_PEERS, reply)
+            while True:
+                kind, payload = recv_frame(conn)
+                msg = json.loads(payload)
+                if kind == K_BEAT:
+                    self._beats[shard] = (msg.get("seq"), time.monotonic())
+                elif kind == K_ARRIVE:
+                    with self._cv:
+                        step = int(msg["step"])
+                        self._arrivals.setdefault(step, {})[shard] = msg
+                        self._cv.notify_all()
+        except (ConnectionError, OSError, ValueError, KeyError):
+            pass
+        finally:
+            with self._cv:
+                if shard is not None and self._conns.get(shard) is conn:
+                    del self._conns[shard]
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _broadcast(self, kind: int, obj, exclude: int | None = None) -> None:
+        with self._cv:
+            conns = {w: c for w, c in self._conns.items() if w != exclude}
+        for conn in conns.values():
+            try:
+                with self._send_lock:
+                    _send_json(conn, kind, obj)
+            except OSError:
+                pass  # a dead worker's conn; liveness handles it
+
+    # -- FileCoordinator surface (launcher side) -------------------------------
+    def arrivals(self, step: int) -> dict[int, dict]:
+        with self._cv:
+            return dict(self._arrivals.get(int(step), {}))
+
+    def wait_arrivals(self, step: int, on_wait=None) -> dict[int, dict]:
+        step = int(step)
+        while True:
+            with self._cv:
+                got = dict(self._arrivals.get(step, {}))
+                if len(got) == self.n:
+                    return got
+                if on_wait is None:
+                    self._cv.wait(0.25)
+                    continue
+            on_wait(got)  # liveness hook runs outside the lock
+            with self._cv:
+                if len(self._arrivals.get(step, {})) != len(got):
+                    continue
+                self._cv.wait(0.05)
+
+    # identical shard-ascending reduction — totals stay bit-identical
+    reduce_arrivals = staticmethod(FileCoordinator.reduce_arrivals)
+
+    def publish_commit(self, step: int, totals: dict, *, halt: bool,
+                       ckpt_landed: bool) -> dict:
+        rec = dict(step=int(step), halt=bool(halt),
+                   ckpt_landed=bool(ckpt_landed), **totals)
+        with self._cv:
+            self._commits[int(step)] = rec
+            self._last_commit = rec
+        self._broadcast(K_COMMIT, rec)
+        return rec
+
+    def commit(self, step: int) -> dict | None:
+        with self._cv:
+            return self._commits.get(int(step))
+
+    def abort(self, reason: str) -> None:
+        with self._cv:
+            self._abort = str(reason)
+            self._cv.notify_all()
+        self._broadcast(K_ABORT, dict(reason=str(reason)))
+
+    def aborted(self) -> str | None:
+        return self._abort
+
+    def check_abort(self) -> None:
+        if self._abort is not None:
+            raise RunAborted(f"run aborted by coordinator: {self._abort}")
+
+    def heartbeat_age(self, shard: int) -> float:
+        beat = self._beats.get(int(shard))
+        if beat is None:
+            return float("inf")
+        return time.monotonic() - beat[1]
+
+    def stale(self, shard: int) -> bool:
+        return self.heartbeat_age(shard) > self.heartbeat_timeout
+
+    def gc_steps(self, before: int) -> None:
+        with self._cv:
+            for s in [s for s in self._arrivals if s < before]:
+                del self._arrivals[s]
+            for s in [s for s in self._commits if s < before]:
+                del self._commits[s]
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._cv:
+            conns = list(self._conns.values())
+        for conn in conns:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+
+class CoordClient:
+    """The worker's side: stdlib-only (it starts BEFORE the heavy jax
+    import, exactly like the file heartbeat, so liveness covers import
+    time), one socket, a reader thread that turns pushed COMMIT/ABORT/
+    PEER_UPDATE frames into event-driven barrier wakeups, and a heartbeat
+    thread whose sequence numbers feed the launcher's staleness judgement."""
+
+    def __init__(self, addr, shard: int, *,
+                 heartbeat_interval: float = 0.25):
+        self.shard = int(shard)
+        self.heartbeat_interval = float(heartbeat_interval)
+        self._sock = socket.create_connection(tuple(addr), timeout=30.0)
+        self._sock.settimeout(None)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._wlock = threading.Lock()
+        self._cv = threading.Condition()
+        self._commits: dict[int, dict] = {}
+        self._peers: dict | None = None
+        self._abort: str | None = None
+        self._closed = False
+        self._stop = threading.Event()
+        self._hello = threading.Event()  # beats must not precede CHELLO
+        self.on_peer_update = None  # set by the worker once the sender exists
+
+    def _send(self, kind: int, obj) -> None:
+        with self._wlock:
+            _send_json(self._sock, kind, obj)
+
+    def start(self) -> None:
+        threading.Thread(target=self._reader, name="coord-read",
+                         daemon=True).start()
+        threading.Thread(target=self._beats, name="coord-beat",
+                         daemon=True).start()
+
+    def register(self, data_addr) -> list[tuple]:
+        """CHELLO with our data-plane address; blocks for PEERS (all n
+        registered). Returns the peer address table; any commit the run
+        already published is seeded into the local commit cache so a
+        respawned worker sees its recovery baseline immediately."""
+        self._send(K_CHELLO, dict(shard=self.shard, addr=list(data_addr)))
+        self._hello.set()  # heartbeats may flow now that CHELLO framed first
+        with self._cv:
+            while self._peers is None and self._abort is None:
+                self._cv.wait(0.2)
+            self.check_abort()
+            peers = self._peers
+        last = peers.get("last_commit")
+        if last is not None:
+            with self._cv:
+                self._commits[int(last["step"])] = last
+        return [tuple(a) for a in peers["addrs"]]
+
+    def _reader(self) -> None:
+        try:
+            while True:
+                kind, payload = recv_frame(self._sock)
+                msg = json.loads(payload)
+                if kind == K_COMMIT:
+                    with self._cv:
+                        self._commits[int(msg["step"])] = msg
+                        self._cv.notify_all()
+                elif kind == K_PEERS:
+                    with self._cv:
+                        if msg.get("abort"):
+                            self._abort = msg["abort"]
+                        self._peers = msg
+                        self._cv.notify_all()
+                elif kind == K_PEER_UPDATE:
+                    cb = self.on_peer_update
+                    if cb is not None:
+                        cb(int(msg["shard"]), tuple(msg["addr"]))
+                elif kind == K_ABORT:
+                    with self._cv:
+                        self._abort = msg["reason"]
+                        self._cv.notify_all()
+        except (ConnectionError, OSError, ValueError):
+            with self._cv:
+                if not self._closed:
+                    # a vanished coordinator is a poison pill: no barrier
+                    # will ever open again
+                    self._abort = self._abort or "coordinator connection lost"
+                self._cv.notify_all()
+
+    def _beats(self) -> None:
+        while not self._hello.is_set():
+            if self._stop.wait(0.01):
+                return
+        seq = 0
+        while not self._stop.is_set():
+            seq += 1
+            try:
+                self._send(K_BEAT, dict(shard=self.shard, seq=seq))
+            except OSError:
+                return  # reader flags the abort
+            self._stop.wait(self.heartbeat_interval)
+
+    # -- FileCoordinator surface (worker side) ---------------------------------
+    def arrive(self, step: int, shard: int, stats: dict) -> None:
+        self._send(K_ARRIVE, dict(shard=int(shard), step=int(step), **stats))
+
+    def wait_commit(self, step: int, shard: int) -> dict:
+        """Event-driven: sleeps on the condition the reader notifies when
+        the commit frame lands — no polling loop, no stat syscalls."""
+        step = int(step)
+        with self._cv:
+            while True:
+                rec = self._commits.get(step)
+                if rec is not None:
+                    return rec
+                if self._abort is not None:
+                    raise RunAborted(
+                        f"run aborted by coordinator: {self._abort}")
+                self._cv.wait(1.0)
+
+    def commit(self, step: int) -> dict | None:
+        with self._cv:
+            return self._commits.get(int(step))
+
+    def aborted(self) -> str | None:
+        with self._cv:
+            return self._abort
+
+    def check_abort(self) -> None:
+        reason = self.aborted()
+        if reason is not None:
+            raise RunAborted(f"run aborted by coordinator: {reason}")
+
+    def close(self) -> None:
+        self._closed = True
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# -- link probes (planner calibration) -----------------------------------------
+
+def probe_link_throughput(n_bytes: int = 8 << 20,
+                          chunk: int = 256 << 10) -> float:
+    """Measured per-link throughput (bytes/s) through the REAL frame path:
+    a loopback TCP connection, framed+CRC'd chunks, a concurrent reader —
+    so the number the planner consumes includes framing and checksum cost
+    and the pipelining a live link gets (send overlaps receive), which the
+    old disk-bandwidth proxy could not express."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    got = [0]
+
+    def drain(conn):
+        try:
+            while got[0] < n_bytes:
+                _, payload = recv_frame(conn)
+                got[0] += len(payload)
+        except ConnectionError:
+            pass
+
+    out = socket.create_connection(srv.getsockname())
+    out.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    inn, _ = srv.accept()
+    t = threading.Thread(target=drain, args=(inn,), daemon=True)
+    t.start()
+    blob = b"\xa5" * chunk
+    t0 = time.perf_counter()
+    sent = 0
+    while sent < n_bytes:
+        send_frame(out, K_RUN, blob)
+        sent += chunk
+    t.join()
+    elapsed = max(time.perf_counter() - t0, 1e-9)
+    for s in (out, inn, srv):
+        try:
+            s.close()
+        except OSError:
+            pass
+    return sent / elapsed
+
+
+def probe_file_throughput(directory: str, n_bytes: int = 8 << 20,
+                          chunk: int = 256 << 10) -> float:
+    """The file-exchange baseline the socket transport replaces — the full
+    round trip a delivered byte used to make (launch/procs.py's outbox/
+    announce/inbox exchange): the sender writes the outbox run and fsyncs
+    before the atomic announce rename (a crashed sender must not announce
+    garbage), then the receiver reads the announced run, copies it into its
+    own local inbox store, and reads it back for the digest.  Two writes,
+    two reads and a durability barrier per delivered byte, where the socket
+    path frames each byte exactly once."""
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, "probe.bin")
+    inbox = os.path.join(directory, "probe-inbox.bin")
+    marker = os.path.join(directory, "probe.ok")
+    blob = b"\xa5" * chunk
+    t0 = time.perf_counter()
+    with open(path, "wb") as f:
+        written = 0
+        while written < n_bytes:
+            f.write(blob)
+            written += chunk
+        f.flush()
+        os.fsync(f.fileno())
+    with open(marker + ".tmp", "w") as f:
+        f.write("ok")
+    os.replace(marker + ".tmp", marker)
+    with open(path, "rb") as rd, open(inbox, "wb") as wr:
+        while True:
+            buf = rd.read(chunk)
+            if not buf:
+                break
+            wr.write(buf)
+    with open(inbox, "rb") as f:
+        while f.read(chunk):
+            pass
+    elapsed = max(time.perf_counter() - t0, 1e-9)
+    for p in (path, inbox, marker):
+        os.unlink(p)
+    return written / elapsed

@@ -24,6 +24,19 @@ exclusively through the shared filesystem:
   forward from the latest checkpoint over the worker's own message log
   (paper §3.4 / [19] single-shard fast recovery) and rejoins the barrier.
 
+``launch_opts={"transport": "sockets"}`` swaps the shared-filesystem
+exchange for the real TCP transport (``repro.launch.net``): runs stream
+over persistent per-peer connections while the fold is still producing
+(§4's transmit ∥ compute), receivers feed them straight into the same
+ChannelReceiver digest path, and the coordinator protocol rides one
+multiplexed connection per worker (event-driven commits, pushed aborts,
+in-band heartbeats). Each sender keeps the step's runs in a LOCAL per-step
+outbox store — the replay log the reconnect-with-resume handshake serves —
+so crash recovery keeps the same bit-identical story with no shared
+filesystem on the message hot path. The run results are bit-identical
+between both transports: every run round-trips the same MessageRunStore
+transforms and arrives in the same source-ascending digest order.
+
 Worker processes are started as ``python -m repro.launch.procs worker
 <spec_dir> <shard>``. This module keeps its import-time dependencies to the
 standard library + the coordinator so a worker can start its heartbeat
@@ -40,6 +53,7 @@ import re
 import shutil
 import subprocess
 import sys
+import threading
 import time
 
 import numpy as np
@@ -103,7 +117,9 @@ def _src_root() -> str:
 
 def _write_spec(job, procs_dir: str, coord_dir: str, *, start_step: int,
                 target: int, bootstrap: str, ckpt_step: int | None,
-                heartbeat_interval: float, heartbeat_timeout: float) -> None:
+                heartbeat_interval: float, heartbeat_timeout: float,
+                transport: str = "files", coord_addr=None,
+                kill_net=None) -> None:
     pg, cfg = job.pg, job.plan.config
     rec = cfg.recovery
     spec = dict(
@@ -127,6 +143,9 @@ def _write_spec(job, procs_dir: str, coord_dir: str, *, start_step: int,
         ckpt_step=ckpt_step,
         heartbeat_interval=heartbeat_interval,
         heartbeat_timeout=heartbeat_timeout,
+        transport=transport,
+        coord_addr=coord_addr,
+        kill_net=kill_net,
     )
     atomic_write_json(os.path.join(procs_dir, SPEC), spec)
     with open(os.path.join(procs_dir, PROGRAM), "wb") as f:
@@ -175,23 +194,44 @@ def run_processes(job, max_supersteps: int = 10_000, *,
     never holds the distributed state, only the barrier records."""
     from repro.core.engine import SuperstepRecord
 
+    from repro.core.config import ConfigError
+
     program, pg, store = job.program, job.pg, job.store
     cfg = job.plan.config
     if cfg.channel.payload_scheme == "auto":
-        # the auto-pick's first-superstep sample is engine-local state; n
-        # worker processes would each decide independently and diverge
-        raise ValueError(
-            "compress_payload='auto' is a single-process engine feature; "
-            "launch='processes' workers need a fixed wire format — pass "
+        # defensive: GraphDJob downgrades auto -> lossless for processes
+        # launches; reaching here means a caller bypassed the job facade.
+        # The auto-pick's first-superstep sample is engine-local state; n
+        # worker processes would each decide independently and diverge.
+        raise ConfigError(
+            "channel.compress_payload='auto' conflicts with "
+            "launch='processes': the auto-pick is a single-process engine "
+            "feature and n workers need one fixed wire format — pass "
             "'lossless' (or False) explicitly"
         )
     n = pg.n_shards
     opts = dict(job.launch_opts or {})
+    transport = opts.get("transport", "files")
+    if transport not in ("files", "sockets"):
+        raise ValueError(
+            f"launch_opts transport must be 'files' or 'sockets', got "
+            f"{transport!r}"
+        )
     heartbeat_interval = float(opts.get("heartbeat_interval", 0.25))
     heartbeat_timeout = float(opts.get("heartbeat_timeout", 10.0))
     # crash drill (tests / CI): {"shard": w, "step": s} SIGKILLs worker w
     # mid-superstep s — after it announced its outbox, before it arrives
     kill_spec = opts.get("kill")
+    if kill_spec is not None and transport != "files":
+        raise ValueError(
+            "launch_opts 'kill' waits on the announce marker — a file-"
+            "transport drill; use 'kill_net' for the socket transport"
+        )
+    # socket crash drill: {"shard": w, "step": s, "after_frames": m} makes
+    # worker w SIGKILL ITSELF with a run frame half-written on the wire
+    kill_net = opts.get("kill_net")
+    if kill_net is not None and transport != "sockets":
+        raise ValueError("launch_opts 'kill_net' needs transport='sockets'")
     can_recover = (job.checkpointer is not None
                    and cfg.recovery.log_messages)
 
@@ -202,6 +242,11 @@ def run_processes(job, max_supersteps: int = 10_000, *,
     # this run's barriers early
     for sub in ("coord", "outbox", "announce", "result"):
         shutil.rmtree(os.path.join(procs_dir, sub), ignore_errors=True)
+    if os.path.isdir(procs_dir):
+        for name in os.listdir(procs_dir):
+            if name.startswith("shard-"):  # socket senders' per-step outbox
+                shutil.rmtree(os.path.join(procs_dir, name, "outbox"),
+                              ignore_errors=True)
     os.makedirs(procs_dir, exist_ok=True)
 
     target = min(
@@ -253,13 +298,23 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                 state = job.engine.init()
         return state, []
 
-    coord = FileCoordinator(coord_dir, n,
-                            heartbeat_interval=heartbeat_interval,
-                            heartbeat_timeout=heartbeat_timeout)
+    coord_addr = None
+    if transport == "sockets":
+        from repro.launch.net import CoordServer
+
+        coord = CoordServer(n, heartbeat_timeout=heartbeat_timeout)
+        coord.start()
+        coord_addr = list(coord.addr)
+    else:
+        coord = FileCoordinator(coord_dir, n,
+                                heartbeat_interval=heartbeat_interval,
+                                heartbeat_timeout=heartbeat_timeout)
     _write_spec(job, procs_dir, coord_dir, start_step=start_step,
                 target=target, bootstrap=bootstrap, ckpt_step=ckpt_step,
                 heartbeat_interval=heartbeat_interval,
-                heartbeat_timeout=heartbeat_timeout)
+                heartbeat_timeout=heartbeat_timeout,
+                transport=transport, coord_addr=coord_addr,
+                kill_net=kill_net)
 
     src_root = _src_root()
     procs: list[subprocess.Popen | None] = [None] * n
@@ -342,6 +397,12 @@ def run_processes(job, max_supersteps: int = 10_000, *,
 
     history: list[SuperstepRecord] = []
     every = job.checkpointer.every if job.checkpointer is not None else 0
+    # socket-transport channel accounting across the run (zero for files);
+    # surfaced as job._last_run_net for benchmarks and audits
+    net_totals = dict(net_send_s=0.0, net_stall_s=0.0, net_recv_s=0.0,
+                      net_recv_stall_s=0.0, net_wire_bytes=0.0,
+                      net_frames=0.0)
+    job._last_run_net = dict(net_totals)
     ok = False
     try:
         for w in range(n):
@@ -361,6 +422,8 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                     p.kill()
             arrivals = coord.wait_arrivals(s, on_wait=_liveness(s))
             totals = coord.reduce_arrivals(arrivals)
+            for key in net_totals:
+                net_totals[key] += float(totals.get(key, 0.0))
             ckpt_landed = False
             if every and (s + 1) % every == 0:
                 _finalize_checkpoint(
@@ -405,13 +468,16 @@ def run_processes(job, max_supersteps: int = 10_000, *,
         # recovered like any other (replays to last_step + 1, sees the halt
         # commit, writes the result)
         deadline_check = _liveness(last_step + 1)
+        poll = FileCoordinator.POLL  # result wait backs off like barriers
         while True:
             missing = [w for w in range(n)
                        if not os.path.exists(_result_path(procs_dir, w))]
             if not missing:
                 break
             deadline_check(set(range(n)) - set(missing))
-            time.sleep(FileCoordinator.POLL)
+            time.sleep(poll)
+            poll = min(poll * FileCoordinator.POLL_GROWTH,
+                       FileCoordinator.POLL_MAX)
         vals, acts = [], []
         for w in range(n):
             z = np.load(_result_path(procs_dir, w))
@@ -429,6 +495,9 @@ def run_processes(job, max_supersteps: int = 10_000, *,
             if coord.aborted() is None:
                 coord.abort("launcher failed")
             _killall()
+        job._last_run_net = net_totals
+        if transport == "sockets":
+            coord.close()
     import jax.numpy as jnp
 
     return (jnp.asarray(np.stack(vals)), jnp.asarray(np.stack(acts))), history
@@ -453,10 +522,12 @@ def _latest_checkpoint_step(ckpt_dir: str, at_most: int) -> int | None:
 
 
 class _Worker:
-    """One shard's superstep loop over the shared-filesystem transport."""
+    """One shard's superstep loop over either transport: shared-filesystem
+    run files (default) or the TCP socket layer (``server`` is its
+    PeerServer and a PeerSender transmit thread is wired to it)."""
 
-    def __init__(self, spec: dict, program, shard: int,
-                 coord: FileCoordinator):
+    def __init__(self, spec: dict, program, shard: int, coord,
+                 server=None, peer_addrs=None):
         import jax.numpy as jnp
 
         from repro.core.checkpoint import RunFileMessageLog
@@ -514,6 +585,46 @@ class _Worker:
             )
         # slice-cap growth persists across supersteps, like the engine's
         self._slice_cap_eff = self.cfg.spill.slice_cap
+        # -- socket transport wiring (None under the file transport) -------
+        self.server = server
+        self.sender = None
+        self.net_stats = None
+        if server is not None:
+            from repro.launch.net import PeerSender
+            from repro.streams.channel import ChannelStats
+            from repro.streams.msgstore import MessageRunStore
+
+            self.net_stats = ChannelStats()
+            outbox_root = os.path.join(_shard_dir(self.procs_dir, shard),
+                                       "outbox")
+            n, P = self.n, self.P
+            cfg, comb, mdt = self.cfg, self.comb, self.msg_dtype
+
+            def make_store(step):
+                # the sender's per-step replay log, in the SAME store
+                # transform as the file transport's outbox — what goes on
+                # the wire is what append_combined/append_raw produce
+                d = os.path.join(outbox_root, f"step-{step:06d}")
+                shutil.rmtree(d, ignore_errors=True)
+                return MessageRunStore(
+                    d, n, P, mdt, with_counts=comb is not None,
+                    compress=cfg.channel.compress,
+                    compress_payload=cfg.channel.compress_payload,
+                )
+
+            kill_net = spec.get("kill_net")
+            if kill_net is not None and int(kill_net.get("shard", -1)) != shard:
+                kill_net = None
+            self.sender = PeerSender(
+                shard, n, make_store, inflight=cfg.channel.inflight,
+                stats=self.net_stats, check_abort=coord.check_abort,
+                kill_net=kill_net,
+            )
+            self.sender.set_addrs(peer_addrs)
+            # a respawned peer's new data address flows straight into the
+            # transmit thread, which reconnects and resumes from its outbox
+            coord.on_peer_update = self.sender.update_addr
+            self.sender.start()
 
     # -- state bootstrap -------------------------------------------------------
     def bootstrap(self):
@@ -608,6 +719,128 @@ class _Worker:
         obox.close()
         os.makedirs(os.path.dirname(marker), exist_ok=True)
         atomic_write_json(marker, dict(src=self.w, step=s))
+
+    def _send_net(self, s: int, values_w, active_w) -> None:
+        """Socket-transport send phase: the same fold/spill as :meth:`_send`
+        but each group goes to the PeerSender the moment it is folded — the
+        transmit thread appends it to the step's outbox store (the replay
+        log) and frames it onto the destination's connection while the next
+        group is still folding. No idempotence marker: re-sent runs after a
+        respawn are deduplicated by the resume protocol's sequence check."""
+        import jax
+        import jax.numpy as jnp
+
+        schedule = self._own_schedule(active_w)
+        self.residency.note_skipped(
+            self.own_nonempty
+            - sum(len(ids) for (_, _, ids) in schedule)
+        )
+        step = jnp.int32(s)
+        for (_, k, ids) in schedule:
+            if self.comb is not None:
+                A = self.comb.identity((self.P,), self.program.msg_dtype)
+                cnt = jnp.zeros((self.P,), jnp.int32)
+                for chunk in self.reader.stream([(self.w, k, ids)]):
+                    A, cnt = self.kern.fold(
+                        A, cnt, values_w, self.degree, active_w,
+                        jnp.asarray(chunk.sp), jnp.asarray(chunk.dp),
+                        jnp.asarray(chunk.w), step,
+                    )
+                    jax.block_until_ready(cnt)
+                self.sender.send_combined(k, np.asarray(A),
+                                          np.asarray(cnt), tag=self.w)
+            else:
+                for chunk in self.reader.stream([(self.w, k, ids)]):
+                    msg, dp, valid = self.kern.msgs(
+                        values_w, self.degree, active_w,
+                        chunk.sp, chunk.dp, chunk.w, step,
+                    )
+                    self.sender.send_raw(k, np.asarray(dp), np.asarray(msg),
+                                         np.asarray(valid), tag=self.w)
+        self.sender.end_step()
+
+    def _superstep_net(self, s: int, values_w, active_w, inbox):
+        """One socket-transport superstep: a reader thread drains the n
+        peer connections in ascending source order into the inbox (and the
+        ChannelReceiver digest, when combining) WHILE the fold transmits —
+        §4's full overlap, with the same digest sequence as the file path:
+        per source, runs land in sender append order; sources complete
+        ascending. Returns the engine-shaped ``(nv, na, nact, nm, ag)``."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.streams.channel import ChannelReceiver
+
+        self.server.begin_step(s)
+        self.sender.begin_step(s)
+        comb, stats = self.comb, self.net_stats
+        receiver = None
+        if comb is not None:
+            P = self.P
+            identity = lambda: (comb.identity((P,), self.program.msg_dtype),
+                                jnp.zeros((P,), jnp.int32))
+
+            def _digest(A, cnt, A_d, c_d):
+                A, cnt = self.kern.digest(A, cnt, jnp.asarray(A_d),
+                                          jnp.asarray(c_d))
+                jax.block_until_ready(cnt)
+                return A, cnt
+
+            receiver = ChannelReceiver(inbox, _digest, identity, comb.e0,
+                                       stats=stats)
+
+        def on_run(hdr, dp, msg, cnt):
+            t0 = time.perf_counter()
+            lseg = inbox.append_run(
+                self.w, dp, msg,
+                cnt=cnt if comb is not None else None, tag=hdr["tag"])
+            if receiver is not None:
+                receiver.enqueue_digest(self.w, lseg)
+            # reader busy time overlaps the fold exactly like digest time
+            # (collect() accounts the stall side)
+            stats.recv_seconds += time.perf_counter() - t0
+
+        errs: list[BaseException] = []
+
+        def drain():
+            try:
+                for j in range(self.n):
+                    self.server.read_source(s, j, on_run,
+                                            self.coord.check_abort)
+                    if comb is None:
+                        # per-source compaction, same as the file path —
+                        # the run-table evolution the merge depends on
+                        inbox.compact_tag(self.w, j,
+                                          self.cfg.spill.merge_fanin,
+                                          self.cfg.spill.read_chunk)
+            except BaseException as e:  # surfaced on the compute thread
+                errs.append(e)
+
+        t = threading.Thread(target=drain, name="net-recv", daemon=True)
+        t.start()
+        try:
+            self._send_net(s, values_w, active_w)
+            while t.is_alive():
+                t.join(0.2)
+                self.sender.check_failed()
+                self.coord.check_abort()
+            if errs:
+                raise errs[0]
+            if comb is not None:
+                A_r, cnt = receiver.collect(self.w)
+                return self.kern.apply(
+                    values_w, self.degree, self.vmask, self.old_ids,
+                    self.gids, A_r, cnt, active_w, jnp.int32(s),
+                    jnp.int32(self.w),
+                )
+            acc_v, acc_a, cnt_k = self._apply_list_merged(
+                inbox, values_w, active_w, jnp.int32(s))
+            nact, nm, ag = self.kern.finish(values_w, acc_v, acc_a, cnt_k,
+                                            self.vmask)
+            return acc_v, acc_a, nact, nm, ag
+        finally:
+            if receiver is not None:
+                receiver.close()
 
     # -- receive phase ---------------------------------------------------------
     def _open_inbox(self, s: int):
@@ -799,21 +1032,32 @@ class _Worker:
             # residency layer — the counter deltas around the step are this
             # shard's contribution to the coordinator's SuperstepRecord
             h0, m0, e0, k0 = self.residency.counters()
-            self._send(s, values_w, active_w)
-            inbox = self._open_inbox(s)
+            st = self.net_stats
+            ns0 = ((st.send_seconds, st.stall_seconds, st.recv_seconds,
+                    st.recv_stall_seconds, st.wire_bytes, st.packets)
+                   if st is not None else None)
+            inbox = None
             try:
-                if self.comb is not None:
-                    nv, na, nact, nm, ag = self._receive_combined(
+                if self.server is not None:
+                    inbox = self._open_inbox(s)
+                    nv, na, nact, nm, ag = self._superstep_net(
                         s, values_w, active_w, inbox)
                 else:
-                    nv, na, nact, nm, ag = self._receive_nocomb(
-                        s, values_w, active_w, inbox)
+                    self._send(s, values_w, active_w)
+                    inbox = self._open_inbox(s)
+                    if self.comb is not None:
+                        nv, na, nact, nm, ag = self._receive_combined(
+                            s, values_w, active_w, inbox)
+                    else:
+                        nv, na, nact, nm, ag = self._receive_nocomb(
+                            s, values_w, active_w, inbox)
             finally:
-                if self.log is not None:
-                    self.log.close_step(s)
-                else:
-                    inbox.close()
-                    inbox.delete()
+                if inbox is not None:
+                    if self.log is not None:
+                        self.log.close_step(s)
+                    else:
+                        inbox.close()
+                        inbox.delete()
             values_w, active_w = nv, na
             # next-frontier active blocks for this shard's source row (the
             # coordinator divides the sum by the store's nonempty blocks to
@@ -831,19 +1075,32 @@ class _Worker:
                          active=np.asarray(active_w))
                 ckpt = True
             h1, m1, e1, k1 = self.residency.counters()
-            coord.arrive(s, w, dict(
+            stats = dict(
                 n_active=int(nact), n_msgs=int(nm), agg=float(ag),
                 active_blocks=int(nblocks), ckpt=ckpt,
                 blocks_read=m1 - m0, cache_hits=h1 - h0,
                 cache_evictions=e1 - e0, blocks_skipped=k1 - k0,
-            ))
+            )
+            if ns0 is not None:  # per-step socket channel accounting deltas
+                stats.update(
+                    net_send_s=st.send_seconds - ns0[0],
+                    net_stall_s=st.stall_seconds - ns0[1],
+                    net_recv_s=st.recv_seconds - ns0[2],
+                    net_recv_stall_s=st.recv_stall_seconds - ns0[3],
+                    net_wire_bytes=st.wire_bytes - ns0[4],
+                    net_frames=st.packets - ns0[5],
+                )
+            coord.arrive(s, w, stats)
             cm = coord.wait_commit(s, w)
             if self.log is not None and cm.get("ckpt_landed"):
                 self.log.gc_before(s + 1)
-            # every peer has consumed this step's outbox (they arrived
-            # before the commit could exist) — reclaim it
-            shutil.rmtree(_outbox_dir(self.procs_dir, s, w),
-                          ignore_errors=True)
+            # every peer has consumed this step's messages (they arrived
+            # before the commit could exist) — reclaim the outbox
+            if self.sender is not None:
+                self.sender.finish_step(s)
+            else:
+                shutil.rmtree(_outbox_dir(self.procs_dir, s, w),
+                              ignore_errors=True)
             if cm.get("halt"):
                 break
         self._write_result(values_w, active_w)
@@ -859,18 +1116,46 @@ def worker_main(spec_dir: str, shard: int,
                 recover_to: int | None = None) -> int:
     with open(os.path.join(spec_dir, SPEC)) as f:
         spec = json.load(f)
-    coord = FileCoordinator(
-        spec["coord_dir"], int(spec["n_shards"]),
-        heartbeat_interval=float(spec["heartbeat_interval"]),
-        heartbeat_timeout=float(spec["heartbeat_timeout"]),
-    )
-    # beat BEFORE the heavy imports below (pickle pulls in repro.core and
-    # jax): liveness must not depend on import latency
-    coord.start_heartbeat(shard)
+    if recover_to is not None:
+        # a respawn must not re-arm the crash drill: the spec is shared by
+        # every incarnation and the drill targets the first one only
+        spec.pop("kill_net", None)
+    n = int(spec["n_shards"])
+    transport = spec.get("transport", "files")
+    server = None
+    peer_addrs = None
+    if transport == "sockets":
+        # stdlib-only wiring, started BEFORE the heavy imports below:
+        # liveness (heartbeats) and peer registration must not depend on
+        # import latency
+        from repro.launch.net import CoordClient, PeerServer
+
+        start_step = (recover_to if recover_to is not None
+                      else int(spec["start_step"]))
+        server = PeerServer(n, start_step=start_step)
+        server.start()
+        coord = CoordClient(
+            tuple(spec["coord_addr"]), shard,
+            heartbeat_interval=float(spec["heartbeat_interval"]),
+        )
+        coord.start()
+    else:
+        coord = FileCoordinator(
+            spec["coord_dir"], n,
+            heartbeat_interval=float(spec["heartbeat_interval"]),
+            heartbeat_timeout=float(spec["heartbeat_timeout"]),
+        )
+        # beat BEFORE the heavy imports below (pickle pulls in repro.core
+        # and jax): liveness must not depend on import latency
+        coord.start_heartbeat(shard)
     try:
+        if server is not None:
+            peer_addrs = coord.register(server.addr)
         with open(os.path.join(spec_dir, PROGRAM), "rb") as f:
             program = pickle.load(f)
-        _Worker(spec, program, shard, coord).run(recover_to=recover_to)
+        _Worker(spec, program, shard, coord,
+                server=server, peer_addrs=peer_addrs).run(
+                    recover_to=recover_to)
         return 0
     except RunAborted as e:
         print(f"worker {shard}: {e}", file=sys.stderr)

@@ -69,6 +69,13 @@ def test_new_surface_emits_no_warning(small):
     (dict(mode="streamed", backend="pallas"), "needs mode='recoded'"),
     (dict(recovery=RecoveryConfig(log_messages=True)), "checkpoint cadence"),
     (dict(sparse_cap_frac=0.0), "sparse_cap_frac"),
+    # the auto payload pick resolves its codec from a first-superstep
+    # sample; a message log needs one fixed wire format for replay — the
+    # conflict must be named at finalize(), not silently dropped
+    (dict(mode="streamed",
+          channel=ChannelConfig(pipeline=True, compress_payload="auto"),
+          recovery=RecoveryConfig(checkpoint_every=2, log_messages=True)),
+     "bit-identical replay"),
 ])
 def test_invalid_configs_raise(bad, match):
     with pytest.raises(ConfigError, match=match):

@@ -75,6 +75,43 @@ class TestBarrier:
         assert 0 in coord.arrivals(3)
 
 
+class TestBarrierBackoff:
+    def test_poll_delays_start_fast_and_cap(self, coord):
+        """The wait backoff: first tick at POLL (a nearly-open barrier
+        stays fast), monotone growth, settles at POLL_MAX."""
+        delays = coord._poll_delays()
+        seq = [next(delays) for _ in range(16)]
+        assert seq[0] == FileCoordinator.POLL
+        assert all(b >= a for a, b in zip(seq, seq[1:]))
+        assert seq[-1] == FileCoordinator.POLL_MAX
+        assert max(seq) == FileCoordinator.POLL_MAX
+        # one generator per wait: a fresh wait starts fast again
+        assert next(coord._poll_delays()) == FileCoordinator.POLL
+
+    def test_wait_commit_poll_count_ceiling(self, coord, monkeypatch):
+        """Regression for the busy-wait: a commit that lands after one
+        (simulated) second of blocking must cost ~a dozen polls, not the
+        200 the old fixed POLL=0.005 spin performed."""
+        import repro.core.coordinator as mod
+
+        clock = [0.0]
+        polls = []
+
+        def fake_sleep(d):
+            polls.append(d)
+            clock[0] += d
+            if clock[0] >= 1.0 and coord.commit(0) is None:
+                coord.publish_commit(
+                    0, dict(n_active=0, n_msgs=0, agg=0.0, active_blocks=0),
+                    halt=True, ckpt_landed=False)
+
+        monkeypatch.setattr(mod.time, "sleep", fake_sleep)
+        rec = coord.wait_commit(0, shard=0)
+        assert rec["halt"] is True
+        assert sum(polls) >= 1.0  # really waited the simulated second
+        assert len(polls) <= 25, len(polls)  # fixed-POLL spin would be ~200
+
+
 class TestReduction:
     def test_reduce_matches_threaded_accumulation(self):
         """The coordinator's reduction must be the threaded driver's loop —
@@ -121,6 +158,36 @@ class TestLiveness:
     def test_missing_heartbeat_is_stale(self, coord):
         assert coord.heartbeat_age(2) == float("inf")
         assert coord.stale(2)
+
+    def test_frozen_mtime_with_progress_stays_fresh(self, coord):
+        """Regression: staleness was judged from ``os.path.getmtime``, and a
+        shared filesystem that rounds mtime to whole seconds (or a skewed
+        writer clock) false-tripped worker-dead detection. The fixture
+        freezes the heartbeat file's mtime at the epoch while the record's
+        ``seq`` keeps progressing — the watcher must stay fresh, because
+        progress lives in the JSON, not the inode."""
+        hb = coord.heartbeat_path(0)
+        coord.beat(0)
+        os.utime(hb, (0, 0))  # frozen-mtime fixture: inode says 1970
+        assert coord.heartbeat_age(0) == 0.0  # first observation is fresh
+        for _ in range(3):
+            time.sleep(0.01)
+            coord.beat(0)  # seq progresses...
+            os.utime(hb, (0, 0))  # ...while the mtime never moves
+            assert coord.heartbeat_age(0) == 0.0
+        assert not coord.stale(0)
+
+    def test_fresh_mtime_without_progress_goes_stale(self, coord):
+        """The inverse direction: a rewritten-but-identical record (fresh
+        mtime, no sequence progress) is a hung worker, and the age must
+        keep growing from the first sighting of that content."""
+        coord.beat(1)
+        rec = read_json(coord.heartbeat_path(1))
+        assert coord.heartbeat_age(1) == 0.0
+        time.sleep(0.05)
+        # same (seq, t) content republished: mtime advances, progress doesn't
+        atomic_write_json(coord.heartbeat_path(1), rec)
+        assert coord.heartbeat_age(1) >= 0.05
 
     def test_sigkilled_worker_process_goes_stale(self, coord, tmp_path):
         """The real detection path: a separate OS process heartbeats

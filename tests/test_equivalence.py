@@ -335,14 +335,15 @@ def test_job_facade_matches_handwired_streamed_pipeline(matrix_graph,
                          ALGORITHMS, ids=[a[0] for a in ALGORITHMS])
 def test_matrix_processes_launch_matches_full_duplex(matrix_graph, tmp_path,
                                                      name, factory, exact):
-    """The ``processes`` column of the matrix: the same algorithm run as
-    THREE REAL OS PROCESSES over the shared-filesystem transport
-    (``launch="processes"``) must be bit-identical to the single-process
-    full-duplex streamed run of the SAME plan — values, active/message
-    trajectories, aggregator, and density, float programs included (the
-    per-group fold and source-ascending digest order are identical on both
-    sides, so there is no reassociation freedom at all, not even the
-    PageRank ulp carve-out)."""
+    """The ``processes`` columns of the matrix: the same algorithm run as
+    THREE REAL OS PROCESSES — over the shared-filesystem transport AND over
+    the TCP socket transport (``transport="sockets"``) — must be
+    bit-identical to the single-process full-duplex streamed run of the
+    SAME plan: values, active/message trajectories, aggregator, and
+    density, float programs included (the per-group fold and
+    source-ascending digest order are identical on all three sides, so
+    there is no reassociation freedom at all, not even the PageRank ulp
+    carve-out)."""
     g, rmap, *_ = matrix_graph
     p = make_plan(factory(g, rmap), GraphMeta.of(g),
                   MemoryBudget(n_shards=N_SHARDS), edge_block=EDGE_BLOCK,
@@ -355,13 +356,24 @@ def test_matrix_processes_launch_matches_full_duplex(matrix_graph, tmp_path,
     jp = GraphDJob(factory(g, rmap), g, plan=copy.deepcopy(p),
                    workdir=str(tmp_path / "procs"), launch="processes")
     rp = jp.run(max_supersteps=60)
-    assert rp.n_supersteps == rt.n_supersteps
-    for field in ("n_active", "n_msgs", "agg", "density"):
-        assert [getattr(r, field) for r in rp.history] == \
-               [getattr(r, field) for r in rt.history], (name, field)
-    assert rt.values == rp.values  # bit-identical, floats included
+    js = GraphDJob(factory(g, rmap), g, plan=copy.deepcopy(p),
+                   workdir=str(tmp_path / "socks"), launch="processes",
+                   launch_opts=dict(transport="sockets"))
+    rs = js.run(max_supersteps=60)
+    for label, r in (("files", rp), ("sockets", rs)):
+        assert r.n_supersteps == rt.n_supersteps, (name, label)
+        for field in ("n_active", "n_msgs", "agg", "density"):
+            assert [getattr(x, field) for x in r.history] == \
+                   [getattr(x, field) for x in rt.history], \
+                   (name, label, field)
+        assert rt.values == r.values, (name, label)  # bit-identical
+    # the socket run used no shared-filesystem exchange: the announce
+    # markers of the file transport were never written
+    assert not os.path.exists(
+        os.path.join(js._dir("procs", js._tag), "announce"))
     jt.close()
     jp.close()
+    js.close()
 
 
 def test_matrix_streamed_variants_agree_exactly(matrix_graph):

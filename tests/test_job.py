@@ -325,6 +325,33 @@ def test_job_processes_planner_vetoes_and_launch_field(graph):
     assert ExecutionPlan.from_json(p.to_json()).launch == "processes"
 
 
+def test_job_processes_auto_payload_downgrades_to_lossless(graph, tmp_path):
+    """``compress_payload="auto"`` under ``launch="processes"``: n worker
+    processes would each sample and decide independently and diverge, so
+    the job facade downgrades the plan to the fixed lossless codec — the
+    compression survives, only the sampling is dropped."""
+    p = plan(HashMin(), graph, MemoryBudget(n_shards=N),
+             edge_block=EDGE_BLOCK, launch="processes")
+    p = dataclasses.replace(p, config=dataclasses.replace(
+        p.config, channel=dataclasses.replace(
+            p.config.channel, compress_payload="auto")))
+    assert p.config.channel.payload_scheme == "auto"
+    job = GraphDJob(HashMin(), graph, plan=p, launch="processes",
+                    workdir=str(tmp_path / "auto"))
+    assert job.plan.config.channel.payload_scheme == "lossless"
+    job.close()
+    # ... while the threaded launch keeps the auto-pick untouched
+    p2 = plan(HashMin(), graph, MemoryBudget(n_shards=N),
+              edge_block=EDGE_BLOCK, launch="processes")
+    p2 = dataclasses.replace(p2, config=dataclasses.replace(
+        p2.config, channel=dataclasses.replace(
+            p2.config.channel, compress_payload="auto")))
+    jt = GraphDJob(HashMin(), graph, plan=p2,
+                   workdir=str(tmp_path / "threads"))
+    assert jt.plan.config.channel.payload_scheme == "auto"
+    jt.close()
+
+
 def test_job_processes_run_resume_and_memory_budget(graph, tmp_path):
     """A paused processes job resumes from live state; the realized
     per-process RAM honors the budget the planner promised it under."""

@@ -1,0 +1,374 @@
+"""Socket transport (launch/net.py): frame protocol (CRC, torn frames), the
+run wire codec round-trip, the coordinator plane (register/arrive/commit/
+abort over one connection), the data plane's sender/receiver pair with the
+reconnect-with-resume handshake, and the planner's measured link probes.
+Everything here is stdlib + numpy — no jax, no engine."""
+
+import json
+import socket
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.coordinator import RunAborted
+from repro.launch.net import (
+    _HEADER,
+    MAGIC,
+    CoordClient,
+    CoordServer,
+    FrameError,
+    K_ARRIVE,
+    K_RUN,
+    PeerSender,
+    PeerServer,
+    TornFrame,
+    decode_run,
+    encode_run,
+    probe_file_throughput,
+    probe_link_throughput,
+    recv_frame,
+    send_frame,
+)
+
+
+# -- framing -------------------------------------------------------------------
+
+class TestFraming:
+    def test_round_trip(self):
+        a, b = socket.socketpair()
+        try:
+            for kind, payload in [(K_RUN, b"hello"), (7, b""),
+                                  (K_ARRIVE, b"\x00" * 4096)]:
+                wire = send_frame(a, kind, payload)
+                assert wire == _HEADER.size + len(payload)
+                got_kind, got = recv_frame(b)
+                assert got_kind == kind and got == payload
+        finally:
+            a.close()
+            b.close()
+
+    def test_crc_mismatch_is_frame_error(self):
+        a, b = socket.socketpair()
+        try:
+            payload = b"payload bytes"
+            hdr = _HEADER.pack(MAGIC, K_RUN, len(payload),
+                               zlib.crc32(payload) ^ 0xDEAD)
+            a.sendall(hdr + payload)
+            with pytest.raises(FrameError, match="CRC"):
+                recv_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_bad_magic_is_frame_error(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(_HEADER.pack(0x12345678, K_RUN, 0, zlib.crc32(b"")))
+            with pytest.raises(FrameError, match="magic"):
+                recv_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_torn_frame_on_eof_mid_payload(self):
+        """The crash-drill shape: header + half the payload, then the peer
+        dies. The reader must raise TornFrame — the partial bytes are
+        discarded, never surfaced as a run."""
+        a, b = socket.socketpair()
+        try:
+            payload = b"x" * 1000
+            hdr = _HEADER.pack(MAGIC, K_RUN, len(payload),
+                               zlib.crc32(payload))
+            a.sendall(hdr + payload[: len(payload) // 2])
+            a.close()  # SIGKILL's FIN
+            with pytest.raises(TornFrame):
+                recv_frame(b)
+        finally:
+            b.close()
+
+    def test_eof_between_frames_is_torn(self):
+        a, b = socket.socketpair()
+        a.close()
+        try:
+            with pytest.raises(TornFrame):
+                recv_frame(b)
+        finally:
+            b.close()
+
+
+# -- run wire codec ------------------------------------------------------------
+
+class TestRunCodec:
+    def test_raw_run_round_trip(self):
+        dp = np.array([0, 3, 3, 7, 12], np.int32)
+        msg = np.array([1.5, -2.0, 0.25, 3.0, 9.0], np.float32)
+        payload = encode_run(step=4, seq=2, tag=1, dp=dp, msg=msg, cnt=None)
+        hdr, dp2, msg2, cnt2 = decode_run(payload)
+        assert (hdr["step"], hdr["seq"], hdr["tag"]) == (4, 2, 1)
+        assert cnt2 is None
+        assert np.array_equal(dp2, dp)
+        assert msg2.dtype == np.float32 and np.array_equal(msg2, msg)
+
+    def test_combined_run_with_counts(self):
+        dp = np.array([1, 5, 6], np.int32)
+        msg = np.array([7, 8, 9], np.int64)
+        cnt = np.array([2, 1, 4], np.int32)
+        hdr, dp2, msg2, cnt2 = decode_run(
+            encode_run(step=0, seq=0, tag=2, dp=dp, msg=msg, cnt=cnt))
+        assert hdr["cnt"] is True
+        assert np.array_equal(dp2, dp)
+        assert msg2.dtype == np.int64 and np.array_equal(msg2, msg)
+        assert np.array_equal(cnt2, cnt)  # counts are ALWAYS raw/exact
+
+    def test_compressed_wire_formats_round_trip(self):
+        """varint-delta on the sorted dp column + the lossless payload codec
+        on the value column: smaller on the wire, bit-identical back."""
+        dp = np.sort(np.random.default_rng(0).integers(
+            0, 1 << 20, 500)).astype(np.int32)
+        msg = np.random.default_rng(1).normal(size=500).astype(np.float32)
+        raw = encode_run(step=1, seq=0, tag=0, dp=dp, msg=msg, cnt=None)
+        packed = encode_run(step=1, seq=0, tag=0, dp=dp, msg=msg, cnt=None,
+                            compress=True, scheme="lossless")
+        hdr, dp2, msg2, _ = decode_run(packed)
+        assert hdr["dp_enc"] and hdr["scheme"] == "lossless"
+        assert np.array_equal(dp2, dp)
+        assert msg2.tobytes() == msg.tobytes()  # bit-identical floats
+        assert len(packed) < len(raw)
+
+    def test_empty_run(self):
+        hdr, dp, msg, cnt = decode_run(encode_run(
+            step=0, seq=0, tag=0, dp=np.empty(0, np.int32),
+            msg=np.empty(0, np.float32), cnt=None,
+            compress=True, scheme="lossless"))
+        assert hdr["n"] == 0 and dp.size == 0 and msg.size == 0
+
+
+# -- coordinator plane ---------------------------------------------------------
+
+def _register_all(server, n, **kw):
+    clients = [CoordClient(server.addr, w, **kw) for w in range(n)]
+    peers = [None] * n
+    threads = []
+    for w, c in enumerate(clients):
+        c.start()
+
+        def reg(w=w, c=c):
+            peers[w] = c.register(("127.0.0.1", 20000 + w))
+
+        t = threading.Thread(target=reg)
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join(timeout=10)
+    return clients, peers
+
+
+class TestCoordPlane:
+    def test_register_arrive_commit_abort(self):
+        srv = CoordServer(2, heartbeat_timeout=5.0)
+        srv.start()
+        clients = []
+        try:
+            clients, peers = _register_all(srv, 2)
+            # every worker got the full data-plane address table
+            assert peers[0] == peers[1]
+            assert [a[1] for a in peers[0]] == [20000, 20001]
+
+            stats = dict(n_active=3, n_msgs=7, agg=0.5, active_blocks=1)
+            clients[0].arrive(0, 0, stats)
+            clients[1].arrive(0, 1, dict(stats, n_active=4))
+            got = srv.wait_arrivals(0)
+            assert set(got) == {0, 1} and got[1]["n_active"] == 4
+            totals = srv.reduce_arrivals(got)
+            assert totals["n_active"] == 7 and totals["agg"] == 1.0
+
+            rec = srv.publish_commit(0, totals, halt=False, ckpt_landed=True)
+            for c in clients:  # pushed, event-driven barrier
+                assert c.wait_commit(0, c.shard) == rec
+
+            # heartbeats flowed after registration
+            deadline = time.time() + 5
+            while srv.heartbeat_age(0) == float("inf"):
+                assert time.time() < deadline, "no heartbeat arrived"
+                time.sleep(0.01)
+            assert not srv.stale(0)
+
+            srv.abort("drill")
+            with pytest.raises(RunAborted, match="drill"):
+                clients[0].wait_commit(1, 0)
+            with pytest.raises(RunAborted, match="drill"):
+                clients[1].check_abort()
+        finally:
+            for c in clients:
+                c.close()
+            srv.close()
+
+    def test_vanished_coordinator_is_poison_pill(self):
+        srv = CoordServer(1)
+        srv.start()
+        clients, _ = _register_all(srv, 1)
+        try:
+            srv.close()  # the launcher dies
+            with pytest.raises(RunAborted, match="connection lost"):
+                clients[0].wait_commit(0, 0)
+        finally:
+            clients[0].close()
+
+
+# -- data plane ----------------------------------------------------------------
+
+P = 16
+
+
+def _mk_sender(tmp_path, me, n, **kw):
+    from repro.streams.msgstore import MessageRunStore
+
+    def make_store(step):
+        return MessageRunStore(
+            str(tmp_path / f"outbox-{me}" / f"step-{step:06d}"), n, P,
+            np.dtype(np.float32), with_counts=True,
+        )
+
+    return PeerSender(me, n, make_store, **kw)
+
+
+def _drain(server, step, src):
+    runs = []
+    server.read_source(step, src, lambda *a: runs.append(a), lambda: None)
+    return runs
+
+
+class TestDataPlane:
+    def test_send_receive_combined_runs(self, tmp_path):
+        """One sender, two receivers (self-loop included): each run arrives
+        in the sender's append_combined transform, bit-identical."""
+        servers = [PeerServer(2, start_step=0) for _ in range(2)]
+        for s in servers:
+            s.start()
+        sender = _mk_sender(tmp_path, 0, 2)
+        sender.set_addrs([s.addr for s in servers])
+        sender.start()
+        try:
+            sender.begin_step(0)
+            rng = np.random.default_rng(3)
+            A = rng.normal(size=P).astype(np.float32)
+            cnt = rng.integers(0, 3, P).astype(np.int32)  # zeros drop out
+            for dest in range(2):
+                sender.send_combined(dest, A, cnt, tag=0)
+            sender.end_step()
+            sender.check_failed()
+            for dest, srv in enumerate(servers):
+                runs = _drain(srv, 0, 0)
+                assert len(runs) == 1
+                hdr, dp, msg, c = runs[0]
+                nz = np.nonzero(cnt > 0)[0].astype(np.int32)
+                assert hdr["tag"] == 0
+                assert np.array_equal(dp, nz)
+                assert msg.tobytes() == A[nz].tobytes()
+                assert np.array_equal(c, cnt[nz])
+        finally:
+            sender.close()
+            for s in servers:
+                s.close()
+
+    def test_receiver_respawn_resume_replays_outbox(self, tmp_path):
+        """Mid-step receiver death: runs already framed at the old address
+        are NOT lost — the respawned receiver's RESUME says have=0 and the
+        sender replays the whole backlog from its per-step outbox store, in
+        the original append order."""
+        srv = PeerServer(2, start_step=0)
+        srv.start()
+        self_srv = PeerServer(2, start_step=0)
+        self_srv.start()
+        sender = _mk_sender(tmp_path, 0, 2)
+        sender.set_addrs([self_srv.addr, srv.addr])
+        sender.start()
+        reborn = None
+        try:
+            sender.begin_step(0)
+            batches = []
+            rng = np.random.default_rng(4)
+            for i in range(2):
+                A = rng.normal(size=P).astype(np.float32)
+                cnt = np.ones(P, np.int32)
+                batches.append(A)
+                sender.send_combined(1, A, cnt, tag=0)
+            srv.close()  # receiver 1 dies with two runs in flight
+            reborn = PeerServer(2, start_step=0)  # respawn: new port
+            reborn.start()
+            sender.update_addr(1, reborn.addr)
+            A = rng.normal(size=P).astype(np.float32)
+            batches.append(A)
+            sender.send_combined(1, A, np.ones(P, np.int32), tag=0)
+            sender.send_combined(0, batches[0], np.ones(P, np.int32), tag=0)
+            sender.end_step()
+            sender.check_failed()
+            runs = _drain(reborn, 0, 0)
+            assert [hdr["seq"] for hdr, *_ in runs] == [0, 1, 2]
+            for (hdr, dp, msg, c), A in zip(runs, batches):
+                assert msg.tobytes() == A.tobytes()  # replay == original
+            assert len(_drain(self_srv, 0, 0)) == 1  # self-loop unaffected
+        finally:
+            sender.close()
+            for s in (srv, self_srv, reborn):
+                if s is not None:
+                    s.close()
+
+    def test_duplicate_frames_after_reconnect_are_discarded(self, tmp_path):
+        """The other half of resume: a receiver that already appended runs
+        reports have=k, and replayed frames with seq < k are dropped — the
+        digest sees every run exactly once."""
+        servers = [PeerServer(2, start_step=0) for _ in range(2)]
+        for s in servers:
+            s.start()
+        sender = _mk_sender(tmp_path, 0, 2)
+        sender.set_addrs([s.addr for s in servers])
+        sender.start()
+        try:
+            sender.begin_step(0)
+            rng = np.random.default_rng(5)
+            batches = [rng.normal(size=P).astype(np.float32)
+                       for _ in range(3)]
+            got = []
+            t = threading.Thread(
+                target=lambda: servers[1].read_source(
+                    0, 0, lambda *a: got.append(a), lambda: None),
+                daemon=True)
+            t.start()
+            sender.send_combined(1, batches[0], np.ones(P, np.int32), tag=0)
+            sender.send_combined(1, batches[1], np.ones(P, np.int32), tag=0)
+            deadline = time.time() + 10
+            while len(got) < 2:  # receiver appended both live frames
+                assert time.time() < deadline
+                time.sleep(0.01)
+            # force a reconnect: the handshake replays runs[have:] only
+            sender.update_addr(1, servers[1].addr)
+            sender.send_combined(1, batches[2], np.ones(P, np.int32), tag=0)
+            sender.send_combined(0, batches[0], np.ones(P, np.int32), tag=0)
+            sender.end_step()
+            sender.check_failed()
+            t.join(timeout=10)
+            assert not t.is_alive()
+            assert [hdr["seq"] for hdr, *_ in got] == [0, 1, 2]  # no dups
+            for (hdr, dp, msg, c), A in zip(got, batches):
+                assert msg.tobytes() == A.tobytes()
+        finally:
+            sender.close()
+            for s in servers:
+                s.close()
+
+
+# -- link probes ---------------------------------------------------------------
+
+class TestProbes:
+    def test_link_probe_measures_positive_throughput(self):
+        bw = probe_link_throughput(n_bytes=1 << 20)
+        assert bw > 0
+
+    def test_file_probe_measures_positive_throughput(self, tmp_path):
+        bw = probe_file_throughput(str(tmp_path), n_bytes=1 << 20)
+        assert bw > 0
+        assert not any(p.name == "probe.bin" for p in tmp_path.iterdir())

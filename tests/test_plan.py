@@ -292,6 +292,38 @@ def test_net_budget_flips_payload_compression(graph):
     assert any("payload codec" in c["reason"] for c in streamed_cands)
 
 
+def test_measured_link_throughput_prices_candidates(graph):
+    """Satellite: ``estimate_net`` grew a measured companion — a probe of
+    the real socket frame path prices every candidate's per-superstep NIC
+    bytes in seconds (``Candidate.net_seconds``), explain() prints it, and
+    the figure survives the JSON round trip."""
+    from repro.core.plan import (
+        ExecutionPlan, estimate_net_seconds, measured_link_throughput,
+    )
+
+    assert estimate_net_seconds(10 << 20, 10 << 20) == 1.0
+    with pytest.raises(ValueError, match="positive"):
+        estimate_net_seconds(1, 0.0)
+
+    bw = measured_link_throughput(n_bytes=1 << 20)
+    assert bw > 0  # loopback TCP through the frame path really moved bytes
+
+    p = plan(HashMin(), graph, MemoryBudget(n_shards=N),
+             edge_block=EDGE_BLOCK, launch="processes", link_bytes_per_s=bw)
+    chosen = next(c for c in p.alternatives if c.chosen)
+    assert chosen.net_seconds == pytest.approx(chosen.net_total / bw)
+    assert "at measured link" in p.explain()
+    p2 = ExecutionPlan.from_json(p.to_json())
+    assert [c.net_seconds for c in p2.alternatives] == \
+           [c.net_seconds for c in p.alternatives]
+
+    # without a probe the field stays 0.0 and explain() omits the pricing
+    p0 = plan(HashMin(), graph, MemoryBudget(n_shards=N),
+              edge_block=EDGE_BLOCK)
+    assert all(c.net_seconds == 0.0 for c in p0.alternatives)
+    assert "at measured link" not in p0.explain()
+
+
 def test_receiver_staging_tier_in_explain_and_breakdown(graph):
     """Satellite: the full-duplex receiver's RAM tier is part of the model,
     printed by plan.explain(), and carried in the JSON byte breakdown."""
