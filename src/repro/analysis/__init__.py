@@ -1,0 +1,56 @@
+"""Repo-specific static analysis: the invariants the type system cannot see.
+
+GraphD's correctness rests on protocol discipline, not types: background
+sender/receiver threads must be joined on every close path (PR 6), liveness
+must be judged by monotonic clocks and in-record progress, never wall time
+or mtime (PR 8), counters and manifests must publish only after the bytes
+they describe are flushed (PR 5), cross-thread state must be lock-guarded
+or explicitly reviewed, frame encoders must stay symmetric with their
+decoders, and the pre-heartbeat worker import path must stay jax-free
+(PR 6). Each of those regression classes is one AST pass here; the suite
+runs in CI over ``src/`` and fails on any unsuppressed finding.
+
+Run locally::
+
+    PYTHONPATH=src python -m repro.analysis src/
+
+Suppression, in reviewed-preference order: fix the code; or annotate the
+line (or the line above) with ``# analysis: allow[<pass-id>] <why>``; or
+add the finding's key to ``analysis-baseline.json`` with a reason.
+"""
+
+from repro.analysis.base import (
+    AnalysisConfig, Baseline, Finding, Source, collect_sources, run_analysis,
+)
+from repro.analysis.clocks import LivenessClockPass
+from repro.analysis.imports import ImportHygienePass
+from repro.analysis.publish import AtomicPublishPass
+from repro.analysis.races import SharedStateRacePass
+from repro.analysis.threads import ThreadLifecyclePass
+from repro.analysis.wire import WireSymmetryPass
+
+#: the suite, in bug-history order (PR 6, PR 8, PR 5, PR 5, PR 8, PR 6)
+ALL_PASSES = (
+    ThreadLifecyclePass(),
+    LivenessClockPass(),
+    AtomicPublishPass(),
+    SharedStateRacePass(),
+    WireSymmetryPass(),
+    ImportHygienePass(),
+)
+
+__all__ = [
+    "ALL_PASSES",
+    "AnalysisConfig",
+    "AtomicPublishPass",
+    "Baseline",
+    "Finding",
+    "ImportHygienePass",
+    "LivenessClockPass",
+    "SharedStateRacePass",
+    "Source",
+    "ThreadLifecyclePass",
+    "WireSymmetryPass",
+    "collect_sources",
+    "run_analysis",
+]

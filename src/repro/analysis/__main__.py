@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.analysis [--json] [--baseline FILE] paths...``
+
+Exit status is the contract CI relies on: 0 when every finding is
+suppressed (inline allow-comment or baseline entry), 1 when any finding
+is open, 2 on usage/configuration errors. Unused baseline entries warn
+but do not fail — a fixed finding should not break the build, it should
+prompt a baseline cleanup in the same PR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis import (
+    ALL_PASSES, AnalysisConfig, Baseline, collect_sources, run_analysis,
+)
+
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis: concurrency, "
+                    "durability and wire-format invariants")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to analyze (default: src/)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON on stdout")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help=f"suppression file (default: ./{DEFAULT_BASELINE} "
+                         "if present)")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="list pass ids and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for p in ALL_PASSES:
+            doc = (type(p).__module__ and
+                   (sys.modules[type(p).__module__].__doc__ or ""))
+            first = doc.strip().splitlines()[0] if doc.strip() else ""
+            print(f"{p.pass_id:20s} {first}")
+        return 0
+
+    paths = args.paths or ["src"]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"error: no such path: {', '.join(missing)}", file=sys.stderr)
+        return 2
+
+    baseline = None
+    bpath = args.baseline
+    if bpath is None and os.path.exists(DEFAULT_BASELINE):
+        bpath = DEFAULT_BASELINE
+    if bpath is not None:
+        try:
+            baseline = Baseline.load(bpath)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: bad baseline {bpath}: {e}", file=sys.stderr)
+            return 2
+
+    try:
+        sources = collect_sources(paths)
+    except SyntaxError as e:
+        print(f"error: cannot parse {e.filename}:{e.lineno}: {e.msg}",
+              file=sys.stderr)
+        return 2
+
+    open_findings, suppressed = run_analysis(
+        sources, config=AnalysisConfig(), baseline=baseline)
+    unused = baseline.unused(open_findings + suppressed) if baseline else []
+
+    if args.as_json:
+        print(json.dumps({
+            "open": [f.to_json() for f in open_findings],
+            "suppressed": [f.to_json() for f in suppressed],
+            "unused_suppressions": unused,
+            "files": len(sources),
+            "passes": [p.pass_id for p in ALL_PASSES],
+        }, indent=2))
+    else:
+        for f in open_findings:
+            print(f.render())
+        print(f"\n{len(sources)} files, {len(ALL_PASSES)} passes: "
+              f"{len(open_findings)} open, {len(suppressed)} suppressed"
+              + (f", {len(unused)} unused baseline entries" if unused
+                 else ""))
+        for k in unused:
+            print(f"  warning: unused baseline suppression: {k}",
+                  file=sys.stderr)
+
+    return 1 if open_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

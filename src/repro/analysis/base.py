@@ -1,0 +1,287 @@
+"""Framework shared by every analysis pass: parsed sources, findings with
+stable suppression keys, inline allow-comments, and the reviewed baseline.
+
+Design constraints, in order:
+
+* **Stable keys.** A finding's identity must survive unrelated edits, or
+  the committed baseline churns on every PR. Keys are
+  ``pass:path:scope:detail`` (scope = dotted class/function path, detail =
+  the offending symbol), never line numbers.
+* **Zero dependencies.** The suite runs in CI before anything is
+  installed; ``ast`` + stdlib only.
+* **Mechanical, documented blind spots.** Every pass is a conservative
+  approximation of the invariant it enforces; what it cannot see is
+  written in its docstring, and the escape hatch is a *reviewed*
+  suppression (inline comment or baseline entry), never a weaker check.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+
+ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\[([a-z0-9-]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation: where, what, and how to fix it."""
+
+    pass_id: str
+    path: str  # repo-relative posix path
+    line: int
+    scope: str  # dotted enclosing Class.method chain, or "<module>"
+    detail: str  # the offending symbol (attr/func/const name)
+    message: str
+    hint: str = ""
+
+    @property
+    def key(self) -> str:
+        """Line-independent suppression key (what the baseline stores)."""
+        return f"{self.pass_id}:{self.path}:{self.scope}:{self.detail}"
+
+    def render(self) -> str:
+        out = f"{self.path}:{self.line}: [{self.pass_id}] {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        out += f"\n    key:  {self.key}"
+        return out
+
+    def to_json(self) -> dict:
+        return dict(pass_id=self.pass_id, path=self.path, line=self.line,
+                    scope=self.scope, detail=self.detail, key=self.key,
+                    message=self.message, hint=self.hint)
+
+
+@dataclass
+class Source:
+    """One parsed file + the inline allow-comments it carries."""
+
+    path: str  # repo-relative posix path (finding identity)
+    abspath: str
+    text: str
+    tree: ast.Module
+    #: line -> pass ids allowed on that line (and the line below)
+    allows: dict[int, set] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, abspath: str, relpath: str) -> "Source":
+        with open(abspath, encoding="utf-8") as f:
+            text = f.read()
+        tree = ast.parse(text, filename=abspath)
+        allows: dict[int, set] = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            for m in ALLOW_RE.finditer(line):
+                allows.setdefault(i, set()).add(m.group(1))
+        return cls(path=relpath.replace(os.sep, "/"), abspath=abspath,
+                   text=text, tree=tree, allows=allows)
+
+    def allowed(self, pass_id: str, line: int) -> bool:
+        """True if the line (or the line above it) carries an allow-comment
+        for ``pass_id`` — the inline suppression surface."""
+        return (pass_id in self.allows.get(line, ())
+                or pass_id in self.allows.get(line - 1, ()))
+
+
+def collect_sources(paths, root: str | None = None) -> list[Source]:
+    """Parse every ``*.py`` under ``paths`` (files or directories).
+
+    ``root`` anchors the repo-relative paths findings carry; default is the
+    common parent of ``paths`` resolved against the cwd. A file that fails
+    to parse becomes a synthetic ``parse`` finding at run time rather than
+    killing the whole suite (see :func:`run_analysis`).
+    """
+    files: list[str] = []
+    for p in paths:
+        p = os.path.abspath(p)
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d != "__pycache__" and not d.startswith(".")
+                )
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+        else:
+            files.append(p)
+    root = os.path.abspath(root) if root else os.getcwd()
+    out = []
+    for f in files:
+        rel = os.path.relpath(f, root)
+        out.append(Source.parse(f, rel))
+    return out
+
+
+@dataclass
+class AnalysisConfig:
+    """Knobs the passes read; defaults encode THIS repo's audit surface.
+
+    Tests (and future repos) override fields instead of editing passes.
+    Module matching is by posix-path suffix, so configs survive both
+    ``src/repro/...`` and bare ``repro/...`` checkouts.
+    """
+
+    #: modules whose size/counter/run-table mutations must follow a flush
+    counter_modules: tuple = ("streams/msgstore.py",)
+    #: the published-counter attribute names those modules guard
+    counter_attrs: tuple = ("_sizes", "_blob_bytes", "_runs")
+    #: source-path substrings accepted as temp-publish patterns
+    tmp_markers: tuple = ("tmp", ".vacuum")
+    #: helpers reviewed to fsync-then-rename internally: a call site that
+    #: delegates publishing to one of these needs no local fsync
+    publish_helpers: tuple = ("atomic_write_json", "_save_npz_atomic")
+    #: import-hygiene roots: modules on the pre-heartbeat worker path
+    worker_roots: tuple = ("repro.launch.procs", "repro.core.coordinator",
+                           "repro.launch.net")
+    #: import prefixes the worker path must not reach eagerly
+    forbidden_imports: tuple = ("jax", "jaxlib")
+
+
+class Pass:
+    """Base class: ``run`` returns raw findings; inline allows are applied
+    by the driver so passes stay oblivious to suppression mechanics."""
+
+    pass_id = "abstract"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        raise NotImplementedError
+
+
+@dataclass
+class Baseline:
+    """The committed suppression file: reviewed finding keys + reasons.
+
+    Format (``analysis-baseline.json``)::
+
+        {"suppressions": [{"key": "<finding key>", "reason": "...",
+                           "reviewed_by": "..."}]}
+    """
+
+    entries: dict[str, dict] = field(default_factory=dict)
+    path: str | None = None
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+        entries = {}
+        for e in doc.get("suppressions", []):
+            if not e.get("key") or not e.get("reason"):
+                raise ValueError(
+                    f"{path}: every suppression needs 'key' and 'reason'"
+                )
+            entries[e["key"]] = e
+        return cls(entries=entries, path=path)
+
+    def match(self, finding: Finding) -> bool:
+        return finding.key in self.entries
+
+    def unused(self, findings: list[Finding]) -> list[str]:
+        hit = {f.key for f in findings}
+        return sorted(k for k in self.entries if k not in hit)
+
+
+def run_analysis(sources: list[Source], config: AnalysisConfig | None = None,
+                 passes=None, baseline: Baseline | None = None):
+    """Run ``passes`` over ``sources``; returns ``(open, suppressed)``.
+
+    ``open`` findings fail the suite; ``suppressed`` were matched by an
+    inline allow-comment or a baseline entry (kept for the report — a
+    suppression is a decision, not an absence)."""
+    from repro import analysis as _pkg
+
+    config = config or AnalysisConfig()
+    passes = _pkg.ALL_PASSES if passes is None else passes
+    raw: list[Finding] = []
+    for p in passes:
+        raw.extend(p.run(sources, config))
+    raw.sort(key=lambda f: (f.path, f.line, f.pass_id, f.detail))
+    by_path = {s.path: s for s in sources}
+    open_findings, suppressed = [], []
+    for f in raw:
+        src = by_path.get(f.path)
+        if src is not None and src.allowed(f.pass_id, f.line):
+            suppressed.append(f)
+        elif baseline is not None and baseline.match(f):
+            suppressed.append(f)
+        else:
+            open_findings.append(f)
+    return open_findings, suppressed
+
+
+# -- shared AST helpers (used by several passes) ----------------------------
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def self_attr(node: ast.AST) -> str | None:
+    """``x`` when ``node`` is exactly ``self.x``, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def assign_target_attr(target: ast.AST) -> str | None:
+    """The ``self.<attr>`` a (possibly subscripted/nested) assignment
+    target ultimately mutates: ``self.x = / self.x[i] = / self.x.y = ``
+    all report ``x``."""
+    node = target
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        got = self_attr(node)
+        if got is not None:
+            return got
+        node = node.value
+    return None
+
+
+def func_scopes(tree: ast.Module):
+    """Yield ``(scope, func_node)`` for every function/method, with scope
+    the dotted Class.method path — the scope component of finding keys."""
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope = f"{prefix}.{child.name}" if prefix else child.name
+                yield scope, child
+                yield from walk(child, scope)
+            elif isinstance(child, ast.ClassDef):
+                scope = f"{prefix}.{child.name}" if prefix else child.name
+                yield from walk(child, scope)
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def enclosing_scope_map(tree: ast.Module) -> dict[int, str]:
+    """line -> innermost enclosing scope name (best-effort, for labeling)."""
+    spans: list[tuple[int, int, str]] = []
+    for scope, fn in func_scopes(tree):
+        end = getattr(fn, "end_lineno", fn.lineno)
+        spans.append((fn.lineno, end, scope))
+    spans.sort(key=lambda t: (t[0], -(t[1])))
+    out: dict[int, str] = {}
+    for lo, hi, scope in spans:
+        for ln in range(lo, hi + 1):
+            out[ln] = scope  # later (inner) spans overwrite outer ones
+    return out
+
+
+def call_name(node: ast.Call) -> str | None:
+    """Dotted name of the callee, if it is a plain name/attribute chain."""
+    return dotted(node.func)

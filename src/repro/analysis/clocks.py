@@ -1,0 +1,70 @@
+"""liveness-clock: liveness must never be judged by wall clocks or mtimes.
+
+``time.time()`` jumps with NTP steps and suspend/resume; file mtimes
+freeze on some filesystems and under clock skew look arbitrarily stale.
+PR 8's false-kill bug was exactly this: heartbeat staleness judged by
+``st_mtime`` declared live workers dead on mtime-frozen filesystems. The
+repo-wide rule since: **staleness, grace windows, timeouts and backoff
+use ``time.monotonic()``; durations use ``time.perf_counter()``; seq
+progress in the record is the liveness signal**. Wall clocks are for
+reporting only, and every such use is annotated.
+
+The pass therefore flags *every* occurrence of:
+
+* ``time.time()`` (any call whose dotted name ends in ``time.time``),
+* ``st_mtime`` / ``st_mtime_ns`` attribute access and
+  ``os.path.getmtime(...)``,
+* naive ``datetime.now()`` / ``datetime.utcnow()``.
+
+Wall-clock *reporting* (log timestamps, run manifests) is legitimate —
+annotate it with ``# analysis: allow[liveness-clock] <why>``. Keeping
+the rule total and pushing intent into the annotation beats any
+heuristic for "is this line liveness code": the heuristic would rot,
+the annotation is reviewed.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    AnalysisConfig, Finding, Pass, Source, call_name, enclosing_scope_map,
+)
+
+HINT = ("use time.monotonic() for staleness/timeout/backoff, "
+        "time.perf_counter() for durations; if this really is wall-clock "
+        "reporting, annotate: # analysis: allow[liveness-clock] <why>")
+
+
+class LivenessClockPass(Pass):
+    pass_id = "liveness-clock"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        for src in sources:
+            scopes = enclosing_scope_map(src.tree)
+
+            def emit(node, detail, what):
+                findings.append(Finding(
+                    pass_id=self.pass_id, path=src.path, line=node.lineno,
+                    scope=scopes.get(node.lineno, "<module>"), detail=detail,
+                    message=f"{what} — wall clocks and mtimes must not "
+                            "drive liveness/timeout decisions",
+                    hint=HINT,
+                ))
+
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.Call):
+                    name = call_name(node) or ""
+                    if name == "time.time" or name.endswith(".time.time"):
+                        emit(node, "time.time", "time.time() call")
+                    elif name in ("os.path.getmtime", "getmtime"):
+                        emit(node, "getmtime", "os.path.getmtime() call")
+                    elif name.endswith("datetime.now") or \
+                            name.endswith("datetime.utcnow"):
+                        emit(node, "datetime", f"{name}() call")
+                elif isinstance(node, ast.Attribute) and \
+                        node.attr in ("st_mtime", "st_mtime_ns"):
+                    emit(node, node.attr, f".{node.attr} access")
+        return findings

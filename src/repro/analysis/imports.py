@@ -1,0 +1,186 @@
+"""import-hygiene: the pre-heartbeat worker path stays jax-free.
+
+A freshly spawned worker must reach its first heartbeat before the
+coordinator's grace window expires. Importing jax eagerly on that path
+adds seconds of import time (and, on a GPU box, device init) before the
+first beat — the PR 6 "false dead" regression: workers were declared
+crashed while still importing. The launch modules therefore import jax
+lazily, inside the functions that need it, and the package ``__init__``s
+on the worker path are lazy (PEP 562) or jax-free.
+
+This pass rebuilds the *eager module-level* import graph from source:
+
+* module names are derived from paths (``src/repro/launch/net.py`` ->
+  ``repro.launch.net``), honouring the ``repro`` namespace root;
+* only module-level imports count — imports inside function bodies are
+  lazy by construction and skipped (class bodies DO count: they execute
+  at import time);
+* importing ``a.b.c`` executes ``a/__init__`` and ``a.b/__init__`` too,
+  so edges to every package prefix are added — this is what catches an
+  eager ``jax`` import smuggled into ``repro/streams/__init__.py``,
+  which IS executed by ``import repro.streams.store``;
+* relative imports are resolved against the importer's package.
+
+From the configured worker roots it BFSes the graph; reaching any module
+whose name starts with a forbidden prefix (``jax``, ``jaxlib``) is a
+finding, anchored at the first import of the chain with the full chain
+in the message.
+
+Blind spots: ``importlib.import_module`` and ``__import__`` with
+computed names are invisible; conditional module-level imports
+(``if TYPE_CHECKING`` is honoured and skipped, other conditions count
+as eager — a worker may take that branch).
+"""
+
+from __future__ import annotations
+
+import ast
+from collections import deque
+
+from repro.analysis.base import AnalysisConfig, Finding, Pass, Source
+
+HINT = ("move the jax import inside the function that needs it (the "
+        "launch-path idiom), or make the package __init__ lazy via "
+        "module __getattr__ (PEP 562)")
+
+
+def module_name(path: str) -> str | None:
+    """``.../src/repro/launch/net.py`` -> ``repro.launch.net``."""
+    parts = path.replace("\\", "/").split("/")
+    if "repro" not in parts:
+        return None
+    parts = parts[parts.index("repro"):]
+    if parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _is_type_checking_guard(node: ast.If) -> bool:
+    t = node.test
+    return (isinstance(t, ast.Name) and t.id == "TYPE_CHECKING") or (
+        isinstance(t, ast.Attribute) and t.attr == "TYPE_CHECKING")
+
+
+def eager_imports(tree: ast.Module, pkg: str):
+    """(imported module name, line) pairs executed at import time.
+
+    ``pkg`` is the importer's package (for resolving relative imports).
+    Function/lambda bodies are lazy and skipped; class bodies and
+    conditional module-level code are eager.
+    """
+    out = []
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if isinstance(child, ast.If) and _is_type_checking_guard(child):
+                # the else branch still executes at runtime
+                for sub in child.orelse:
+                    walk_stmt(sub)
+                continue
+            walk_stmt(child)
+
+    def walk_stmt(child):
+        if isinstance(child, ast.Import):
+            for alias in child.names:
+                out.append((alias.name, child.lineno))
+        elif isinstance(child, ast.ImportFrom):
+            if child.level:
+                base = pkg.split(".")
+                # level 1 = current package, each extra level pops one
+                base = base[:len(base) - (child.level - 1)]
+                prefix = ".".join(base)
+                mod = f"{prefix}.{child.module}" if child.module else prefix
+            else:
+                mod = child.module or ""
+            if mod:
+                out.append((mod, child.lineno))
+                # `from a.b import c` may bind submodule a.b.c — resolved
+                # against the graph later (edge added only if c is a module)
+                for alias in child.names:
+                    if alias.name != "*":
+                        out.append((f"{mod}.{alias.name}", child.lineno))
+        else:
+            walk(child)
+
+    walk(tree)
+    return out
+
+
+class ImportHygienePass(Pass):
+    pass_id = "import-hygiene"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        # module -> (source, its eager imports)
+        mods: dict = {}
+        for src in sources:
+            name = module_name(src.path)
+            if name is None:
+                continue
+            pkg = name if src.path.endswith("__init__.py") else \
+                name.rsplit(".", 1)[0] if "." in name else name
+            mods[name] = (src, eager_imports(src.tree, pkg))
+
+        known = set(mods)
+
+        def edges(name):
+            """(target module, line) eager edges out of ``name``."""
+            src, imps = mods[name]
+            out = []
+            for target, line in imps:
+                # importing a.b.c executes a/__init__ and a.b/__init__
+                parts = target.split(".")
+                for i in range(1, len(parts) + 1):
+                    prefix = ".".join(parts[:i])
+                    if prefix in known or i == len(parts):
+                        out.append((prefix, line))
+            return out
+
+        findings = []
+        forbidden = tuple(config.forbidden_imports)
+        for root in config.worker_roots:
+            if root not in mods:
+                continue
+            # BFS, remembering the chain for the report
+            parent: dict = {root: None}
+            q = deque([root])
+            while q:
+                cur = q.popleft()
+                for target, line in edges(cur):
+                    bad = any(target == f or target.startswith(f + ".")
+                              for f in forbidden)
+                    if bad:
+                        chain = []
+                        node = cur
+                        while node is not None:
+                            chain.append(node)
+                            node = parent[node][0] if parent[node] else None
+                        chain.reverse()
+                        via = " -> ".join(chain + [target])
+                        anchor_src, anchor_line = mods[cur][0], line
+                        findings.append(Finding(
+                            pass_id=self.pass_id, path=anchor_src.path,
+                            line=anchor_line, scope=cur, detail=target,
+                            message=(f"worker import path reaches {target} "
+                                     f"eagerly: {via} — jax import cost "
+                                     "lands before the first heartbeat"),
+                            hint=HINT,
+                        ))
+                        continue
+                    if target in known and target not in parent:
+                        parent[target] = (cur, line)
+                        q.append(target)
+        # dedupe identical (path, scope, detail) chains found via both
+        # parent-package and direct edges
+        seen, unique = set(), []
+        for f in findings:
+            if f.key in seen:
+                continue
+            seen.add(f.key)
+            unique.append(f)
+        return unique

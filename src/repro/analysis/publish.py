@@ -1,0 +1,158 @@
+"""atomic-publish: bytes are flushed before anything points at them.
+
+Two rules, both from the PR 5 regression class (a counter published a
+run extent before the run's bytes were flushed; a reader mapped garbage):
+
+1. **Rename discipline** (all files): every ``os.replace``/``os.rename``
+   must (a) take its source from a temp path — the source-argument
+   subtree must mention a configured temp marker (``"tmp"``,
+   ``".vacuum"``) in a string constant or variable name — and (b) live
+   in a function that calls ``os.fsync`` on an earlier line, or
+   delegates to a reviewed publish helper (``atomic_write_json``,
+   ``_save_npz_atomic``). Rename-without-fsync publishes a name that can
+   point at unwritten bytes after a crash.
+
+2. **Counter-after-flush** (configured modules only, default
+   ``streams/msgstore.py``): within any function, a mutation of a
+   published counter attribute (``self._sizes`` / ``self._blob_bytes`` /
+   ``self._runs`` — plain, augmented or subscripted assignment) that has
+   a ``.write(...)`` call before it must also have a ``.flush()`` /
+   ``os.fsync`` / ``.close()`` between the last write and the mutation.
+   Once the counter is visible, readers may map the extent it describes;
+   the flush must dominate the publish.
+
+Blind spots: both rules are per-function and line-ordered — cross-
+function write/publish splits and loops that reorder dynamically are
+invisible; the msgstore keeps publishes and their writes in one method
+precisely so this stays checkable.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    AnalysisConfig, Finding, Pass, Source, assign_target_attr, call_name,
+    func_scopes,
+)
+
+RENAME_HINT = ("publish via tmp-write -> flush -> os.fsync -> os.replace "
+               "(or route through atomic_write_json / _save_npz_atomic)")
+COUNTER_HINT = ("flush (and fsync, if the extent is read cross-process) the "
+                "data handles BEFORE mutating the counter that makes the "
+                "extent visible to readers")
+
+
+def _mentions_marker(node: ast.AST, markers) -> bool:
+    """Does the argument subtree name a temp path (const or variable)?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            if any(m in sub.value for m in markers):
+                return True
+        elif isinstance(sub, ast.Name):
+            if any(m.strip(".") in sub.id for m in markers):
+                return True
+        elif isinstance(sub, ast.Attribute):
+            if any(m.strip(".") in sub.attr for m in markers):
+                return True
+    return False
+
+
+class AtomicPublishPass(Pass):
+    pass_id = "atomic-publish"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        for src in sources:
+            findings.extend(self._renames(src, config))
+            if any(src.path.endswith(m) for m in config.counter_modules):
+                findings.extend(self._counters(src, config))
+        return findings
+
+    # -- rule 1: rename discipline --------------------------------------
+
+    def _renames(self, src: Source, config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        for scope, fn in func_scopes(src.tree):
+            renames = []
+            fsync_lines = []
+            helper_lines = []
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node) or ""
+                if name in ("os.replace", "os.rename"):
+                    renames.append(node)
+                elif name == "os.fsync" or name.endswith(".fsync"):
+                    fsync_lines.append(node.lineno)
+                elif any(name.split(".")[-1] == h
+                         for h in config.publish_helpers):
+                    helper_lines.append(node.lineno)
+            for rn in renames:
+                if not rn.args or not _mentions_marker(rn.args[0],
+                                                       config.tmp_markers):
+                    findings.append(Finding(
+                        pass_id=self.pass_id, path=src.path, line=rn.lineno,
+                        scope=scope, detail="rename-source",
+                        message="rename source is not a recognizable temp "
+                                "path — publish must go through a tmp file",
+                        hint=RENAME_HINT,
+                    ))
+                if not any(ln < rn.lineno for ln in fsync_lines):
+                    findings.append(Finding(
+                        pass_id=self.pass_id, path=src.path, line=rn.lineno,
+                        scope=scope, detail="rename-fsync",
+                        message="rename publishes a name with no os.fsync "
+                                "earlier in this function — after a crash "
+                                "the name may point at unwritten bytes",
+                        hint=RENAME_HINT,
+                    ))
+        # module-level renames (rare; scripts) — same rules, scope <module>
+        return findings
+
+    # -- rule 2: counter-after-flush ------------------------------------
+
+    def _counters(self, src: Source, config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        counter_attrs = set(config.counter_attrs)
+        for scope, fn in func_scopes(src.tree):
+            writes = []    # lines of .write(...) calls
+            flushes = []   # lines of .flush()/.close()/os.fsync calls
+            mutations = []  # (line, attr) of counter mutations
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    # use the attribute leaf, not the dotted chain: writes
+                    # go through call results (self._handle(d, ch).write)
+                    if isinstance(node.func, ast.Attribute):
+                        leaf = node.func.attr
+                    else:
+                        leaf = (call_name(node) or "").split(".")[-1]
+                    if leaf == "write":
+                        writes.append(node.lineno)
+                    elif leaf in ("flush", "fsync", "close"):
+                        flushes.append(node.lineno)
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        attr = assign_target_attr(t)
+                        if attr in counter_attrs:
+                            mutations.append((node.lineno, attr))
+            for mline, attr in mutations:
+                prior_writes = [w for w in writes if w < mline]
+                if not prior_writes:
+                    continue
+                last_write = max(prior_writes)
+                if not any(last_write < f < mline for f in flushes):
+                    findings.append(Finding(
+                        pass_id=self.pass_id, path=src.path, line=mline,
+                        scope=scope, detail=attr,
+                        message=(f"self.{attr} mutated after a .write() "
+                                 "with no flush/fsync in between — the "
+                                 "counter publishes an extent whose bytes "
+                                 "may still be buffered"),
+                        hint=COUNTER_HINT,
+                    ))
+        return findings

@@ -1,0 +1,217 @@
+"""shared-state-race: cross-thread attributes are locked or declared.
+
+For every class that starts a thread on one of its methods (or a nested
+function), compute:
+
+* **thread code** — the target methods, closed over ``self._x()`` calls;
+* **T_w** — ``self.<attr>`` names written from thread code (plain,
+  augmented, subscripted, or nested like ``self.stats.sent += 1``);
+* **public reads** — ``self.<attr>`` loads in public-named methods that
+  are *not* part of thread code, transitively closed over the private
+  helpers they call (so ``collect() -> self._raise() -> self._exc`` is a
+  public read of ``_exc``).
+
+Every attribute in both sets must be either
+
+* read under ``with self.<lock>:`` where ``<lock>`` is an attribute
+  assigned from ``threading.Lock/RLock/Condition/...`` (sync objects and
+  ``queue.Queue`` themselves are exempt — they are the safe channels), or
+* declared in a class-level ``_LOCKED_FIELDS = frozenset({...})`` — the
+  reviewed register of fields relying on GIL-atomic access (write-once
+  ``_exc``, monotonic stats scalars). The declaration is the point:
+  the reviewer sees the full list, and a new unprotected field trips
+  the pass instead of silently joining the pile.
+
+Blind spots: reads via ``getattr``, aliasing through locals, and
+happens-before established by ``join()`` are invisible; declare those
+fields. Reads *inside* thread code are not scanned (the thread owns its
+own writes).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    AnalysisConfig, Finding, Pass, Source, assign_target_attr, call_name,
+    self_attr,
+)
+
+SYNC_CTORS = {
+    "threading.Event", "threading.Condition", "threading.Lock",
+    "threading.RLock", "threading.Semaphore", "threading.BoundedSemaphore",
+    "threading.Thread", "queue.Queue", "Event", "Condition", "Lock",
+    "RLock", "Semaphore", "BoundedSemaphore", "Thread", "Queue",
+    "queue.SimpleQueue", "SimpleQueue",
+}
+
+HINT = ("guard the read with the class lock/condition, or declare the "
+        "field in _LOCKED_FIELDS = frozenset({...}) with a comment saying "
+        "why GIL-atomic access is sufficient (write-once, monotonic stat)")
+
+
+def _methods(cls: ast.ClassDef) -> dict:
+    return {m.name: m for m in cls.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _locked_fields(cls: ast.ClassDef) -> set:
+    """Names in a class-level ``_LOCKED_FIELDS = frozenset({...})``."""
+    out: set = set()
+    for node in cls.body:
+        if isinstance(node, ast.Assign):
+            names = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "_LOCKED_FIELDS" not in names:
+                continue
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Constant) and \
+                        isinstance(sub.value, str):
+                    out.add(sub.value)
+    return out
+
+
+def _sync_attrs(cls: ast.ClassDef) -> set:
+    """Attrs assigned from sync-object constructors anywhere in the class."""
+    out = set()
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            name = call_name(node.value) or ""
+            if name in SYNC_CTORS:
+                for t in node.targets:
+                    attr = self_attr(t)
+                    if attr:
+                        out.add(attr)
+    return out
+
+
+def _thread_targets(cls: ast.ClassDef, methods: dict):
+    """(method nodes, nested function nodes) used as Thread targets."""
+    target_methods, nested_fns = [], []
+    for node in ast.walk(cls):
+        if not (isinstance(node, ast.Call)
+                and call_name(node) in ("threading.Thread", "Thread")):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "target":
+                continue
+            attr = self_attr(kw.value)
+            if attr and attr in methods:
+                target_methods.append(methods[attr])
+            elif isinstance(kw.value, ast.Name):
+                # nested function defined in the constructing method
+                for fn in ast.walk(cls):
+                    if isinstance(fn, ast.FunctionDef) and \
+                            fn.name == kw.value.id and fn.name not in methods:
+                        nested_fns.append(fn)
+    return target_methods, nested_fns
+
+
+def _close_over_self_calls(roots, methods: dict, private_only=False):
+    """Fixpoint of ``self.m()`` calls starting from ``roots``."""
+    seen, out, frontier = set(), [], list(roots)
+    while frontier:
+        m = frontier.pop()
+        key = getattr(m, "name", id(m))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(m)
+        for node in ast.walk(m):
+            if isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                if name.startswith("self."):
+                    mn = name[len("self."):]
+                    if private_only and not mn.startswith("_"):
+                        continue
+                    callee = methods.get(mn)
+                    if callee is not None and callee.name not in seen:
+                        frontier.append(callee)
+    return out
+
+
+def _written_attrs(fns) -> set:
+    out = set()
+    for fn in fns:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    attr = assign_target_attr(t)
+                    if attr:
+                        out.add(attr)
+    return out
+
+
+def _guarded_spans(fn: ast.FunctionDef, sync_attrs: set):
+    """Line spans inside ``with self.<sync_attr>:`` blocks."""
+    spans = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                attr = self_attr(item.context_expr)
+                if attr is None and isinstance(item.context_expr, ast.Call):
+                    attr = self_attr(item.context_expr.func)
+                if attr in sync_attrs:
+                    spans.append((node.lineno,
+                                  getattr(node, "end_lineno", node.lineno)))
+                    break
+    return spans
+
+
+class SharedStateRacePass(Pass):
+    pass_id = "shared-state-race"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        for src in sources:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.ClassDef):
+                    findings.extend(self._check_class(src, node))
+        return findings
+
+    def _check_class(self, src: Source, cls: ast.ClassDef) -> list:
+        methods = _methods(cls)
+        target_methods, nested_fns = _thread_targets(cls, methods)
+        if not target_methods and not nested_fns:
+            return []
+        sync_attrs = _sync_attrs(cls)
+        locked = _locked_fields(cls)
+
+        thread_code = _close_over_self_calls(
+            target_methods, methods, private_only=False) + nested_fns
+        thread_names = {getattr(m, "name", None) for m in thread_code}
+        written = _written_attrs(thread_code) - sync_attrs
+
+        findings = []
+        public_roots = [m for m in methods.values()
+                        if not m.name.startswith("_")
+                        and m.name not in thread_names]
+        # public surface closes over the private helpers it calls, but a
+        # helper shared with the thread closure is skipped (thread-owned)
+        surface = [m for m in
+                   _close_over_self_calls(public_roots, methods)
+                   if m.name not in thread_names]
+        for m in surface:
+            guarded = _guarded_spans(m, sync_attrs)
+            for node in ast.walk(m):
+                if not (isinstance(node, ast.Attribute)
+                        and isinstance(node.ctx, ast.Load)):
+                    continue
+                attr = self_attr(node)
+                if attr is None or attr not in written:
+                    continue
+                if attr in locked or attr in sync_attrs:
+                    continue
+                if any(lo <= node.lineno <= hi for lo, hi in guarded):
+                    continue
+                findings.append(Finding(
+                    pass_id=self.pass_id, path=src.path, line=node.lineno,
+                    scope=f"{cls.name}.{m.name}", detail=attr,
+                    message=(f"self.{attr} is written from a background "
+                             f"thread of {cls.name} and read here without "
+                             "a lock or a _LOCKED_FIELDS declaration"),
+                    hint=HINT,
+                ))
+        return findings

@@ -1,0 +1,161 @@
+"""thread-lifecycle: every background thread must have a join-on-close path.
+
+Python cannot kill a thread. A sender/receiver thread that outlives its
+owner keeps file descriptors and sockets open, keeps mutating shared
+stores, and turns "close() returned" into a lie — the PR 6 regression
+class. The reviewed idiom (``ChannelSender.close``) is::
+
+    self._thread.join(timeout=10.0)
+    if self._thread.is_alive():
+        raise ChannelError("... failed to stop")
+
+This pass finds every ``threading.Thread(...)`` construction and accepts
+it only if one of two shapes holds:
+
+* **scoped lifetime** — the constructing function itself joins with a
+  timeout, checks ``is_alive()``, and raises (the ``prefetch_iter``
+  idiom, where the thread never escapes the function); or
+* **owner lifetime** — the enclosing class has a close-path method
+  (``close``/``stop``/``shutdown``/``abort``/``__exit__``, closed over
+  the private ``self._x()`` helpers it calls) that joins with a timeout,
+  checks ``is_alive()``, and raises.
+
+Blind spots: the pass proves a join *exists on the close path*, not that
+it joins *this* thread, and not that close() is always called — tests
+own those. Daemon threads that are deliberately fire-and-forget must
+carry ``# analysis: allow[thread-lifecycle] <why>``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    AnalysisConfig, Finding, Pass, Source, call_name,
+)
+
+CLOSE_NAMES = {"close", "stop", "shutdown", "abort", "__exit__"}
+
+HINT = (
+    "give the owner a close()/stop() that does thread.join(timeout=...), "
+    "checks thread.is_alive() and raises on leak (the ChannelSender "
+    "contract), or annotate why this thread may outlive its owner"
+)
+
+
+def _is_thread_ctor(node: ast.Call) -> bool:
+    name = call_name(node)
+    return name in ("threading.Thread", "Thread")
+
+
+def _discipline_bits(fn: ast.AST):
+    """(join-with-timeout, is_alive, raise) present in ``fn``'s body."""
+    join_with_timeout = alive = raises = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            if name.endswith(".join") and (node.args or node.keywords):
+                join_with_timeout = True
+            if name.endswith(".is_alive"):
+                alive = True
+        elif isinstance(node, ast.Raise):
+            raises = True
+    return join_with_timeout, alive, raises
+
+
+def _join_discipline(fns) -> bool:
+    """True if join-with-timeout + is_alive + raise all appear across
+    ``fns`` (one function, or a close-path closure — the idiom splits
+    the three across ``close()`` and its ``_check_stopped()`` helper)."""
+    if not isinstance(fns, (list, tuple)):
+        fns = [fns]
+    bits = (False, False, False)
+    for fn in fns:
+        bits = tuple(a or b for a, b in zip(bits, _discipline_bits(fn)))
+    return all(bits)
+
+
+def _method_closure(cls: ast.ClassDef, roots) -> list[ast.FunctionDef]:
+    """Close ``roots`` over ``self._x()`` calls (one class, fixpoint)."""
+    methods = {m.name: m for m in cls.body
+               if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    seen: set = set()
+    frontier = [m for m in roots if m.name in methods]
+    out = []
+    while frontier:
+        m = frontier.pop()
+        if m.name in seen:
+            continue
+        seen.add(m.name)
+        out.append(m)
+        for node in ast.walk(m):
+            if isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                if name.startswith("self."):
+                    callee = methods.get(name[len("self."):])
+                    if callee is not None and callee.name not in seen:
+                        frontier.append(callee)
+    return out
+
+
+class ThreadLifecyclePass(Pass):
+    pass_id = "thread-lifecycle"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        for src in sources:
+            findings.extend(self._run_file(src))
+        return findings
+
+    def _run_file(self, src: Source) -> list[Finding]:
+        findings = []
+        # index: class node -> whether its close-path closure joins properly
+        class_ok: dict[int, bool] = {}
+
+        def close_path_ok(cls: ast.ClassDef) -> bool:
+            if id(cls) not in class_ok:
+                roots = [m for m in cls.body
+                         if isinstance(m, ast.FunctionDef)
+                         and m.name in CLOSE_NAMES]
+                closure = _method_closure(cls, roots)
+                class_ok[id(cls)] = _join_discipline(closure)
+            return class_ok[id(cls)]
+
+        # walk with an explicit (class, function) context stack
+        def visit(node, cls, fn):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    visit(child, child, None)
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    visit(child, cls, fn if fn is not None else child)
+                else:
+                    if isinstance(child, ast.Call) and _is_thread_ctor(child):
+                        check(child, cls, fn)
+                    visit(child, cls, fn)
+
+        def check(call: ast.Call, cls, fn):
+            # fn here is the OUTERMOST function — a thread constructed
+            # inside a nested closure still belongs to the method's scope
+            if fn is not None and _join_discipline(fn):
+                return  # scoped lifetime: joined before the function returns
+            if cls is not None and close_path_ok(cls):
+                return  # owner lifetime: close path joins + raises on leak
+            scope = []
+            if cls is not None:
+                scope.append(cls.name)
+            if fn is not None:
+                scope.append(fn.name)
+            where = ".".join(scope) or "<module>"
+            findings.append(Finding(
+                pass_id=self.pass_id, path=src.path, line=call.lineno,
+                scope=where, detail="Thread",
+                message=("thread started here is not reachable from a "
+                         "close()/stop() path that joins with a timeout "
+                         "and raises on leak"),
+                hint=HINT,
+            ))
+
+        visit(src.tree, None, None)
+        return findings

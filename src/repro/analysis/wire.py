@@ -1,0 +1,200 @@
+"""wire-symmetry: encoders and decoders must not drift apart.
+
+The socket transport's compatibility story is that ``launch/net.py`` and
+``streams/codec.py`` each keep their pack and unpack sides in the same
+module, so a format change that touches only one side is a reviewable
+drift, not a silent wire break discovered by a peer. Two mechanical
+rules, per module:
+
+1. **Struct symmetry** — every ``struct.Struct("<fmt>")`` bound to a
+   module-level name must have both a ``NAME.pack``/``pack_into`` use
+   and a ``NAME.unpack``/``unpack_from`` use somewhere in the module;
+   likewise every literal format string passed to bare ``struct.pack``
+   must appear in some ``struct.unpack`` call and vice versa. A
+   one-sided format means the other direction lives elsewhere (or
+   nowhere) and can drift.
+2. **Header-field symmetry** — for each same-module ``encode_X`` /
+   ``decode_X`` name pair, the string keys the decoder reads
+   (``hdr["k"]`` subscripts and ``hdr.get("k")`` calls) must be a
+   subset of the keys the encoder writes (``dict(...)`` keywords and
+   ``{"k": ...}`` literal keys). Subset, not equality: callers may read
+   envelope fields (step/seq/tag) outside the decode helper, but a
+   decoder key the encoder never writes is a guaranteed KeyError/None
+   on a live socket.
+
+Blind spots: formats built by string concatenation and keys routed
+through variables are invisible — the transport deliberately uses
+literal formats and literal keys to stay inside this checkable subset.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    AnalysisConfig, Finding, Pass, Source, call_name,
+)
+
+STRUCT_HINT = ("keep pack and unpack of one wire format in the same "
+               "module; if the other side is intentionally remote, "
+               "annotate why")
+FIELD_HINT = ("add the key to the encoder's header dict (and bump the "
+              "frame version if the wire format changes), or stop "
+              "reading it in the decoder")
+
+
+def _struct_defs(tree: ast.Module):
+    """module-level ``NAME = struct.Struct(<const fmt>)`` assignments."""
+    out = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and call_name(node.value) in ("struct.Struct", "Struct")
+                and node.value.args
+                and isinstance(node.value.args[0], ast.Constant)
+                and isinstance(node.value.args[0].value, str)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = (node.lineno, node.value.args[0].value)
+    return out
+
+
+def _name_method_uses(tree: ast.Module, names):
+    """name -> set of methods called on it (pack/unpack/...)."""
+    uses: dict = {n: set() for n in names}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in uses):
+            uses[node.value.id].add(node.attr)
+        # also catch aliased uses: cls-level or self._HDR = _HEADER then
+        # self._HDR.pack(...) is NOT tracked — modules keep these global.
+    return uses
+
+
+def _bare_struct_fmts(tree: ast.Module):
+    """(packed fmts, unpacked fmts) passed literally to struct.pack/unpack."""
+    packed, unpacked = {}, {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node) or ""
+        if name in ("struct.pack", "struct.pack_into"):
+            bucket = packed
+        elif name in ("struct.unpack", "struct.unpack_from"):
+            bucket = unpacked
+        else:
+            continue
+        if node.args and isinstance(node.args[0], ast.Constant) \
+                and isinstance(node.args[0].value, str):
+            bucket.setdefault(node.args[0].value, node.lineno)
+    return packed, unpacked
+
+
+def _encoder_keys(fn: ast.FunctionDef) -> set:
+    """Keys the encoder writes: dict(...) keywords + {"k": ...} literals."""
+    keys = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and call_name(node) == "dict":
+            keys.update(kw.arg for kw in node.keywords if kw.arg)
+        elif isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+    return keys
+
+
+def _decoder_keys(fn: ast.FunctionDef):
+    """(key, line) pairs the decoder reads: x["k"] and x.get("k")."""
+    out = []
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, str)):
+            out.append((node.slice.value, node.lineno))
+        elif (isinstance(node, ast.Call)
+                and (call_name(node) or "").endswith(".get")
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            out.append((node.args[0].value, node.lineno))
+    return out
+
+
+class WireSymmetryPass(Pass):
+    pass_id = "wire-symmetry"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        for src in sources:
+            findings.extend(self._structs(src))
+            findings.extend(self._codec_pairs(src))
+        return findings
+
+    def _structs(self, src: Source) -> list:
+        findings = []
+        defs = _struct_defs(src.tree)
+        uses = _name_method_uses(src.tree, defs)
+        for name, (line, fmt) in defs.items():
+            methods = uses[name]
+            has_pack = bool(methods & {"pack", "pack_into"})
+            has_unpack = bool(methods & {"unpack", "unpack_from"})
+            if has_pack != has_unpack:
+                side = "pack" if has_pack else "unpack"
+                findings.append(Finding(
+                    pass_id=self.pass_id, path=src.path, line=line,
+                    scope="<module>", detail=name,
+                    message=(f"struct format {name} ({fmt!r}) is only ever "
+                             f"used to {side} in this module — the other "
+                             "direction can drift"),
+                    hint=STRUCT_HINT,
+                ))
+        packed, unpacked = _bare_struct_fmts(src.tree)
+        for fmt, line in packed.items():
+            if fmt not in unpacked:
+                findings.append(Finding(
+                    pass_id=self.pass_id, path=src.path, line=line,
+                    scope="<module>", detail=fmt,
+                    message=(f"struct.pack format {fmt!r} has no matching "
+                             "struct.unpack in this module"),
+                    hint=STRUCT_HINT,
+                ))
+        for fmt, line in unpacked.items():
+            if fmt not in packed:
+                findings.append(Finding(
+                    pass_id=self.pass_id, path=src.path, line=line,
+                    scope="<module>", detail=fmt,
+                    message=(f"struct.unpack format {fmt!r} has no matching "
+                             "struct.pack in this module"),
+                    hint=STRUCT_HINT,
+                ))
+        return findings
+
+    def _codec_pairs(self, src: Source) -> list:
+        findings = []
+        fns = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.FunctionDef):
+                fns[node.name] = node
+        for name, enc in fns.items():
+            if not name.startswith("encode_"):
+                continue
+            dec = fns.get("decode_" + name[len("encode_"):])
+            if dec is None:
+                continue
+            written = _encoder_keys(enc)
+            if not written:
+                continue  # encoder builds no literal dict; out of scope
+            for key, line in _decoder_keys(dec):
+                if key not in written:
+                    findings.append(Finding(
+                        pass_id=self.pass_id, path=src.path, line=line,
+                        scope=dec.name, detail=key,
+                        message=(f"{dec.name} reads header key {key!r} "
+                                 f"that {enc.name} never writes — "
+                                 "guaranteed decode failure on a live "
+                                 "connection"),
+                        hint=FIELD_HINT,
+                    ))
+        return findings

@@ -77,6 +77,9 @@ class Checkpointer:
                         meta=meta)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())  # recovery trusts any step dir it can see;
+            # the manifest must be durable before the rename publishes it
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish

@@ -153,12 +153,12 @@ def lower_cell(arch: str, shape: str, mesh, cfg=None, opt_cfg=None,
     seq = "model" if cfg.seq_shard else None
     with rules(batch=dp if len(dp) > 1 else dp[0], model="model", seq=seq,
                mesh=mesh):
-        t0 = time.time()
+        t0 = time.perf_counter()
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
-    t0 = time.time()
+        t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     return lowered, compiled, dict(
         lower_s=round(t_lower, 1), compile_s=round(t_compile, 1)
     )
@@ -321,12 +321,12 @@ def run_graphd_cell(multi_pod: bool, scale: str = "clueweb",
         fn,
         in_shardings=(jax.tree.map(lambda _: shard, pg), shard, shard, rep),
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = jfn.lower(pg, vals, act, stp)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     cost = cost_analysis(compiled)
     mem = compiled.memory_analysis()

@@ -178,6 +178,24 @@ def decode_run(payload: bytes):
     return hdr, dp, msg, cnt
 
 
+def _force_close(sock: socket.socket) -> None:
+    """Close a socket another thread may be blocked on. ``close()`` alone
+    does NOT interrupt a thread parked in ``accept()`` or ``recv()`` on
+    Linux — it stays in the syscall until traffic arrives, which is never
+    at teardown; ``shutdown()`` forces accept to return EINVAL and recv to
+    return EOF first. Every cross-thread close must go through here, or
+    the join-with-timeout discipline in the ``close()`` methods turns a
+    silently parked thread into a hard RuntimeError."""
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    try:
+        sock.close()
+    except OSError:
+        pass
+
+
 # -- data plane: receiver ------------------------------------------------------
 
 class PeerServer:
@@ -205,11 +223,12 @@ class PeerServer:
         self._have = [0] * self.n  # runs appended per source, this step
         self._ended = [False] * self.n
         self._closed = False
+        self._thread: threading.Thread | None = None
 
     def start(self) -> None:
-        t = threading.Thread(target=self._accept_loop, name="peer-accept",
-                             daemon=True)
-        t.start()
+        self._thread = threading.Thread(target=self._accept_loop,
+                                        name="peer-accept", daemon=True)
+        self._thread.start()
 
     def _accept_loop(self) -> None:
         while not self._closed:
@@ -219,6 +238,9 @@ class PeerServer:
                 return  # listener closed
             try:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                # a wedged peer must not pin the accept loop past close():
+                # bound the handshake, then restore blocking for data frames
+                conn.settimeout(5.0)
                 kind, payload = recv_frame(conn)
                 if kind != K_HELLO:
                     raise FrameError(f"expected HELLO, got kind={kind}")
@@ -229,11 +251,9 @@ class PeerServer:
                     old, self._conns[src] = self._conns[src], conn
                     self._cv.notify_all()
                 _send_json(conn, K_RESUME, reply)
+                conn.settimeout(None)
                 if old is not None:
-                    try:
-                        old.close()
-                    except OSError:
-                        pass
+                    _force_close(old)
             except (ConnectionError, OSError, KeyError, ValueError):
                 try:
                     conn.close()
@@ -309,17 +329,23 @@ class PeerServer:
             pass
 
     def close(self) -> None:
+        """Close the listener and every source connection, then join the
+        accept thread — raising if it leaks (the ChannelSender contract:
+        a thread we cannot stop keeps sockets open and makes this worker's
+        inbox unsafe to reuse, so it must be an error, not a warning)."""
         self._closed = True
-        try:
-            self._sock.close()
-        except OSError:
-            pass
-        for conn in self._conns:
+        _force_close(self._sock)
+        with self._cv:  # the accept thread swaps slots under this lock
+            conns = list(self._conns)
+        for conn in conns:
             if conn is not None:
-                try:
-                    conn.close()
-                except OSError:
-                    pass
+                _force_close(conn)
+        if self._thread is not None and self._thread.ident is not None:
+            self._thread.join(timeout=10.0)
+            if self._thread.is_alive():
+                raise RuntimeError(
+                    "peer-accept thread failed to stop within 10s; "
+                    "thread leaked")
 
 
 # -- data plane: sender --------------------------------------------------------
@@ -344,6 +370,11 @@ class PeerSender:
     RECONNECT_POLL = 0.1
     RECONNECT_POLL_MAX = 1.0
     SEND_TIMEOUT = 60.0
+
+    # GIL-atomic by review: _exc is write-once (transmit thread) and only
+    # read after it is set; _stats scalars are monotonic stall/byte
+    # counters — a torn read is a stale report, never a control decision
+    _LOCKED_FIELDS = frozenset({"_exc", "_stats"})
 
     def __init__(self, me: int, n_shards: int, make_store, *,
                  inflight: int = 4, stats=None, check_abort=None,
@@ -415,8 +446,17 @@ class PeerSender:
             raise RuntimeError("socket sender failed") from self._exc
 
     def close(self) -> None:
+        """Stop and JOIN the transmit thread, raising if it leaks. The quit
+        op tears down connections and outbox stores from inside the thread
+        (its own teardown path); ``_closed`` breaks any reconnect wait."""
         self._closed = True
         self._q.put(("quit",))
+        if self._thread.ident is not None:
+            self._thread.join(timeout=10.0)
+            if self._thread.is_alive():
+                raise RuntimeError(
+                    "peer-send thread failed to stop within 10s; thread "
+                    "leaked (outbox stores and sockets still held)")
 
     # -- plumbing --------------------------------------------------------------
     def _acquire_slot(self) -> None:
@@ -679,10 +719,13 @@ class CoordServer:
         self._last_commit: dict | None = None
         self._abort: str | None = None
         self._closed = False
+        self._threads: list[threading.Thread] = []  # accept + serve threads
 
     def start(self) -> None:
         t = threading.Thread(target=self._accept_loop, name="coord-accept",
                              daemon=True)
+        with self._cv:
+            self._threads.append(t)
         t.start()
 
     def _accept_loop(self) -> None:
@@ -691,14 +734,25 @@ class CoordServer:
                 conn, _ = self._sock.accept()
             except OSError:
                 return
-            threading.Thread(target=self._serve_conn, args=(conn,),
-                             name="coord-conn", daemon=True).start()
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 name="coord-conn", daemon=True)
+            with self._cv:
+                # prune finished serve threads so reconnect churn does not
+                # grow the join list unboundedly
+                self._threads = [x for x in self._threads if x.is_alive()]
+                self._threads.append(t)
+            t.start()
 
     def _serve_conn(self, conn: socket.socket) -> None:
         shard = None
         try:
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            # pre-CHELLO the conn is untracked, so close() cannot unblock
+            # this recv — bound it instead, then restore blocking once the
+            # conn is registered in _conns (close() closes those)
+            conn.settimeout(5.0)
             kind, payload = recv_frame(conn)
+            conn.settimeout(None)
             if kind != K_CHELLO:
                 raise FrameError(f"expected CHELLO, got kind={kind}")
             msg = json.loads(payload)
@@ -712,17 +766,17 @@ class CoordServer:
                 self._conns[shard] = conn
                 self._cv.notify_all()
             if old is not None:
-                try:
-                    old.close()
-                except OSError:
-                    pass
+                _force_close(old)
             if respawn:
                 self._broadcast(K_PEER_UPDATE,
                                 dict(shard=shard, addr=list(addr)),
                                 exclude=shard)
             with self._cv:  # first launch: PEERS only once everyone is in
-                while len(self._addrs) < self.n and self._abort is None:
+                while (len(self._addrs) < self.n and self._abort is None
+                       and not self._closed):
                     self._cv.wait(0.1)
+                if self._closed:
+                    return
                 reply = dict(
                     addrs=[list(self._addrs[j]) for j in range(self.n)]
                     if len(self._addrs) == self.n else None,
@@ -733,7 +787,9 @@ class CoordServer:
                 kind, payload = recv_frame(conn)
                 msg = json.loads(payload)
                 if kind == K_BEAT:
-                    self._beats[shard] = (msg.get("seq"), time.monotonic())
+                    with self._cv:  # heartbeat_age reads under the same lock
+                        self._beats[shard] = (msg.get("seq"),
+                                              time.monotonic())
                 elif kind == K_ARRIVE:
                     with self._cv:
                         step = int(msg["step"])
@@ -812,7 +868,8 @@ class CoordServer:
             raise RunAborted(f"run aborted by coordinator: {self._abort}")
 
     def heartbeat_age(self, shard: int) -> float:
-        beat = self._beats.get(int(shard))
+        with self._cv:
+            beat = self._beats.get(int(shard))
         if beat is None:
             return float("inf")
         return time.monotonic() - beat[1]
@@ -828,18 +885,27 @@ class CoordServer:
                 del self._commits[s]
 
     def close(self) -> None:
+        """Close the listener and every worker connection, wake PEERS
+        waiters, then join accept + serve threads — raising if any leak."""
         self._closed = True
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        _force_close(self._sock)
         with self._cv:
             conns = list(self._conns.values())
+            threads = list(self._threads)
+            self._cv.notify_all()  # release any serve thread in PEERS wait
         for conn in conns:
-            try:
-                conn.close()
-            except OSError:
-                pass
+            _force_close(conn)
+        leaked = []
+        for t in threads:
+            if t.ident is None:
+                continue
+            t.join(timeout=10.0)
+            if t.is_alive():
+                leaked.append(t.name)
+        if leaked:
+            raise RuntimeError(
+                f"coordinator threads failed to stop within 10s: "
+                f"{', '.join(leaked)}; threads leaked")
 
 
 class CoordClient:
@@ -865,16 +931,21 @@ class CoordClient:
         self._stop = threading.Event()
         self._hello = threading.Event()  # beats must not precede CHELLO
         self.on_peer_update = None  # set by the worker once the sender exists
+        self._threads: list[threading.Thread] = []
 
     def _send(self, kind: int, obj) -> None:
         with self._wlock:
             _send_json(self._sock, kind, obj)
 
     def start(self) -> None:
-        threading.Thread(target=self._reader, name="coord-read",
-                         daemon=True).start()
-        threading.Thread(target=self._beats, name="coord-beat",
-                         daemon=True).start()
+        self._threads = [
+            threading.Thread(target=self._reader, name="coord-read",
+                             daemon=True),
+            threading.Thread(target=self._beats, name="coord-beat",
+                             daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
 
     def register(self, data_addr) -> list[tuple]:
         """CHELLO with our data-plane address; blocks for PEERS (all n
@@ -970,12 +1041,20 @@ class CoordClient:
             raise RunAborted(f"run aborted by coordinator: {reason}")
 
     def close(self) -> None:
-        self._closed = True
+        """Stop the beat thread, unblock the reader by closing the socket,
+        and join both — raising if either leaks. ``_closed`` is set under
+        the condition so the reader's its-not-an-abort check can't race."""
+        with self._cv:
+            self._closed = True
         self._stop.set()
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        _force_close(self._sock)
+        leaked = [t.name for t in self._threads
+                  if t.ident is not None
+                  and (t.join(timeout=10.0) or t.is_alive())]
+        if leaked:
+            raise RuntimeError(
+                f"coordinator client threads failed to stop within 10s: "
+                f"{', '.join(leaked)}; threads leaked")
 
 
 # -- link probes (planner calibration) -----------------------------------------
@@ -1011,13 +1090,17 @@ def probe_link_throughput(n_bytes: int = 8 << 20,
     while sent < n_bytes:
         send_frame(out, K_RUN, blob)
         sent += chunk
-    t.join()
+    t.join(timeout=30.0)
     elapsed = max(time.perf_counter() - t0, 1e-9)
+    drain_leaked = t.is_alive()
     for s in (out, inn, srv):
         try:
             s.close()
         except OSError:
             pass
+    if drain_leaked:
+        raise RuntimeError("link-probe drain thread failed to stop within "
+                           "30s; thread leaked")
     return sent / elapsed
 
 

@@ -97,7 +97,10 @@ def _result_path(procs_dir: str, w: int) -> str:
 
 def _save_npz_atomic(path: str, **arrays) -> None:
     tmp = path + ".tmp.npz"
-    np.savez(tmp, **arrays)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())  # arrays durable before the name appears
     os.replace(tmp, path)
 
 
@@ -180,6 +183,9 @@ def _finalize_checkpoint(ckpt, step: int, n_shards: int, P: int, dtype: str,
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(dict(step=step, n_shards=n_shards, P=P, dtype=dtype,
                        meta=meta), f)
+        f.flush()
+        os.fsync(f.fileno())  # recovery trusts any published step dir; the
+        # manifest must be durable before the rename makes it visible
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -335,8 +341,10 @@ def run_processes(job, max_supersteps: int = 10_000, *,
             procs[w] = subprocess.Popen(cmd, stdout=logf,
                                         stderr=subprocess.STDOUT, env=env)
         # the parent's copy of the log fd is closed by the with-block; the
-        # child holds its own
-        grace[w] = time.time() + heartbeat_timeout + SPAWN_GRACE
+        # child holds its own.  Grace deadlines live on the monotonic
+        # clock: an NTP step during spawn must not shrink (or stretch)
+        # the window a worker gets to reach its first heartbeat.
+        grace[w] = time.monotonic() + heartbeat_timeout + SPAWN_GRACE
 
     def _killall() -> None:
         for p in procs:
@@ -377,7 +385,7 @@ def run_processes(job, max_supersteps: int = 10_000, *,
         """One poll tick: a worker that exited, or whose heartbeat went
         stale past its grace window, is recovered (or the run aborts)."""
         def check(got):
-            now = time.time()
+            now = time.monotonic()  # same clock as the grace deadlines
             for w in range(n):
                 if w in got:
                     continue
@@ -1112,6 +1120,25 @@ class _Worker:
                          active=np.asarray(active_w))
 
 
+def _close_net(sender, server, coord, shard: int) -> None:
+    """Close the worker's socket-transport pieces in dependency order
+    (sender first: its transmit thread may still hold peer connections).
+    Every failure is reported, only the first propagates — a close error
+    must not shadow the ones after it."""
+    first: BaseException | None = None
+    for res in (sender, server, coord):
+        if res is None:
+            continue
+        try:
+            res.close()
+        except Exception as e:
+            print(f"worker {shard}: net close failed: {e}", file=sys.stderr)
+            if first is None:
+                first = e
+    if first is not None:
+        raise first
+
+
 def worker_main(spec_dir: str, shard: int,
                 recover_to: int | None = None) -> int:
     with open(os.path.join(spec_dir, SPEC)) as f:
@@ -1148,14 +1175,15 @@ def worker_main(spec_dir: str, shard: int,
         # beat BEFORE the heavy imports below (pickle pulls in repro.core
         # and jax): liveness must not depend on import latency
         coord.start_heartbeat(shard)
+    wk = None
     try:
         if server is not None:
             peer_addrs = coord.register(server.addr)
         with open(os.path.join(spec_dir, PROGRAM), "rb") as f:
             program = pickle.load(f)
-        _Worker(spec, program, shard, coord,
-                server=server, peer_addrs=peer_addrs).run(
-                    recover_to=recover_to)
+        wk = _Worker(spec, program, shard, coord,
+                     server=server, peer_addrs=peer_addrs)
+        wk.run(recover_to=recover_to)
         return 0
     except RunAborted as e:
         print(f"worker {shard}: {e}", file=sys.stderr)
@@ -1165,6 +1193,12 @@ def worker_main(spec_dir: str, shard: int,
 
         traceback.print_exc()
         return 1
+    finally:
+        # every socket-transport resource joins its threads on close (and
+        # raises on leak) — a worker that cannot stop its net threads must
+        # exit nonzero, not pretend it shut down cleanly
+        _close_net(wk.sender if wk is not None else None, server,
+                   coord if transport == "sockets" else None, shard)
 
 
 def main(argv=None) -> int:

@@ -132,6 +132,12 @@ class ShardChannels:
     """Outbox→inbox channels over one inbox store, one sender thread, and a
     bounded in-flight budget."""
 
+    # cross-thread fields relying on GIL-atomic access instead of a lock:
+    # _exc is write-once (sender thread) then read-only after _dead is set;
+    # stats scalars are monotonic counters where a torn read is at worst a
+    # stale-by-one report, never a control-flow input
+    _LOCKED_FIELDS = frozenset({"_exc", "stats"})
+
     @staticmethod
     def packet_bytes(*, P: int, msg_itemsize: int, combined: bool,
                      chunk_slots: int = 0, compress: bool = False,
@@ -410,6 +416,10 @@ class ChannelReceiver:
     next ``collect``/``close`` and a torn inbox is never published
     (tests/test_fault.py drives recovery through it).
     """
+
+    # same contract as ShardChannels: _exc write-once before _dead, stats
+    # monotonic report-only counters — GIL-atomic by review
+    _LOCKED_FIELDS = frozenset({"_exc", "stats"})
 
     def __init__(self, inbox: MessageRunStore, digest, identity, e0,
                  stats: ChannelStats | None = None,

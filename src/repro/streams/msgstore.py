@@ -448,6 +448,11 @@ class MessageRunStore:
                 ch: PayloadEncoder(self._decoded_dtype(ch), self._scheme(ch))
                 for ch in self._blob_channels() if ch != "dp"
             }
+            # byte counts of the merged run accumulate locally; the
+            # published counters (_blob_bytes/_sizes) move only after the
+            # flush below, so a reader that maps mid-merge sees at most
+            # the pre-merge extent (which the old segments fully cover)
+            written = {ch: 0 for ch in self._blob_channels()}
             for part in self.iter_merged(dest, read_chunk, segments=batch):
                 for ch, arr in zip(channels, part):
                     if ch == "dp" and self.compress:
@@ -455,11 +460,11 @@ class MessageRunStore:
                             np.asarray(arr, np.int64), prev=prev)
                         prev = int(arr[-1])
                         self._handle(dest, ch).write(blob)
-                        self._blob_bytes[ch][dest] += len(blob)
+                        written[ch] += len(blob)
                     elif ch in encoders:
                         blob = encoders[ch].add(arr)
                         self._handle(dest, ch).write(blob)
-                        self._blob_bytes[ch][dest] += len(blob)
+                        written[ch] += len(blob)
                     else:
                         self._handle(dest, ch).write(
                             np.ascontiguousarray(
@@ -469,14 +474,16 @@ class MessageRunStore:
             for ch, enc in encoders.items():
                 blob = enc.flush()
                 self._handle(dest, ch).write(blob)
-                self._blob_bytes[ch][dest] += len(blob)
+                written[ch] += len(blob)
             for ch in self._blob_channels():
                 off_f, nb_f = _EXTENTS[ch]
                 extents[off_f] = blob_start[ch]
-                extents[nb_f] = self._blob_bytes[ch][dest] - blob_start[ch]
+                extents[nb_f] = written[ch]
             for ch in channels:
                 if (dest, ch) in self._wfh:
                     self._wfh[(dest, ch)].flush()
+            for ch in self._blob_channels():
+                self._blob_bytes[ch][dest] += written[ch]
             self._sizes[dest] += length
             merged = RunSegment(tag=tag, offset=offset, length=length,
                                 **extents)
@@ -571,6 +578,8 @@ class MessageRunStore:
             off += seg.length
         del mm  # drop the read maps over the old inodes before replacing
         for ch in channels:
+            tmp[ch].flush()
+            os.fsync(tmp[ch].fileno())  # bytes durable before the name moves
             tmp[ch].close()
             os.replace(self._path(dest, ch) + ".vacuum",
                        self._path(dest, ch))
@@ -645,6 +654,9 @@ class MessageRunStore:
         tmp = os.path.join(self.dir, f".{INDEX}.tmp")
         with open(tmp, "w") as f:
             json.dump(index, f)
+            f.flush()
+            os.fsync(f.fileno())  # the index is the recovery root: no
+            # publish until the extents it describes are durable
         os.replace(tmp, os.path.join(self.dir, INDEX))
 
     @classmethod

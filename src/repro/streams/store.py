@@ -268,6 +268,8 @@ class EdgeStreamStore:
         tmp = os.path.join(directory, f".{MANIFEST}.tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())  # manifest durable before the name appears
         os.replace(tmp, os.path.join(directory, MANIFEST))  # atomic publish
         return cls(directory, geom, blk_lo, blk_hi, signature,
                    compress=compress, compress_payload=compress_payload,

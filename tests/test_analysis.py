@@ -1,0 +1,536 @@
+"""The analysis suite's own tests: per-pass known-good/known-bad fixtures,
+the three seeded regression fixtures from the repo's bug history (PR 5
+publish-before-flush, PR 8 mtime staleness, PR 6 eager worker-path jax
+import), suppression mechanics, and the suite run over the real src/ tree.
+"""
+
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import (
+    ALL_PASSES, AnalysisConfig, AtomicPublishPass, Baseline,
+    ImportHygienePass, LivenessClockPass, SharedStateRacePass,
+    ThreadLifecyclePass, WireSymmetryPass, collect_sources, run_analysis,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_tree(root, files: dict):
+    """files: relpath -> dedented source text; returns collected Sources."""
+    for rel, text in files.items():
+        path = os.path.join(root, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(textwrap.dedent(text))
+    return collect_sources([root], root=root)
+
+
+def run_pass(p, sources, **cfg):
+    findings, _ = run_analysis(sources, config=AnalysisConfig(**cfg),
+                               passes=[p])
+    return findings
+
+
+# -- thread-lifecycle ----------------------------------------------------------
+
+GOOD_OWNER_THREAD = """
+    import threading
+
+    class Sender:
+        def __init__(self):
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+
+        def _run(self):
+            pass
+
+        def close(self):
+            self._thread.join(timeout=10.0)
+            self._check_stopped()
+
+        def _check_stopped(self):
+            if self._thread.is_alive():
+                raise RuntimeError("thread leaked")
+"""
+
+GOOD_SCOPED_THREAD = """
+    import threading
+
+    def prefetch(items):
+        t = threading.Thread(target=list, args=(items,), daemon=True)
+        t.start()
+        t.join(timeout=5.0)
+        if t.is_alive():
+            raise RuntimeError("prefetch thread leaked")
+"""
+
+BAD_NO_JOIN_THREAD = """
+    import threading
+
+    class Leaky:
+        def start(self):
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+
+        def _run(self):
+            pass
+
+        def close(self):
+            self._closed = True  # never joins: the PR 6 leak class
+"""
+
+
+def test_thread_lifecycle_accepts_owner_and_scoped_idioms(tmp_path):
+    srcs = write_tree(tmp_path, {"good_owner.py": GOOD_OWNER_THREAD,
+                                 "good_scoped.py": GOOD_SCOPED_THREAD})
+    assert run_pass(ThreadLifecyclePass(), srcs) == []
+
+
+def test_thread_lifecycle_flags_joinless_close(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": BAD_NO_JOIN_THREAD})
+    found = run_pass(ThreadLifecyclePass(), srcs)
+    assert len(found) == 1
+    assert found[0].scope == "Leaky.start"
+    assert "join" in found[0].message
+
+
+def test_thread_lifecycle_join_without_timeout_still_flags(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": """
+        import threading
+
+        class Hangable:
+            def start(self):
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                pass
+
+            def close(self):
+                self._t.join()  # no timeout: close() can hang forever
+                if self._t.is_alive():
+                    raise RuntimeError
+    """})
+    assert len(run_pass(ThreadLifecyclePass(), srcs)) == 1
+
+
+# -- liveness-clock ------------------------------------------------------------
+
+# the PR 8 regression, reduced: staleness judged from file mtime
+SEEDED_MTIME_STALENESS = """
+    import os
+    import time
+
+    def is_stale(path, timeout):
+        age = time.time() - os.stat(path).st_mtime
+        return age > timeout
+"""
+
+GOOD_MONOTONIC = """
+    import time
+
+    def wait_with_deadline(cond, timeout):
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if cond():
+                return True
+        return False
+"""
+
+
+def test_liveness_clock_flags_seeded_mtime_staleness(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": SEEDED_MTIME_STALENESS})
+    found = run_pass(LivenessClockPass(), srcs)
+    details = {f.detail for f in found}
+    assert "time.time" in details and "st_mtime" in details
+
+
+def test_liveness_clock_accepts_monotonic(tmp_path):
+    srcs = write_tree(tmp_path, {"good.py": GOOD_MONOTONIC})
+    assert run_pass(LivenessClockPass(), srcs) == []
+
+
+def test_liveness_clock_flags_naive_datetime_and_getmtime(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": """
+        import os.path
+        from datetime import datetime
+
+        def age(path):
+            return datetime.now().timestamp() - os.path.getmtime(path)
+    """})
+    details = {f.detail for f in run_pass(LivenessClockPass(), srcs)}
+    assert details == {"datetime", "getmtime"}
+
+
+def test_allow_comment_suppresses_on_line_and_line_above(tmp_path):
+    srcs = write_tree(tmp_path, {"ok.py": """
+        import time
+
+        def report():
+            now = time.time()  # analysis: allow[liveness-clock] report only
+            # analysis: allow[liveness-clock] report only
+            then = time.time()
+            return now, then
+    """})
+    open_f, suppressed = run_analysis(srcs, passes=[LivenessClockPass()])
+    assert open_f == [] and len(suppressed) == 2
+
+
+# -- atomic-publish ------------------------------------------------------------
+
+# the PR 5 regression, reduced: the run counter publishes the extent
+# before the bytes behind it are flushed
+SEEDED_PUBLISH_BEFORE_FLUSH = """
+    class Store:
+        def append(self, dest, blob):
+            fh = self._handle(dest)
+            fh.write(blob)
+            self._sizes[dest] += len(blob)  # reader can map garbage now
+            fh.flush()
+"""
+
+GOOD_FLUSH_THEN_PUBLISH = """
+    class Store:
+        def append(self, dest, blob):
+            fh = self._handle(dest)
+            fh.write(blob)
+            fh.flush()
+            self._sizes[dest] += len(blob)
+"""
+
+
+def test_atomic_publish_flags_seeded_publish_before_flush(tmp_path):
+    srcs = write_tree(tmp_path,
+                      {"streams/msgstore.py": SEEDED_PUBLISH_BEFORE_FLUSH})
+    found = run_pass(AtomicPublishPass(), srcs)
+    assert len(found) == 1
+    assert found[0].detail == "_sizes"
+    assert found[0].scope == "Store.append"
+
+
+def test_atomic_publish_accepts_flush_then_publish(tmp_path):
+    srcs = write_tree(tmp_path,
+                      {"streams/msgstore.py": GOOD_FLUSH_THEN_PUBLISH})
+    assert run_pass(AtomicPublishPass(), srcs) == []
+
+
+def test_atomic_publish_counter_rule_only_in_configured_modules(tmp_path):
+    # same pattern outside counter_modules: the counter rule stays quiet
+    srcs = write_tree(tmp_path,
+                      {"other.py": SEEDED_PUBLISH_BEFORE_FLUSH})
+    assert run_pass(AtomicPublishPass(), srcs) == []
+
+
+def test_atomic_publish_flags_rename_without_fsync(tmp_path):
+    srcs = write_tree(tmp_path, {"pub.py": """
+        import json
+        import os
+
+        def publish(path, obj):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(obj, f)
+            os.replace(tmp, path)
+    """})
+    found = run_pass(AtomicPublishPass(), srcs)
+    assert [f.detail for f in found] == ["rename-fsync"]
+
+
+def test_atomic_publish_flags_non_tmp_rename_source(tmp_path):
+    srcs = write_tree(tmp_path, {"pub.py": """
+        import os
+
+        def clobber(a, b):
+            os.fsync(0)
+            os.replace(a, b)  # not published through a temp path
+    """})
+    found = run_pass(AtomicPublishPass(), srcs)
+    assert [f.detail for f in found] == ["rename-source"]
+
+
+def test_atomic_publish_accepts_tmp_fsync_replace(tmp_path):
+    srcs = write_tree(tmp_path, {"pub.py": """
+        import json
+        import os
+
+        def publish(path, obj):
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(obj, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+    """})
+    assert run_pass(AtomicPublishPass(), srcs) == []
+
+
+# -- shared-state-race ---------------------------------------------------------
+
+BAD_UNGUARDED_READ = """
+    import threading
+
+    class Worker:
+        def __init__(self):
+            self._exc = None
+            self._t = threading.Thread(target=self._run)
+            self._t.start()
+
+        def _run(self):
+            self._exc = RuntimeError("boom")
+
+        def check(self):
+            if self._exc is not None:
+                raise self._exc
+
+        def close(self):
+            self._t.join(timeout=5.0)
+            if self._t.is_alive():
+                raise RuntimeError("leak")
+"""
+
+
+def test_race_flags_unguarded_cross_thread_read(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": BAD_UNGUARDED_READ})
+    found = run_pass(SharedStateRacePass(), srcs)
+    assert {f.detail for f in found} == {"_exc"}
+    assert {f.scope for f in found} == {"Worker.check"}
+
+
+def test_race_accepts_locked_fields_declaration(tmp_path):
+    declared = BAD_UNGUARDED_READ.replace(
+        "class Worker:",
+        'class Worker:\n        _LOCKED_FIELDS = frozenset({"_exc"})')
+    assert declared != BAD_UNGUARDED_READ
+    srcs = write_tree(tmp_path, {"ok.py": declared})
+    assert run_pass(SharedStateRacePass(), srcs) == []
+
+
+def test_race_accepts_lock_guarded_read(tmp_path):
+    srcs = write_tree(tmp_path, {"ok.py": """
+        import threading
+
+        class Worker:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                with self._lock:
+                    self._n += 1
+
+            def count(self):
+                with self._lock:
+                    return self._n
+
+            def close(self):
+                self._t.join(timeout=5.0)
+                if self._t.is_alive():
+                    raise RuntimeError("leak")
+    """})
+    assert run_pass(SharedStateRacePass(), srcs) == []
+
+
+def test_race_sees_reads_through_private_helpers(tmp_path):
+    # public check() -> private _raise() -> self._exc: still a public read
+    indirect = BAD_UNGUARDED_READ.replace(
+        """def check(self):
+            if self._exc is not None:
+                raise self._exc""",
+        """def check(self):
+            self._raise()
+
+        def _raise(self):
+            if self._exc is not None:
+                raise self._exc""")
+    assert indirect != BAD_UNGUARDED_READ
+    srcs = write_tree(tmp_path, {"bad.py": indirect})
+    found = run_pass(SharedStateRacePass(), srcs)
+    assert {f.scope for f in found} == {"Worker._raise"}
+
+
+# -- wire-symmetry -------------------------------------------------------------
+
+def test_wire_flags_one_sided_struct(tmp_path):
+    srcs = write_tree(tmp_path, {"codec.py": """
+        import struct
+
+        HEADER = struct.Struct(">IBII")
+
+        def encode(a, b, c, d):
+            return HEADER.pack(a, b, c, d)  # nothing ever unpacks HEADER
+    """})
+    found = run_pass(WireSymmetryPass(), srcs)
+    assert [f.detail for f in found] == ["HEADER"]
+
+
+def test_wire_accepts_symmetric_struct_and_literal_fmts(tmp_path):
+    srcs = write_tree(tmp_path, {"codec.py": """
+        import struct
+
+        HEADER = struct.Struct(">IBII")
+
+        def encode(a, b, c, d):
+            return HEADER.pack(a, b, c, d) + struct.pack(">I", a)
+
+        def decode(buf):
+            return HEADER.unpack(buf[:13]), struct.unpack(">I", buf[13:17])
+    """})
+    assert run_pass(WireSymmetryPass(), srcs) == []
+
+
+def test_wire_flags_decoder_key_the_encoder_never_writes(tmp_path):
+    srcs = write_tree(tmp_path, {"codec.py": """
+        import json
+
+        def encode_run(step, seq):
+            return json.dumps(dict(step=step, seq=seq)).encode()
+
+        def decode_run(payload):
+            hdr = json.loads(payload)
+            return hdr["step"], hdr["seq"], hdr["tag"]  # tag never written
+    """})
+    found = run_pass(WireSymmetryPass(), srcs)
+    assert [f.detail for f in found] == ["tag"]
+
+
+def test_wire_decoder_keys_may_be_a_subset(tmp_path):
+    srcs = write_tree(tmp_path, {"codec.py": """
+        import json
+
+        def encode_run(step, seq, tag):
+            return json.dumps(dict(step=step, seq=seq, tag=tag)).encode()
+
+        def decode_run(payload):
+            hdr = json.loads(payload)
+            return hdr["step"]  # envelope fields read elsewhere
+    """})
+    assert run_pass(WireSymmetryPass(), srcs) == []
+
+
+# -- import-hygiene ------------------------------------------------------------
+
+# the PR 6 regression, reduced: an eager jax import on the worker path —
+# smuggled through a parent package __init__ the worker path executes
+SEEDED_WORKER_JAX = {
+    "repro/launch/procs.py": """
+        from repro.streams.store import EdgeStore
+    """,
+    "repro/streams/__init__.py": """
+        import jax  # eager: executed by ANY repro.streams.* import
+    """,
+    "repro/streams/store.py": """
+        class EdgeStore:
+            pass
+    """,
+}
+
+
+def test_import_hygiene_flags_seeded_eager_jax_via_parent_init(tmp_path):
+    srcs = write_tree(tmp_path, dict(SEEDED_WORKER_JAX))
+    found = run_pass(ImportHygienePass(), srcs,
+                     worker_roots=("repro.launch.procs",))
+    assert len(found) == 1
+    assert found[0].detail == "jax"
+    assert "repro.streams" in found[0].message
+
+
+def test_import_hygiene_accepts_lazy_function_level_import(tmp_path):
+    files = dict(SEEDED_WORKER_JAX)
+    files["repro/streams/__init__.py"] = """
+        def _lazy():
+            import jax  # inside a function: lazy, off the eager graph
+            return jax
+    """
+    srcs = write_tree(tmp_path, files)
+    assert run_pass(ImportHygienePass(), srcs,
+                    worker_roots=("repro.launch.procs",)) == []
+
+
+def test_import_hygiene_flags_direct_eager_import(tmp_path):
+    srcs = write_tree(tmp_path, {"repro/launch/procs.py": """
+        import jax
+    """})
+    found = run_pass(ImportHygienePass(), srcs,
+                     worker_roots=("repro.launch.procs",))
+    assert [f.detail for f in found] == ["jax"]
+
+
+def test_import_hygiene_type_checking_imports_are_lazy(tmp_path):
+    srcs = write_tree(tmp_path, {"repro/launch/procs.py": """
+        from typing import TYPE_CHECKING
+
+        if TYPE_CHECKING:
+            import jax
+    """})
+    assert run_pass(ImportHygienePass(), srcs,
+                    worker_roots=("repro.launch.procs",)) == []
+
+
+# -- suppression mechanics -----------------------------------------------------
+
+def test_baseline_suppresses_by_stable_key_and_reports_unused(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": BAD_NO_JOIN_THREAD})
+    (found,) = run_pass(ThreadLifecyclePass(), srcs)
+    bl_path = os.path.join(tmp_path, "baseline.json")
+    with open(bl_path, "w") as f:
+        json.dump({"suppressions": [
+            {"key": found.key, "reason": "reviewed: fixture"},
+            {"key": "thread-lifecycle:gone.py:X.y:Thread",
+             "reason": "stale entry"},
+        ]}, f)
+    bl = Baseline.load(bl_path)
+    open_f, suppressed = run_analysis(srcs, passes=[ThreadLifecyclePass()],
+                                      baseline=bl)
+    assert open_f == [] and len(suppressed) == 1
+    assert bl.unused(open_f + suppressed) == [
+        "thread-lifecycle:gone.py:X.y:Thread"]
+
+
+def test_baseline_rejects_entries_without_reason(tmp_path):
+    bl_path = os.path.join(tmp_path, "baseline.json")
+    with open(bl_path, "w") as f:
+        json.dump({"suppressions": [{"key": "a:b:c:d"}]}, f)
+    with pytest.raises(ValueError, match="reason"):
+        Baseline.load(bl_path)
+
+
+def test_finding_keys_are_line_independent(tmp_path):
+    srcs1 = write_tree(tmp_path / "a", {"bad.py": BAD_NO_JOIN_THREAD})
+    srcs2 = write_tree(tmp_path / "b",
+                       {"bad.py": "# a new leading comment\n"
+                        + textwrap.dedent(BAD_NO_JOIN_THREAD)})
+    (f1,) = run_pass(ThreadLifecyclePass(), srcs1)
+    (f2,) = run_pass(ThreadLifecyclePass(), srcs2)
+    assert f1.key == f2.key
+    assert f1.line != f2.line
+
+
+# -- the CLI and the real tree -------------------------------------------------
+
+def test_cli_json_output_and_exit_codes(tmp_path, capsys, monkeypatch):
+    from repro.analysis.__main__ import main
+
+    write_tree(tmp_path, {"bad.py": SEEDED_MTIME_STALENESS})
+    monkeypatch.chdir(tmp_path)
+    rc = main(["--json", str(tmp_path)])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert {f["pass_id"] for f in out["open"]} == {"liveness-clock"}
+    assert all(f["key"] for f in out["open"])
+
+
+def test_repo_src_is_clean_under_committed_baseline():
+    """The acceptance gate: the suite over src/ with the committed baseline
+    has zero open findings. Every new finding is fixed, inline-allowed, or
+    baselined with a review — this test is what makes that mechanical."""
+    srcs = collect_sources([os.path.join(REPO, "src")], root=REPO)
+    baseline = Baseline.load(os.path.join(REPO, "analysis-baseline.json"))
+    open_f, _ = run_analysis(srcs, passes=list(ALL_PASSES),
+                             baseline=baseline)
+    assert open_f == [], "\n\n".join(f.render() for f in open_f)
