@@ -1,0 +1,174 @@
+"""Chaos soak (PR 10): the fixed-seed fault matrix, run end to end.
+
+Four distinct fault classes — one per recovery mechanism the chaos layer
+must carry — each injected into a real multi-process HashMin run on the
+tiny graph and compared bit-for-bit against an undisturbed reference:
+
+- ``coord_kill`` (sockets): SIGKILL the coordinator mid-barrier, after an
+  arrival is in but before the commit hits the WAL. The launcher respawns
+  it; the successor restores from the WAL; workers reconnect and replay.
+  Gate: exactly one coordinator respawn, zero worker respawns,
+  bit-identical result.
+- ``peer_reset`` (sockets): sever a data-plane socket mid-step with an
+  injected ECONNRESET. The sender reconnects under its RetryPolicy and
+  the RESUME handshake replays the lost runs from the outbox. Gate: zero
+  recoveries (the connection heals in-step), bit-identical result.
+- ``enospc_ckpt`` (files): ENOSPC on the very FIRST checkpoint dump —
+  nothing is checkpointed yet, so the respawned worker must replay the
+  whole prefix from the message log on the bootstrap state. Gate: one
+  recovery, no torn ``.tmp`` checkpoint dirs, bit-identical result.
+- ``bitflip_log`` (files): flip ONE bit in a spilled message-log blob;
+  the write succeeds silently. Read-path CRC verification catches it,
+  quarantines the poisoned store, and the worker respawns to re-receive.
+  Gate: one recovery, the ``.quarantine`` dir exists, bit-identical
+  result — the no-surviving-silent-corruption gate.
+
+All schedules are fixed-seed (``FaultSchedule`` is deterministic), so a
+failing case replays exactly under ``pytest tests/test_fault.py`` with
+the same event dict. Every case emits one record; ``run.py --chaos
+--check`` fails unless all four classes ran and recovered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit, write_json
+from repro.core import GraphDJob, HashMin, MemoryBudget
+from repro.graph import rmat_graph
+
+#: the soak matrix: (case, launch_opts overrides, checkpoint_every,
+#: expected coordinator respawns, expected worker recoveries)
+CASES = (
+    ("coord_kill",
+     {"transport": "sockets",
+      "coord_kill": {"step": 1, "after_arrivals": 1}},
+     2, 1, 0),
+    ("peer_reset",
+     {"transport": "sockets",
+      "faults": {"seed": 11, "events": [
+          {"site": "net.send", "kind": "reset", "shard": 1, "step": 1}]}},
+     2, 0, 0),
+    ("enospc_ckpt",
+     {"faults": {"seed": 23, "events": [
+         {"site": "io.write.ckpt", "kind": "enospc",
+          "shard": 2, "step": 2}]}},
+     2, 0, 1),
+    ("bitflip_log",
+     {"faults": {"seed": 41, "events": [
+         {"site": "io.write.spill", "kind": "bitflip",
+          "shard": 1, "step": 1, "where": "logs/"}]}},
+     2, 0, 1),
+)
+
+
+def _job(g, workdir, **kw):
+    return GraphDJob(HashMin(), g, budget=MemoryBudget(n_shards=3),
+                     launch="processes", workdir=workdir, **kw)
+
+
+def _save_artifacts(job, case: str) -> None:
+    """Copy the run's post-mortem (failure-summary.json, per-worker failure
+    records, the coordinator log) out of the soak's temp workdir into
+    ``$CHAOS_ARTIFACTS/<case>/`` so CI can upload it after the temp dir is
+    gone. Best-effort: a missing artifact is not a second failure."""
+    import shutil
+
+    out = os.path.join(os.environ.get("CHAOS_ARTIFACTS", "chaos-artifacts"),
+                       case)
+    procs_dir = job._dir("procs", getattr(job, "_tag", ""))
+    try:
+        os.makedirs(out, exist_ok=True)
+        for name in ("failure-summary.json", "coord.log"):
+            src = os.path.join(procs_dir, name)
+            if os.path.isfile(src):
+                shutil.copy(src, os.path.join(out, name))
+        fdir = os.path.join(procs_dir, "failures")
+        if os.path.isdir(fdir):
+            shutil.copytree(fdir, os.path.join(out, "failures"),
+                            dirs_exist_ok=True)
+    except OSError:
+        pass
+
+
+def soak(g, ref_values, ref_history, case, opts, every, coord_restarts,
+         recoveries, workdir):
+    """One chaos case: run drilled, gate on recovery, emit the record."""
+    launch_opts = dict(opts)
+    launch_opts.setdefault("heartbeat_timeout", 5.0)
+    job = _job(g, workdir, checkpoint_every=every, launch_opts=launch_opts)
+    t0 = time.perf_counter()
+    try:
+        res = job.run()
+    except Exception:
+        _save_artifacts(job, case)
+        job.close()
+        raise
+    wall = time.perf_counter() - t0
+    identical = (
+        res.values == ref_values
+        and [(r.n_active, r.n_msgs) for r in res.history] == ref_history
+    )
+    got_restarts = job._last_run_coord_restarts
+    got_recoveries = job._last_run_recoveries
+    quarantined = True
+    if case == "bitflip_log":
+        quarantined = os.path.isdir(os.path.join(
+            job._dir("logs", job._tag), "shard-1", "step-000001.quarantine"))
+    ok = (identical and quarantined
+          and got_restarts == coord_restarts
+          and got_recoveries == recoveries)
+    if not ok:
+        _save_artifacts(job, case)
+    job.close()
+    emit(f"chaos/{case}", wall * 1e6,
+         f"identical={identical};coord_restarts={got_restarts};"
+         f"recoveries={got_recoveries};ok={ok}",
+         identical=identical, coord_restarts=got_restarts,
+         recoveries=got_recoveries, expected_restarts=coord_restarts,
+         expected_recoveries=recoveries, quarantined=quarantined,
+         supersteps=res.n_supersteps, ok=ok)
+    assert identical, f"chaos case {case}: result diverged from reference"
+    assert got_restarts == coord_restarts, (
+        f"chaos case {case}: coordinator respawns "
+        f"{got_restarts} != {coord_restarts} (drill misfired)"
+    )
+    assert got_recoveries == recoveries, (
+        f"chaos case {case}: worker recoveries "
+        f"{got_recoveries} != {recoveries} (drill misfired)"
+    )
+    assert quarantined, (
+        f"chaos case {case}: poisoned store was not quarantined"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args()
+
+    g = rmat_graph(scale=6, edge_factor=6, seed=5, weights="uniform")
+    with tempfile.TemporaryDirectory(prefix="graphd-chaos-") as d:
+        # the undisturbed reference every drilled run must match
+        ref = _job(g, os.path.join(d, "ref"), checkpoint_every=2,
+                   launch_opts={"heartbeat_timeout": 5.0})
+        r = ref.run()
+        ref_values = copy.deepcopy(r.values)
+        ref_history = [(x.n_active, x.n_msgs) for x in r.history]
+        ref.close()
+        emit("chaos/reference", 0.0,
+             f"supersteps={r.n_supersteps}", supersteps=r.n_supersteps)
+        for i, (case, opts, every, restarts, recov) in enumerate(CASES):
+            soak(g, ref_values, ref_history, case, opts, every, restarts,
+                 recov, os.path.join(d, f"case-{i}"))
+
+    if args.json:
+        write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,10 @@ everything into one ``BENCH_PR5.json`` artifact — the perf trajectory's
 seed record: per-bench wall-clock, the RAM model, the full-duplex overlap
 milliseconds, and the payload-codec bytes-on-wire.
 
-``--tiny`` runs the seconds-scale subset (the CI smoke job); ``--out``
+``--tiny`` runs the seconds-scale subset (the CI smoke job); ``--chaos``
+runs ONLY the fixed-seed chaos-soak matrix (bench_chaos: coordinator
+kill -9, peer reset, ENOSPC, bit-flip — the CI chaos-soak job) and gates
+on every fault class recovering bit-identically; ``--out``
 writes the consolidated JSON; ``--check`` fails the run when a required
 section is missing or empty, when the receiver overlap is not positive,
 when the lossless payload channel is under 1.5x, when the
@@ -30,8 +33,19 @@ from benchmarks.common import OVERLAP_MIN_CPUS, PAYLOAD_LOSSLESS_FLOOR
 REQUIRED_SECTIONS = ("wall_clock", "ram_model", "overlap", "bytes_on_wire",
                      "process_launch", "semi_external", "net")
 
+#: the chaos-soak matrix (bench_chaos.CASES); --chaos --check fails unless
+#: every class ran and recovered bit-identically
+CHAOS_CASES = ("coord_kill", "peer_reset", "enospc_ckpt", "bitflip_log")
 
-def _module_plan(tiny: bool):
+
+def _module_plan(tiny: bool, chaos: bool = False):
+    if chaos:
+        from benchmarks import bench_chaos
+
+        # the soak is its own CI job: the perf sections stay out of it so
+        # a chaos failure is unambiguously a recovery bug, not a perf gate
+        return [("chaos", bench_chaos, [])]
+
     from benchmarks import (
         bench_hashmin, bench_kernels, bench_memory, bench_messages,
         bench_pagerank, bench_sssp,
@@ -52,7 +66,8 @@ def _module_plan(tiny: bool):
     ]
 
 
-def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
+def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool,
+                chaos: bool = False) -> dict:
     """Shape the per-bench emit() records into the BENCH_PR5 sections."""
     all_recs = [r for recs in records_by_bench.values() for r in recs]
 
@@ -61,6 +76,20 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
             if r["name"] == name and "values" in r:
                 return r["values"]
         return {}
+
+    if chaos:
+        # --chaos report: one section, one entry per fault class
+        cases = {
+            r["name"].split("/", 1)[1]: r.get("values", {})
+            for r in all_recs
+            if r["name"].startswith("chaos/") and r["name"] != "chaos/reference"
+        }
+        return dict(
+            meta=dict(tiny=tiny, chaos=True,
+                      benches=sorted(records_by_bench)),
+            sections=dict(chaos=cases),
+            records=records_by_bench,
+        )
 
     wall_clock = [
         dict(name=r["name"], us=r["us"])
@@ -97,8 +126,45 @@ def consolidate(records_by_bench: dict[str, list[dict]], tiny: bool) -> dict:
     )
 
 
+def check_chaos(report: dict) -> list[str]:
+    """The chaos-soak acceptance gates: every fault class in the matrix
+    ran, the drill really fired (respawn/recovery counts match), and the
+    recovered run is bit-identical — no surviving silent-corruption path."""
+    problems = []
+    cases = (report.get("sections", {}) or {}).get("chaos") or {}
+    for name in CHAOS_CASES:
+        vals = cases.get(name)
+        if not vals:
+            problems.append(f"chaos case {name!r} missing from the soak")
+            continue
+        if not vals.get("identical"):
+            problems.append(
+                f"chaos case {name!r} diverged from the undisturbed "
+                "reference — recovery is not bit-identical"
+            )
+        if vals.get("coord_restarts") != vals.get("expected_restarts"):
+            problems.append(
+                f"chaos case {name!r}: coordinator respawns "
+                f"{vals.get('coord_restarts')!r} != expected "
+                f"{vals.get('expected_restarts')!r} (drill misfired)"
+            )
+        if vals.get("recoveries") != vals.get("expected_recoveries"):
+            problems.append(
+                f"chaos case {name!r}: worker recoveries "
+                f"{vals.get('recoveries')!r} != expected "
+                f"{vals.get('expected_recoveries')!r} (drill misfired)"
+            )
+        if not vals.get("quarantined", True):
+            problems.append(
+                f"chaos case {name!r}: corrupt store was not quarantined"
+            )
+    return problems
+
+
 def check(report: dict) -> list[str]:
     """The smoke-job acceptance gates; returns the list of violations."""
+    if (report.get("meta") or {}).get("chaos"):
+        return check_chaos(report)
     problems = []
     sections = report.get("sections", {})
     for name in REQUIRED_SECTIONS:
@@ -202,17 +268,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="seconds-scale subset (CI smoke)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run ONLY the fixed-seed chaos-soak fault matrix "
+                         "(coordinator kill, peer reset, ENOSPC, bit-flip)")
     ap.add_argument("--out", metavar="PATH", default=None,
                     help="write the consolidated BENCH_PR5.json here")
     ap.add_argument("--check", action="store_true",
                     help="fail unless every required section is present and "
-                         "the overlap/wire acceptance gates hold")
+                         "the overlap/wire acceptance gates hold (--chaos: "
+                         "every fault class recovered bit-identically)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     failed = []
     records_by_bench: dict[str, list[dict]] = {}
-    for name, mod, mod_args in _module_plan(args.tiny):
+    for name, mod, mod_args in _module_plan(args.tiny, args.chaos):
         mark = len(common.all_records())
         argv = sys.argv
         try:
@@ -225,7 +295,7 @@ def main() -> None:
             sys.argv = argv
         records_by_bench[name] = common.records_since(mark)
 
-    report = consolidate(records_by_bench, args.tiny)
+    report = consolidate(records_by_bench, args.tiny, args.chaos)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)

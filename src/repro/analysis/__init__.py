@@ -6,8 +6,10 @@ must be judged by monotonic clocks and in-record progress, never wall time
 or mtime (PR 8), counters and manifests must publish only after the bytes
 they describe are flushed (PR 5), cross-thread state must be lock-guarded
 or explicitly reviewed, frame encoders must stay symmetric with their
-decoders, and the pre-heartbeat worker import path must stay jax-free
-(PR 6). Each of those regression classes is one AST pass here; the suite
+decoders, the pre-heartbeat worker import path must stay jax-free (PR 6),
+and reconnect loops must be bounded by a RetryPolicy instead of spinning
+forever (PR 10). Each of those regression classes is one AST pass here;
+the suite
 runs in CI over ``src/`` and fails on any unsuppressed finding.
 
 Run locally::
@@ -26,10 +28,12 @@ from repro.analysis.clocks import LivenessClockPass
 from repro.analysis.imports import ImportHygienePass
 from repro.analysis.publish import AtomicPublishPass
 from repro.analysis.races import SharedStateRacePass
+from repro.analysis.retry import RetryDisciplinePass
 from repro.analysis.threads import ThreadLifecyclePass
 from repro.analysis.wire import WireSymmetryPass
 
-#: the suite, in bug-history order (PR 6, PR 8, PR 5, PR 5, PR 8, PR 6)
+#: the suite, in bug-history order (PR 6, PR 8, PR 5, PR 5, PR 8, PR 6,
+#: PR 10)
 ALL_PASSES = (
     ThreadLifecyclePass(),
     LivenessClockPass(),
@@ -37,6 +41,7 @@ ALL_PASSES = (
     SharedStateRacePass(),
     WireSymmetryPass(),
     ImportHygienePass(),
+    RetryDisciplinePass(),
 )
 
 __all__ = [
@@ -47,6 +52,7 @@ __all__ = [
     "Finding",
     "ImportHygienePass",
     "LivenessClockPass",
+    "RetryDisciplinePass",
     "SharedStateRacePass",
     "Source",
     "ThreadLifecyclePass",

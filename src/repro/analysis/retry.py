@@ -1,0 +1,94 @@
+"""retry-discipline: reconnect loops must be bounded by a RetryPolicy.
+
+PR 10's chaos drills exposed the failure shape: a worker whose peer (or
+coordinator) dies reconnects in a bare ``while True:`` loop and hangs the
+run forever — no backoff, no deadline, no structured failure for the
+supervisor to act on. The repo-wide rule since: **every reconnect loop
+iterates ``RetryPolicy.attempts(site)`` (repro.fault.retry)**, which
+sleeps with jittered exponential backoff and degrades to a loud
+``RetryExhausted`` (a structured failure summary) when the peer is really
+gone.
+
+The pass flags every ``while True:`` (or ``while 1:``) loop whose body
+calls a connect-ish API — a call whose final dotted segment is
+``connect``, ``create_connection``, ``connect_ex`` or ``accept`` — unless
+the loop body already shows retry discipline: it references a ``retry``
+identifier/attribute or iterates an ``.attempts(...)`` generator.
+
+Blind spots, documented: the check is per-loop and syntactic. A loop
+bounded by an outer deadline, or a connect call hidden behind a helper
+the loop calls, is invisible — annotate those with
+``# analysis: allow[retry-discipline] <why>``. Accept loops gated on a
+close flag (``while not self._closed:``) are not constant-true and are
+never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    AnalysisConfig, Finding, Pass, Source, call_name, enclosing_scope_map,
+)
+
+HINT = ("bound the loop with `for attempt in retry.attempts(site):` "
+        "(repro.fault.RetryPolicy) so a dead peer degrades to a loud "
+        "RetryExhausted instead of a hang; if the loop is bounded by an "
+        "outer deadline, annotate: # analysis: allow[retry-discipline] "
+        "<why>")
+
+#: final dotted segments that establish a (re)connection attempt
+CONNECTISH = ("connect", "create_connection", "connect_ex", "accept")
+
+
+def _const_true(test: ast.AST) -> bool:
+    return isinstance(test, ast.Constant) and bool(test.value)
+
+
+def _last_segment(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+class RetryDisciplinePass(Pass):
+    pass_id = "retry-discipline"
+
+    def run(self, sources: list[Source],
+            config: AnalysisConfig) -> list[Finding]:
+        findings = []
+        for src in sources:
+            scopes = enclosing_scope_map(src.tree)
+            for node in ast.walk(src.tree):
+                if not isinstance(node, ast.While) or \
+                        not _const_true(node.test):
+                    continue
+                connects: list[tuple[ast.Call, str]] = []
+                disciplined = False
+                for stmt in node.body:
+                    for sub in ast.walk(stmt):
+                        if isinstance(sub, ast.Name) and \
+                                "retry" in sub.id.lower():
+                            disciplined = True
+                        elif isinstance(sub, ast.Attribute) and \
+                                "retry" in sub.attr.lower():
+                            disciplined = True
+                        elif isinstance(sub, ast.Call):
+                            name = call_name(sub) or ""
+                            seg = _last_segment(name)
+                            if seg == "attempts":
+                                disciplined = True
+                            elif seg in CONNECTISH:
+                                connects.append((sub, seg))
+                if disciplined or not connects:
+                    continue
+                for call, seg in connects:
+                    findings.append(Finding(
+                        pass_id=self.pass_id, path=src.path,
+                        line=call.lineno,
+                        scope=scopes.get(call.lineno, "<module>"),
+                        detail=seg,
+                        message=f"bare `while True:` loop retries "
+                                f"{seg}() without a RetryPolicy — a dead "
+                                "peer hangs this loop forever",
+                        hint=HINT,
+                    ))
+        return findings

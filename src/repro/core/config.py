@@ -37,6 +37,125 @@ class ConfigError(ValueError):
     """A config field (or a combination of fields) is invalid."""
 
 
+#: documented ``launch_opts`` surface for ``launch="processes"``. One row per
+#: key: (default, doc). Timeouts/poll intervals are seconds. Everything here
+#: used to be a hard-coded constant in ``launch/net.py``; promoting the knobs
+#: lets chaos drills and slow CI machines tune them without editing source.
+LAUNCH_OPT_FIELDS = {
+    "transport": ("files", "message exchange: 'files' (shared-FS run files) "
+                  "or 'sockets' (PR 8 TCP transport)"),
+    "heartbeat_interval": (0.25, "worker heartbeat cadence"),
+    "heartbeat_timeout": (10.0, "heartbeat silence before a worker is "
+                          "presumed dead (> heartbeat_interval)"),
+    "handshake_timeout": (5.0, "socket timeout on HELLO/CHELLO handshakes "
+                          "(PeerServer accept + CoordServer serve)"),
+    "connect_timeout": (5.0, "per-attempt peer data-socket connect timeout"),
+    "send_timeout": (60.0, "blocking-send cap on established data sockets"),
+    "coord_connect_timeout": (10.0, "per-attempt worker -> coordinator "
+                              "connect timeout"),
+    "retry": (None, "RetryPolicy overrides for every reconnect/respawn path:"
+              " dict of max_attempts/base_delay/max_delay/deadline/jitter/"
+              "seed (see repro.fault.RetryPolicy)"),
+    "faults": (None, "deterministic chaos schedule: {'seed': int, 'events': "
+               "[...]} (see repro.fault.FaultSchedule); disarmed on respawn"),
+    "coord_restart_limit": (3, "max coordinator respawns before the launcher "
+                            "aborts the run (sockets transport)"),
+    "coord_kill": (None, "drill: SIGKILL the coordinator process mid-barrier "
+                   "at {'step': s[, 'after_arrivals': m]} (sockets "
+                   "transport; fires in incarnation 0 only)"),
+    "kill": (None, "drill: SIGKILL a worker whole-process at "
+             "{'shard': w, 'step': s} (files transport)"),
+    "kill_net": (None, "deprecated alias for a faults= net.send torn_kill "
+                 "event: {'shard': w, 'step': s, 'after_frames': k} "
+                 "(sockets transport)"),
+}
+
+
+def validate_launch_opts(opts: dict | None, launch: str = "processes") -> dict:
+    """Validate a ``launch_opts`` dict against the documented surface.
+
+    Returns a shallow copy. Unknown keys, wrong types, and incoherent
+    combinations raise :class:`ConfigError` *at job construction* — not ten
+    minutes into a multi-process launch. Sub-structures (``retry``,
+    ``faults``) are validated by constructing their ``repro.fault`` types.
+    """
+    opts = dict(opts or {})
+    if not opts:
+        return opts
+    if launch != "processes":
+        raise ConfigError(
+            f"launch_opts apply to launch='processes' (got launch={launch!r})"
+        )
+    unknown = set(opts) - set(LAUNCH_OPT_FIELDS)
+    if unknown:
+        raise ConfigError(
+            f"unknown launch_opts keys {sorted(unknown)}; known: "
+            f"{sorted(LAUNCH_OPT_FIELDS)}"
+        )
+    transport = opts.get("transport", "files")
+    if transport not in ("files", "sockets"):
+        raise ConfigError(
+            f"launch_opts['transport'] must be 'files' or 'sockets', "
+            f"got {transport!r}"
+        )
+    for key in ("heartbeat_interval", "heartbeat_timeout", "handshake_timeout",
+                "connect_timeout", "send_timeout", "coord_connect_timeout"):
+        if key in opts:
+            try:
+                val = float(opts[key])
+            except (TypeError, ValueError):
+                raise ConfigError(
+                    f"launch_opts[{key!r}] must be seconds (a number), "
+                    f"got {opts[key]!r}"
+                ) from None
+            if val <= 0:
+                raise ConfigError(f"launch_opts[{key!r}] must be > 0 seconds")
+            opts[key] = val
+    hb_i = opts.get("heartbeat_interval", LAUNCH_OPT_FIELDS["heartbeat_interval"][0])
+    hb_t = opts.get("heartbeat_timeout", LAUNCH_OPT_FIELDS["heartbeat_timeout"][0])
+    if hb_t <= hb_i:
+        raise ConfigError(
+            f"launch_opts['heartbeat_timeout'] ({hb_t}) must exceed "
+            f"heartbeat_interval ({hb_i}) or every worker looks dead"
+        )
+    if "coord_restart_limit" in opts:
+        if not isinstance(opts["coord_restart_limit"], int) or \
+                opts["coord_restart_limit"] < 0:
+            raise ConfigError(
+                "launch_opts['coord_restart_limit'] must be an int >= 0"
+            )
+    if opts.get("retry") is not None:
+        from repro.fault import RetryPolicy
+
+        try:
+            RetryPolicy.from_opts(opts["retry"])
+        except (TypeError, ValueError) as e:
+            raise ConfigError(f"launch_opts['retry']: {e}") from None
+    if opts.get("faults") is not None:
+        from repro.fault import FaultSchedule
+
+        try:
+            FaultSchedule.from_opts(opts["faults"])
+        except (TypeError, ValueError) as e:
+            raise ConfigError(f"launch_opts['faults']: {e}") from None
+    for drill, need in (("kill", "files"), ("kill_net", "sockets"),
+                        ("coord_kill", "sockets")):
+        if opts.get(drill) is not None and transport != need:
+            raise ConfigError(
+                f"launch_opts[{drill!r}] is a {need}-transport drill "
+                f"(transport={transport!r})"
+            )
+    if opts.get("coord_kill") is not None:
+        ck = opts["coord_kill"]
+        if not isinstance(ck, dict) or "step" not in ck or \
+                set(ck) - {"step", "after_arrivals"}:
+            raise ConfigError(
+                "launch_opts['coord_kill'] must be "
+                "{'step': s[, 'after_arrivals': m]}"
+            )
+    return opts
+
+
 @dataclass
 class StreamConfig:
     """Out-of-core edge tier: the prefetching reader's staging pool.

@@ -36,11 +36,15 @@ import time
 
 class WorkerFailed(RuntimeError):
     """A worker process died (or went heartbeat-silent) and the run could
-    not recover it."""
+    not recover it. ``record`` carries the worker's structured failure
+    record (``repro.fault.failure_record``) when it classified itself —
+    e.g. which storage tier faulted — before exiting; ``shard`` is -1 when
+    the coordinator process itself is the casualty."""
 
-    def __init__(self, shard: int, message: str):
+    def __init__(self, shard: int, message: str, record: dict | None = None):
         super().__init__(message)
         self.shard = shard
+        self.record = record
 
 
 class RunAborted(RuntimeError):

@@ -43,7 +43,7 @@ from repro.core.checkpoint import (
     Checkpointer, MessageLog, RunFileMessageLog, recover_shard,
     recover_shard_streamed,
 )
-from repro.core.config import RecoveryConfig
+from repro.core.config import RecoveryConfig, validate_launch_opts
 from repro.core.engine import GraphDEngine, SuperstepRecord
 from repro.core.plan import (
     ExecutionPlan, GraphMeta, MemoryBudget, plan as make_plan, ram_total,
@@ -142,9 +142,11 @@ class GraphDJob:
         self.graph = graph
         self.launch = launch
         # launch_opts tunes the deployment, not the plan: the message
-        # transport ("files" | "sockets") and the coordinator's liveness
-        # clock (heartbeat_interval / _timeout)
-        self.launch_opts = dict(launch_opts or {})
+        # transport ("files" | "sockets"), net timeouts, the coordinator's
+        # liveness clock, retry budgets and chaos schedules — the documented
+        # surface of config.LAUNCH_OPT_FIELDS, validated here (and merged
+        # over any opts the plan itself pinned, job args winning)
+        self.launch_opts = validate_launch_opts(launch_opts, launch)
         # expert plans are materialized verbatim; only budget-derived plans
         # get their knobs re-derived against the realized geometry
         self._auto_planned = plan is None
@@ -170,6 +172,9 @@ class GraphDJob:
                 plan.config, channel=dataclasses.replace(
                     plan.config.channel, compress_payload="lossless"),
             ))
+        if plan.launch_opts:
+            # plan-pinned deployment knobs are defaults; job args override
+            self.launch_opts = {**plan.launch_opts, **self.launch_opts}
         if checkpoint_every is not None:
             # message logging (=> single-shard fast recovery) needs either a
             # combined A_s log or the streamed OMS run files; a combiner-less
@@ -455,15 +460,26 @@ class GraphDJob:
                                       ignore_errors=True)
         procs_dir = self._dir("procs", getattr(self, "_tag", ""))
         if os.path.isdir(procs_dir):
-            shutil.rmtree(os.path.join(procs_dir, "outbox"),
-                          ignore_errors=True)
-            shutil.rmtree(os.path.join(procs_dir, "announce"),
-                          ignore_errors=True)
+            # live control plane of the finished launch: exchange dirs, the
+            # coordinator WAL, its address record, and recover/abort
+            # requests. Post-mortem artifacts survive until the NEXT run's
+            # pre-spawn sweep: failure-summary.json, failures/, coord.log,
+            # and quarantined (.quarantine) stores stay readable after a
+            # failed run returns.
+            for sub in ("outbox", "announce", "coord-wal"):
+                shutil.rmtree(os.path.join(procs_dir, sub),
+                              ignore_errors=True)
             for name in os.listdir(procs_dir):
                 if name.startswith("shard-"):
                     for sub in ("inbox", "outbox"):
                         shutil.rmtree(os.path.join(procs_dir, name, sub),
                                       ignore_errors=True)
+                elif (name.startswith("recover-")
+                      or name in ("coord-addr.json", "abort-request.json")):
+                    try:
+                        os.unlink(os.path.join(procs_dir, name))
+                    except OSError:
+                        pass
 
     def close(self, delete: bool | None = None) -> None:
         """Release the workdir. ``delete`` defaults to True only when the

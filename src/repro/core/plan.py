@@ -56,7 +56,7 @@ import numpy as np
 
 from repro.core.config import (
     ChannelConfig, EngineConfig, MessageSpillConfig, RecoveryConfig,
-    StreamConfig,
+    StreamConfig, validate_launch_opts,
 )
 from repro.streams.channel import ShardChannels
 from repro.streams.msgstore import MessageRunStore
@@ -386,6 +386,12 @@ class ExecutionPlan:
     #: process per shard over the shared-filesystem transport); with
     #: "processes" the per-shard model IS the per-process RAM/NIC budget
     launch: str = "threads"
+    #: deployment knobs for launch="processes" (transport, timeouts, retry
+    #: budget, chaos schedule — the surface documented by
+    #: config.LAUNCH_OPT_FIELDS), validated at plan time so a serialized
+    #: plan fully describes a runnable deployment; GraphDJob merges its own
+    #: launch_opts over these
+    launch_opts: dict = field(default_factory=dict)
 
     @property
     def mode(self) -> str:
@@ -456,6 +462,7 @@ class ExecutionPlan:
             net_total=self.net_total,
             alternatives=[c.to_json() for c in self.alternatives],
             launch=self.launch,
+            launch_opts=self.launch_opts,
         ))
 
     @classmethod
@@ -474,6 +481,7 @@ class ExecutionPlan:
             net_total=d["net_total"],
             alternatives=[Candidate(**c) for c in d["alternatives"]],
             launch=d.get("launch", "threads"),
+            launch_opts=d.get("launch_opts", {}),
         )
 
 
@@ -502,6 +510,7 @@ def plan(
     skew: float = 1.5,
     recovery: RecoveryConfig | None = None,
     launch: str = "threads",
+    launch_opts: dict | None = None,
     link_bytes_per_s: float | None = None,
 ) -> ExecutionPlan:
     """Choose an execution mode and derive every knob from the budget.
@@ -518,11 +527,15 @@ def plan(
     (each worker maps only its owner view) and the full-duplex pipelined
     channel (the shared-filesystem transport speaks the inbox-run-file
     format) — and frames the model as per-process RAM / per-NIC bytes.
+    ``launch_opts`` pins deployment knobs (transport, net timeouts, retry
+    budget — the surface of ``config.LAUNCH_OPT_FIELDS``) into the plan,
+    validated here so a serialized plan is a runnable deployment spec.
     """
     if launch not in ("threads", "processes"):
         raise ValueError(
             f"launch must be 'threads' or 'processes', got {launch!r}"
         )
+    launch_opts = validate_launch_opts(launch_opts, launch)
     meta = GraphMeta.of(graph_meta)
     budget = (budget or MemoryBudget()).validate()
     n = budget.n_shards
@@ -785,5 +798,5 @@ def plan(
         edge_block=edge_block, vertex_pad=vertex_pad,
         model=winner.model, ram_total=winner.ram_total,
         disk_total=winner.disk_total, net_total=winner.net_total,
-        alternatives=candidates, launch=launch,
+        alternatives=candidates, launch=launch, launch_opts=launch_opts,
     )

@@ -33,6 +33,18 @@ source 0 first while w's own sends proceed on the background transmit
 thread, so source 0's transmissions always complete; induction on the
 source index does the rest. TCP backpressure (bounded kernel buffers)
 bounds the memory of not-yet-read sources.
+
+Fault tolerance: every reconnect path (peer connect, coordinator
+reconnect) runs under one :class:`repro.fault.RetryPolicy` — bounded
+attempts, exponential backoff with deterministic jitter, an overall
+deadline — degrading to a loud :class:`repro.fault.RetryExhausted` with a
+structured summary instead of hanging forever or dying on first error.
+The chaos layer's :class:`repro.fault.FaultInjector` hooks the three
+transport sites (``net.send`` in the data-plane sender, ``net.recv`` in
+the data-plane reader, ``coord.send`` in the coordinator client), and the
+:class:`CoordServer` write-ahead-logs barrier commits, peer addresses and
+aborts under ``wal_dir`` so a respawned coordinator process resumes the
+run exactly where the dead one left it.
 """
 
 from __future__ import annotations
@@ -41,7 +53,6 @@ import json
 import os
 import queue
 import select
-import signal
 import socket
 import struct
 import threading
@@ -50,13 +61,22 @@ import zlib
 
 import numpy as np
 
-from repro.core.coordinator import FileCoordinator, RunAborted
+import repro.fault as _fault
+from repro.core.coordinator import FileCoordinator, RunAborted, atomic_write_json
+from repro.fault import RetryExhausted, RetryPolicy
 from repro.streams.codec import (
     decode_payload,
     decode_varint_delta,
     encode_payload,
     encode_varint_delta,
 )
+
+# Default tunables; each is a documented ``launch_opts`` knob (validated in
+# core/config.py) threaded through the worker spec to the constructors below.
+HANDSHAKE_TIMEOUT = 5.0  # bound on HELLO/CHELLO frames from a fresh accept
+CONNECT_TIMEOUT = 5.0  # per-attempt TCP connect bound, data plane
+SEND_TIMEOUT = 60.0  # data-plane sendall bound (a wedged receiver)
+COORD_CONNECT_TIMEOUT = 10.0  # per-attempt TCP connect bound, coord plane
 
 # -- framing -------------------------------------------------------------------
 
@@ -210,8 +230,10 @@ class PeerServer:
     """
 
     def __init__(self, n_shards: int, start_step: int,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", *,
+                 handshake_timeout: float = HANDSHAKE_TIMEOUT):
         self.n = int(n_shards)
+        self.handshake_timeout = float(handshake_timeout)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, 0))
@@ -240,7 +262,7 @@ class PeerServer:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
                 # a wedged peer must not pin the accept loop past close():
                 # bound the handshake, then restore blocking for data frames
-                conn.settimeout(5.0)
+                conn.settimeout(self.handshake_timeout)
                 kind, payload = recv_frame(conn)
                 if kind != K_HELLO:
                     raise FrameError(f"expected HELLO, got kind={kind}")
@@ -288,6 +310,9 @@ class PeerServer:
                 if not ready:
                     check_abort()
                     continue
+                inj = _fault.active()
+                if inj is not None:  # chaos: drop/reset/delay this receive
+                    inj.net_recv(conn, step=step, src=src)
                 kind, payload = recv_frame(conn)
             except (ConnectionError, OSError):
                 self._drop(src, conn)
@@ -364,12 +389,11 @@ class PeerSender:
     and the framed wire bytes are read back from it, so what is replayable
     is exactly what was sent. ``inflight`` bounds the queue the way the
     channel's sender does: the compute thread blocks (stall-accounted)
-    when the network falls behind.
+    when the network falls behind. Reconnects run under ``retry`` (a
+    :class:`RetryPolicy`): exhausting the budget surfaces a
+    :class:`RetryExhausted` through :meth:`check_failed` instead of
+    waiting on an unreachable peer forever.
     """
-
-    RECONNECT_POLL = 0.1
-    RECONNECT_POLL_MAX = 1.0
-    SEND_TIMEOUT = 60.0
 
     # GIL-atomic by review: _exc is write-once (transmit thread) and only
     # read after it is set; _stats scalars are monotonic stall/byte
@@ -378,20 +402,26 @@ class PeerSender:
 
     def __init__(self, me: int, n_shards: int, make_store, *,
                  inflight: int = 4, stats=None, check_abort=None,
-                 kill_net: dict | None = None):
+                 connect_timeout: float = CONNECT_TIMEOUT,
+                 send_timeout: float = SEND_TIMEOUT,
+                 retry: RetryPolicy | None = None):
         self.me = int(me)
         self.n = int(n_shards)
         self._make_store = make_store  # step -> fresh MessageRunStore
         self._stats = stats
         self._check_abort = check_abort or (lambda: None)
-        self._kill = kill_net
-        self._kill_frames = 0
+        self.connect_timeout = float(connect_timeout)
+        self.send_timeout = float(send_timeout)
+        self._retry = retry if retry is not None else RetryPolicy()
         self._addrs: list[tuple | None] = [None] * self.n
         self._conns: list[socket.socket | None] = [None] * self.n
         self._q: queue.Queue = queue.Queue()
         self._slots = threading.BoundedSemaphore(max(1, int(inflight)))
         self._sent = [0] * self.n  # runs appended (== next seq) per dest
         self._end_sent = [False] * self.n
+        # per-dest consecutive send-failure episode: (episode t0, count).
+        # Transmit-thread confined.
+        self._send_fail: dict[int, tuple[float, int]] = {}
         self._step: int | None = None
         self._store = None
         self._stores: dict[int, object] = {}  # kept until the step commits
@@ -502,7 +532,6 @@ class PeerSender:
             self._stores[step] = self._store
             self._sent = [0] * self.n
             self._end_sent = [False] * self.n
-            self._kill_frames = 0
             ev.set()
             return False
         if kind == "comb":
@@ -579,12 +608,18 @@ class PeerSender:
                              dp=parts[0], msg=parts[1], cnt=cnt,
                              compress=self._store.compress,
                              scheme=self._store.payload_scheme)
-        self._maybe_kill(conn, payload)
         try:
+            inj = _fault.active()
+            if inj is not None:  # chaos: torn_kill/drop/reset/delay this frame
+                hdr = _HEADER.pack(MAGIC, K_RUN, len(payload),
+                                   zlib.crc32(payload))
+                inj.net_send(conn, hdr, payload, step=self._step, dest=dest)
             wire = send_frame(conn, K_RUN, payload)
-        except OSError:
+        except OSError as e:
             self._kill_conn(dest, conn)
+            self._note_send_failure(dest, e)
             return
+        self._send_fail.pop(dest, None)
         if self._stats is not None:
             self._stats.wire_bytes += wire
             self._stats.packets += 1
@@ -592,26 +627,35 @@ class PeerSender:
                 p.nbytes for p in parts if p is not None)
 
     def _send_end(self, dest: int, resend: bool = False) -> None:
-        conn = self._conns[dest]
-        if conn is None and not resend:
-            # END must land: a receiver blocked on this source would hang
-            self._ensure_conn(dest)
+        while True:
             conn = self._conns[dest]
-        if conn is None:
-            return
-        try:
-            wire = _send_json(conn, K_END,
-                              dict(step=self._step, n_runs=self._sent[dest]))
-            if self._stats is not None and not resend:
-                self._stats.wire_bytes += wire
-                self._stats.packets += 1
-        except OSError:
-            self._kill_conn(dest, conn)
-            if not resend:
+            if conn is None and not resend:
+                # END must land: a receiver blocked on this source would hang
                 self._ensure_conn(dest)
-                self._send_end(dest)
+                conn = self._conns[dest]
+                if conn is None:
+                    # the handshake replay itself failed (and noted the
+                    # failure): giving up here would let the step "finish"
+                    # with runs undelivered and the receiver parked forever
+                    continue
+            if conn is None:
                 return
-        self._end_sent[dest] = True
+            try:
+                wire = _send_json(
+                    conn, K_END,
+                    dict(step=self._step, n_runs=self._sent[dest]))
+                if self._stats is not None and not resend:
+                    self._stats.wire_bytes += wire
+                    self._stats.packets += 1
+            except OSError as e:
+                self._kill_conn(dest, conn)
+                self._note_send_failure(dest, e)
+                if not resend:
+                    continue  # reconnect (budget-bounded) and retry END
+            else:
+                self._send_fail.pop(dest, None)
+            self._end_sent[dest] = True
+            return
 
     def _kill_conn(self, dest: int, conn: socket.socket) -> None:
         if self._conns[dest] is conn:
@@ -621,41 +665,87 @@ class PeerSender:
         except OSError:
             pass
 
+    def _note_send_failure(self, dest: int, err: OSError) -> None:
+        """Bound the send-failure EPISODE. A peer that keeps accepting
+        connections but never takes a frame would otherwise livelock the
+        reconnect->replay->fail cycle forever: every successful connect
+        resets ``_ensure_conn``'s retry episode, so the connect-path
+        budget never accumulates. Sends to a dest that have failed
+        consecutively past the same policy's attempt/deadline budget
+        surface the same loud :class:`RetryExhausted`; any delivered
+        frame resets the episode."""
+        site = f"peer-send:{self.me}->{dest}"
+        t0, n = self._send_fail.get(dest, (time.monotonic(), 0))
+        n += 1
+        self._send_fail[dest] = (t0, n)
+        elapsed = time.monotonic() - t0
+        if (self._retry.max_attempts and n >= self._retry.max_attempts) \
+                or elapsed > self._retry.deadline:
+            raise RetryExhausted(site, self._retry, err,
+                                 attempts=n, elapsed=elapsed)
+        # back off before the caller's next attempt — sliced so close()
+        # never waits behind a long sleep
+        remaining = self._retry.delay_for(site, n)
+        while remaining > 0 and not self._closed:
+            step = min(remaining, 0.25)
+            time.sleep(step)
+            remaining -= step
+
     def _ensure_conn(self, dest: int) -> None:
-        """Connect + HELLO/RESUME handshake + backlog replay. Retries with
-        backoff until the destination is reachable (a respawning worker) or
-        the run aborts — the outbox store makes the wait safe."""
+        """Connect + HELLO/RESUME handshake + backlog replay. Retries under
+        the :class:`RetryPolicy` while the destination is unreachable (a
+        respawning worker) — the outbox store makes the wait safe — and
+        raises :class:`RetryExhausted` when the budget runs out, so an
+        unreachable peer becomes a loud structured failure, not a hang."""
         if self._conns[dest] is not None:
             return
-        delay = self.RECONNECT_POLL
-        while True:
+        site = f"peer-connect:{self.me}->{dest}"
+        stopped = False
+        last: BaseException | None = None
+        attempts = 0
+        t0 = time.monotonic()
+
+        def _stop() -> bool:
+            nonlocal stopped
+            if self._closed:
+                stopped = True
+                return True
+            self._check_abort()  # RunAborted propagates through the generator
+            return False
+
+        for attempt in self._retry.attempts(site, should_stop=_stop):
+            attempts = attempt
             if self._closed:
                 raise _Stop()
             self._check_abort()
             addr = self._addrs[dest]
             try:
-                conn = socket.create_connection(addr, timeout=5.0)
-            except OSError:
-                time.sleep(delay)
-                delay = min(delay * 2, self.RECONNECT_POLL_MAX)
+                conn = socket.create_connection(addr,
+                                                timeout=self.connect_timeout)
+            except OSError as e:
+                last = e
                 continue
             try:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                conn.settimeout(self.SEND_TIMEOUT)
+                conn.settimeout(self.send_timeout)
                 _send_json(conn, K_HELLO, dict(src=self.me, step=self._step))
                 kind, payload = recv_frame(conn)
                 if kind != K_RESUME:
                     raise FrameError(f"expected RESUME, got kind={kind}")
                 reply = json.loads(payload)
-            except (ConnectionError, OSError, ValueError):
+            except (ConnectionError, OSError, ValueError) as e:
+                last = e
                 try:
                     conn.close()
                 except OSError:
                     pass
-                time.sleep(delay)
-                delay = min(delay * 2, self.RECONNECT_POLL_MAX)
                 continue
             break
+        else:
+            if stopped or self._closed:
+                raise _Stop()
+            raise RetryExhausted(site, self._retry, last, attempts=attempts,
+                                 elapsed=time.monotonic() - t0)
         self._conns[dest] = conn
         if reply["step"] == self._step:
             have = int(reply["have"])
@@ -671,38 +761,40 @@ class PeerSender:
                                   start=have):
             self._send_run(dest, seq, seg)
 
-    def _maybe_kill(self, conn: socket.socket, payload: bytes) -> None:
-        """Fault-injection hook (tests only): after ``after_frames`` RUN
-        frames of the target step, write the header plus HALF the payload
-        and die by SIGKILL — a frame torn mid-transmission."""
-        k = self._kill
-        if k is None or int(k.get("step", -1)) != self._step:
-            return
-        self._kill_frames += 1
-        if self._kill_frames <= int(k.get("after_frames", 0)):
-            return
-        hdr = _HEADER.pack(MAGIC, K_RUN, len(payload), zlib.crc32(payload))
-        try:
-            conn.sendall(hdr + payload[:max(1, len(payload) // 2)])
-        except OSError:
-            pass
-        os.kill(os.getpid(), signal.SIGKILL)
-
 
 # -- coordinator plane ---------------------------------------------------------
 
 class CoordServer:
-    """The launcher's side of the coordinator plane: one listener, one
+    """The coordinator's side of the coordinator plane: one listener, one
     persistent connection per worker, the FileCoordinator surface
     (wait_arrivals / reduce_arrivals / publish_commit / abort / stale)
     backed by in-memory state fed by per-connection reader threads —
     commits and aborts are PUSHED to workers, so their barrier waits are
-    event-driven instead of polled files."""
+    event-driven instead of polled files.
+
+    With ``wal_dir`` set, barrier commits, the peer address table, and any
+    abort are write-ahead-logged (the tmp→fsync→replace idiom) BEFORE they
+    take effect in memory, and a fresh server restores all three at
+    construction — so a SIGKILLed coordinator process can be respawned and
+    the run resumes from the last committed superstep instead of dying
+    with it. A restarted server also grants every not-yet-reconnected
+    worker a boot grace period: ``stale()`` only condemns a never-seen
+    shard once ``heartbeat_timeout + boot_grace`` has elapsed since this
+    server booted, so live workers mid-reconnect are not false-killed.
+    """
 
     def __init__(self, n_shards: int, *, heartbeat_timeout: float = 10.0,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1",
+                 handshake_timeout: float = HANDSHAKE_TIMEOUT,
+                 wal_dir: str | None = None,
+                 boot_grace: float | None = None):
         self.n = int(n_shards)
         self.heartbeat_timeout = float(heartbeat_timeout)
+        self.handshake_timeout = float(handshake_timeout)
+        self.boot_grace = (float(boot_grace) if boot_grace is not None
+                           else self.heartbeat_timeout)
+        self.wal_dir = wal_dir
+        self._boot = time.monotonic()
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, 0))
@@ -714,12 +806,47 @@ class CoordServer:
         self._addrs: dict[int, tuple] = {}  # shard -> data-plane addr
         self._seen: set[int] = set()
         self._beats: dict[int, tuple] = {}  # shard -> (seq, monotonic recv)
+        self._grace: dict[int, float] = {}  # shard -> monotonic stale waiver
         self._arrivals: dict[int, dict[int, dict]] = {}
         self._commits: dict[int, dict] = {}
         self._last_commit: dict | None = None
         self._abort: str | None = None
         self._closed = False
         self._threads: list[threading.Thread] = []  # accept + serve threads
+        if wal_dir:
+            os.makedirs(wal_dir, exist_ok=True)
+            self._restore_wal()
+
+    def _restore_wal(self) -> None:
+        """Reload commits, peer addresses and any abort a predecessor
+        coordinator logged. Every WAL record was published atomically, so
+        a file either parses or does not exist — but a half-written
+        leftover from a dead tmp is still skipped defensively."""
+        for name in sorted(os.listdir(self.wal_dir)):
+            if not (name.startswith("commit-") and name.endswith(".json")):
+                continue
+            try:
+                with open(os.path.join(self.wal_dir, name)) as f:
+                    rec = json.load(f)
+                self._commits[int(rec["step"])] = rec
+                self._last_commit = rec
+            except (OSError, ValueError, KeyError):
+                continue
+        try:
+            with open(os.path.join(self.wal_dir, "addrs.json")) as f:
+                addrs = json.load(f)
+            self._addrs = {int(w): tuple(a) for w, a in addrs.items()}
+            # every restored shard counts as seen: its re-CHELLO is a
+            # respawn, so peers get a PEER_UPDATE even if its data-plane
+            # address survived the coordinator outage unchanged
+            self._seen = set(self._addrs)
+        except (OSError, ValueError):
+            pass
+        try:
+            with open(os.path.join(self.wal_dir, "abort.json")) as f:
+                self._abort = str(json.load(f)["reason"])
+        except (OSError, ValueError, KeyError):
+            pass
 
     def start(self) -> None:
         t = threading.Thread(target=self._accept_loop, name="coord-accept",
@@ -750,7 +877,7 @@ class CoordServer:
             # pre-CHELLO the conn is untracked, so close() cannot unblock
             # this recv — bound it instead, then restore blocking once the
             # conn is registered in _conns (close() closes those)
-            conn.settimeout(5.0)
+            conn.settimeout(self.handshake_timeout)
             kind, payload = recv_frame(conn)
             conn.settimeout(None)
             if kind != K_CHELLO:
@@ -765,6 +892,11 @@ class CoordServer:
                 old = self._conns.get(shard)
                 self._conns[shard] = conn
                 self._cv.notify_all()
+                if self.wal_dir:
+                    snap = {str(w): list(a) for w, a in self._addrs.items()}
+            if self.wal_dir:
+                atomic_write_json(os.path.join(self.wal_dir, "addrs.json"),
+                                  snap)
             if old is not None:
                 _force_close(old)
             if respawn:
@@ -841,9 +973,19 @@ class CoordServer:
     reduce_arrivals = staticmethod(FileCoordinator.reduce_arrivals)
 
     def publish_commit(self, step: int, totals: dict, *, halt: bool,
-                       ckpt_landed: bool) -> dict:
+                       ckpt_landed: bool, extra: dict | None = None) -> dict:
+        """Log the commit record (WAL first — a successor coordinator must
+        never un-commit a barrier workers already advanced past), then
+        publish it in memory and push it to every worker. ``extra`` rides
+        extra launcher state (e.g. per-step seconds) into the record."""
         rec = dict(step=int(step), halt=bool(halt),
                    ckpt_landed=bool(ckpt_landed), **totals)
+        if extra:
+            rec.update(extra)
+        if self.wal_dir:
+            atomic_write_json(
+                os.path.join(self.wal_dir, f"commit-{int(step):06d}.json"),
+                rec)
         with self._cv:
             self._commits[int(step)] = rec
             self._last_commit = rec
@@ -854,7 +996,16 @@ class CoordServer:
         with self._cv:
             return self._commits.get(int(step))
 
+    def last_commit_step(self) -> int:
+        """The newest committed superstep (WAL-restored ones included), or
+        -1 before any barrier has committed."""
+        with self._cv:
+            return int(self._last_commit["step"]) if self._last_commit else -1
+
     def abort(self, reason: str) -> None:
+        if self.wal_dir:
+            atomic_write_json(os.path.join(self.wal_dir, "abort.json"),
+                              dict(reason=str(reason)))
         with self._cv:
             self._abort = str(reason)
             self._cv.notify_all()
@@ -874,8 +1025,30 @@ class CoordServer:
             return float("inf")
         return time.monotonic() - beat[1]
 
+    def grant_grace(self, shard: int, seconds: float) -> None:
+        """Waive staleness for ``shard`` until ``seconds`` from now — the
+        liveness loop grants this to a worker it just respawned (or that
+        must reconnect after a coordinator restart) so import/recovery
+        time is not judged as heartbeat silence."""
+        until = time.monotonic() + float(seconds)
+        with self._cv:
+            self._grace[int(shard)] = max(self._grace.get(int(shard), 0.0),
+                                          until)
+
     def stale(self, shard: int) -> bool:
-        return self.heartbeat_age(shard) > self.heartbeat_timeout
+        now = time.monotonic()
+        with self._cv:
+            beat = self._beats.get(int(shard))
+            grace_until = self._grace.get(int(shard), 0.0)
+        if now < grace_until:
+            return False
+        if beat is None:
+            # never heard from since THIS server booted: after a
+            # coordinator restart every live worker looks beat-less until
+            # its reconnect lands, so a fresh server grants the full
+            # timeout plus boot_grace from boot before condemning anyone
+            return now - self._boot > self.heartbeat_timeout + self.boot_grace
+        return now - beat[1] > self.heartbeat_timeout
 
     def gc_steps(self, before: int) -> None:
         with self._cv:
@@ -913,15 +1086,33 @@ class CoordClient:
     import, exactly like the file heartbeat, so liveness covers import
     time), one socket, a reader thread that turns pushed COMMIT/ABORT/
     PEER_UPDATE frames into event-driven barrier wakeups, and a heartbeat
-    thread whose sequence numbers feed the launcher's staleness judgement."""
+    thread whose sequence numbers feed the coordinator's staleness
+    judgement.
 
-    def __init__(self, addr, shard: int, *,
-                 heartbeat_interval: float = 0.25):
+    Reconnect-with-resume: a lost coordinator connection is no longer a
+    poison pill. The reader re-resolves the coordinator address (from
+    ``addr_file`` when given — a respawned coordinator publishes a new
+    port there), reconnects under ``retry``, re-sends CHELLO, and replays
+    the one arrival that may be stranded un-committed; the coordinator's
+    K_PEERS reply carries its WAL-restored ``last_commit`` so a commit
+    broadcast lost in the outage is recovered too. Only an exhausted retry
+    budget aborts the worker — with a structured summary in ``failure``.
+    """
+
+    def __init__(self, addr=None, shard: int = 0, *,
+                 heartbeat_interval: float = 0.25,
+                 addr_file: str | None = None,
+                 connect_timeout: float = COORD_CONNECT_TIMEOUT,
+                 retry: RetryPolicy | None = None):
+        if addr is None and addr_file is None:
+            raise ValueError("CoordClient needs addr or addr_file")
         self.shard = int(shard)
         self.heartbeat_interval = float(heartbeat_interval)
-        self._sock = socket.create_connection(tuple(addr), timeout=30.0)
-        self._sock.settimeout(None)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.connect_timeout = float(connect_timeout)
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._addr = tuple(addr) if addr is not None else None
+        self._addr_file = addr_file
+        self.failure: dict | None = None  # RetryExhausted summary, if any
         self._wlock = threading.Lock()
         self._cv = threading.Condition()
         self._commits: dict[int, dict] = {}
@@ -930,12 +1121,50 @@ class CoordClient:
         self._closed = False
         self._stop = threading.Event()
         self._hello = threading.Event()  # beats must not precede CHELLO
+        self._data_addr: list | None = None  # remembered for re-CHELLO
+        self._pending_arrival: dict | None = None  # un-committed, replayable
         self.on_peer_update = None  # set by the worker once the sender exists
         self._threads: list[threading.Thread] = []
+        self._sock = self._connect(f"coord-connect:{self.shard}")
+
+    def _resolve_addr(self) -> tuple:
+        """The coordinator's current address: re-read from ``addr_file``
+        each attempt (a respawned coordinator listens on a new port), else
+        the static address given at construction."""
+        if self._addr_file is not None:
+            with open(self._addr_file) as f:
+                rec = json.load(f)
+            return tuple(rec["addr"])
+        return self._addr
+
+    def _connect(self, site: str) -> socket.socket:
+        last: BaseException | None = None
+        attempts = 0
+        t0 = time.monotonic()
+        for attempt in self.retry.attempts(site,
+                                           should_stop=self._stop.is_set):
+            attempts = attempt
+            try:
+                sock = socket.create_connection(self._resolve_addr(),
+                                                timeout=self.connect_timeout)
+            except (OSError, ValueError, KeyError) as e:
+                last = e  # incl. a missing/NOT-yet-republished addr_file
+                continue
+            sock.settimeout(None)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return sock
+        raise RetryExhausted(site, self.retry, last, attempts=attempts,
+                             elapsed=time.monotonic() - t0)
 
     def _send(self, kind: int, obj) -> None:
+        payload = json.dumps(obj).encode()
         with self._wlock:
-            _send_json(self._sock, kind, obj)
+            inj = _fault.active()
+            if inj is not None:  # chaos: drop/reset/delay the coord plane
+                hdr = _HEADER.pack(MAGIC, kind, len(payload),
+                                   zlib.crc32(payload))
+                inj.net_send(self._sock, hdr, payload, site="coord.send")
+            send_frame(self._sock, kind, payload)
 
     def start(self) -> None:
         self._threads = [
@@ -950,51 +1179,104 @@ class CoordClient:
     def register(self, data_addr) -> list[tuple]:
         """CHELLO with our data-plane address; blocks for PEERS (all n
         registered). Returns the peer address table; any commit the run
-        already published is seeded into the local commit cache so a
-        respawned worker sees its recovery baseline immediately."""
-        self._send(K_CHELLO, dict(shard=self.shard, addr=list(data_addr)))
+        already published is seeded into the local commit cache (by the
+        reader's K_PEERS handler) so a respawned worker sees its recovery
+        baseline immediately."""
+        self._data_addr = list(data_addr)
+        try:
+            self._send(K_CHELLO, dict(shard=self.shard,
+                                      addr=self._data_addr))
+        except OSError:
+            pass  # the reader's reconnect replays the CHELLO
         self._hello.set()  # heartbeats may flow now that CHELLO framed first
         with self._cv:
             while self._peers is None and self._abort is None:
                 self._cv.wait(0.2)
             self.check_abort()
             peers = self._peers
-        last = peers.get("last_commit")
-        if last is not None:
-            with self._cv:
-                self._commits[int(last["step"])] = last
         return [tuple(a) for a in peers["addrs"]]
 
-    def _reader(self) -> None:
+    def _reconnect(self) -> bool:
+        """Swap in a fresh coordinator connection and resume: re-CHELLO
+        (the K_PEERS reply then triggers the pending-arrival replay).
+        Returns False — with the abort flagged and a structured summary in
+        ``failure`` — only when the retry budget is exhausted."""
+        site = f"coord-reconnect:{self.shard}"
         try:
-            while True:
-                kind, payload = recv_frame(self._sock)
-                msg = json.loads(payload)
-                if kind == K_COMMIT:
-                    with self._cv:
-                        self._commits[int(msg["step"])] = msg
-                        self._cv.notify_all()
-                elif kind == K_PEERS:
-                    with self._cv:
-                        if msg.get("abort"):
-                            self._abort = msg["abort"]
-                        self._peers = msg
-                        self._cv.notify_all()
-                elif kind == K_PEER_UPDATE:
-                    cb = self.on_peer_update
-                    if cb is not None:
-                        cb(int(msg["shard"]), tuple(msg["addr"]))
-                elif kind == K_ABORT:
-                    with self._cv:
-                        self._abort = msg["reason"]
-                        self._cv.notify_all()
-        except (ConnectionError, OSError, ValueError):
+            sock = self._connect(site)
+        except RetryExhausted as e:
             with self._cv:
                 if not self._closed:
-                    # a vanished coordinator is a poison pill: no barrier
-                    # will ever open again
-                    self._abort = self._abort or "coordinator connection lost"
+                    self._abort = self._abort or str(e)
+                    self.failure = e.summary()
                 self._cv.notify_all()
+            return False
+        with self._wlock:
+            old, self._sock = self._sock, sock
+        if old is not None:
+            _force_close(old)
+        if self._data_addr is not None:
+            try:
+                self._send(K_CHELLO, dict(shard=self.shard,
+                                          addr=self._data_addr))
+            except OSError:
+                pass  # dead again already: the next recv fails and we loop
+        return True
+
+    def _replay_pending(self) -> None:
+        """Re-send the arrival a coordinator outage may have stranded; the
+        server's ``setdefault(...)[shard] = msg`` makes duplicates
+        idempotent, and a commit that landed meanwhile already cleared it."""
+        with self._cv:
+            pending = self._pending_arrival
+        if pending is not None:
+            try:
+                self._send(K_ARRIVE, pending)
+            except OSError:
+                pass  # still down: replayed again after the next reconnect
+
+    def _reader(self) -> None:
+        while True:
+            try:
+                kind, payload = recv_frame(self._sock)
+                msg = json.loads(payload)
+            except (ConnectionError, OSError, ValueError):
+                with self._cv:
+                    if self._closed:
+                        self._cv.notify_all()
+                        return
+                if not self._reconnect():
+                    return  # budget exhausted; abort already flagged
+                continue
+            if kind == K_COMMIT:
+                with self._cv:
+                    self._commits[int(msg["step"])] = msg
+                    pa = self._pending_arrival
+                    if pa is not None and int(msg["step"]) >= int(pa["step"]):
+                        self._pending_arrival = None
+                    self._cv.notify_all()
+            elif kind == K_PEERS:
+                with self._cv:
+                    if msg.get("abort"):
+                        self._abort = msg["abort"]
+                    self._peers = msg
+                    last = msg.get("last_commit")
+                    if last is not None:
+                        self._commits[int(last["step"])] = last
+                        pa = self._pending_arrival
+                        if pa is not None and \
+                                int(last["step"]) >= int(pa["step"]):
+                            self._pending_arrival = None
+                    self._cv.notify_all()
+                self._replay_pending()
+            elif kind == K_PEER_UPDATE:
+                cb = self.on_peer_update
+                if cb is not None:
+                    cb(int(msg["shard"]), tuple(msg["addr"]))
+            elif kind == K_ABORT:
+                with self._cv:
+                    self._abort = msg["reason"]
+                    self._cv.notify_all()
 
     def _beats(self) -> None:
         while not self._hello.is_set():
@@ -1006,12 +1288,20 @@ class CoordClient:
             try:
                 self._send(K_BEAT, dict(shard=self.shard, seq=seq))
             except OSError:
-                return  # reader flags the abort
+                pass  # mid-reconnect: the reader owns recovery; keep going
             self._stop.wait(self.heartbeat_interval)
 
     # -- FileCoordinator surface (worker side) ---------------------------------
     def arrive(self, step: int, shard: int, stats: dict) -> None:
-        self._send(K_ARRIVE, dict(shard=int(shard), step=int(step), **stats))
+        msg = dict(shard=int(shard), step=int(step), **stats)
+        with self._cv:
+            # cached until its commit lands, so a coordinator outage
+            # between arrive and commit can replay it after reconnect
+            self._pending_arrival = msg
+        try:
+            self._send(K_ARRIVE, msg)
+        except OSError:
+            pass  # cached above; replayed after the reconnect handshake
 
     def wait_commit(self, step: int, shard: int) -> dict:
         """Event-driven: sleeps on the condition the reader notifies when

@@ -37,20 +37,34 @@ filesystem on the message hot path. The run results are bit-identical
 between both transports: every run round-trips the same MessageRunStore
 transforms and arrives in the same source-ascending digest order.
 
+Under the socket transport the coordinator itself is a separate OS
+process (``python -m repro.launch.procs coord <spec_dir>``): it hosts the
+CoordServer plus the superstep commit loop, write-ahead-logs every commit
+under ``procs_dir/coord-wal/`` and publishes its listening address to
+``procs_dir/coord-addr.json``. The launcher is a thin supervisor — it
+respawns a crashed coordinator (bounded by ``coord_restart_limit``) and
+respawns failed workers with ``--recover-to`` taken from the WAL. Workers
+reconnect to a respawned coordinator through the address file, so a
+``kill -9`` of the coordinator mid-barrier loses nothing: the successor
+restores the WAL, workers replay their stranded arrivals, and the run's
+results stay bit-identical.
+
 Worker processes are started as ``python -m repro.launch.procs worker
 <spec_dir> <shard>``. This module keeps its import-time dependencies to the
-standard library + the coordinator so a worker can start its heartbeat
-BEFORE paying the jax import.
+standard library + the coordinator + the (stdlib-only) chaos layer so a
+worker can start its heartbeat BEFORE paying the jax import.
 """
 
 from __future__ import annotations
 
 import argparse
+import errno
 import json
 import os
 import pickle
 import re
 import shutil
+import signal
 import subprocess
 import sys
 import threading
@@ -58,19 +72,36 @@ import time
 
 import numpy as np
 
+import repro.fault as _fault
 from repro.core.coordinator import (
     FileCoordinator, RunAborted, WorkerFailed, atomic_write_json,
+)
+from repro.fault import (
+    BlobCorruption,
+    FaultEvent,
+    FaultInjector,
+    FaultSchedule,
+    RetryExhausted,
+    RetryPolicy,
+    TierFault,
+    failure_record,
+    find_in_chain,
+    write_record,
 )
 
 SPEC = "spec.json"
 PROGRAM = "program.pkl"
 _STEP_DIR = re.compile(r"^step-(\d+)$")
+_WAL_COMMIT = re.compile(r"^commit-(\d+)\.json$")
 
 # respawn budget per run: recovery is for crashes, not crash loops
 MAX_RECOVERIES = 3
 # extra seconds a freshly spawned worker gets before heartbeat staleness
 # counts against it (interpreter start + first beat)
 SPAWN_GRACE = 5.0
+# errnos that mean "a storage tier failed", not "a bug": classified as
+# TierFault so the failure record names the tier (spill vs checkpoint)
+_DISK_ERRNOS = frozenset({errno.ENOSPC, errno.EIO, errno.EDQUOT})
 
 
 # --------------------------------------------------------------------------
@@ -93,6 +124,26 @@ def _announce_path(procs_dir: str, step: int, src: int) -> str:
 
 def _result_path(procs_dir: str, w: int) -> str:
     return os.path.join(procs_dir, "result", f"shard-{w}.npz")
+
+
+def _wal_dir(procs_dir: str) -> str:
+    return os.path.join(procs_dir, "coord-wal")
+
+
+def _coord_addr_path(procs_dir: str) -> str:
+    return os.path.join(procs_dir, "coord-addr.json")
+
+
+def _failure_path(procs_dir: str, w: int) -> str:
+    return os.path.join(procs_dir, "failures", f"shard-{w}.json")
+
+
+def _recover_request_path(procs_dir: str, w: int) -> str:
+    return os.path.join(procs_dir, f"recover-{w}.json")
+
+
+def _abort_request_path(procs_dir: str) -> str:
+    return os.path.join(procs_dir, "abort-request.json")
 
 
 def _save_npz_atomic(path: str, **arrays) -> None:
@@ -122,7 +173,7 @@ def _write_spec(job, procs_dir: str, coord_dir: str, *, start_step: int,
                 target: int, bootstrap: str, ckpt_step: int | None,
                 heartbeat_interval: float, heartbeat_timeout: float,
                 transport: str = "files", coord_addr=None,
-                kill_net=None) -> None:
+                kill_net=None, **extra) -> None:
     pg, cfg = job.pg, job.plan.config
     rec = cfg.recovery
     spec = dict(
@@ -134,6 +185,8 @@ def _write_spec(job, procs_dir: str, coord_dir: str, *, start_step: int,
         store_dir=job.store.dir,
         logs_dir=(job.message_log.dir if rec.log_messages else None),
         ckpt_dir=(job.checkpointer.dir if job.checkpointer else None),
+        ckpt_keep=(job.checkpointer.keep if job.checkpointer else 0),
+        store_signature=job.store.signature(),
         procs_dir=procs_dir,
         coord_dir=coord_dir,
         config=cfg.to_json(),
@@ -149,6 +202,7 @@ def _write_spec(job, procs_dir: str, coord_dir: str, *, start_step: int,
         transport=transport,
         coord_addr=coord_addr,
         kill_net=kill_net,
+        **extra,
     )
     atomic_write_json(os.path.join(procs_dir, SPEC), spec)
     with open(os.path.join(procs_dir, PROGRAM), "wb") as f:
@@ -166,14 +220,20 @@ def _write_spec(job, procs_dir: str, coord_dir: str, *, start_step: int,
         )
 
 
-def _finalize_checkpoint(ckpt, step: int, n_shards: int, P: int, dtype: str,
-                         meta) -> None:
+def _finalize_checkpoint_dir(ckpt_dir: str, step: int, n_shards: int, P: int,
+                             dtype: str, meta, keep: int = 2) -> None:
     """Coordinator half of the distributed checkpoint: every worker has
     already dumped its ``shard-w.npz`` into the ``.tmp`` dir; write the
     manifest (the Checkpointer wire format, so ``restore``/``restore_shard``
-    read it unchanged) and publish with the atomic rename."""
-    tmp = os.path.join(ckpt.dir, f".tmp-step-{step:06d}")
-    final = os.path.join(ckpt.dir, f"step-{step:06d}")
+    read it unchanged) and publish with the atomic rename.
+
+    Idempotent: a restarted coordinator replays its WAL and may finalize a
+    step that the previous incarnation already published — if the final dir
+    exists and the tmp dir is gone, the work is done and we return."""
+    tmp = os.path.join(ckpt_dir, f".tmp-step-{step:06d}")
+    final = os.path.join(ckpt_dir, f"step-{step:06d}")
+    if os.path.isdir(final) and not os.path.isdir(tmp):
+        return
     for w in range(n_shards):
         if not os.path.exists(os.path.join(tmp, f"shard-{w}.npz")):
             raise RuntimeError(
@@ -189,7 +249,14 @@ def _finalize_checkpoint(ckpt, step: int, n_shards: int, P: int, dtype: str,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
-    ckpt._gc()
+    # keep-newest gc, mirroring Checkpointer._gc
+    steps = sorted(
+        int(name[len("step-"):]) for name in os.listdir(ckpt_dir)
+        if name.startswith("step-") and name[len("step-"):].isdigit()
+    )
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step-{s:06d}"),
+                      ignore_errors=True)
 
 
 def run_processes(job, max_supersteps: int = 10_000, *,
@@ -216,43 +283,44 @@ def run_processes(job, max_supersteps: int = 10_000, *,
             "'lossless' (or False) explicitly"
         )
     n = pg.n_shards
-    opts = dict(job.launch_opts or {})
+    from repro.core.config import validate_launch_opts
+
+    opts = validate_launch_opts(dict(job.launch_opts or {}))
     transport = opts.get("transport", "files")
-    if transport not in ("files", "sockets"):
-        raise ValueError(
-            f"launch_opts transport must be 'files' or 'sockets', got "
-            f"{transport!r}"
-        )
     heartbeat_interval = float(opts.get("heartbeat_interval", 0.25))
     heartbeat_timeout = float(opts.get("heartbeat_timeout", 10.0))
     # crash drill (tests / CI): {"shard": w, "step": s} SIGKILLs worker w
     # mid-superstep s — after it announced its outbox, before it arrives
     kill_spec = opts.get("kill")
-    if kill_spec is not None and transport != "files":
-        raise ValueError(
-            "launch_opts 'kill' waits on the announce marker — a file-"
-            "transport drill; use 'kill_net' for the socket transport"
-        )
-    # socket crash drill: {"shard": w, "step": s, "after_frames": m} makes
-    # worker w SIGKILL ITSELF with a run frame half-written on the wire
+    # deprecated alias for a faults= net.send torn_kill event; worker_main
+    # translates it into the schedule so one injector drives both
     kill_net = opts.get("kill_net")
-    if kill_net is not None and transport != "sockets":
-        raise ValueError("launch_opts 'kill_net' needs transport='sockets'")
     can_recover = (job.checkpointer is not None
                    and cfg.recovery.log_messages)
 
     procs_dir = job._dir("procs", job._tag)
     coord_dir = os.path.join(procs_dir, "coord")
-    # a fresh launch owns the transport namespace: stale barrier records or
-    # half-written outboxes from a previous (crashed) launch would open
-    # this run's barriers early
-    for sub in ("coord", "outbox", "announce", "result"):
+    # a fresh launch owns the transport namespace: stale barrier records,
+    # WAL commits, failure records or half-written outboxes from a previous
+    # (crashed) launch would open this run's barriers early or trip the
+    # supervisor into phantom recoveries
+    for sub in ("coord", "outbox", "announce", "result", "coord-wal",
+                "failures"):
         shutil.rmtree(os.path.join(procs_dir, sub), ignore_errors=True)
     if os.path.isdir(procs_dir):
         for name in os.listdir(procs_dir):
-            if name.startswith("shard-"):  # socket senders' per-step outbox
-                shutil.rmtree(os.path.join(procs_dir, name, "outbox"),
-                              ignore_errors=True)
+            if name.startswith("shard-"):  # socket senders' per-step
+                # outbox + the local (log-less) inbox
+                for sub in ("outbox", "inbox"):
+                    shutil.rmtree(os.path.join(procs_dir, name, sub),
+                                  ignore_errors=True)
+            elif (name in ("coord-addr.json", "abort-request.json",
+                           "failure-summary.json", "coord.log")
+                  or name.startswith("recover-")):
+                try:
+                    os.unlink(os.path.join(procs_dir, name))
+                except OSError:
+                    pass
     os.makedirs(procs_dir, exist_ok=True)
 
     target = min(
@@ -304,29 +372,38 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                 state = job.engine.init()
         return state, []
 
-    coord_addr = None
-    if transport == "sockets":
-        from repro.launch.net import CoordServer
-
-        coord = CoordServer(n, heartbeat_timeout=heartbeat_timeout)
-        coord.start()
-        coord_addr = list(coord.addr)
-    else:
-        coord = FileCoordinator(coord_dir, n,
-                                heartbeat_interval=heartbeat_interval,
-                                heartbeat_timeout=heartbeat_timeout)
+    # socket tunables + chaos schedule ride the spec into every process
+    net = dict(
+        handshake_timeout=float(opts.get("handshake_timeout", 5.0)),
+        connect_timeout=float(opts.get("connect_timeout", 5.0)),
+        send_timeout=float(opts.get("send_timeout", 60.0)),
+        coord_connect_timeout=float(opts.get("coord_connect_timeout", 10.0)),
+        retry=opts.get("retry"),
+    )
     _write_spec(job, procs_dir, coord_dir, start_step=start_step,
                 target=target, bootstrap=bootstrap, ckpt_step=ckpt_step,
                 heartbeat_interval=heartbeat_interval,
                 heartbeat_timeout=heartbeat_timeout,
-                transport=transport, coord_addr=coord_addr,
-                kill_net=kill_net)
+                transport=transport, coord_addr=None,
+                kill_net=kill_net, net=net, faults=opts.get("faults"),
+                coord_kill=opts.get("coord_kill"),
+                coord_addr_path=_coord_addr_path(procs_dir))
+    if transport == "sockets":
+        return _run_sockets(job, opts, n=n, procs_dir=procs_dir,
+                            start_step=start_step, target=target,
+                            restored_from=restored_from,
+                            can_recover=can_recover, verbose=verbose,
+                            on_step=on_step)
+    coord = FileCoordinator(coord_dir, n,
+                            heartbeat_interval=heartbeat_interval,
+                            heartbeat_timeout=heartbeat_timeout)
 
     src_root = _src_root()
     procs: list[subprocess.Popen | None] = [None] * n
     grace = [0.0] * n
     recoveries = 0
     job._last_run_recoveries = 0  # audit: how many respawns this run took
+    job._last_run_coord_restarts = 0  # files: the launcher IS the coord
 
     def _spawn(w: int, recover_to: int | None = None) -> None:
         d = _shard_dir(procs_dir, w)
@@ -357,19 +434,26 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                 except subprocess.TimeoutExpired:
                     pass
 
-    def _fail(w: int, reason: str) -> None:
+    def _fail(w: int, reason: str, record: dict | None = None) -> None:
+        # the structured failure summary is the chaos-soak artifact: name
+        # the failing tier/site in JSON before the run goes down loudly
+        write_record(os.path.join(procs_dir, "failure-summary.json"),
+                     failure_record("launch-failed", shard=w, message=reason,
+                                    record=record))
         coord.abort(reason)
         _killall()
-        raise WorkerFailed(w, reason)
+        raise WorkerFailed(w, reason, record=record)
 
-    def _recover(w: int, recover_to: int, why: str) -> None:
+    def _recover(w: int, recover_to: int, why: str,
+                 record: dict | None = None) -> None:
         nonlocal recoveries
         if not can_recover:
             _fail(w, f"worker {w} {why} and the job has no checkpoint + "
-                     "message-log recovery wiring (checkpoint_every=)")
+                     "message-log recovery wiring (checkpoint_every=)",
+                  record=record)
         if recoveries >= MAX_RECOVERIES:
             _fail(w, f"worker {w} {why} after {recoveries} recoveries — "
-                     "crash loop, giving up")
+                     "crash loop, giving up", record=record)
         recoveries += 1
         job._last_run_recoveries = recoveries
         p = procs[w]
@@ -393,9 +477,10 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                 exited = p is not None and p.poll() is not None
                 silent = now > grace[w] and coord.stale(w)
                 if exited:
+                    rec = _read_failure(procs_dir, w)
                     _recover(w, step_or_none,
-                             f"exited with code {p.returncode} "
-                             f"mid-superstep {step_or_none}")
+                             _describe_exit(rec, p.returncode, step_or_none),
+                             record=rec)
                 elif silent:
                     _recover(w, step_or_none,
                              "went heartbeat-silent "
@@ -434,10 +519,10 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                 net_totals[key] += float(totals.get(key, 0.0))
             ckpt_landed = False
             if every and (s + 1) % every == 0:
-                _finalize_checkpoint(
-                    job.checkpointer, s + 1, n, pg.P,
+                _finalize_checkpoint_dir(
+                    job.checkpointer.dir, s + 1, n, pg.P,
                     str(np.dtype(program.value_dtype)),
-                    store.signature(),
+                    store.signature(), keep=job.checkpointer.keep,
                 )
                 ckpt_landed = True
             halt = (
@@ -504,11 +589,545 @@ def run_processes(job, max_supersteps: int = 10_000, *,
                 coord.abort("launcher failed")
             _killall()
         job._last_run_net = net_totals
-        if transport == "sockets":
-            coord.close()
     import jax.numpy as jnp
 
     return (jnp.asarray(np.stack(vals)), jnp.asarray(np.stack(acts))), history
+
+
+# --------------------------------------------------------------------------
+# failure records (written by dying workers, folded in by the supervisor)
+# --------------------------------------------------------------------------
+
+def _read_failure(procs_dir: str, w: int) -> dict | None:
+    """Consume worker ``w``'s classified failure record, if it published
+    one before exiting (records land atomically BEFORE the exit code, so
+    an observed exit implies a readable record or none at all)."""
+    path = _failure_path(procs_dir, w)
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return None
+    try:
+        os.unlink(path)
+    except OSError:
+        pass
+    return rec
+
+
+def _describe_exit(rec: dict | None, returncode, step) -> str:
+    """One human line for a worker exit, naming the failing tier/site when
+    the worker classified itself before dying."""
+    at = f" mid-superstep {step}" if step is not None else ""
+    if rec is None:
+        return f"exited with code {returncode}{at}"
+    kind = rec.get("kind")
+    msg = rec.get("message", "")
+    if kind == "disk-fault":
+        return (f"hit a disk fault in the {rec.get('tier', '?')} tier{at}: "
+                f"{msg}")
+    if kind == "corruption":
+        return f"found a corrupt blob{at} (quarantined for replay): {msg}"
+    if kind == "retry-exhausted":
+        return f"exhausted its retry budget{at}: {msg}"
+    return f"exited with code {returncode}{at}: {msg or kind}"
+
+
+def _classify_failure(exc: BaseException, shard: int) -> dict | None:
+    """Turn a worker's terminal exception into a structured failure record,
+    or None when it is an unclassified bug (exit 1, stack trace only)."""
+    t = find_in_chain(exc, TierFault)
+    if t is not None:
+        s = t.summary()
+        return failure_record(s.pop("kind"), shard=shard, step=s.pop("step"),
+                              message=str(t), **s)
+    b = find_in_chain(exc, BlobCorruption)
+    if b is not None:
+        s = b.summary()
+        return failure_record(s.pop("kind"), shard=shard, message=str(b), **s)
+    r = find_in_chain(exc, RetryExhausted)
+    if r is not None:
+        s = r.summary()
+        return failure_record(s.pop("kind"), shard=shard, message=str(r), **s)
+    # a disk errno that escaped tier wrapping (e.g. raised on the socket
+    # sender's transmit thread and re-surfaced as its RuntimeError) is
+    # still a spill-tier fault, not a bug
+    o = find_in_chain(exc, OSError)
+    if o is not None and getattr(o, "errno", None) in _DISK_ERRNOS:
+        t = TierFault("spill", cause=o)
+        s = t.summary()
+        s.pop("step")
+        return failure_record(s.pop("kind"), shard=shard, message=str(t), **s)
+    return None
+
+
+def _quarantine(corrupt: BlobCorruption) -> None:
+    """Move the corrupt blob's directory aside so bad bytes are never
+    consumed twice. The quarantined step is by construction uncommitted —
+    a torn run cannot have passed its barrier — so the respawned worker
+    re-receives those messages fresh (senders' outbox logs / announce
+    markers still serve them)."""
+    d = corrupt.directory
+    if not d or not os.path.isdir(d):
+        return
+    try:
+        # not a publish: an EVICTION from the lineage. If a crash undoes
+        # the un-fsynced rename, the dir reappears under its old name and
+        # the CRC check re-detects it on the next read — no reader can
+        # ever trust the bytes either way.
+        os.rename(d, d + ".quarantine")  # analysis: allow[atomic-publish] eviction, not publication; re-detected if undone
+    except OSError:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _sweep_partial(spec: dict, shard: int) -> None:
+    """Drop this worker's torn write products before exiting on a disk
+    fault, so neither the respawn nor the post-mortem ever reads a blob
+    with no index: an un-announced files-transport outbox never published
+    its index (markers land only after ``save_index``), and a checkpoint
+    tmp shard file without its manifest is re-dumped by the respawn."""
+    procs_dir = spec["procs_dir"]
+    ob_root = os.path.join(procs_dir, "outbox")
+    if os.path.isdir(ob_root):
+        for name in os.listdir(ob_root):
+            m = _STEP_DIR.match(name)
+            if not m:
+                continue
+            s = int(m.group(1))
+            d = os.path.join(ob_root, name, f"src-{shard}")
+            if (os.path.isdir(d) and not
+                    os.path.exists(_announce_path(procs_dir, s, shard))):
+                shutil.rmtree(d, ignore_errors=True)
+    ckpt_dir = spec.get("ckpt_dir")
+    if ckpt_dir and os.path.isdir(ckpt_dir):
+        for name in os.listdir(ckpt_dir):
+            if name.startswith(".tmp-step-"):
+                try:
+                    os.unlink(os.path.join(ckpt_dir, name,
+                                           f"shard-{shard}.npz"))
+                except OSError:
+                    pass
+
+
+# --------------------------------------------------------------------------
+# socket-transport supervision (the coordinator is its own child process)
+# --------------------------------------------------------------------------
+
+def _read_wal_commit(wal: str, step: int) -> dict | None:
+    try:
+        with open(os.path.join(wal, f"commit-{step:06d}.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _wal_last_commit(wal: str) -> int:
+    last = -1
+    try:
+        names = os.listdir(wal)
+    except OSError:
+        return last
+    for name in names:
+        m = _WAL_COMMIT.match(name)
+        if m:
+            last = max(last, int(m.group(1)))
+    return last
+
+
+def _run_sockets(job, opts, *, n, procs_dir, start_step, target,
+                 restored_from, can_recover, verbose, on_step):
+    """Socket-transport launch: spawn the coordinator as its own process
+    (:func:`coord_main`) plus one worker per shard, then supervise. The
+    launcher holds NO barrier state — it tails the coordinator's WAL into
+    the run history — so ``kill -9`` on the coordinator costs exactly one
+    respawn (bounded by ``coord_restart_limit``) and zero committed
+    supersteps."""
+    from repro.core.engine import SuperstepRecord
+
+    store = job.store
+    heartbeat_timeout = float(opts.get("heartbeat_timeout", 10.0))
+    restart_limit = int(opts.get("coord_restart_limit", 3))
+    retry = RetryPolicy.from_opts(opts.get("retry"))
+    src_root = _src_root()
+    wal = _wal_dir(procs_dir)
+    addr_path = _coord_addr_path(procs_dir)
+    os.makedirs(wal, exist_ok=True)
+
+    procs: list[subprocess.Popen | None] = [None] * n
+    coord_proc = None
+    incarnation = 0
+    coord_restarts = 0
+    recoveries = 0
+    job._last_run_recoveries = 0
+    job._last_run_coord_restarts = 0
+
+    def _env():
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        return env
+
+    def _spawn_coord() -> None:
+        nonlocal coord_proc
+        cmd = [sys.executable, "-m", "repro.launch.procs", "coord",
+               procs_dir, "--incarnation", str(incarnation)]
+        with open(os.path.join(procs_dir, "coord.log"), "ab") as logf:
+            coord_proc = subprocess.Popen(cmd, stdout=logf,
+                                          stderr=subprocess.STDOUT,
+                                          env=_env())
+
+    def _wait_addr() -> None:
+        # trust only an address stamped with the CURRENT incarnation: a
+        # predecessor's file still names a dead port
+        deadline = time.monotonic() + max(retry.deadline, 30.0)
+        while True:
+            try:
+                with open(addr_path) as f:
+                    if int(json.load(f).get("incarnation", -1)) == \
+                            incarnation:
+                        return
+            except (OSError, ValueError):
+                pass
+            if coord_proc.poll() is not None:
+                raise WorkerFailed(
+                    -1, f"coordinator incarnation {incarnation} exited "
+                        f"with code {coord_proc.returncode} before "
+                        "publishing its address")
+            if time.monotonic() > deadline:
+                raise WorkerFailed(
+                    -1, f"coordinator incarnation {incarnation} never "
+                        "published its address")
+            time.sleep(0.05)
+
+    def _spawn(w: int, recover_to: int | None = None) -> None:
+        d = _shard_dir(procs_dir, w)
+        os.makedirs(d, exist_ok=True)
+        cmd = [sys.executable, "-m", "repro.launch.procs", "worker",
+               procs_dir, str(w)]
+        if recover_to is not None:
+            cmd += ["--recover-to", str(recover_to)]
+        with open(os.path.join(d, "worker.log"), "ab") as logf:
+            procs[w] = subprocess.Popen(cmd, stdout=logf,
+                                        stderr=subprocess.STDOUT,
+                                        env=_env())
+
+    def _killall() -> None:
+        victims = [p for p in procs + [coord_proc] if p is not None]
+        for p in victims:
+            if p.poll() is None:
+                p.kill()
+        for p in victims:
+            try:
+                p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                pass
+
+    def _abort_run(w: int, reason: str, record: dict | None = None) -> None:
+        write_record(os.path.join(procs_dir, "failure-summary.json"),
+                     failure_record("launch-failed", shard=w, message=reason,
+                                    record=record))
+        # ask the coordinator to abort (stragglers exit via K_ABORT if any
+        # survive the kill), then kill everything
+        atomic_write_json(_abort_request_path(procs_dir),
+                          dict(reason=str(reason)))
+        _killall()
+        raise WorkerFailed(w, reason, record=record)
+
+    def _respawn_worker(w: int, recover_to: int | None, why: str,
+                        record: dict | None = None) -> None:
+        nonlocal recoveries
+        if not can_recover:
+            _abort_run(w, f"worker {w} {why} and the job has no checkpoint "
+                          "+ message-log recovery wiring "
+                          "(checkpoint_every=)", record=record)
+        if recoveries >= MAX_RECOVERIES:
+            _abort_run(w, f"worker {w} {why} after {recoveries} recoveries "
+                          "— crash loop, giving up", record=record)
+        recoveries += 1
+        job._last_run_recoveries = recoveries
+        p = procs[w]
+        if p is not None and p.poll() is None:
+            p.kill()
+            p.wait()
+        if recover_to is None:
+            recover_to = max(_wal_last_commit(wal) + 1, start_step)
+        if verbose:
+            print(f"  [procs] worker {w} {why}; respawning with "
+                  f"--recover-to {recover_to}")
+        _spawn(w, recover_to=recover_to)
+
+    history: list = []
+    net_totals = dict(net_send_s=0.0, net_stall_s=0.0, net_recv_s=0.0,
+                      net_recv_stall_s=0.0, net_wire_bytes=0.0,
+                      net_frames=0.0)
+    job._last_run_net = dict(net_totals)
+    nonempty = max(store.nonempty_blocks(), 1)
+    next_hist = start_step
+    ok = False
+
+    def _drain_wal() -> None:
+        nonlocal next_hist
+        while True:
+            rec = _read_wal_commit(wal, next_hist)
+            if rec is None:
+                return
+            s = int(rec["step"])
+            r = SuperstepRecord(
+                step=s, n_active=int(rec["n_active"]),
+                n_msgs=int(rec["n_msgs"]), agg=float(rec["agg"]),
+                density=float(rec.get("active_blocks", 0)) / nonempty,
+                mode="streamed", seconds=float(rec.get("seconds", 0.0)),
+                restored_from=restored_from if s == start_step else None,
+                blocks_read=int(rec.get("blocks_read", 0)),
+                cache_hits=int(rec.get("cache_hits", 0)),
+                cache_evictions=int(rec.get("cache_evictions", 0)),
+                blocks_skipped=int(rec.get("blocks_skipped", 0)),
+            )
+            history.append(r)
+            next_hist = s + 1
+            for key in net_totals:
+                net_totals[key] += float(rec.get(key, 0.0))
+            if verbose:
+                print(
+                    f"  superstep {s:4d}: active={r.n_active:>9d} "
+                    f"msgs={r.n_msgs:>10d} agg={r.agg:.6g} "
+                    f"density={r.density:.4f} "
+                    f"[streamed procs x{n}] {r.seconds*1e3:.1f} ms"
+                )
+            if on_step is not None:
+                on_step(r, None)
+
+    try:
+        _spawn_coord()
+        _wait_addr()
+        for w in range(n):
+            _spawn(w)
+        while True:
+            _drain_wal()
+            rc = coord_proc.poll()
+            if rc == 0:
+                break  # run complete: every result file landed
+            if rc == 2:
+                # coordinator aborted the run: surface the structured cause
+                reason = "run aborted"
+                try:
+                    with open(os.path.join(wal, "abort.json")) as f:
+                        reason = str(json.load(f)["reason"])
+                except (OSError, ValueError, KeyError):
+                    pass
+                record = None
+                for w in range(n):
+                    record = record or _read_failure(procs_dir, w)
+                _killall()
+                shard = (int(record["shard"])
+                         if record and record.get("shard") is not None
+                         else -1)
+                write_record(
+                    os.path.join(procs_dir, "failure-summary.json"),
+                    failure_record("launch-failed", shard=shard,
+                                   message=reason, record=record))
+                raise WorkerFailed(shard, reason, record=record)
+            if rc is not None:
+                # crashed (the kill -9 drill lands here): bounded respawn;
+                # the successor restores the WAL and resumes mid-run
+                if coord_restarts >= restart_limit:
+                    _abort_run(-1, f"coordinator crashed (exit {rc}) after "
+                                   f"{coord_restarts} restarts — giving up")
+                coord_restarts += 1
+                incarnation += 1
+                job._last_run_coord_restarts = coord_restarts
+                if verbose:
+                    print(f"  [procs] coordinator crashed (exit {rc}); "
+                          f"respawning incarnation {incarnation}")
+                _spawn_coord()
+                _wait_addr()
+            for w in range(n):
+                # the coordinator judges heartbeat staleness but cannot
+                # respawn processes; it files a recover request instead
+                req_path = _recover_request_path(procs_dir, w)
+                if os.path.exists(req_path):
+                    try:
+                        with open(req_path) as f:
+                            req = json.load(f)
+                    except (OSError, ValueError):
+                        req = None
+                    try:
+                        os.unlink(req_path)
+                    except OSError:
+                        pass
+                    if req is not None:
+                        _respawn_worker(
+                            w, int(req["recover_to"]),
+                            str(req.get("why", "went heartbeat-silent")),
+                            record=_read_failure(procs_dir, w))
+                        continue
+                p = procs[w]
+                if p is None or p.poll() is None:
+                    continue
+                if p.returncode in (0, 3):
+                    # 0: result written post-halt; 3: told to abort — the
+                    # cause surfaces through the coordinator exit path
+                    procs[w] = None
+                    continue
+                rec = _read_failure(procs_dir, w)
+                _respawn_worker(w, None,
+                                _describe_exit(rec, p.returncode,
+                                               _wal_last_commit(wal) + 1),
+                                record=rec)
+            time.sleep(0.05)
+        _drain_wal()
+        vals, acts = [], []
+        for w in range(n):
+            z = np.load(_result_path(procs_dir, w))
+            vals.append(z["values"])
+            acts.append(z["active"])
+        for p in procs:
+            if p is not None:
+                try:
+                    p.wait(timeout=30)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+        ok = True
+    finally:
+        if not ok:
+            _killall()
+        job._last_run_net = net_totals
+    import jax.numpy as jnp
+
+    return (jnp.asarray(np.stack(vals)), jnp.asarray(np.stack(acts))), history
+
+
+# --------------------------------------------------------------------------
+# coordinator process (sockets transport; stdlib + launch.net only)
+# --------------------------------------------------------------------------
+
+def coord_main(procs_dir: str, incarnation: int = 0) -> int:
+    """Host the CoordServer plus the barrier/commit loop as a standalone
+    process. Exit codes: 0 = run completed (every result file landed),
+    2 = run aborted (reason WAL-logged); anything else is a crash, which
+    the launcher answers with a successor incarnation — the successor
+    restores the WAL and carries on mid-run."""
+    with open(os.path.join(procs_dir, SPEC)) as f:
+        spec = json.load(f)
+    from repro.launch.net import CoordServer
+
+    n = int(spec["n_shards"])
+    hb_t = float(spec["heartbeat_timeout"])
+    net = spec.get("net") or {}
+    coord = CoordServer(
+        n, heartbeat_timeout=hb_t,
+        handshake_timeout=float(net.get("handshake_timeout", 5.0)),
+        wal_dir=_wal_dir(procs_dir),
+    )
+    coord.start()
+    try:
+        # publish AFTER the WAL restore: a worker that reads this address
+        # may immediately CHELLO and expect restored commit state
+        atomic_write_json(_coord_addr_path(procs_dir),
+                          dict(incarnation=int(incarnation),
+                               addr=list(coord.addr)))
+        return _coord_loop(spec, coord, procs_dir, int(incarnation))
+    except RunAborted:
+        return 2
+    except Exception as e:
+        import traceback
+
+        traceback.print_exc()
+        coord.abort(f"coordinator failed: {e}")
+        return 2
+    finally:
+        coord.close()
+
+
+def _coord_loop(spec: dict, coord, procs_dir: str, incarnation: int) -> int:
+    n = int(spec["n_shards"])
+    start_step = int(spec["start_step"])
+    target = int(spec["target"])
+    every = int(spec["checkpoint_every"]) if spec.get("ckpt_dir") else 0
+    hb_t = float(spec["heartbeat_timeout"])
+    num_supersteps = spec.get("num_supersteps")
+    # the kill -9 drill arms in the first incarnation only: the successor
+    # must prove recovery, not re-die
+    drill = spec.get("coord_kill") if incarnation == 0 else None
+    abort_path = _abort_request_path(procs_dir)
+
+    def _poll_control() -> None:
+        """Abort requests degrade the run to a clean loud stop."""
+        coord.check_abort()
+        if os.path.exists(abort_path):
+            try:
+                with open(abort_path) as f:
+                    reason = str(json.load(f).get("reason",
+                                                  "abort requested"))
+            except (OSError, ValueError):
+                reason = "abort requested"
+            coord.abort(reason)
+            raise RunAborted(reason)
+
+    def _request_recover(step, got) -> None:
+        """File a recover request for every heartbeat-stale worker; the
+        launcher owns process lifecycles, so the respawn is its job. The
+        grace grant keeps the request from being refiled while the
+        replacement boots and reconnects."""
+        for w in range(n):
+            if w in got or not coord.stale(w):
+                continue
+            recover_to = max(coord.last_commit_step() + 1, start_step)
+            atomic_write_json(
+                _recover_request_path(procs_dir, w),
+                dict(shard=w, recover_to=recover_to,
+                     why=f"went heartbeat-silent (> {hb_t:.1f}s) "
+                         f"mid-superstep {step}"))
+            coord.grant_grace(w, hb_t + SPAWN_GRACE)
+
+    # resume: never re-run a superstep the WAL already committed — workers
+    # past that barrier would strand. Arrivals for the current (in-flight)
+    # step are replayed by the reconnecting clients.
+    last = coord.last_commit_step()
+    start = max(last + 1, start_step)
+    halted = last >= 0 and bool(coord.commit(last).get("halt"))
+
+    if not halted:
+        for s in range(start, target):
+            t0 = time.perf_counter()
+            while True:
+                got = coord.arrivals(s)
+                if (drill is not None and int(drill["step"]) == s
+                        and len(got) >= int(drill.get("after_arrivals", 1))):
+                    # mid-barrier kill -9: arrivals received, commit not
+                    # yet WALed — the successor must re-collect them
+                    os.kill(os.getpid(), signal.SIGKILL)
+                if len(got) == n:
+                    break
+                _poll_control()
+                _request_recover(s, got)
+                time.sleep(0.05)
+            totals = coord.reduce_arrivals(got)
+            ckpt_landed = False
+            if every and (s + 1) % every == 0:
+                _finalize_checkpoint_dir(
+                    spec["ckpt_dir"], s + 1, n, int(spec["P"]),
+                    spec["value_dtype"], spec.get("store_signature"),
+                    keep=int(spec.get("ckpt_keep", 2)) or 2,
+                )
+                ckpt_landed = True
+            halt = ((num_supersteps is None and totals["n_active"] == 0)
+                    or s + 1 >= target)
+            coord.publish_commit(
+                s, totals, halt=halt, ckpt_landed=ckpt_landed,
+                extra=dict(seconds=time.perf_counter() - t0))
+            if halt:
+                break
+
+    # wait for every worker's result file; a worker that dies between its
+    # last commit and the result write is recovered like any other
+    while True:
+        missing = [w for w in range(n)
+                   if not os.path.exists(_result_path(procs_dir, w))]
+        if not missing:
+            return 0
+        _poll_control()
+        _request_recover("result", set(range(n)) - set(missing))
+        time.sleep(0.05)
 
 
 # --------------------------------------------------------------------------
@@ -620,13 +1239,13 @@ class _Worker:
                     compress_payload=cfg.channel.compress_payload,
                 )
 
-            kill_net = spec.get("kill_net")
-            if kill_net is not None and int(kill_net.get("shard", -1)) != shard:
-                kill_net = None
+            net = spec.get("net") or {}
             self.sender = PeerSender(
                 shard, n, make_store, inflight=cfg.channel.inflight,
                 stats=self.net_stats, check_abort=coord.check_abort,
-                kill_net=kill_net,
+                connect_timeout=float(net.get("connect_timeout", 5.0)),
+                send_timeout=float(net.get("send_timeout", 60.0)),
+                retry=RetryPolicy.from_opts(net.get("retry")),
             )
             self.sender.set_addrs(peer_addrs)
             # a respawned peer's new data address flows straight into the
@@ -1016,13 +1635,20 @@ class _Worker:
         target = int(spec["target"])
         every = int(spec["checkpoint_every"])
         if recover_to is not None:
+            # read-path integrity: a respawn (especially one triggered by
+            # a corruption quarantine) must not trust the edge tier
+            # blindly — re-verify the store's per-channel CRCs first
+            self.store.verify_integrity()
             C = _latest_checkpoint_step(spec["ckpt_dir"], recover_to)
             if C is None:
-                raise RuntimeError(
-                    f"--recover-to {recover_to}: no checkpoint to replay "
-                    f"from in {spec['ckpt_dir']}"
-                )
-            values_w, active_w = self.restore_shard(C)
+                # nothing checkpointed yet (e.g. the very first checkpoint
+                # write faulted): the message logs for every committed step
+                # are still intact — gc only runs after a checkpoint lands —
+                # so replay the whole prefix on top of the bootstrap state
+                values_w, active_w = self.bootstrap()
+                C = int(spec["start_step"])
+            else:
+                values_w, active_w = self.restore_shard(C)
             for t in range(C, recover_to):
                 values_w, active_w = self.replay(t, values_w, active_w)
             start = recover_to
@@ -1036,6 +1662,9 @@ class _Worker:
             values_w, active_w = self.bootstrap()
 
         for s in range(start, target):
+            inj = _fault.active()
+            if inj is not None:  # step context for the file-write sites
+                inj.set_step(s)
             # all edge-block reads happen inside _send's folds, through the
             # residency layer — the counter deltas around the step are this
             # shard's contribution to the coordinator's SuperstepRecord
@@ -1059,6 +1688,12 @@ class _Worker:
                     else:
                         nv, na, nact, nm, ag = self._receive_nocomb(
                             s, values_w, active_w, inbox)
+            except OSError as e:
+                if e.errno in _DISK_ERRNOS:
+                    # a spill/inbox blob write failed: name the tier so
+                    # the failure record and the launcher's message do
+                    raise TierFault("spill", s, e) from e
+                raise
             finally:
                 if inbox is not None:
                     if self.log is not None:
@@ -1077,10 +1712,18 @@ class _Worker:
             if every and (s + 1) % every == 0 and spec["ckpt_dir"]:
                 tmp = os.path.join(spec["ckpt_dir"],
                                    f".tmp-step-{s + 1:06d}")
-                os.makedirs(tmp, exist_ok=True)
-                np.savez(os.path.join(tmp, f"shard-{w}.npz"),
-                         values=np.asarray(values_w),
-                         active=np.asarray(active_w))
+                try:
+                    os.makedirs(tmp, exist_ok=True)
+                    inj = _fault.active()
+                    if inj is not None:  # chaos: fail the shard dump
+                        inj.check("io.write.ckpt", step=s + 1)
+                    np.savez(os.path.join(tmp, f"shard-{w}.npz"),
+                             values=np.asarray(values_w),
+                             active=np.asarray(active_w))
+                except OSError as e:
+                    if e.errno in _DISK_ERRNOS:
+                        raise TierFault("checkpoint", s + 1, e) from e
+                    raise
                 ckpt = True
             h1, m1, e1, k1 = self.residency.counters()
             stats = dict(
@@ -1143,14 +1786,25 @@ def worker_main(spec_dir: str, shard: int,
                 recover_to: int | None = None) -> int:
     with open(os.path.join(spec_dir, SPEC)) as f:
         spec = json.load(f)
-    if recover_to is not None:
-        # a respawn must not re-arm the crash drill: the spec is shared by
-        # every incarnation and the drill targets the first one only
-        spec.pop("kill_net", None)
     n = int(spec["n_shards"])
     transport = spec.get("transport", "files")
+    # arm the chaos schedule — FIRST incarnation only: the spec is shared
+    # by every incarnation and a respawn must prove recovery, not re-trip
+    # the drill that killed its predecessor
+    if recover_to is None:
+        sched = FaultSchedule.from_opts(spec.get("faults"))
+        kn = spec.get("kill_net")
+        if kn is not None and int(kn.get("shard", -1)) == int(shard):
+            # deprecated alias for the PR 8 drill, now a schedule event:
+            # header + half the payload on the wire, then SIGKILL
+            sched.events.append(FaultEvent(
+                site="net.send", kind="torn_kill", step=int(kn["step"]),
+                after=int(kn.get("after_frames", 0))))
+        if sched.events:
+            _fault.install(FaultInjector(sched, shard=int(shard)))
     server = None
     peer_addrs = None
+    net = spec.get("net") or {}
     if transport == "sockets":
         # stdlib-only wiring, started BEFORE the heavy imports below:
         # liveness (heartbeats) and peer registration must not depend on
@@ -1159,11 +1813,17 @@ def worker_main(spec_dir: str, shard: int,
 
         start_step = (recover_to if recover_to is not None
                       else int(spec["start_step"]))
-        server = PeerServer(n, start_step=start_step)
+        server = PeerServer(
+            n, start_step=start_step,
+            handshake_timeout=float(net.get("handshake_timeout", 5.0)))
         server.start()
         coord = CoordClient(
-            tuple(spec["coord_addr"]), shard,
+            tuple(spec["coord_addr"]) if spec.get("coord_addr") else None,
+            shard,
             heartbeat_interval=float(spec["heartbeat_interval"]),
+            addr_file=spec.get("coord_addr_path"),
+            connect_timeout=float(net.get("coord_connect_timeout", 10.0)),
+            retry=RetryPolicy.from_opts(net.get("retry")),
         )
         coord.start()
     else:
@@ -1188,10 +1848,21 @@ def worker_main(spec_dir: str, shard: int,
     except RunAborted as e:
         print(f"worker {shard}: {e}", file=sys.stderr)
         return 3
-    except Exception:
+    except Exception as e:
         import traceback
 
         traceback.print_exc()
+        rec = _classify_failure(e, int(shard))
+        if rec is not None:
+            # a named fault: quarantine corrupt blobs, sweep this shard's
+            # torn write products, and publish the structured record the
+            # launcher folds into WorkerFailed / failure-summary.json
+            corrupt = find_in_chain(e, BlobCorruption)
+            if corrupt is not None:
+                _quarantine(corrupt)
+            _sweep_partial(spec, int(shard))
+            write_record(_failure_path(spec["procs_dir"], int(shard)), rec)
+            return 4
         return 1
     finally:
         # every socket-transport resource joins its threads on close (and
@@ -1208,7 +1879,13 @@ def main(argv=None) -> int:
     wk.add_argument("spec_dir")
     wk.add_argument("shard", type=int)
     wk.add_argument("--recover-to", type=int, default=None)
+    co = sub.add_parser("coord",
+                        help="run the coordinator process (sockets)")
+    co.add_argument("spec_dir")
+    co.add_argument("--incarnation", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.cmd == "coord":
+        return coord_main(args.spec_dir, args.incarnation)
     return worker_main(args.spec_dir, args.shard, args.recover_to)
 
 

@@ -70,7 +70,14 @@ class FaultPoint:
     do not count). The count is cumulative across channels — i.e. across
     supersteps of one engine run, since packets flow in FIFO program order —
     so a single integer pins the crash to an exact packet of an exact
-    superstep. Used by the crash drills in tests/test_fault.py."""
+    superstep. Used by the crash drills in tests/test_fault.py.
+
+    .. deprecated:: Kept only for the in-process (threads) sender drills.
+       Everything process-level — socket sends/recvs, spill/store/checkpoint
+       writes, coordinator kills — is driven by ``repro.fault``'s
+       site-scoped :class:`~repro.fault.FaultSchedule` (the
+       ``launch_opts["faults"]`` knob), which subsumes this single-counter
+       hook; new drills should use that layer."""
 
     after_packets: int
     message: str = "injected sender fault"

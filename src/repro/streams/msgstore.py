@@ -52,6 +52,17 @@ which is what lets ``RunFileMessageLog`` (core/checkpoint.py) use these same
 run files as the persisted OMSs of the paper's fast-recovery protocol — and
 the pipelined engine's *inbox* files (streams/channel.py) are exactly these
 stores, so transmitted-but-unapplied messages survive a crash the same way.
+
+Read-path integrity: every appended run records a CRC32 per channel blob
+(computed over the pristine bytes before they hit the page cache) in its
+:class:`RunSegment`, persisted through the index. Readers verify a run's
+checksums once before first use and raise
+:class:`repro.fault.BlobCorruption` on mismatch — so a flipped bit on disk
+(or injected by the chaos layer between write and read) is a detected,
+named event the worker can quarantine and replay, never silently wrong
+math. All blob writes route through the installed
+:class:`repro.fault.FaultInjector` (if any), which is how the chaos
+drills land ENOSPC/EIO/short-write/bit-flip faults at this tier.
 """
 
 from __future__ import annotations
@@ -61,10 +72,13 @@ import heapq
 import json
 import os
 import shutil
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
 
+import repro.fault as _fault
+from repro.fault import BlobCorruption
 from repro.streams.codec import (
     PayloadDecoder, PayloadEncoder, VarintDeltaDecoder, decode_varint_delta,
     encode_payload, encode_varint_delta, normalize_payload_scheme,
@@ -95,6 +109,7 @@ class RunSegment:
     msg_nbytes: int = -1  # byte length of the payload-codec msg blob
     cnt_off: int = -1  # byte offset of the payload-codec cnt blob
     cnt_nbytes: int = -1  # byte length of the payload-codec cnt blob
+    crc: str = ""  # comma-joined per-channel CRC32 hex ("" = legacy, unchecked)
 
 
 #: RunSegment byte-extent fields per blob-encoded channel
@@ -146,6 +161,10 @@ class MessageRunStore:
         # planner's only state (NOT O(messages))
         self._counts = np.zeros((n_shards, P), np.int64)
         self._wfh: dict[tuple[int, str], object] = {}
+        # run identities whose CRCs verified clean (reads re-check only
+        # segments not yet seen; set.add is GIL-atomic for the cross-thread
+        # append/digest pattern)
+        self._crc_ok: set[tuple] = set()
         # destinations whose _counts row must be rebuilt from the live runs
         # before use (set by open(); rebuilding eagerly would scan every
         # destination when a reader typically wants just one)
@@ -230,6 +249,56 @@ class MessageRunStore:
             self._wfh[(dest, ch)] = fh
         return fh
 
+    def _write(self, dest: int, ch: str, data: bytes, crc: int = 0) -> int:
+        """Append one channel blob; returns the CRC32 of the pristine bytes.
+
+        The checksum is computed BEFORE the bytes reach the injector/OS, so
+        anything that mutates them on the way to (or at rest on) disk is
+        caught by read-path verification. A failed write poisons the store:
+        extents for the torn bytes are never published and the worker
+        aborts the step (quarantine-and-replay regenerates the data).
+        """
+        crc = zlib.crc32(data, crc)
+        fh = self._handle(dest, ch)
+        inj = _fault.active()
+        if inj is not None:
+            inj.file_write(fh, data, site="io.write.spill",
+                           path=self._path(dest, ch))
+        else:
+            fh.write(data)
+        return crc
+
+    @staticmethod
+    def _crc_field(crcs: list[int]) -> str:
+        return ",".join(f"{c & 0xFFFFFFFF:08x}" for c in crcs)
+
+    def _verify(self, dest: int, seg: RunSegment, mm: dict) -> None:
+        """Check one run's stored CRCs against the bytes on disk (memoized
+        per segment identity; vacuum re-bases offsets, which re-keys)."""
+        if not seg.crc:
+            return  # legacy segment from a pre-CRC index: unverifiable
+        key = (dest, seg.tag, seg.offset, seg.length, seg.crc)
+        if key in self._crc_ok:
+            return
+        want = seg.crc.split(",")
+        for ch, w in zip(self._channels(), want):
+            if self._is_blob(ch):
+                data = np.ascontiguousarray(
+                    self._blob_slice(mm, seg, ch)).tobytes()
+            else:
+                data = np.ascontiguousarray(
+                    mm[ch][seg.offset:seg.offset + seg.length]).tobytes()
+            got = f"{zlib.crc32(data):08x}"
+            if got != w:
+                raise BlobCorruption(
+                    self._path(dest, ch),
+                    f"run tag={seg.tag} offset={seg.offset} "
+                    f"length={seg.length} channel={ch}: "
+                    f"stored crc32 {w} != read crc32 {got}",
+                    directory=self.dir,
+                )
+        self._crc_ok.add(key)
+
     def append_run(self, dest: int, dp: np.ndarray, msg: np.ndarray,
                    cnt: np.ndarray | None = None, tag: int = -1) -> RunSegment:
         """Append one destination-sorted run for shard ``dest``.
@@ -250,6 +319,7 @@ class MessageRunStore:
                     self.payload_sampler.offer(ch, data[ch])
         extents: dict[str, int] = {}
         blob_len: dict[str, int] = {}
+        crcs: list[int] = []
         for ch in self._channels():
             if self._is_blob(ch):
                 blob = self._encode(ch, data[ch])
@@ -257,13 +327,15 @@ class MessageRunStore:
                 extents[off_f] = self._blob_bytes[ch][dest]
                 extents[nb_f] = len(blob)
                 blob_len[ch] = len(blob)
-                self._handle(dest, ch).write(blob)
+                crcs.append(self._write(dest, ch, blob))
             else:
-                self._handle(dest, ch).write(
+                crcs.append(self._write(
+                    dest, ch,
                     np.ascontiguousarray(data[ch],
-                                         self._decoded_dtype(ch)).tobytes())
+                                         self._decoded_dtype(ch)).tobytes()))
         seg = RunSegment(tag=tag, offset=self._sizes[dest],
-                         length=int(dp.size), **extents)
+                         length=int(dp.size), crc=self._crc_field(crcs),
+                         **extents)
         for ch in self._channels():
             self._wfh[(dest, ch)].flush()
         # size counters move only AFTER the flush: the full-duplex receiver
@@ -364,6 +436,7 @@ class MessageRunStore:
     def read_run(self, dest: int, seg: RunSegment):
         """Materialize one run (tests / log densification — small runs)."""
         mm = self._read_mm(dest)
+        self._verify(dest, seg, mm)
         sl = slice(seg.offset, seg.offset + seg.length)
         out = []
         for ch in self._channels():
@@ -379,6 +452,7 @@ class MessageRunStore:
         """Stream one run in bounded chunks (per-channel tuples) — for
         copying arbitrarily long runs without materializing them."""
         mm = self._read_mm(dest)
+        self._verify(dest, seg, mm)
         # blobs stay memmap views: the decoders read them in bounded
         # windows, so even a compaction-length run costs O(read_chunk) heap
         decs = {ch: self._decoder(mm, seg, ch) for ch in self._channels()}
@@ -403,6 +477,8 @@ class MessageRunStore:
         if not segs:
             return
         mm = self._read_mm(dest)
+        for s in segs:
+            self._verify(dest, s, mm)
         channels = self._channels()
         cursors = [
             _Cursor(mm, s, read_chunk, channels,
@@ -453,27 +529,31 @@ class MessageRunStore:
             # flush below, so a reader that maps mid-merge sees at most
             # the pre-merge extent (which the old segments fully cover)
             written = {ch: 0 for ch in self._blob_channels()}
+            # per-channel CRC of the merged run accumulates across the
+            # fragment writes (crc32 chains over concatenation)
+            crcs = {ch: 0 for ch in channels}
             for part in self.iter_merged(dest, read_chunk, segments=batch):
                 for ch, arr in zip(channels, part):
                     if ch == "dp" and self.compress:
                         blob = encode_varint_delta(
                             np.asarray(arr, np.int64), prev=prev)
                         prev = int(arr[-1])
-                        self._handle(dest, ch).write(blob)
+                        crcs[ch] = self._write(dest, ch, blob, crcs[ch])
                         written[ch] += len(blob)
                     elif ch in encoders:
                         blob = encoders[ch].add(arr)
-                        self._handle(dest, ch).write(blob)
+                        crcs[ch] = self._write(dest, ch, blob, crcs[ch])
                         written[ch] += len(blob)
                     else:
-                        self._handle(dest, ch).write(
+                        crcs[ch] = self._write(
+                            dest, ch,
                             np.ascontiguousarray(
-                                arr, self._dtype(ch)).tobytes())
+                                arr, self._dtype(ch)).tobytes(), crcs[ch])
                 length += int(part[0].size)
             extents: dict[str, int] = {}
             for ch, enc in encoders.items():
                 blob = enc.flush()
-                self._handle(dest, ch).write(blob)
+                crcs[ch] = self._write(dest, ch, blob, crcs[ch])
                 written[ch] += len(blob)
             for ch in self._blob_channels():
                 off_f, nb_f = _EXTENTS[ch]
@@ -486,6 +566,8 @@ class MessageRunStore:
                 self._blob_bytes[ch][dest] += written[ch]
             self._sizes[dest] += length
             merged = RunSegment(tag=tag, offset=offset, length=length,
+                                crc=self._crc_field(
+                                    [crcs[ch] for ch in channels]),
                                 **extents)
             keep = [s for s in self._runs[dest] if s not in batch]
             self._runs[dest] = keep + [merged]
@@ -557,6 +639,18 @@ class MessageRunStore:
         mm = self._read_mm(dest)
         tmp = {ch: open(self._path(dest, ch) + ".vacuum", "wb")
                for ch in channels}
+        inj = _fault.active()
+
+        def _copy(ch: str, data: bytes) -> None:
+            # byte-identical copy, so each segment's recorded CRC survives
+            # the rewrite; still injectable (ENOSPC mid-vacuum leaves the
+            # originals untouched behind the atomic replace below)
+            if inj is not None:
+                inj.file_write(tmp[ch], data, site="io.write.spill",
+                               path=self._path(dest, ch) + ".vacuum")
+            else:
+                tmp[ch].write(data)
+
         new_runs = []
         off = 0
         blob_off = {ch: 0 for ch in self._blob_channels()}
@@ -565,13 +659,13 @@ class MessageRunStore:
             for ch in channels:
                 if self._is_blob(ch):
                     blob = np.ascontiguousarray(self._blob_slice(mm, seg, ch))
-                    tmp[ch].write(blob.tobytes())
+                    _copy(ch, blob.tobytes())
                     off_f, nb_f = _EXTENTS[ch]
                     extents[off_f] = blob_off[ch]
                     extents[nb_f] = int(blob.size)
                     blob_off[ch] += int(blob.size)
                 else:
-                    tmp[ch].write(np.ascontiguousarray(
+                    _copy(ch, np.ascontiguousarray(
                         mm[ch][seg.offset:seg.offset + seg.length]
                     ).tobytes())
             new_runs.append(dataclasses.replace(seg, offset=off, **extents))

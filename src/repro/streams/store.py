@@ -36,14 +36,32 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
 
+import repro.fault as _fault
+from repro.fault import BlobCorruption
 from repro.streams.codec import (
     PAYLOAD_RATIO_ESTIMATE, decode_payload, decode_varint_delta,
     encode_payload, encode_varint_delta,
 )
+
+
+def _spill_write(f, data: bytes, crc: int, path: str) -> int:
+    """Append ``data``, returning the running CRC32 of the pristine bytes.
+
+    Routes through the installed chaos injector (site ``io.write.store``)
+    so partition-time spills are fault-injectable like every other tier.
+    """
+    crc = zlib.crc32(data, crc)
+    inj = _fault.active()
+    if inj is not None:
+        inj.file_write(f, data, site="io.write.store", path=path)
+    else:
+        f.write(data)
+    return crc
 
 MANIFEST = "manifest.json"
 BLOCKS = "blocks.npz"
@@ -220,31 +238,38 @@ class EdgeStreamStore:
         )
         row_bytes: dict[str, list[int]] = {}
         index_arrays: dict[str, np.ndarray] = {}
+        file_crcs: dict[str, str] = {}
         for name, arr in arrays.items():
             as_varint = compress and name in _COMPRESSED_CHANNELS
             as_payload = compress_payload and name in _PAYLOAD_CHANNELS
+            path = os.path.join(directory, f"{name}.bin")
+            crc = 0
             if as_varint or as_payload:
                 enc = (encode_varint_delta if as_varint
                        else encode_payload)
                 blocks = arr.reshape(n * n * n_blocks, edge_block)
                 idx = np.zeros(len(blocks) + 1, np.int64)
-                with open(os.path.join(directory, f"{name}.bin"), "wb") as f:
+                with open(path, "wb") as f:
                     for j, blk in enumerate(blocks):
-                        idx[j + 1] = idx[j] + f.write(enc(blk))
+                        blob = enc(blk)
+                        crc = _spill_write(f, blob, crc, path)
+                        idx[j + 1] = idx[j] + len(blob)
                 index_arrays[name] = idx
                 row_stride = n * n_blocks  # blocks per source row
                 row_bytes[name] = [
                     int(idx[r * row_stride]) for r in range(n + 1)
                 ]
             else:
-                mm = np.memmap(os.path.join(directory, f"{name}.bin"),
-                               dtype=_FILES[name], mode="w+", shape=geom.shape)
-                mm[:] = arr.reshape(geom.shape)
-                mm.flush()
-                del mm
+                shaped = arr.reshape(geom.shape)
+                with open(path, "wb") as f:
+                    for r in range(n):  # per-row chunks: O(row) copy, not O(file)
+                        crc = _spill_write(
+                            f, np.ascontiguousarray(shaped[r]).tobytes(),
+                            crc, path)
                 stride = n * n_blocks * edge_block * np.dtype(
                     _FILES[name]).itemsize
                 row_bytes[name] = [r * stride for r in range(n + 1)]
+            file_crcs[name] = f"{crc & 0xFFFFFFFF:08x}"
 
         # skip() metadata: per-block source range (same contract as the
         # device layout's blk_lo/blk_hi)
@@ -258,6 +283,9 @@ class EdgeStreamStore:
         manifest = dict(
             version=FORMAT_VERSION, signature=signature,
             files={k: f"{k}.bin" for k in _FILES},
+            # per-file CRC32 of the bytes as written: read-path integrity
+            # for the write-once edge tier (verify_integrity())
+            crc32=file_crcs,
             compress=bool(compress),
             compress_payload=bool(compress_payload),
             # manifest-driven row ownership: machine i maps only the byte
@@ -333,6 +361,35 @@ class EdgeStreamStore:
         for name in sorted(arrays):
             h.update(np.ascontiguousarray(arrays[name]).tobytes())
         return h.hexdigest()[:16]
+
+    def verify_integrity(self) -> None:
+        """Recompute each channel file's CRC32 against the manifest record.
+
+        Raises :class:`repro.fault.BlobCorruption` naming the first file
+        whose bytes no longer match what partition time wrote. Called by
+        recovering workers before checkpoint-lineage replay (an O(|E|)
+        sequential read — cheap next to the replay itself) and by the chaos
+        harness; silently a no-op on legacy manifests without checksums.
+        """
+        with open(os.path.join(self.dir, MANIFEST)) as f:
+            m = json.load(f)
+        for name, want in (m.get("crc32") or {}).items():
+            path = os.path.join(self.dir, f"{name}.bin")
+            crc = 0
+            with open(path, "rb") as fh:
+                while True:
+                    chunk = fh.read(1 << 22)
+                    if not chunk:
+                        break
+                    crc = zlib.crc32(chunk, crc)
+            got = f"{crc & 0xFFFFFFFF:08x}"
+            if got != want:
+                raise BlobCorruption(
+                    path,
+                    f"edge channel file {name}.bin: manifest crc32 {want} "
+                    f"!= read crc32 {got}",
+                    directory=self.dir,
+                )
 
     # -- identity / accounting -----------------------------------------------
     def signature(self) -> dict:

@@ -12,8 +12,9 @@ import pytest
 
 from repro.analysis import (
     ALL_PASSES, AnalysisConfig, AtomicPublishPass, Baseline,
-    ImportHygienePass, LivenessClockPass, SharedStateRacePass,
-    ThreadLifecyclePass, WireSymmetryPass, collect_sources, run_analysis,
+    ImportHygienePass, LivenessClockPass, RetryDisciplinePass,
+    SharedStateRacePass, ThreadLifecyclePass, WireSymmetryPass,
+    collect_sources, run_analysis,
 )
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -470,6 +471,106 @@ def test_import_hygiene_type_checking_imports_are_lazy(tmp_path):
     """})
     assert run_pass(ImportHygienePass(), srcs,
                     worker_roots=("repro.launch.procs",)) == []
+
+
+# -- retry-discipline ----------------------------------------------------------
+
+# the PR 10 regression shape, reduced: a dead peer spins this forever
+SEEDED_BARE_RECONNECT = """
+    import socket
+    import time
+
+    def reconnect(addr):
+        while True:
+            try:
+                return socket.create_connection(addr, timeout=5.0)
+            except OSError:
+                time.sleep(0.1)
+"""
+
+GOOD_RETRY_ATTEMPTS = """
+    import socket
+
+    def reconnect(addr, retry):
+        for attempt in retry.attempts("peer-reconnect"):
+            try:
+                return socket.create_connection(addr, timeout=5.0)
+            except OSError:
+                continue
+"""
+
+
+def test_retry_discipline_flags_seeded_bare_reconnect(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": SEEDED_BARE_RECONNECT})
+    found = run_pass(RetryDisciplinePass(), srcs)
+    assert [f.detail for f in found] == ["create_connection"]
+
+
+def test_retry_discipline_accepts_attempts_generator(tmp_path):
+    srcs = write_tree(tmp_path, {"good.py": GOOD_RETRY_ATTEMPTS})
+    assert run_pass(RetryDisciplinePass(), srcs) == []
+
+
+def test_retry_discipline_flags_bare_connect_and_accept_loops(tmp_path):
+    srcs = write_tree(tmp_path, {"bad.py": """
+        import socket
+
+        def dial(sock, addr):
+            while 1:
+                try:
+                    sock.connect(addr)
+                    return
+                except OSError:
+                    pass
+
+        def serve(listener):
+            while True:
+                conn, _ = listener.accept()
+                handle(conn)
+    """})
+    details = sorted(f.detail for f in run_pass(RetryDisciplinePass(), srcs))
+    assert details == ["accept", "connect"]
+
+
+def test_retry_discipline_ignores_flag_gated_and_retry_bounded_loops(
+        tmp_path):
+    srcs = write_tree(tmp_path, {"good.py": """
+        import socket
+
+        class Server:
+            def accept_loop(self):
+                # gated on a close flag, not constant-true: never flagged
+                while not self._closed:
+                    conn, _ = self._sock.accept()
+
+            def dial(self, addr):
+                while True:
+                    # a retry-policy reference inside the loop shows the
+                    # bound lives here even without .attempts()
+                    if self._retry.delay_for(self._n) is None:
+                        raise ConnectionError(addr)
+                    try:
+                        return socket.create_connection(addr)
+                    except OSError:
+                        self._n += 1
+    """})
+    assert run_pass(RetryDisciplinePass(), srcs) == []
+
+
+def test_retry_discipline_allow_comment_suppresses(tmp_path):
+    srcs = write_tree(tmp_path, {"ok.py": """
+        import socket
+
+        def dial(addr, deadline_reached):
+            while True:
+                try:
+                    return socket.create_connection(addr)  # analysis: allow[retry-discipline] outer deadline bounds this
+                except OSError:
+                    if deadline_reached():
+                        raise
+    """})
+    open_f, suppressed = run_analysis(srcs, passes=[RetryDisciplinePass()])
+    assert open_f == [] and len(suppressed) == 1
 
 
 # -- suppression mechanics -----------------------------------------------------

@@ -189,6 +189,36 @@ class TestLiveness:
         atomic_write_json(coord.heartbeat_path(1), rec)
         assert coord.heartbeat_age(1) >= 0.05
 
+    def test_restarted_coord_server_grants_boot_grace(self):
+        """Regression for the coordinator-restart drill: a successor
+        CoordServer has seen NO beats at boot (every live worker looks
+        beat-less until its reconnect lands), and the old rule — no beat
+        on record => stale — would condemn all of them instantly and spiral
+        a healthy run into respawning every worker. The watcher must extend
+        grace while the coordinator restarts: a never-seen shard only goes
+        stale ``heartbeat_timeout + boot_grace`` after THIS server booted,
+        and an explicit ``grant_grace`` (the respawn path) extends further."""
+        from repro.launch.net import CoordServer
+
+        coord = CoordServer(3, heartbeat_timeout=0.1, boot_grace=0.3)
+        try:
+            # freshly booted: no worker has ever beaten, none is stale
+            assert all(coord.heartbeat_age(w) == float("inf")
+                       for w in range(3))
+            assert not any(coord.stale(w) for w in range(3))
+            time.sleep(0.15)  # past heartbeat_timeout, inside boot grace
+            assert not any(coord.stale(w) for w in range(3))
+            deadline = time.time() + 10
+            while not coord.stale(0):  # boot grace expires -> stale
+                assert time.time() < deadline, "boot grace never expired"
+                time.sleep(0.02)
+            # the respawn path's explicit grant waives staleness again
+            coord.grant_grace(0, 30.0)
+            assert not coord.stale(0)
+            assert coord.stale(1)  # ...but only for the granted shard
+        finally:
+            coord.close()
+
     def test_sigkilled_worker_process_goes_stale(self, coord, tmp_path):
         """The real detection path: a separate OS process heartbeats
         through the shared directory; kill -9 stops the beats and the

@@ -587,3 +587,212 @@ class TestProcessCrashDrill:
         with pytest.raises(WorkerFailed, match="checkpoint"):
             job.run()
         job.close()
+
+
+# -- chaos layer drills (repro.fault): coordinator kill -9, disk faults, ----
+# -- silent bit-flips --------------------------------------------------------
+
+from test_equivalence import ALGORITHMS, EDGE_BLOCK  # noqa: E402
+
+
+class TestCoordinatorKillDrill:
+    """kill -9 the COORDINATOR process mid-barrier (sockets transport):
+    arrivals received, commit not yet in the WAL. The launcher respawns it
+    with a bumped incarnation; the successor restores committed steps and
+    peer addresses from its WAL, workers reconnect (re-reading the
+    incarnation-stamped address file) and replay their pending arrivals,
+    and the finished run is bit-identical to an undisturbed one — for
+    EVERY algorithm in the equivalence matrix, the acceptance bar for the
+    chaos layer."""
+
+    @pytest.fixture(scope="class")
+    def drill_graph(self):
+        g = rmat_graph(scale=6, edge_factor=6, seed=5, weights="uniform")
+        _, rmap = partition_graph(g, n_shards=3, edge_block=EDGE_BLOCK)
+        return g, rmap
+
+    def _plan(self, prog, g):
+        from repro.core import MemoryBudget
+        from repro.core.plan import GraphMeta, plan as make_plan
+
+        return make_plan(prog, GraphMeta.of(g), MemoryBudget(n_shards=3),
+                         edge_block=EDGE_BLOCK, launch="processes")
+
+    @pytest.mark.parametrize("name,factory,exact", ALGORITHMS,
+                             ids=[a[0] for a in ALGORITHMS])
+    def test_kill9_coordinator_mid_barrier_recovers_bit_identical(
+            self, drill_graph, tmp_path, name, factory, exact):
+        import copy
+
+        from repro.core import GraphDJob
+
+        g, rmap = drill_graph
+        p = self._plan(factory(g, rmap), g)
+        ref = GraphDJob(factory(g, rmap), g, plan=copy.deepcopy(p),
+                        workdir=str(tmp_path / "ref"))
+        r_ref = ref.run(max_supersteps=60)
+        # kill as late as the algorithm allows: step 1 proves the WAL
+        # commit restore too; single-superstep programs (degreesum) get
+        # killed inside their only barrier
+        kill_step = 1 if r_ref.n_supersteps > 1 else 0
+        drilled = GraphDJob(
+            factory(g, rmap), g, plan=copy.deepcopy(p),
+            workdir=str(tmp_path / "drill"), checkpoint_every=2,
+            launch="processes",
+            # SIGKILL the coordinator mid-barrier, after at least one
+            # arrival is in (the commit never hits the WAL)
+            launch_opts={"transport": "sockets",
+                         "coord_kill": {"step": kill_step,
+                                        "after_arrivals": 1},
+                         "heartbeat_timeout": 5.0},
+        )
+        r_drill = drilled.run(max_supersteps=60)
+        assert r_drill.n_supersteps == r_ref.n_supersteps, name
+        for field in ("n_active", "n_msgs", "agg"):
+            assert [getattr(x, field) for x in r_drill.history] == \
+                   [getattr(x, field) for x in r_ref.history], (name, field)
+        assert r_drill.values == r_ref.values, name  # bit-identical
+        # the drill really fired: one coordinator respawn, zero worker
+        # respawns — the workers rode out the outage on their retry policy
+        assert drilled._last_run_coord_restarts == 1
+        assert drilled._last_run_recoveries == 0
+        ref.close()
+        drilled.close()
+
+
+class TestDiskFaultDrill:
+    """Deterministic disk faults (``launch_opts["faults"]`` schedules)
+    against the storage tiers. ENOSPC mid-spill without recovery wiring
+    fails loud with a structured record naming the tier and leaves no torn
+    outbox index; ENOSPC on the very first checkpoint dump recovers by
+    replaying the whole prefix from the message log; a silent bit-flip in
+    a spilled blob is caught by read-path CRC verification, quarantined,
+    and replayed — bit-identically."""
+
+    def _plan(self, prog, g):
+        from repro.core import MemoryBudget
+        from repro.core.plan import GraphMeta, plan as make_plan
+
+        return make_plan(prog, GraphMeta.of(g), MemoryBudget(n_shards=3),
+                         launch="processes")
+
+    def test_enospc_mid_spill_fails_loud_no_torn_index(self, procs_graph,
+                                                       tmp_path):
+        import copy
+        import json
+
+        from repro.core import GraphDJob
+        from repro.core.coordinator import WorkerFailed
+
+        g = procs_graph
+        p = self._plan(HashMin(), g)
+        job = GraphDJob(
+            HashMin(), g, plan=copy.deepcopy(p),
+            workdir=str(tmp_path / "bare"), launch="processes",
+            launch_opts={
+                "heartbeat_timeout": 5.0,
+                "faults": {"seed": 7, "events": [
+                    {"site": "io.write.spill", "kind": "enospc",
+                     "shard": 1, "step": 1, "where": "outbox/"}]},
+            },
+        )
+        with pytest.raises(WorkerFailed, match="spill") as ei:
+            job.run()
+        # the dying worker classified itself: the record names the tier
+        rec = ei.value.record
+        assert rec is not None
+        assert rec["kind"] == "disk-fault"
+        assert rec["tier"] == "spill"
+        assert rec["shard"] == 1
+        procs_dir = job._dir("procs", job._tag)
+        # no torn outbox index: the un-announced src dir was swept, so no
+        # peer (nor a post-mortem) can ever read a half-written run table
+        assert not os.path.exists(
+            os.path.join(procs_dir, "outbox", "step-000001", "src-1"))
+        assert not os.path.exists(
+            os.path.join(procs_dir, "announce", "step-000001", "src-1.json"))
+        # the run-level failure summary (the chaos-soak artifact) landed
+        with open(os.path.join(procs_dir, "failure-summary.json")) as f:
+            summary = json.load(f)
+        assert summary["kind"] == "launch-failed"
+        assert summary["record"]["tier"] == "spill"
+        job.close()
+
+    def test_enospc_first_checkpoint_recovers_bit_identical(self,
+                                                            procs_graph,
+                                                            tmp_path):
+        import copy
+
+        from repro.core import GraphDJob
+
+        g = procs_graph
+        p = self._plan(HashMin(), g)
+        ref = GraphDJob(HashMin(), g, plan=copy.deepcopy(p),
+                        workdir=str(tmp_path / "ref"), checkpoint_every=2)
+        r_ref = ref.run()
+        drilled = GraphDJob(
+            HashMin(), g, plan=copy.deepcopy(p),
+            workdir=str(tmp_path / "drill"), checkpoint_every=2,
+            launch="processes",
+            # ENOSPC on worker 2's shard dump for the FIRST checkpoint
+            # (step 2): nothing is checkpointed yet, so the respawn must
+            # replay the whole prefix from the log on the bootstrap state
+            launch_opts={
+                "heartbeat_timeout": 5.0,
+                "faults": [{"site": "io.write.ckpt", "kind": "enospc",
+                            "shard": 2, "step": 2}],
+            },
+        )
+        r_drill = drilled.run()
+        assert r_drill.n_supersteps == r_ref.n_supersteps
+        assert [r.n_active for r in r_drill.history] == \
+               [r.n_active for r in r_ref.history]
+        assert [r.n_msgs for r in r_drill.history] == \
+               [r.n_msgs for r in r_ref.history]
+        assert r_drill.values == r_ref.values  # bit-identical after replay
+        assert drilled._last_run_recoveries == 1  # the drill really fired
+        # the faulted dump tore nothing: every checkpoint dir is final
+        ckpt_dir = drilled.checkpointer.dir
+        assert not [n for n in os.listdir(ckpt_dir)
+                    if n.startswith(".tmp")]
+        ref.close()
+        drilled.close()
+
+    def test_bitflip_in_spilled_blob_quarantined_and_replayed(self,
+                                                              procs_graph,
+                                                              tmp_path):
+        import copy
+
+        from repro.core import GraphDJob
+
+        g = procs_graph
+        p = self._plan(HashMin(), g)
+        ref = GraphDJob(HashMin(), g, plan=copy.deepcopy(p),
+                        workdir=str(tmp_path / "ref"), checkpoint_every=2)
+        r_ref = ref.run()
+        drilled = GraphDJob(
+            HashMin(), g, plan=copy.deepcopy(p),
+            workdir=str(tmp_path / "drill"), checkpoint_every=2,
+            launch="processes",
+            # flip ONE bit in shard 1's message-log copy at step 1; the
+            # write itself succeeds silently (the CRC is computed from the
+            # pristine bytes), and the same step's digest reads it back
+            launch_opts={
+                "heartbeat_timeout": 5.0,
+                "faults": {"seed": 41, "events": [
+                    {"site": "io.write.spill", "kind": "bitflip",
+                     "shard": 1, "step": 1, "where": "logs/"}]},
+            },
+        )
+        r_drill = drilled.run()
+        assert r_drill.n_supersteps == r_ref.n_supersteps
+        assert [r.n_active for r in r_drill.history] == \
+               [r.n_active for r in r_ref.history]
+        assert r_drill.values == r_ref.values  # bit-identical after replay
+        assert drilled._last_run_recoveries == 1  # detection really fired
+        # the poisoned store is out of the lineage but kept for post-mortem
+        q = os.path.join(drilled._dir("logs", drilled._tag), "shard-1",
+                         "step-000001.quarantine")
+        assert os.path.isdir(q)
+        ref.close()
+        drilled.close()

@@ -13,7 +13,8 @@ import zlib
 import numpy as np
 import pytest
 
-from repro.core.coordinator import RunAborted
+from repro.core.coordinator import RunAborted, atomic_write_json
+from repro.fault import RetryPolicy
 from repro.launch.net import (
     _HEADER,
     MAGIC,
@@ -206,16 +207,70 @@ class TestCoordPlane:
                 c.close()
             srv.close()
 
-    def test_vanished_coordinator_is_poison_pill(self):
+    def test_vanished_coordinator_aborts_on_retry_exhaustion(self):
+        """A dead coordinator is no longer an instant poison pill: the
+        client retries under its RetryPolicy, and only an exhausted budget
+        aborts — loudly, with a structured failure summary."""
         srv = CoordServer(1)
         srv.start()
-        clients, _ = _register_all(srv, 1)
+        retry = RetryPolicy(max_attempts=3, base_delay=0.02, max_delay=0.05,
+                            deadline=5.0)
+        clients, _ = _register_all(srv, 1, retry=retry)
         try:
-            srv.close()  # the launcher dies
-            with pytest.raises(RunAborted, match="connection lost"):
+            srv.close()  # the coordinator dies for good
+            with pytest.raises(RunAborted, match="retry budget exhausted"):
                 clients[0].wait_commit(0, 0)
+            assert clients[0].failure is not None
+            assert clients[0].failure["kind"] == "retry-exhausted"
+            assert clients[0].failure["attempts"] == 3
         finally:
             clients[0].close()
+
+    def test_coordinator_restart_reconnects_and_resumes(self, tmp_path):
+        """The crash-recovery contract end to end at the protocol level: a
+        coordinator with a WAL dies between a worker's arrival and the
+        commit; a successor restores the WAL, the client rediscovers it
+        through the address file, re-registers, and replays the stranded
+        arrival — the barrier commits as if nothing happened."""
+        wal = str(tmp_path / "coord-wal")
+        addr_file = str(tmp_path / "coord-addr.json")
+        srv = CoordServer(1, wal_dir=wal)
+        atomic_write_json(addr_file,
+                          dict(incarnation=0, addr=list(srv.addr)))
+        srv.start()
+        retry = RetryPolicy(base_delay=0.02, max_delay=0.1, deadline=30.0)
+        client = CoordClient(shard=0, addr_file=addr_file, retry=retry)
+        client.start()
+        srv2 = None
+        try:
+            t = threading.Thread(
+                target=lambda: client.register(("127.0.0.1", 20000)))
+            t.start()
+            t.join(timeout=10)
+            assert not t.is_alive()
+            stats = dict(n_active=1, n_msgs=0, agg=0.0, active_blocks=1)
+            client.arrive(0, 0, stats)
+            rec0 = srv.publish_commit(
+                0, srv.reduce_arrivals(srv.wait_arrivals(0)),
+                halt=False, ckpt_landed=False)
+            assert client.wait_commit(0, 0) == rec0
+            srv.close()  # SIGKILL stand-in: dies with step 1 in flight
+            client.arrive(1, 0, stats)  # stranded; cached for replay
+            srv2 = CoordServer(1, wal_dir=wal)
+            assert srv2.last_commit_step() == 0  # WAL restored the commit
+            atomic_write_json(addr_file,
+                              dict(incarnation=1, addr=list(srv2.addr)))
+            srv2.start()
+            got = srv2.wait_arrivals(1)  # replayed after the reconnect
+            assert set(got) == {0}
+            srv2.publish_commit(1, srv2.reduce_arrivals(got),
+                                halt=True, ckpt_landed=False)
+            assert client.wait_commit(1, 0)["step"] == 1
+            assert client.aborted() is None
+        finally:
+            client.close()
+            if srv2 is not None:
+                srv2.close()
 
 
 # -- data plane ----------------------------------------------------------------
@@ -372,3 +427,48 @@ class TestProbes:
         bw = probe_file_throughput(str(tmp_path), n_bytes=1 << 20)
         assert bw > 0
         assert not any(p.name == "probe.bin" for p in tmp_path.iterdir())
+
+
+class TestSendFailureEpisode:
+    """A peer that keeps ACCEPTING connections but never takes a frame must
+    not livelock the reconnect->replay->fail cycle: connect successes reset
+    the connect-path retry episode, so the send failures themselves carry
+    the budget. `_note_send_failure` bounds the consecutive-failure episode
+    with the same RetryPolicy and any delivered frame resets it."""
+
+    def _sender(self, max_attempts):
+        from repro.fault import RetryExhausted
+
+        s = PeerSender(0, 2, make_store=None,
+                       retry=RetryPolicy(max_attempts=max_attempts,
+                                         base_delay=0.001, max_delay=0.002,
+                                         deadline=30.0))
+        return s, RetryExhausted
+
+    def test_episode_exhausts_loud_with_site(self):
+        s, RetryExhausted = self._sender(max_attempts=3)
+        err = OSError(32, "broken pipe")
+        s._note_send_failure(1, err)
+        s._note_send_failure(1, err)
+        with pytest.raises(RetryExhausted) as ei:
+            s._note_send_failure(1, err)
+        assert ei.value.site == "peer-send:0->1"
+        assert ei.value.attempts == 3
+        assert ei.value.summary()["kind"] == "retry-exhausted"
+
+    def test_delivered_frame_resets_the_episode(self):
+        s, _ = self._sender(max_attempts=3)
+        err = OSError(32, "broken pipe")
+        s._note_send_failure(1, err)
+        s._note_send_failure(1, err)
+        s._send_fail.pop(1, None)  # what a successful send does
+        s._note_send_failure(1, err)  # a fresh episode: attempt 1 again
+        assert s._send_fail[1][1] == 1
+
+    def test_episodes_are_per_destination(self):
+        s, RetryExhausted = self._sender(max_attempts=2)
+        err = OSError(32, "broken pipe")
+        s._note_send_failure(0, err)
+        s._note_send_failure(1, err)  # dest 1's first failure: no raise
+        with pytest.raises(RetryExhausted):
+            s._note_send_failure(0, err)
